@@ -1,0 +1,170 @@
+"""Paper Table 3 (acceptance / memory / speedup vs sparse-KV baselines),
+Table 6 + Figure 9 (γ sweep), and Figure 4 (weight-only vs KV-only vs both).
+
+Acceptance rates are *measured* by running the actual engines on the
+CPU-trained benchmark model. End-to-end speedups are *modeled* from bytes
+moved per decoding round on the target hardware (TPU v5e, 819 GB/s) — the
+decode regime is memory-bound (see arithmetic_intensity.py), so latency ≈
+bytes/BW; wall-clock CPU times are reported as a sanity column only.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import corpus, get_trained_model
+from repro.launch.mesh import HBM_BW
+from repro.serving.engine import Engine
+
+PROMPT = 224
+MAX_NEW = 32
+GAMMAS = (1, 2, 4, 6)
+
+
+# ---------------------------------------------------------------------------
+# bytes model (per decoded-token latency on the target HW)
+# ---------------------------------------------------------------------------
+
+def _weight_bytes(cfg, bits):
+    n = cfg.param_count()
+    return n * bits / 8
+
+
+def _kv_bytes(cfg, S, bits, *, residual=0, dtype_bytes=2):
+    per_tok = 2 * cfg.num_kv_heads * cfg.hd * cfg.num_layers
+    q = max(S - residual, 0)
+    return q * per_tok * bits / 8 + min(S, residual) * per_tok * dtype_bytes
+
+
+def modeled_round_time(cfg, S, gamma, policy, *, w_bits_draft=4,
+                       kv_bits_draft=4, draft_budget=None):
+    """Seconds per speculative round (γ draft passes + 1 target pass)."""
+    R = 2 * cfg.group_size
+    t_target = (_weight_bytes(cfg, 16)
+                + _kv_bytes(cfg, S, 8, residual=R)) / HBM_BW
+    if policy == "quantspec":
+        t_draft = (_weight_bytes(cfg, w_bits_draft)
+                   + _kv_bytes(cfg, S, kv_bits_draft, residual=R)) / HBM_BW
+    else:  # sparse-KV baselines: fp16 weights + sparse fp16 draft cache
+        t_draft = (_weight_bytes(cfg, 16)
+                   + _kv_bytes(cfg, draft_budget or S // 4, 16)) / HBM_BW
+    return gamma * t_draft + t_target
+
+
+def modeled_ar_time(cfg, S):
+    return (_weight_bytes(cfg, 16) + _kv_bytes(cfg, S, 16)) / HBM_BW
+
+
+def cache_memory_bytes(cfg, S, policy, draft_budget=None):
+    R = 2 * cfg.group_size
+    if policy == "quantspec":
+        return _kv_bytes(cfg, S, 8, residual=R)          # one shared cache
+    base = _kv_bytes(cfg, S, 16)                          # fp16 target cache
+    if policy in ("streaming", "snapkv"):
+        base += _kv_bytes(cfg, draft_budget or S // 4, 16)
+    return base
+
+
+# ---------------------------------------------------------------------------
+
+def measure_acceptance(model, params, prompt, policy, gamma, **kw):
+    eng = Engine(model, params, policy=policy, gamma=gamma, greedy=True,
+                 max_seq=PROMPT + MAX_NEW + 4 * model.cfg.group_size, **kw)
+    res = eng.generate(prompt, MAX_NEW, key=jax.random.PRNGKey(5))
+    return res.stats
+
+
+def induction_fidelity(model, params, prompt, src, n=24):
+    """Does full-context greedy generation continue the distant copy?
+    (sanity: the discriminative eval only works if the model does induction)"""
+    import numpy as np
+    eng = Engine(model, params, policy="fp", gamma=0, greedy=True,
+                 max_seq=PROMPT + MAX_NEW + 8)
+    res = eng.generate(prompt, n, speculative=False)
+    lead = 24
+    hits = []
+    for b in range(prompt.shape[0]):
+        want = np.asarray(prompt[b, int(src[b]) + lead:
+                                 int(src[b]) + lead + n])
+        hits.append((res.tokens[b][: len(want)] == want).mean())
+    return float(np.mean(hits))
+
+
+def run(csv_rows):
+    cfg, model, params = get_trained_model()
+    # prompts end mid-copy: continuation requires the DISTANT source span —
+    # the regime where sparse-KV drafts lose acceptance (paper §5.2)
+    prompt, src = corpus().sample_induction(jax.random.PRNGKey(11), 4,
+                                            PROMPT, lead=24)
+    fid = induction_fidelity(model, params, prompt, src)
+    print(f"[sanity] full-context induction fidelity: {fid:.1%} "
+          "(target model continues the distant copy)")
+    csv_rows.append(("sanity", "induction_fidelity", f"{fid:.3f}"))
+    budget = PROMPT // 4
+    kw = {
+        "quantspec": {},
+        "streaming": dict(quantize_weights=False,
+                          ctx_kw=dict(draft_window=budget)),
+        "snapkv": dict(quantize_weights=False,
+                       ctx_kw=dict(draft_budget=budget, draft_window=32,
+                                   obs_window=32)),
+    }
+
+    # ---- Table 6 / Fig 9: γ sweep -------------------------------------------
+    print("\n# Table 6 / Fig 9 — acceptance & modeled speedup vs γ "
+          f"(S={PROMPT}, budget={budget})")
+    print(f"{'method':<13} {'γ':>2} {'accept%':>8} {'tok/rnd':>8} "
+          f"{'speedup_model':>13} {'cpu_s':>7}")
+    best = {}
+    for policy in ("quantspec", "streaming", "snapkv"):
+        for gamma in GAMMAS:
+            st = measure_acceptance(model, params, prompt, policy, gamma,
+                                    **kw[policy])
+            t_round = modeled_round_time(cfg, PROMPT, gamma, policy,
+                                         draft_budget=budget)
+            sp = st.tokens_per_round * modeled_ar_time(cfg, PROMPT) / t_round
+            best[policy] = max(best.get(policy, (0, None)),
+                               (sp, (gamma, st)))
+            print(f"{policy:<13} {gamma:>2} {st.acceptance_rate:>7.1%} "
+                  f"{st.tokens_per_round:>8.2f} {sp:>12.2f}x "
+                  f"{st.decode_s:>7.2f}")
+            csv_rows.append(
+                ("tab6_gamma", f"{policy}_g{gamma}",
+                 f"acc={st.acceptance_rate:.3f};speedup={sp:.3f}"))
+
+    # ---- Table 3 analogue: best-γ comparison ---------------------------------
+    print("\n# Table 3 — per-method best γ (acceptance, cache memory, speedup)")
+    print(f"{'method':<13} {'γ*':>3} {'accept%':>8} {'cacheMB':>8} "
+          f"{'speedup':>8}")
+    for policy, (sp, (gamma, st)) in best.items():
+        mem = cache_memory_bytes(cfg, PROMPT, policy, budget) / 1e6
+        print(f"{policy:<13} {gamma:>3} {st.acceptance_rate:>7.1%} "
+              f"{mem:>8.2f} {sp:>7.2f}x")
+        csv_rows.append(("tab3_best", policy,
+                         f"gamma={gamma};acc={st.acceptance_rate:.3f};"
+                         f"cache_mb={mem:.2f};speedup={sp:.3f}"))
+
+    # ---- Fig 4: weight vs KV quantization across context length --------------
+    print("\n# Fig 4 — modeled speedup: weight-only / KV-only / both "
+          "(accept from measured γ=4 run)")
+    st = measure_acceptance(model, params, prompt, "quantspec", 4)
+    n_round = st.tokens_per_round
+    print(f"{'S':>8} {'w-only':>8} {'kv-only':>8} {'both':>8}")
+    for S in (4096, 16384, 65536, 262144):
+        t_ar = modeled_ar_time(cfg, S)
+        sp = {}
+        for name, (wb, kb) in (("w-only", (4, 8)), ("kv-only", (16, 4)),
+                               ("both", (4, 4))):
+            t = modeled_round_time(cfg, S, 4, "quantspec",
+                                   w_bits_draft=wb, kv_bits_draft=kb)
+            sp[name] = n_round * t_ar / t
+        print(f"{S:>8} {sp['w-only']:>7.2f}x {sp['kv-only']:>7.2f}x "
+              f"{sp['both']:>7.2f}x")
+        csv_rows.append(("fig4_ablation", f"S{S}",
+                         ";".join(f"{k}={v:.3f}" for k, v in sp.items())))
+    return csv_rows
+
+
+if __name__ == "__main__":
+    run([])

@@ -1,0 +1,100 @@
+"""Paper Table 1 / Figure 2: arithmetic-intensity analysis of LLM inference,
+re-derived for TPU v5e (the paper used an A6000).
+
+Computes exact FLOPs/MOPs for the linear and attention components of prefill
+and decode over a (batch × context-length) grid, classifies each regime
+against the v5e ridge point, and reports where weight vs KV-cache
+quantization pays — the analysis that motivates QuantSpec §3.1.
+"""
+
+from __future__ import annotations
+
+import math
+
+from repro.configs import get_config
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+RIDGE = PEAK_FLOPS_BF16 / HBM_BW  # ≈ 240 FLOP/byte on v5e
+
+
+def _model_dims(cfg):
+    d = cfg.d_model
+    # per-layer linear params (weights loaded per step)
+    lin = 0
+    for spec in cfg.layers:
+        lin += d * cfg.hd * (cfg.num_heads + 2 * cfg.num_kv_heads)
+        lin += cfg.num_heads * cfg.hd * d
+        lin += 3 * d * cfg.d_ff
+    lin += 2 * cfg.vocab_size * d
+    return d, lin
+
+
+def intensity(cfg, B, S, kind, *, dtype_bytes=2, kv_bits=16, w_bits=16,
+              gen=1):
+    """Returns dict with linear/attention/aggregate FLOPs, MOPs, AI."""
+    d, lin_params = _model_dims(cfg)
+    L = cfg.num_layers
+    kvd = cfg.num_kv_heads * cfg.hd
+
+    if kind == "prefill":
+        flops_lin = 2 * B * S * lin_params
+        mops_lin = dtype_bytes * (B * S * d * L * 2
+                                  + lin_params * (w_bits / 16))
+        flops_att = 2 * 2 * B * S * S / 2 * cfg.num_heads * cfg.hd * L
+        # flash-attention: scores never materialized
+        mops_att = dtype_bytes * (B * S * (cfg.num_heads + 2 * cfg.num_kv_heads)
+                                  * cfg.hd * L) + B * S * L
+    else:  # decode: generate `gen` tokens
+        flops_lin = 2 * gen * B * lin_params
+        mops_lin = gen * (dtype_bytes * B * d * L * 2
+                          + lin_params * 2 * (w_bits / 16))
+        flops_att = 2 * 2 * gen * B * S * cfg.num_heads * cfg.hd * L
+        mops_att = gen * (2 * B * S * kvd * L * (kv_bits / 8)
+                          + dtype_bytes * B * d * L) + gen * B * S * L
+
+    out = {
+        "linear": (flops_lin, mops_lin, flops_lin / mops_lin),
+        "attention": (flops_att, mops_att, flops_att / mops_att),
+    }
+    fa, ma = flops_lin + flops_att, mops_lin + mops_att
+    out["aggregate"] = (fa, ma, fa / ma)
+    out["attention_latency_frac"] = (mops_att / HBM_BW) / (
+        mops_att / HBM_BW + max(mops_lin / HBM_BW, flops_lin / PEAK_FLOPS_BF16))
+    return out
+
+
+def run(csv_rows):
+    cfg = get_config("llama2-7b-32k")
+    print(f"# TPU v5e ridge point: {RIDGE:.0f} FLOP/byte "
+          f"(197 TFLOP/s bf16, 819 GB/s HBM)")
+    print(f"{'phase':<8} {'B':>4} {'S':>7} {'AI_lin':>9} {'AI_att':>8} "
+          f"{'AI_agg':>8} {'bound':>8} {'att%lat':>8}")
+    for phase in ("prefill", "decode"):
+        for B in (1, 8, 64):
+            for S in (1024, 8192, 32768, 131072):
+                r = intensity(cfg, B, S, phase)
+                agg = r["aggregate"][2]
+                bound = "compute" if agg > RIDGE else "memory"
+                print(f"{phase:<8} {B:>4} {S:>7} {r['linear'][2]:>9.1f} "
+                      f"{r['attention'][2]:>8.2f} {agg:>8.2f} {bound:>8} "
+                      f"{r['attention_latency_frac']:>8.1%}")
+                csv_rows.append(
+                    ("arithmetic_intensity",
+                     f"{phase}_B{B}_S{S}",
+                     f"AI={agg:.3f};bound={bound}"))
+
+    # the paper's §3.1 conclusion: quantization strategy per regime
+    print("\n# regime → dominant memory traffic (what to quantize)")
+    for B, S in ((1, 1024), (1, 32768), (64, 1024), (64, 131072)):
+        r = intensity(cfg, B, S, "decode")
+        frac = r["attention_latency_frac"]
+        rec = ("KV cache" if frac > 0.6 else
+               "weights" if frac < 0.4 else "both")
+        print(f"decode B={B:<3} S={S:<7} attention={frac:.0%} of latency "
+              f"→ quantize {rec}")
+        csv_rows.append(("ai_regime", f"B{B}_S{S}", f"quantize={rec}"))
+    return csv_rows
+
+
+if __name__ == "__main__":
+    run([])

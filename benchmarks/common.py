@@ -1,0 +1,87 @@
+"""Shared benchmark utilities: the CPU-trained tiny model + eval data."""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticCorpus
+from repro.models.stack import StackModel
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+from repro.training.optimizer import AdamW
+from repro.training.train_step import make_train_step
+
+CKPT = "checkpoints/bench-tiny"
+VOCAB = 64
+BIGRAM_TEMP = 0.25
+TRAIN_STEPS = 250
+EVAL_SEQ = 256
+
+
+def bench_config():
+    return get_config("tiny-lm").replace(vocab_size=VOCAB, group_size=32)
+
+
+def corpus():
+    return SyntheticCorpus(VOCAB, seed=0, bigram_temp=BIGRAM_TEMP,
+                           copy_prob=0.7, copy_len=48)
+
+
+def get_trained_model(steps: int = TRAIN_STEPS, verbose: bool = True):
+    """Train (or load) the benchmark model. Returns (cfg, model, params)."""
+    cfg = bench_config()
+    model = StackModel(cfg)
+    params_t = model.init(jax.random.PRNGKey(0))
+    if os.path.exists(os.path.join(CKPT, "params.npz")):
+        params, step = load_checkpoint(CKPT, params_t)
+        if verbose:
+            print(f"[bench] loaded checkpoint ({step} steps)")
+        return cfg, model, params
+    opt = AdamW(lr=3e-3, warmup_steps=20, total_steps=steps)
+    opt_state = opt.init(params_t)
+    step_fn = jax.jit(make_train_step(model, opt))
+    it = corpus().batches(batch=6, seq=256)
+    params = params_t
+    t0 = time.time()
+    for i in range(steps):
+        params, opt_state, m = step_fn(params, opt_state, next(it))
+        if verbose and (i % 100 == 0 or i == steps - 1):
+            print(f"[bench] train step {i}: loss={float(m['loss']):.3f}")
+    save_checkpoint(CKPT, params, step=steps)
+    if verbose:
+        print(f"[bench] trained {steps} steps in {time.time()-t0:.0f}s, "
+              f"saved to {CKPT}")
+    return cfg, model, params
+
+
+def eval_batches(n: int = 4, batch: int = 8, seq: int = EVAL_SEQ):
+    """Held-out eval batches with copy-destination masks (the positions
+    whose prediction depends on the *quantized* region of the cache)."""
+    c = corpus()
+    out = []
+    for i in range(n):
+        key = jax.random.fold_in(jax.random.PRNGKey(999), i)
+        tokens, mask = c.sample_with_mask(key, batch, seq)
+        out.append({"tokens": tokens, "copy_mask": mask})
+    return out
+
+
+def ce_with_kv_sim(model, params, batches, kv_sim):
+    """(overall CE, copy-position CE) under simulated KV-cache quant."""
+    @jax.jit
+    def ce(params, tokens, mask):
+        logits, _ = model.train_logits(params, tokens, kv_sim=kv_sim)
+        logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), -1)
+        nll = -jnp.take_along_axis(logp, tokens[:, 1:, None], axis=-1)[..., 0]
+        m = mask[:, 1:].astype(jnp.float32)
+        return jnp.mean(nll), jnp.sum(nll * m) / jnp.maximum(m.sum(), 1)
+
+    overall, copy = zip(*[
+        (float(a), float(b)) for a, b in
+        (ce(params, b["tokens"], b["copy_mask"]) for b in batches)])
+    return float(np.mean(overall)), float(np.mean(copy))

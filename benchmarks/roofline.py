@@ -1,0 +1,81 @@
+"""§Roofline: three-term roofline per (arch × shape × mesh) from the
+dry-run's compiled artifacts (experiments/dryrun/*.json).
+
+    compute    = FLOPs_per_chip / 197 TFLOP/s
+    memory     = bytes_per_chip / 819 GB/s
+    collective = collective_bytes / (chips × 50 GB/s)
+
+`cost_analysis()` on a partitioned executable reports per-chip numbers
+(verified empirically — see EXPERIMENTS.md §Dry-run), so compute/memory
+terms divide by per-chip peaks directly; collective bytes are parsed from
+the post-SPMD HLO as global result-shape bytes, hence divided by the chip
+count × per-link bandwidth per the brief's formula.
+
+Also reports MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) and the
+usefulness ratio MODEL_FLOPS / HLO_FLOPs (catches remat/replication waste).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+DRYRUN_DIR = "experiments/dryrun"
+
+TOKENS = {"train_4k": 256 * 4096, "prefill_32k": 32 * 32768,
+          "decode_32k": 128 * 1, "long_500k": 1 * 1}
+
+
+def load_results(dry_dir=DRYRUN_DIR):
+    out = []
+    for path in sorted(glob.glob(os.path.join(dry_dir, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def roofline_terms(rec):
+    chips = 512 if rec["mesh"] == "2x16x16" else 256
+    coll_bytes = sum(v for k, v in rec["collectives"].items()
+                     if k != "count")
+    t_compute = (rec["flops"] or 0) / PEAK_FLOPS_BF16
+    t_memory = (rec["bytes_accessed"] or 0) / HBM_BW
+    t_coll = coll_bytes / (chips * ICI_BW)
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+
+    n = rec["params_active"] if rec["shape"] == "train_4k" else rec["params"]
+    tokens = TOKENS.get(rec["shape"], 1)
+    factor = 6 if rec["shape"] == "train_4k" else 2
+    model_flops_per_chip = factor * rec["params_active"] * tokens / chips
+    useful = model_flops_per_chip / max(rec["flops"] or 1, 1)
+    return terms, dom, model_flops_per_chip, useful
+
+
+def run(csv_rows, dry_dir=DRYRUN_DIR):
+    recs = load_results(dry_dir)
+    if not recs:
+        print("\n# §Roofline: no dry-run results found — run "
+              "`python -m repro.launch.dryrun --both-meshes` first")
+        return csv_rows
+    print("\n# §Roofline — per (arch × shape × mesh), seconds per step")
+    print(f"{'arch':<22} {'shape':<12} {'mesh':<8} {'compute':>9} "
+          f"{'memory':>9} {'collect':>9} {'dominant':>10} {'useful%':>8}")
+    for rec in recs:
+        terms, dom, mf, useful = roofline_terms(rec)
+        print(f"{rec['arch']:<22} {rec['shape']:<12} {rec['mesh']:<8} "
+              f"{terms['compute']:>9.2e} {terms['memory']:>9.2e} "
+              f"{terms['collective']:>9.2e} {dom:>10} {useful:>8.1%}")
+        csv_rows.append(
+            ("roofline", f"{rec['arch']}_{rec['shape']}_{rec['mesh']}",
+             f"compute={terms['compute']:.3e};memory={terms['memory']:.3e};"
+             f"collective={terms['collective']:.3e};dom={dom};"
+             f"useful={useful:.3f}"))
+    return csv_rows
+
+
+if __name__ == "__main__":
+    run([])

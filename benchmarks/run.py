@@ -1,0 +1,61 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--skip-quality] [--skip-engine]
+
+Emits human-readable tables per benchmark plus a final
+``name,us_per_call,derived`` CSV block.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-quality", action="store_true")
+    ap.add_argument("--skip-engine", action="store_true")
+    args = ap.parse_args()
+
+    csv_rows = []  # (name, variant, derived)
+    timings = {}
+    prefix = {}
+
+    def section(name, fn):
+        print(f"\n{'='*72}\n## {name}\n{'='*72}")
+        t0 = time.time()
+        n_before = len(csv_rows)
+        fn(csv_rows)
+        timings[name] = time.time() - t0
+        for row in csv_rows[n_before:]:
+            prefix[row[0]] = name
+
+    from benchmarks import arithmetic_intensity
+    section("Table 1 / Fig 2 — arithmetic intensity (TPU v5e)",
+            arithmetic_intensity.run)
+
+    from benchmarks import kernel_bench
+    section("Table 4 — quantized attention kernel", kernel_bench.run)
+
+    if not args.skip_quality:
+        from benchmarks import ppl_quality
+        section("Table 2 & 5 — KV-quantization quality", ppl_quality.run)
+
+    if not args.skip_engine:
+        from benchmarks import acceptance_speedup
+        section("Table 3, 6 / Fig 4, 9 — acceptance & speedup",
+                acceptance_speedup.run)
+
+    from benchmarks import roofline
+    section("§Roofline — dry-run derived terms", roofline.run)
+
+    print(f"\n{'='*72}\n## CSV (name,us_per_call,derived)\n{'='*72}")
+    print("name,us_per_call,derived")
+    for name, variant, derived in csv_rows:
+        us = timings.get(prefix.get(name, ""), 0.0) * 1e6
+        print(f"{name}.{variant},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

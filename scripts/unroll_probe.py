@@ -1,0 +1,42 @@
+"""§Perf pair-C probe: per-layer cost of mistral long_500k decode when the
+layer loop is unrolled (vs the while-loop scan), isolating the while-carry
+copy overhead."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import json
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+from repro.distributed.sharding import axis_rules
+from repro.launch import dryrun as D
+from repro.launch.mesh import make_production_mesh
+
+
+def main():
+    mesh = make_production_mesh()
+    out = {}
+    with mesh, axis_rules(mesh, "long"):
+        for n in (0, 4, 8):
+            t0 = time.time()
+            fn, args, cfg = D.build_step("mistral-large-123b", "long_500k",
+                                         mesh, n_repeats=n)
+            a = D._analyse(fn.lower(*args).compile(), False)
+            out[n] = a
+            print(f"unrolled n={n} flops={a['flops']:.3e} "
+                  f"bytes={a['bytes_accessed']:.3e} ({time.time()-t0:.0f}s)",
+                  flush=True)
+    b8 = (out[8]["bytes_accessed"] - out[0]["bytes_accessed"]) / 8
+    b4 = (out[4]["bytes_accessed"] - out[0]["bytes_accessed"]) / 4
+    print(f"per-layer bytes unrolled: n=4 {b4:.3e}  n=8 {b8:.3e}")
+    print(f"projected 88-layer unrolled total: "
+          f"{out[0]['bytes_accessed'] + 88 * b8:.3e}")
+    json.dump({str(k): v for k, v in out.items()},
+              open("experiments/perf/mistral_long500k_unroll_probe.json", "w"),
+              indent=1)
+
+
+if __name__ == "__main__":
+    main()

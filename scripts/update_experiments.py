@@ -1,0 +1,68 @@
+"""Regenerate the data-driven sections of EXPERIMENTS.md from
+experiments/dryrun/*.json (between the <!-- X:BEGIN/END --> markers).
+
+    PYTHONPATH=src python scripts/update_experiments.py
+"""
+
+import re
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks.roofline import load_results, roofline_terms  # noqa: E402
+
+
+def dryrun_table(recs):
+    lines = [
+        "| arch | shape | mesh | FLOPs/chip | bytes/chip | coll bytes | "
+        "temp GB/chip | compile s |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("cfg_opts"):
+            continue  # perf variants live in §Perf
+        coll = sum(v for k, v in r["collectives"].items() if k != "count")
+        temp = (r["memory"].get("temp_size_in_bytes") or 0) / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['flops']:.2e} | {r['bytes_accessed']:.2e} | {coll:.2e} | "
+            f"{temp:.2f} | {r['compile_s']:.0f} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs):
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL_FLOPS/chip | useful |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["mesh"] != "16x16" or r.get("cfg_opts"):
+            continue  # roofline table is single-pod baselines
+        terms, dom, mf, useful = roofline_terms(r)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {terms['compute']:.2e} | "
+            f"{terms['memory']:.2e} | {terms['collective']:.2e} | **{dom}** | "
+            f"{mf:.2e} | {useful:.1%} |")
+    return "\n".join(lines)
+
+
+def splice(text, marker, content):
+    begin, end = f"<!-- {marker}:BEGIN -->", f"<!-- {marker}:END -->"
+    pattern = re.compile(re.escape(begin) + r".*?" + re.escape(end), re.S)
+    return pattern.sub(begin + "\n" + content + "\n" + end, text)
+
+
+def main():
+    recs = load_results()
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+    text = splice(text, "DRYRUN", dryrun_table(recs))
+    text = splice(text, "ROOFLINE", roofline_table(recs))
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+    print(f"updated EXPERIMENTS.md from {len(recs)} dry-run records")
+
+
+if __name__ == "__main__":
+    main()

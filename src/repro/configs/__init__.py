@@ -1,0 +1,39 @@
+"""Config registry: one module per assigned architecture (+ the paper's own
+Llama-2-7B-32K). `get_config(name)` returns the full production config;
+`get_config(name, smoke=True)` returns the reduced same-family variant used
+by CPU smoke tests (≤2 layers, d_model ≤ 512, ≤4 experts)."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+
+ARCHS = (
+    "gemma3-27b",
+    "llama-3.2-vision-90b",
+    "mistral-large-123b",
+    "starcoder2-7b",
+    "qwen3-moe-235b-a22b",
+    "rwkv6-1.6b",
+    "qwen2.5-14b",
+    "deepseek-moe-16b",
+    "musicgen-large",
+    "jamba-v0.1-52b",
+    # the paper's own evaluation model
+    "llama2-7b-32k",
+    # small models for CPU-trainable quality benchmarks
+    "tiny-lm",
+)
+
+
+def _module(name: str):
+    return importlib.import_module(
+        "repro.configs." + name.replace("-", "_").replace(".", "_"))
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCHS}")
+    mod = _module(name)
+    return mod.smoke_config() if smoke else mod.full_config()

@@ -1,0 +1,35 @@
+"""deepseek-moe-16b — fine-grained MoE: 2 shared + 64 routed experts top-6,
+first layer dense. [arXiv:2401.06066]"""
+
+from repro.models.config import (ATTN_FULL, MLP_DENSE, MLP_MOE, LayerSpec,
+                                 ModelConfig)
+
+_DENSE = LayerSpec(mixer=ATTN_FULL, mlp=MLP_DENSE)
+_MOE = LayerSpec(mixer=ATTN_FULL, mlp=MLP_MOE)
+
+
+def full_config() -> ModelConfig:
+    # 28 layers = 1 dense head + 27 MoE
+    return ModelConfig(
+        name="deepseek-moe-16b", arch_type="moe",
+        d_model=2048, num_heads=16, num_kv_heads=16, head_dim=128,
+        d_ff=10944,                 # dense (first) layer FFN
+        vocab_size=102400,
+        head_layers=(_DENSE,),
+        pattern=(_MOE,), n_repeats=27,
+        num_experts=64, top_k=6, moe_d_ff=1408, num_shared_experts=2,
+        source="arXiv:2401.06066",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-moe-16b-smoke", arch_type="moe",
+        d_model=256, num_heads=4, num_kv_heads=4, head_dim=64,
+        d_ff=512, vocab_size=512,
+        head_layers=(_DENSE,),
+        pattern=(_MOE,), n_repeats=1,
+        num_experts=4, top_k=2, moe_d_ff=128, num_shared_experts=1,
+        group_size=16,
+        source="arXiv:2401.06066",
+    )

@@ -1,0 +1,32 @@
+"""gemma3-27b — dense, 5:1 local(sliding-window):global attention, 128k ctx.
+[hf:google/gemma-3-1b-pt family card, scaled to 27B]"""
+
+from repro.models.config import (ATTN_FULL, ATTN_WINDOW, MLP_DENSE,
+                                 LayerSpec, ModelConfig)
+
+_W = LayerSpec(mixer=ATTN_WINDOW, mlp=MLP_DENSE)
+_G = LayerSpec(mixer=ATTN_FULL, mlp=MLP_DENSE)
+
+
+def full_config() -> ModelConfig:
+    # 62 layers = (5 local + 1 global) x 10 + (1 local + 1 global) tail
+    return ModelConfig(
+        name="gemma3-27b", arch_type="dense",
+        d_model=5376, num_heads=32, num_kv_heads=16, head_dim=128,
+        d_ff=21504, vocab_size=262144,
+        pattern=(_W, _W, _W, _W, _W, _G), n_repeats=10,
+        tail_layers=(_W, _G),
+        window=1024, rope_theta=1_000_000.0,
+        source="hf:google/gemma-3-1b-pt",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-27b-smoke", arch_type="dense",
+        d_model=256, num_heads=4, num_kv_heads=2, head_dim=64,
+        d_ff=512, vocab_size=512,
+        pattern=(_W, _G), n_repeats=1,
+        window=32, n_sink=2, group_size=16,
+        source="hf:google/gemma-3-1b-pt",
+    )

@@ -1,0 +1,37 @@
+"""jamba-v0.1-52b — hybrid Mamba+attention (1:7) with MoE every other layer
+(16 experts, top-2). Jamba block = 8 layers, attention at index 4, MoE on
+odd indices. [arXiv:2403.19887]"""
+
+from repro.models.config import (ATTN_FULL, MIX_MAMBA, MLP_DENSE, MLP_MOE,
+                                 LayerSpec, ModelConfig)
+
+_M_D = LayerSpec(mixer=MIX_MAMBA, mlp=MLP_DENSE)
+_M_E = LayerSpec(mixer=MIX_MAMBA, mlp=MLP_MOE)
+_A_E = LayerSpec(mixer=ATTN_FULL, mlp=MLP_MOE)
+
+
+def full_config() -> ModelConfig:
+    # 32 layers = 4 Jamba blocks of 8; attn at position 4 of each block
+    block = (_M_D, _M_E, _M_D, _M_E, LayerSpec(ATTN_FULL, MLP_DENSE),
+             _M_E, _M_D, _M_E)
+    return ModelConfig(
+        name="jamba-v0.1-52b", arch_type="hybrid",
+        d_model=4096, num_heads=32, num_kv_heads=8, head_dim=128,
+        d_ff=14336, vocab_size=65536,
+        pattern=block, n_repeats=4,
+        num_experts=16, top_k=2, moe_d_ff=14336,
+        d_state=16, d_conv=4, ssm_expand=2,
+        source="arXiv:2403.19887",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-v0.1-52b-smoke", arch_type="hybrid",
+        d_model=256, num_heads=4, num_kv_heads=2, head_dim=64,
+        d_ff=512, vocab_size=512,
+        pattern=(_M_E, LayerSpec(ATTN_FULL, MLP_DENSE)), n_repeats=1,
+        num_experts=4, top_k=2, moe_d_ff=256,
+        d_state=8, d_conv=4, ssm_expand=2, group_size=16,
+        source="arXiv:2403.19887",
+    )

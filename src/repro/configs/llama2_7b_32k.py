@@ -1,0 +1,26 @@
+"""llama2-7b-32k — the paper's own evaluation model
+(Llama-2-7B-32K-Instruct; QuantSpec Table 3)."""
+
+from repro.models.config import ATTN_FULL, MLP_DENSE, LayerSpec, ModelConfig
+
+_L = LayerSpec(mixer=ATTN_FULL, mlp=MLP_DENSE)
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name="llama2-7b-32k", arch_type="dense",
+        d_model=4096, num_heads=32, num_kv_heads=32, head_dim=128,
+        d_ff=11008, vocab_size=32000,
+        pattern=(_L,), n_repeats=32,
+        source="QuantSpec paper §5.1 / hf:togethercomputer/Llama-2-7B-32K-Instruct",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="llama2-7b-32k-smoke", arch_type="dense",
+        d_model=256, num_heads=4, num_kv_heads=4, head_dim=64,
+        d_ff=512, vocab_size=512,
+        pattern=(_L,), n_repeats=2, group_size=16,
+        source="QuantSpec paper §5.1",
+    )

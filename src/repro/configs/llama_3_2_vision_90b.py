@@ -1,0 +1,34 @@
+"""llama-3.2-vision-90b — VLM backbone: 100 decoder layers with a
+cross-attention (image) layer every 5th. The vision encoder + projector are
+stubbed; `input_specs` provides precomputed patch embeddings.
+[hf:meta-llama/Llama-3.2-11B-Vision, scaled to 90B]"""
+
+from repro.models.config import (ATTN_CROSS, ATTN_FULL, MLP_DENSE,
+                                 LayerSpec, ModelConfig)
+
+_S = LayerSpec(mixer=ATTN_FULL, mlp=MLP_DENSE)
+_X = LayerSpec(mixer=ATTN_CROSS, mlp=MLP_DENSE)
+
+
+def full_config() -> ModelConfig:
+    # 100 layers = (4 self + 1 cross) x 20
+    return ModelConfig(
+        name="llama-3.2-vision-90b", arch_type="vlm",
+        d_model=8192, num_heads=64, num_kv_heads=8, head_dim=128,
+        d_ff=28672, vocab_size=128256,
+        pattern=(_S, _S, _S, _S, _X), n_repeats=20,
+        num_image_tokens=1600,
+        rope_theta=500_000.0,
+        source="hf:meta-llama/Llama-3.2-11B-Vision",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="llama-3.2-vision-90b-smoke", arch_type="vlm",
+        d_model=256, num_heads=4, num_kv_heads=2, head_dim=64,
+        d_ff=512, vocab_size=512,
+        pattern=(_S, _X), n_repeats=1,
+        num_image_tokens=16, group_size=16,
+        source="hf:meta-llama/Llama-3.2-11B-Vision",
+    )

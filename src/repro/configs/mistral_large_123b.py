@@ -1,0 +1,27 @@
+"""mistral-large-123b — dense GQA decoder.
+[hf:mistralai/Mistral-Large-Instruct-2407]"""
+
+from repro.models.config import ATTN_FULL, MLP_DENSE, LayerSpec, ModelConfig
+
+_L = LayerSpec(mixer=ATTN_FULL, mlp=MLP_DENSE)
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name="mistral-large-123b", arch_type="dense",
+        d_model=12288, num_heads=96, num_kv_heads=8, head_dim=128,
+        d_ff=28672, vocab_size=32768,
+        pattern=(_L,), n_repeats=88,
+        rope_theta=1_000_000.0,
+        source="hf:mistralai/Mistral-Large-Instruct-2407",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="mistral-large-123b-smoke", arch_type="dense",
+        d_model=256, num_heads=8, num_kv_heads=2, head_dim=32,
+        d_ff=512, vocab_size=512,
+        pattern=(_L,), n_repeats=2, group_size=16,
+        source="hf:mistralai/Mistral-Large-Instruct-2407",
+    )

@@ -1,0 +1,29 @@
+"""musicgen-large — decoder-only over EnCodec tokens (4 codebooks, delay
+pattern). The EnCodec frontend is stubbed: inputs are codebook token ids.
+[arXiv:2306.05284]"""
+
+from repro.models.config import ATTN_FULL, MLP_DENSE, LayerSpec, ModelConfig
+
+_L = LayerSpec(mixer=ATTN_FULL, mlp=MLP_DENSE)
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-large", arch_type="audio",
+        d_model=2048, num_heads=32, num_kv_heads=32, head_dim=64,
+        d_ff=8192, vocab_size=2048,
+        pattern=(_L,), n_repeats=48,
+        num_codebooks=4,
+        source="arXiv:2306.05284",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-large-smoke", arch_type="audio",
+        d_model=256, num_heads=4, num_kv_heads=4, head_dim=64,
+        d_ff=512, vocab_size=128,
+        pattern=(_L,), n_repeats=2,
+        num_codebooks=4, group_size=16,
+        source="arXiv:2306.05284",
+    )

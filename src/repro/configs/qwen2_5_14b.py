@@ -1,0 +1,27 @@
+"""qwen2.5-14b — dense GQA decoder with QKV bias.
+[hf:Qwen/Qwen2.5-0.5B family card, scaled to 14B]"""
+
+from repro.models.config import ATTN_FULL, MLP_DENSE, LayerSpec, ModelConfig
+
+_L = LayerSpec(mixer=ATTN_FULL, mlp=MLP_DENSE)
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2.5-14b", arch_type="dense",
+        d_model=5120, num_heads=40, num_kv_heads=8, head_dim=128,
+        d_ff=13824, vocab_size=152064,
+        pattern=(_L,), n_repeats=48,
+        qkv_bias=True, rope_theta=1_000_000.0,
+        source="hf:Qwen/Qwen2.5-0.5B",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2.5-14b-smoke", arch_type="dense",
+        d_model=256, num_heads=4, num_kv_heads=2, head_dim=64,
+        d_ff=512, vocab_size=512,
+        pattern=(_L,), n_repeats=2, qkv_bias=True, group_size=16,
+        source="hf:Qwen/Qwen2.5-0.5B",
+    )

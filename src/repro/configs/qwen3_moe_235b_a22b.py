@@ -1,0 +1,29 @@
+"""qwen3-moe-235b-a22b — MoE: 128 experts, top-8, no shared experts.
+[hf:Qwen/Qwen3-30B-A3B family card, scaled to 235B-A22B]"""
+
+from repro.models.config import ATTN_FULL, MLP_MOE, LayerSpec, ModelConfig
+
+_L = LayerSpec(mixer=ATTN_FULL, mlp=MLP_MOE)
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-moe-235b-a22b", arch_type="moe",
+        d_model=4096, num_heads=64, num_kv_heads=4, head_dim=128,
+        d_ff=1536, vocab_size=151936,
+        pattern=(_L,), n_repeats=94,
+        num_experts=128, top_k=8, moe_d_ff=1536,
+        rope_theta=1_000_000.0,
+        source="hf:Qwen/Qwen3-30B-A3B",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-moe-235b-a22b-smoke", arch_type="moe",
+        d_model=256, num_heads=4, num_kv_heads=2, head_dim=64,
+        d_ff=256, vocab_size=512,
+        pattern=(_L,), n_repeats=2,
+        num_experts=4, top_k=2, moe_d_ff=256, group_size=16,
+        source="hf:Qwen/Qwen3-30B-A3B",
+    )

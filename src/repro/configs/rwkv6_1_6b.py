@@ -1,0 +1,26 @@
+"""rwkv6-1.6b ("Finch") — attention-free, data-dependent decay.
+[arXiv:2404.05892]"""
+
+from repro.models.config import MIX_RWKV, MLP_RWKV, LayerSpec, ModelConfig
+
+_L = LayerSpec(mixer=MIX_RWKV, mlp=MLP_RWKV)
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-1.6b", arch_type="ssm",
+        d_model=2048, num_heads=32, num_kv_heads=32, head_dim=64,
+        d_ff=7168, vocab_size=65536,
+        pattern=(_L,), n_repeats=24,
+        source="arXiv:2404.05892",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-1.6b-smoke", arch_type="ssm",
+        d_model=256, num_heads=4, num_kv_heads=4, head_dim=64,
+        d_ff=512, vocab_size=512,
+        pattern=(_L,), n_repeats=2, group_size=16,
+        source="arXiv:2404.05892",
+    )

@@ -1,0 +1,26 @@
+"""starcoder2-7b — dense GQA decoder with RoPE. [arXiv:2402.19173]"""
+
+from repro.models.config import ATTN_FULL, MLP_DENSE, LayerSpec, ModelConfig
+
+_L = LayerSpec(mixer=ATTN_FULL, mlp=MLP_DENSE)
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name="starcoder2-7b", arch_type="dense",
+        d_model=4608, num_heads=36, num_kv_heads=4, head_dim=128,
+        d_ff=18432, vocab_size=49152,
+        pattern=(_L,), n_repeats=32,
+        rope_theta=1_000_000.0, qkv_bias=True,
+        source="arXiv:2402.19173",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="starcoder2-7b-smoke", arch_type="dense",
+        d_model=256, num_heads=4, num_kv_heads=2, head_dim=64,
+        d_ff=512, vocab_size=512,
+        pattern=(_L,), n_repeats=2, qkv_bias=True, group_size=16,
+        source="arXiv:2402.19173",
+    )

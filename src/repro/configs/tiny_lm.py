@@ -1,0 +1,22 @@
+"""tiny-lm — ~20M-param dense model, CPU-trainable in minutes. Used by the
+quality benchmarks (perplexity FP16 vs INT8/INT4 KV; quant-axis ablation)
+and the end-to-end training example."""
+
+from repro.models.config import ATTN_FULL, MLP_DENSE, LayerSpec, ModelConfig
+
+_L = LayerSpec(mixer=ATTN_FULL, mlp=MLP_DENSE)
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name="tiny-lm", arch_type="dense",
+        d_model=384, num_heads=6, num_kv_heads=6, head_dim=64,
+        d_ff=1024, vocab_size=512,
+        pattern=(_L,), n_repeats=6,
+        group_size=32,
+        source="repo-internal (quality benches)",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return full_config().replace(name="tiny-lm-smoke", n_repeats=2)

@@ -1,0 +1,102 @@
+"""Speculative-sampling verification (Leviathan et al. 2023), batched.
+
+Given γ draft tokens with draft distributions q and target distributions p,
+accept each token with probability min(1, p/q); at the first rejection,
+resample from the residual distribution norm(max(p-q, 0)); if all γ are
+accepted, sample one bonus token from the target's (γ+1)-th distribution.
+
+This preserves the target model's sampling distribution exactly, so the
+*only* quality question for QuantSpec is the target's INT8-KV fidelity
+(validated in benchmarks/ppl_quality.py).
+
+Batched engines here run in lockstep: the per-step accepted length is the
+minimum across the batch (exact for batch=1, conservative otherwise — see
+DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class VerifyResult(NamedTuple):
+    tokens: jnp.ndarray       # [B, gamma+1] — accepted + correction/bonus,
+                              # positions >= n_new are padding
+    n_accepted: jnp.ndarray   # i32 scalar — accepted draft tokens (min over batch)
+    n_new: jnp.ndarray        # i32 scalar — n_accepted + 1 (correction/bonus)
+    accept_mask_b: jnp.ndarray  # [B, gamma] — per-sequence accept flags (stats)
+
+
+def _gather_probs(probs, tokens):
+    # probs [B, T, V], tokens [B, T] -> [B, T]
+    return jnp.take_along_axis(probs, tokens[..., None], axis=-1)[..., 0]
+
+
+def verify(draft_tokens: jnp.ndarray,
+           draft_probs: jnp.ndarray,
+           target_probs: jnp.ndarray,
+           key: jax.Array,
+           greedy: bool = False) -> VerifyResult:
+    """draft_tokens [B, γ]; draft_probs [B, γ, V]; target_probs [B, γ+1, V]."""
+    B, gamma = draft_tokens.shape
+    key_u, key_res, key_bonus = jax.random.split(key, 3)
+
+    p_draft_tok = _gather_probs(target_probs[:, :gamma], draft_tokens)
+    q_draft_tok = _gather_probs(draft_probs, draft_tokens)
+
+    if greedy:
+        accept = draft_tokens == jnp.argmax(target_probs[:, :gamma], axis=-1)
+    else:
+        u = jax.random.uniform(key_u, (B, gamma))
+        accept = u * q_draft_tok <= p_draft_tok
+
+    # prefix-accepted length per sequence, then lockstep min
+    prefix = jnp.cumprod(accept.astype(jnp.int32), axis=-1)
+    n_b = jnp.sum(prefix, axis=-1)                     # [B]
+    n = jnp.min(n_b).astype(jnp.int32)
+
+    # distribution for the (n+1)-th token: residual if n < γ else target bonus
+    p_next = jnp.take_along_axis(
+        target_probs, jnp.full((B, 1, 1), 0, jnp.int32) + n, axis=1)[:, 0]
+    if greedy:
+        extra = jnp.argmax(p_next, axis=-1)
+    else:
+        q_at_n = jnp.take_along_axis(
+            jnp.pad(draft_probs, ((0, 0), (0, 1), (0, 0))),
+            jnp.full((B, 1, 1), 0, jnp.int32) + n, axis=1)[:, 0]
+        residual = jnp.maximum(p_next - q_at_n, 0.0)
+        is_bonus = (n == gamma)
+        dist = jnp.where(is_bonus, p_next, residual)
+        dist = dist / jnp.maximum(dist.sum(-1, keepdims=True), 1e-20)
+        extra = jax.random.categorical(key_res, jnp.log(dist + 1e-20), axis=-1)
+
+    pos = jnp.arange(gamma + 1)
+    padded_draft = jnp.pad(draft_tokens, ((0, 0), (0, 1)))
+    tokens = jnp.where(pos[None, :] < n, padded_draft,
+                       jnp.where(pos[None, :] == n, extra[:, None], 0))
+    return VerifyResult(tokens=tokens, n_accepted=n,
+                        n_new=n + 1, accept_mask_b=accept)
+
+
+def verify_greedy_multi(draft_tokens: jnp.ndarray,
+                        target_probs: jnp.ndarray) -> VerifyResult:
+    """Frame-level greedy verification for multi-codebook (audio) decoding:
+    a drafted frame is accepted iff every codebook matches the target's
+    argmax. draft_tokens [B, γ, K]; target_probs [B, γ+1, K, V]."""
+    B, gamma, K = draft_tokens.shape
+    tgt = jnp.argmax(target_probs, axis=-1)                 # [B, γ+1, K]
+    accept = jnp.all(draft_tokens == tgt[:, :gamma], axis=-1)  # [B, γ]
+    prefix = jnp.cumprod(accept.astype(jnp.int32), axis=-1)
+    n = jnp.min(jnp.sum(prefix, axis=-1)).astype(jnp.int32)
+    extra = jnp.take_along_axis(
+        tgt, jnp.full((B, 1, 1), 0, jnp.int32) + n, axis=1)[:, 0]  # [B, K]
+    pos = jnp.arange(gamma + 1)
+    padded = jnp.pad(draft_tokens, ((0, 0), (0, 1), (0, 0)))
+    tokens = jnp.where(pos[None, :, None] < n, padded,
+                       jnp.where(pos[None, :, None] == n,
+                                 extra[:, None, :], 0))
+    return VerifyResult(tokens=tokens, n_accepted=n, n_new=n + 1,
+                        accept_mask_b=accept)

@@ -1,0 +1,362 @@
+"""Hierarchical quantized KV cache with double full-precision buffer.
+
+Layout (per layer, batch-first):
+
+    quantized region : NB blocks × G tokens, two nibble-packed INT4 planes
+                       (upper/lower) for K and V + per-block scales/zeros.
+    FP buffer        : ``2*G`` most-recent tokens in compute precision,
+                       logically split into C_F1 = buf[:G] (always full once
+                       prefill exceeds G tokens) and C_F2 = buf[G:].
+
+Invariants maintained by the engine (QuantSpec §4.3.2):
+  * ``buf_len >= G`` after prefill (recent tokens stay full-precision).
+  * rollbacks (rejected draft tokens) only ever shrink C_F2.
+  * when the buffer fills, C_F1 is quantized+appended as one block and C_F2
+    shifts down into C_F1 — quantization work happens once per G tokens.
+
+All shapes are static; ``blocks`` / ``buf_len`` are traced scalars so every
+operation jits. Sequence-position bookkeeping: token ``t`` of the stream
+lives either in quant block ``t // G`` or in the buffer at
+``t - blocks*G``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import (
+    HierQuant,
+    dequant_full,
+    dequant_upper,
+    quantize_k_block,
+    quantize_v_block,
+)
+
+
+class HierKVCache(NamedTuple):
+    # --- quantized region --------------------------------------------------
+    k_upper: jnp.ndarray  # uint8 [B, NB, G, H, D//2]
+    k_lower: jnp.ndarray  # uint8 [B, NB, G, H, D//2]
+    k_scale: jnp.ndarray  # f32   [B, NB, 1, H, D]
+    k_zero: jnp.ndarray   # f32   [B, NB, 1, H, D]
+    v_upper: jnp.ndarray  # uint8 [B, NB, G, H, D//2]
+    v_lower: jnp.ndarray  # uint8 [B, NB, G, H, D//2]
+    v_scale: jnp.ndarray  # f32   [B, NB, G, H, 1]
+    v_zero: jnp.ndarray   # f32   [B, NB, G, H, 1]
+    blocks: jnp.ndarray   # i32 scalar — filled quant blocks
+    # --- double full-precision buffer ---------------------------------------
+    buf_k: jnp.ndarray    # [B, 2G, H, D] compute dtype
+    buf_v: jnp.ndarray    # [B, 2G, H, D]
+    buf_len: jnp.ndarray  # i32 scalar — tokens in buffer
+
+    @property
+    def group(self) -> int:
+        return self.buf_k.shape[1] // 2
+
+    @property
+    def seq_len(self) -> jnp.ndarray:
+        return self.blocks * self.group + self.buf_len
+
+    @property
+    def capacity(self) -> int:
+        return self.k_upper.shape[1] * self.group + 2 * self.group
+
+
+def init_cache(batch: int, max_blocks: int, group: int, heads: int,
+               head_dim: int, dtype=jnp.float32) -> HierKVCache:
+    B, NB, G, H, D = batch, max_blocks, group, heads, head_dim
+    u8 = partial(jnp.zeros, dtype=jnp.uint8)
+    f32 = partial(jnp.zeros, dtype=jnp.float32)
+    return HierKVCache(
+        k_upper=u8((B, NB, G, H, D // 2)),
+        k_lower=u8((B, NB, G, H, D // 2)),
+        k_scale=f32((B, NB, 1, H, D)),
+        k_zero=f32((B, NB, 1, H, D)),
+        v_upper=u8((B, NB, G, H, D // 2)),
+        v_lower=u8((B, NB, G, H, D // 2)),
+        v_scale=f32((B, NB, G, H, 1)),
+        v_zero=f32((B, NB, G, H, 1)),
+        blocks=jnp.zeros((), jnp.int32),
+        buf_k=jnp.zeros((B, 2 * G, H, D), dtype),
+        buf_v=jnp.zeros((B, 2 * G, H, D), dtype),
+        buf_len=jnp.zeros((), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# quantize helpers
+# ---------------------------------------------------------------------------
+
+def _quantize_blocks(k: jnp.ndarray, v: jnp.ndarray, group: int):
+    """Quantize ``[B, n*G, H, D]`` into per-block HierQuants ``[B, n, ...]``."""
+    B, S, H, D = k.shape
+    n = S // group
+    kb = k.reshape(B, n, group, H, D)
+    vb = v.reshape(B, n, group, H, D)
+    return quantize_k_block(kb), quantize_v_block(vb)
+
+
+def prefill(cache: HierKVCache, k: jnp.ndarray, v: jnp.ndarray) -> HierKVCache:
+    """Insert a prefill's K/V ``[B, S, H, D]`` (S static).
+
+    Quantizes all but the trailing ``rem ∈ [G, 2G)`` tokens (everything stays
+    in the buffer when ``S < G``).
+    """
+    G = cache.group
+    S = k.shape[1]
+    n_blocks = max(0, (S - G) // G)
+    rem = S - n_blocks * G
+    assert rem <= 2 * G
+    new = cache
+    if n_blocks > 0:
+        kq, vq = _quantize_blocks(k[:, : n_blocks * G], v[:, : n_blocks * G], G)
+        def put(dst, src):
+            return jax.lax.dynamic_update_slice_in_dim(dst, src, 0, axis=1)
+        new = new._replace(
+            k_upper=put(new.k_upper, kq.upper), k_lower=put(new.k_lower, kq.lower),
+            k_scale=put(new.k_scale, kq.scale), k_zero=put(new.k_zero, kq.zero),
+            v_upper=put(new.v_upper, vq.upper), v_lower=put(new.v_lower, vq.lower),
+            v_scale=put(new.v_scale, vq.scale), v_zero=put(new.v_zero, vq.zero),
+        )
+    buf_k = jax.lax.dynamic_update_slice_in_dim(
+        new.buf_k, k[:, n_blocks * G:].astype(new.buf_k.dtype), 0, axis=1)
+    buf_v = jax.lax.dynamic_update_slice_in_dim(
+        new.buf_v, v[:, n_blocks * G:].astype(new.buf_v.dtype), 0, axis=1)
+    return new._replace(
+        blocks=jnp.asarray(n_blocks, jnp.int32),
+        buf_k=buf_k, buf_v=buf_v,
+        buf_len=jnp.asarray(rem, jnp.int32),
+    )
+
+
+def append(cache: HierKVCache, k: jnp.ndarray, v: jnp.ndarray) -> HierKVCache:
+    """Append ``T`` new tokens ``[B, T, H, D]`` to the FP buffer (C_F2).
+
+    Caller must guarantee ``buf_len + T <= 2G`` (flush first otherwise).
+    """
+    start = cache.buf_len
+    buf_k = _update_at(cache.buf_k, k.astype(cache.buf_k.dtype), start)
+    buf_v = _update_at(cache.buf_v, v.astype(cache.buf_v.dtype), start)
+    return cache._replace(buf_k=buf_k, buf_v=buf_v,
+                          buf_len=cache.buf_len + k.shape[1])
+
+
+def _update_at(buf: jnp.ndarray, x: jnp.ndarray, start) -> jnp.ndarray:
+    idx = (jnp.zeros((), jnp.int32), jnp.asarray(start, jnp.int32),
+           jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+    return jax.lax.dynamic_update_slice(buf, x, idx)
+
+
+def rollback(cache: HierKVCache, n) -> HierKVCache:
+    """Drop the last ``n`` tokens (rejected drafts) — a counter decrement.
+
+    Only ever removes tokens from C_F2 (engine invariant), so no quantized
+    state needs touching: this is the "flexible discard" of §4.3.2.
+    """
+    return cache._replace(buf_len=cache.buf_len - jnp.asarray(n, jnp.int32))
+
+
+def maybe_flush(cache: HierKVCache, headroom: int = 0) -> HierKVCache:
+    """If the buffer cannot absorb ``headroom`` more tokens (or is full),
+    quantize C_F1 into a new block and shift C_F2 → C_F1."""
+    G = cache.group
+
+    def do_flush(c: HierKVCache) -> HierKVCache:
+        kq = quantize_k_block(c.buf_k[:, :G])
+        vq = quantize_v_block(c.buf_v[:, :G])
+        b = c.blocks
+
+        def put(dst, src):
+            return jax.lax.dynamic_update_slice_in_dim(
+                dst, src[:, None], b, axis=1)
+
+        shifted_k = jnp.concatenate(
+            [c.buf_k[:, G:], jnp.zeros_like(c.buf_k[:, :G])], axis=1)
+        shifted_v = jnp.concatenate(
+            [c.buf_v[:, G:], jnp.zeros_like(c.buf_v[:, :G])], axis=1)
+        return c._replace(
+            k_upper=put(c.k_upper, kq.upper),
+            k_lower=put(c.k_lower, kq.lower),
+            k_scale=put(c.k_scale, kq.scale),
+            k_zero=put(c.k_zero, kq.zero),
+            v_upper=put(c.v_upper, vq.upper),
+            v_lower=put(c.v_lower, vq.lower),
+            v_scale=put(c.v_scale, vq.scale),
+            v_zero=put(c.v_zero, vq.zero),
+            blocks=c.blocks + 1,
+            buf_k=shifted_k, buf_v=shifted_v,
+            buf_len=c.buf_len - G,
+        )
+
+    need = cache.buf_len + headroom > 2 * G - 1
+    return jax.lax.cond(need, do_flush, lambda c: c, cache)
+
+
+# ---------------------------------------------------------------------------
+# dequantized views (reference path; the Pallas kernel reads packed planes)
+# ---------------------------------------------------------------------------
+
+def dequant_region(cache: HierKVCache, mode: str, dtype=jnp.float32):
+    """Dequantize the quantized region → ``(k, v)`` of ``[B, NB*G, H, D]``.
+
+    mode='draft' loads only the upper plane (4-bit); mode='target'
+    reconstructs INT8 from both planes. Positions ≥ blocks*G are garbage and
+    must be masked by the caller (valid quant length = ``blocks * G``).
+    """
+    deq = dequant_upper if mode == "draft" else dequant_full
+    kq = HierQuant(cache.k_upper, cache.k_lower, cache.k_scale, cache.k_zero)
+    vq = HierQuant(cache.v_upper, cache.v_lower, cache.v_scale, cache.v_zero)
+    k = deq(kq, dtype)
+    v = deq(vq, dtype)
+    B, NB, G, H, D = k.shape
+    return k.reshape(B, NB * G, H, D), v.reshape(B, NB * G, H, D)
+
+
+def materialize(cache: HierKVCache, mode: str, dtype=jnp.float32):
+    """Full logical K/V ``[B, NB*G + 2G, H, D]`` plus the valid length.
+
+    Reference implementation used by the pure-jnp attention path and as the
+    oracle for the Pallas kernel.
+    """
+    kq, vq = dequant_region(cache, mode, dtype)
+    k = jnp.concatenate([kq, cache.buf_k.astype(dtype)], axis=1)
+    v = jnp.concatenate([vq, cache.buf_v.astype(dtype)], axis=1)
+    quant_len = cache.blocks * cache.group
+    Sq = kq.shape[1]
+    pos = jnp.arange(k.shape[1])
+    valid = jnp.where(pos < Sq, pos < quant_len,
+                      pos - Sq < cache.buf_len)
+    return k, v, valid, quant_len
+
+
+# ---------------------------------------------------------------------------
+# Plain full-precision cache (targets of the sparse-KV baselines, and the
+# FP16 autoregressive baseline)
+# ---------------------------------------------------------------------------
+
+class FullKVCache(NamedTuple):
+    k: jnp.ndarray        # [B, S_max, H, D]
+    v: jnp.ndarray        # [B, S_max, H, D]
+    length: jnp.ndarray   # i32 scalar
+
+    @property
+    def seq_len(self):
+        return self.length
+
+
+def init_full_cache(batch, max_seq, heads, head_dim, dtype=jnp.float32):
+    return FullKVCache(
+        k=jnp.zeros((batch, max_seq, heads, head_dim), dtype),
+        v=jnp.zeros((batch, max_seq, heads, head_dim), dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def full_append(cache: FullKVCache, k, v) -> FullKVCache:
+    kk = _update_at(cache.k, k.astype(cache.k.dtype), cache.length)
+    vv = _update_at(cache.v, v.astype(cache.v.dtype), cache.length)
+    return FullKVCache(kk, vv, cache.length + k.shape[1])
+
+
+def full_rollback(cache: FullKVCache, n) -> FullKVCache:
+    return cache._replace(length=cache.length - jnp.asarray(n, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Windowed (ring) cache — StreamingLLM-style sink + sliding window. Used for
+# gemma3 local layers, the StreamingLLM draft baseline, and the streaming
+# long_500k mode of pure full-attention architectures.
+# ---------------------------------------------------------------------------
+
+class WindowKVCache(NamedTuple):
+    sink_k: jnp.ndarray   # [B, n_sink, H, D]
+    sink_v: jnp.ndarray
+    ring_k: jnp.ndarray   # [B, W, H, D]
+    ring_v: jnp.ndarray
+    pos: jnp.ndarray      # i32 — absolute position of next token
+    # ring slot of token p is p % W once p >= n_sink
+
+
+def init_window_cache(batch, window, heads, head_dim, n_sink=4,
+                      dtype=jnp.float32):
+    return WindowKVCache(
+        sink_k=jnp.zeros((batch, n_sink, heads, head_dim), dtype),
+        sink_v=jnp.zeros((batch, n_sink, heads, head_dim), dtype),
+        ring_k=jnp.zeros((batch, window, heads, head_dim), dtype),
+        ring_v=jnp.zeros((batch, window, heads, head_dim), dtype),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def window_append(cache: WindowKVCache, k, v) -> WindowKVCache:
+    """Append T tokens; sink absorbs the first n_sink ever seen.
+
+    Large chunks (T > window, i.e. prefill) are split: sink head + last-W
+    tail; skipped middle tokens only advance ``pos``.
+    """
+    B, T, H, D = k.shape
+    n_sink = cache.sink_k.shape[1]
+    W = cache.ring_k.shape[1]
+    if T > W:
+        cache = window_append(cache, k[:, :n_sink], v[:, :n_sink])
+        skip = max(0, T - n_sink - W)
+        cache = cache._replace(pos=cache.pos + skip)
+        return window_append(cache, k[:, n_sink + skip:], v[:, n_sink + skip:])
+
+    import os
+    if T == 1 and os.environ.get("REPRO_WINDOW_FAST", "1") != "0":
+        # decode fast path: two dynamic_update_slices instead of a padded
+        # scatter (which copies the whole ring) — §Perf iteration, exercised
+        # by every streaming/window decode step (REPRO_WINDOW_FAST=0 restores
+        # the baseline scatter for before/after measurement)
+        pos = cache.pos
+        kk = k.astype(cache.sink_k.dtype)
+        vv = v.astype(cache.sink_v.dtype)
+        if n_sink > 0:
+            in_sink = pos < n_sink
+            sidx = jnp.clip(pos, 0, n_sink - 1)
+            old_sk = jax.lax.dynamic_slice_in_dim(cache.sink_k, sidx, 1, axis=1)
+            old_sv = jax.lax.dynamic_slice_in_dim(cache.sink_v, sidx, 1, axis=1)
+            sink_k = jax.lax.dynamic_update_slice_in_dim(
+                cache.sink_k, jnp.where(in_sink, kk, old_sk), sidx, axis=1)
+            sink_v = jax.lax.dynamic_update_slice_in_dim(
+                cache.sink_v, jnp.where(in_sink, vv, old_sv), sidx, axis=1)
+        else:
+            in_sink = jnp.zeros((), bool)
+            sink_k, sink_v = cache.sink_k, cache.sink_v
+        ridx = pos % W
+        old_rk = jax.lax.dynamic_slice_in_dim(cache.ring_k, ridx, 1, axis=1)
+        old_rv = jax.lax.dynamic_slice_in_dim(cache.ring_v, ridx, 1, axis=1)
+        ring_k = jax.lax.dynamic_update_slice_in_dim(
+            cache.ring_k, jnp.where(in_sink, old_rk, kk), ridx, axis=1)
+        ring_v = jax.lax.dynamic_update_slice_in_dim(
+            cache.ring_v, jnp.where(in_sink, old_rv, vv), ridx, axis=1)
+        return WindowKVCache(sink_k, sink_v, ring_k, ring_v, cache.pos + 1)
+
+    positions = cache.pos + jnp.arange(T)
+    in_sink = positions < n_sink
+    sink_k = _masked_scatter(cache.sink_k, k, positions, in_sink)
+    sink_v = _masked_scatter(cache.sink_v, v, positions, in_sink)
+    ring_k = _masked_scatter(cache.ring_k, k, positions % W, ~in_sink)
+    ring_v = _masked_scatter(cache.ring_v, v, positions % W, ~in_sink)
+    return WindowKVCache(sink_k, sink_v, ring_k, ring_v, cache.pos + T)
+
+
+def _masked_scatter(dst, src, idx, mask):
+    """dst[:, idx[t]] = src[:, t] where mask[t]; masked-out writes land in a
+    dummy slot (duplicate-index safe). Real indices must be unique."""
+    n = dst.shape[1]
+    padded = jnp.concatenate([dst, jnp.zeros_like(dst[:, :1])], axis=1)
+    safe_idx = jnp.where(mask, jnp.clip(idx, 0, n - 1), n)
+    padded = padded.at[:, safe_idx].set(src.astype(dst.dtype))
+    return padded[:, :n]
+
+
+def window_rollback(cache: WindowKVCache, n) -> WindowKVCache:
+    # Ring entries of rolled-back tokens will be overwritten by the
+    # re-generated tokens at the same positions; only `pos` moves back.
+    return cache._replace(pos=cache.pos - jnp.asarray(n, jnp.int32))

@@ -1,0 +1,178 @@
+"""Hierarchical INT4+INT4 = INT8 quantization (QuantSpec §4.2).
+
+The target model's INT8 KV cache is decomposed into two INT4 planes:
+
+    C_INT8 = 16 * C_U + C_L,       C_U in [0, 15],  C_L in [-8, 7]
+
+obtained by (1) asymmetric round-to-nearest 4-bit quantization of the FP
+tensor (upper plane), then (2) *symmetric* 4-bit quantization of the upper
+plane's quantization error (lower plane) — the error distribution is
+symmetric around zero, so no zero-point is stored for the lower plane.
+
+Dequantization:
+    draft  (4-bit):  x ~ C_U * S4 + Z4
+    target (8-bit):  x ~ C_U * S4 + C_L * (S4 / 16) + Z4
+                       = (16*C_U + C_L) * S8 + Z8,   S4 = 16*S8, Z4 = Z8.
+
+Quantization axes (QuantSpec §4.3.1 / App. D):
+    keys   — per-CHANNEL: within a block of G tokens, one (scale, zero) per
+             channel, reduced over the token axis.
+    values — per-TOKEN:  one (scale, zero) per token, reduced over the
+             channel (head_dim) axis (group size G == head_dim).
+
+Both planes are nibble-packed two-elements-per-byte along the head_dim axis
+so the draft model physically loads 4 bits/element (the lower plane lives in
+a separate array that only the target model touches).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+_EPS = 1e-8
+_QMAX4 = 15  # unsigned 4-bit max
+
+
+class HierQuant(NamedTuple):
+    """A hierarchically quantized tensor (both planes nibble-packed)."""
+
+    upper: jnp.ndarray  # uint8, packed 2-per-byte along last axis
+    lower: jnp.ndarray  # uint8, packed 2-per-byte, values biased by +8
+    scale: jnp.ndarray  # S4 (upper-plane scale), fp32
+    zero: jnp.ndarray   # Z4 (= Z8), fp32
+
+
+# ---------------------------------------------------------------------------
+# nibble packing
+# ---------------------------------------------------------------------------
+
+def pack_nibbles(x: jnp.ndarray) -> jnp.ndarray:
+    """Pack int values in [0, 15] two-per-byte along the last axis.
+
+    Halves layout (TPU-friendly): byte d packs elements (d, d + D/2), so
+    unpacking is `concat([p >> 4, p & 15], axis=-1)` — a lane concatenation
+    rather than an interleaving reshape, which the Pallas kernels prefer.
+    """
+    x = x.astype(jnp.uint8)
+    h = x.shape[-1] // 2
+    hi = x[..., :h]
+    lo = x[..., h:]
+    return (hi << 4) | lo
+
+
+def unpack_nibbles(p: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`pack_nibbles`; returns int32 in [0, 15]."""
+    hi = (p >> 4).astype(jnp.int32)
+    lo = (p & 0xF).astype(jnp.int32)
+    return jnp.concatenate([hi, lo], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# scalar-plane quantizers
+# ---------------------------------------------------------------------------
+
+def asym_quant4(x: jnp.ndarray, axis: int):
+    """Asymmetric 4-bit RTN quantization reduced over ``axis``.
+
+    Returns (q in [0,15] int32, scale S4, zero Z4); scale/zero keep the
+    reduced axis with size 1.
+    """
+    x = x.astype(jnp.float32)
+    mn = jnp.min(x, axis=axis, keepdims=True)
+    mx = jnp.max(x, axis=axis, keepdims=True)
+    scale = jnp.maximum((mx - mn) / _QMAX4, _EPS)
+    q = jnp.clip(jnp.round((x - mn) / scale), 0, _QMAX4).astype(jnp.int32)
+    return q, scale, mn
+
+
+def hier_quantize(x: jnp.ndarray, axis: int) -> HierQuant:
+    """Hierarchically quantize ``x``; (scale, zero) reduced over ``axis``.
+
+    The last axis of ``x`` must have even length (nibble packing).
+    """
+    q_u, s4, z4 = asym_quant4(x, axis)
+    recon_u = q_u.astype(jnp.float32) * s4 + z4
+    err = x.astype(jnp.float32) - recon_u
+    s8 = s4 / 16.0
+    q_l = jnp.clip(jnp.round(err / s8), -8, 7).astype(jnp.int32)
+    return HierQuant(
+        upper=pack_nibbles(q_u),
+        lower=pack_nibbles(q_l + 8),
+        scale=s4.astype(jnp.float32),
+        zero=z4.astype(jnp.float32),
+    )
+
+
+def dequant_upper(q: HierQuant, dtype=jnp.float32) -> jnp.ndarray:
+    """Draft-model dequantization: 4-bit plane only."""
+    q_u = unpack_nibbles(q.upper).astype(jnp.float32)
+    return (q_u * q.scale + q.zero).astype(dtype)
+
+
+def dequant_full(q: HierQuant, dtype=jnp.float32) -> jnp.ndarray:
+    """Target-model dequantization: reconstruct INT8 from both planes."""
+    q_u = unpack_nibbles(q.upper).astype(jnp.float32)
+    q_l = unpack_nibbles(q.lower).astype(jnp.float32) - 8.0
+    q8 = 16.0 * q_u + q_l
+    return (q8 * (q.scale / 16.0) + q.zero).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV-block quantizers (the shapes the cache uses)
+# ---------------------------------------------------------------------------
+
+def quantize_k_block(k: jnp.ndarray) -> HierQuant:
+    """Quantize a key block ``[..., G, H, D]`` per-channel.
+
+    (scale, zero) are reduced over the token axis → shape ``[..., 1, H, D]``.
+    """
+    return hier_quantize(k, axis=-3)
+
+
+def quantize_v_block(v: jnp.ndarray) -> HierQuant:
+    """Quantize a value block ``[..., G, H, D]`` per-token.
+
+    (scale, zero) are reduced over head_dim → shape ``[..., G, H, 1]``.
+    """
+    return hier_quantize(v, axis=-1)
+
+
+def simulate_cache_quant(x: jnp.ndarray, *, group: int, residual: int,
+                         axis: str, bits: int) -> jnp.ndarray:
+    """Quantize-dequantize a full-sequence K or V tensor ``[B, S, H, D]``
+    exactly the way the hierarchical cache would store it: tokens grouped in
+    blocks of ``group`` along the sequence, the trailing ``residual`` tokens
+    kept full-precision (the double FP buffer), per-``axis`` scales
+    ('channel' → reduce over tokens, 'token' → reduce over head_dim),
+    ``bits`` ∈ {4 (upper plane), 8 (both planes), 16 (no-op)}.
+
+    Used by the quality benchmarks (paper Tables 2 & 5) to measure the
+    perplexity effect of cache quantization without running a full decode.
+    """
+    if bits >= 16:
+        return x
+    B, S, H, D = x.shape
+    n_blocks = max(0, (S - residual) // group)
+    if n_blocks == 0:
+        return x
+    head = x[:, : n_blocks * group].reshape(B, n_blocks, group, H, D)
+    red_axis = -3 if axis == "channel" else -1
+    hq = hier_quantize(head, axis=red_axis)
+    deq = dequant_upper(hq, x.dtype) if bits == 4 else dequant_full(hq, x.dtype)
+    out = jnp.concatenate(
+        [deq.reshape(B, n_blocks * group, H, D), x[:, n_blocks * group:]],
+        axis=1)
+    return out
+
+
+def int8_reference_quant(x: jnp.ndarray, axis: int):
+    """Plain (non-hierarchical) asymmetric INT8 quantization — used by tests
+    to check that the hierarchical scheme matches direct INT8 to ~1 ULP."""
+    x = x.astype(jnp.float32)
+    mn = jnp.min(x, axis=axis, keepdims=True)
+    mx = jnp.max(x, axis=axis, keepdims=True)
+    scale = jnp.maximum((mx - mn) / 255.0, _EPS / 16.0)
+    q = jnp.clip(jnp.round((x - mn) / scale), 0, 255)
+    return q * scale + mn

@@ -1,0 +1,94 @@
+"""The QuantSpec self-speculative decoding round (Algorithm 1).
+
+One round =
+  1. draft γ tokens autoregressively with the 4-bit view: INT4 weights +
+     upper-4-bit KV cache (+ the shared FP buffer). Draft cache writes are
+     *discarded wholesale* at the end of the round — functionally this is
+     the paper's REJECTCACHE, done by never committing the draft's state.
+  2. target verifies all γ+1 positions in ONE pass with the INT8
+     (both-plane) KV view and full-precision weights, appending its own KV
+     for the window (overwriting what the draft would have written — the
+     paper's TARGET(...) → C_F2 update).
+  3. speculative-sampling accept/reject; attention caches roll back the
+     rejected tail, recurrent (Mamba/RWKV) layers commit the per-token
+     state snapshot at the acceptance point.
+
+The whole round is one jittable function; the engine drives it in a Python
+loop until `max_new_tokens`.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import acceptance
+from repro.serving.sampling import sample_token
+
+
+class RoundResult(NamedTuple):
+    state: dict
+    tokens: jnp.ndarray       # [B, gamma+1] new tokens (n_new valid)
+    n_new: jnp.ndarray        # scalar
+    last_token: jnp.ndarray   # [B, 1(, K)] token to feed next round
+    accept_mask: jnp.ndarray  # [B, gamma]
+
+
+def spec_round(model, target_params, draft_params, state, last_token,
+               stream_pos, key, *, gamma: int, policy: str = "quantspec",
+               greedy: bool = False, temperature: float = 1.0,
+               ctx_kw=None) -> RoundResult:
+    """last_token [B, 1] (or [B, 1, K] for codebooks). stream_pos = number
+    of tokens already processed by the target (cache length)."""
+    multi = model.cfg.num_codebooks > 0
+    keys = jax.random.split(key, gamma + 2)
+
+    # ---- 1. draft γ tokens -------------------------------------------------
+    draft_state = state
+    cur = last_token
+    toks, qlist = [], []
+    for i in range(gamma):
+        dl, draft_state, _ = model.decode(
+            draft_params, cur, draft_state, stream_pos + i,
+            kv_mode="draft", policy=policy, ctx_kw=ctx_kw)
+        logits = dl[:, -1] / temperature
+        nxt = sample_token(logits, keys[i], greedy)       # [B] or [B, K]
+        q = jax.nn.softmax(logits, axis=-1)
+        toks.append(nxt)
+        qlist.append(q)
+        cur = nxt[:, None]
+    draft_tokens = jnp.stack(toks, axis=1)                # [B, γ(,K)]
+    draft_probs = jnp.stack(qlist, axis=1)                # [B, γ(,K), V]
+
+    # ---- 2. target verifies in one pass ------------------------------------
+    tgt_in = jnp.concatenate([last_token, draft_tokens], axis=1)  # [B, γ+1]
+    tl, t_state, snaps = model.decode(
+        target_params, tgt_in, state, stream_pos, kv_mode="target",
+        policy=policy, collect=True, ctx_kw=ctx_kw)
+    target_probs = jax.nn.softmax(tl / temperature, axis=-1)  # [B, γ+1(,K), V]
+
+    # ---- 3. verify + commit -------------------------------------------------
+    if multi:
+        res = acceptance.verify_greedy_multi(draft_tokens, target_probs)
+    else:
+        res = acceptance.verify(draft_tokens, draft_probs, target_probs,
+                                keys[gamma], greedy=greedy)
+    new_state = model.commit(t_state, snaps, res.n_accepted, gamma + 1)
+
+    last = jax.lax.dynamic_slice_in_dim(res.tokens, res.n_accepted, 1, axis=1)
+    return RoundResult(state=new_state, tokens=res.tokens, n_new=res.n_new,
+                       last_token=last, accept_mask=res.accept_mask_b)
+
+
+def ar_step(model, params, state, last_token, stream_pos, key, *,
+            policy: str = "fp", greedy: bool = False, temperature: float = 1.0,
+            kv_mode: str = "target", ctx_kw=None):
+    """Plain autoregressive step (the paper's AR baseline)."""
+    tl, new_state, _ = model.decode(params, last_token, state, stream_pos,
+                                    kv_mode=kv_mode, policy=policy,
+                                    ctx_kw=ctx_kw)
+    nxt = sample_token(tl[:, -1] / temperature, key, greedy)
+    return new_state, nxt[:, None]

@@ -1,0 +1,107 @@
+"""INT4 per-group weight quantization for the draft pass (QuantSpec §4.1).
+
+The draft model shares the target's weights but loads them as 4-bit
+(asymmetric, round-to-nearest, groups of 128 along the contraction axis) —
+this is what accelerates the *linear* portion of decode for short contexts
+(§3.1: short-context decode is weight-bound).
+
+Weights stay packed in HBM; `Int4Weight.dequant()` is the reference
+dequantization (on TPU the dequant fuses into the matmul — XLA does this
+fusion for the `dequant → dot` pattern, see benchmarks/kernel_bench.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import asym_quant4
+
+DEFAULT_GROUP = 128
+
+
+@jax.tree_util.register_pytree_node_class
+class Int4Weight:
+    """A 4-bit quantized weight. Logical shape ``(*lead, d_in, d_out)``;
+    quantization groups run along ``d_in`` (axis -2)."""
+
+    def __init__(self, packed, scale, zero, group: int):
+        self.packed = packed  # uint8 [*lead, d_in//group, group//2, d_out]
+        self.scale = scale    # f32   [*lead, d_in//group, 1, d_out]
+        self.zero = zero      # f32   [*lead, d_in//group, 1, d_out]
+        self.group = group
+
+    # -- pytree protocol -----------------------------------------------------
+    def tree_flatten(self):
+        return (self.packed, self.scale, self.zero), (self.group,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, aux[0])
+
+    # -------------------------------------------------------------------------
+    @property
+    def shape(self):
+        lead = self.packed.shape[:-3]
+        ng, gh, dout = self.packed.shape[-3:]
+        return (*lead, ng * gh * 2, dout)
+
+    @property
+    def nbytes(self):
+        return (self.packed.size + 4 * self.scale.size + 4 * self.zero.size
+                if hasattr(self.packed, "size") else 0)
+
+    def dequant(self, dtype=jnp.float32) -> jnp.ndarray:
+        p = self.packed
+        hi = (p >> 4).astype(jnp.float32)
+        lo = (p & 0xF).astype(jnp.float32)
+        q = jnp.stack([hi, lo], axis=-2)              # [..., ng, g//2, 2, dout]
+        *lead, ng, gh, two, dout = q.shape
+        q = q.reshape(*lead, ng, gh * 2, dout)
+        w = q * self.scale + self.zero
+        return w.reshape(*lead, ng * gh * 2, dout).astype(dtype)
+
+
+def quantize_weight(w: jnp.ndarray, group: int = DEFAULT_GROUP) -> Int4Weight:
+    """Quantize ``(*lead, d_in, d_out)`` along ``d_in`` in groups."""
+    *lead, din, dout = w.shape
+    assert din % group == 0, (w.shape, group)
+    wg = w.reshape(*lead, din // group, group, dout)
+    q, s, z = asym_quant4(wg, axis=-2)
+    packed = ((q[..., 0::2, :].astype(jnp.uint8) << 4)
+              | q[..., 1::2, :].astype(jnp.uint8))
+    return Int4Weight(packed, s, z, group)
+
+
+def is_quantizable(path: str, w) -> bool:
+    """Default policy: 4-bit-quantize matmul weights, keep embeddings,
+    norms, biases, and small tensors in full precision."""
+    if not hasattr(w, "ndim") or w.ndim < 2:
+        return False
+    if w.shape[-2] % DEFAULT_GROUP != 0:
+        return False
+    lowered = path.lower()
+    if any(s in lowered for s in ("embed", "norm", "bias", "scale", "a_log",
+                                  "conv", "decay", "dt_")):
+        return False
+    return True
+
+
+def quantize_tree(params, group: int = DEFAULT_GROUP, predicate=is_quantizable):
+    """Walk a param pytree and replace quantizable leaves with Int4Weight."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        if predicate(name, leaf):
+            out.append(quantize_weight(leaf, group))
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def resolve(w, dtype=jnp.float32) -> jnp.ndarray:
+    """Materialize a weight that may or may not be quantized."""
+    if isinstance(w, Int4Weight):
+        return w.dequant(dtype)
+    return w.astype(dtype)

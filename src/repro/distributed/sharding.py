@@ -1,0 +1,184 @@
+"""Logical-axis sharding (MaxText-style).
+
+Model code annotates tensors with *logical* axis names
+(`constrain(x, "batch", "seq", "embed")`); a rules table maps logical names
+to mesh axes per execution mode. Outside a mesh context everything no-ops,
+so the same model code runs on 1 CPU device and on a 512-chip mesh.
+
+Mesh axes:
+    single pod : ("data", "model")            = (16, 16)
+    multi-pod  : ("pod", "data", "model")     = (2, 16, 16)
+
+The "pod" axis (slow DCI links) only ever carries data parallelism
+(gradient all-reduce in training, batch/sequence splits in serving) — never
+tensor parallelism, which would put per-layer collectives on the slow links.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+# ---------------------------------------------------------------------------
+# rules tables: logical axis -> mesh axis (or None = replicate)
+# ---------------------------------------------------------------------------
+
+# Training: FSDP — weights sharded over BOTH data and model axes so that a
+# 123B model's AdamW state fits a v5e pod (16 GB/chip); activations sharded
+# batch->data, heads/ff->model.
+TRAIN_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "kv_seq": "model",   # fallback: sequence-parallel attention logits
+    "head_dim": None,
+    "mlp": "model",
+    "moe_mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_cap": "data",
+    "layers": None,
+    "fsdp_in": "data",       # weight d_in axis (FSDP shard)
+    "ssm_inner": "model",
+    "conv_dim": None,
+    "state_dim": None,
+    "codebooks": None,
+    "img_seq": None,
+}
+
+# Serving: weights sharded over model axis only (replicated over data so
+# every data-replica can decode independently); KV cache batch->data,
+# kv_heads->model. long-context batch-1: cache *sequence* -> data.
+SERVE_RULES = dict(TRAIN_RULES)
+SERVE_RULES.update({
+    "fsdp_in": None,
+    "cache_batch": ("pod", "data"),
+    "cache_seq": None,
+    "cache_kv_heads": "model",
+})
+
+# long_500k (batch=1): shard the KV cache sequence across the data axis —
+# chip-level flash-decoding. Queries replicated; partial-softmax combine is
+# inserted by SPMD.
+LONG_RULES = dict(SERVE_RULES)
+LONG_RULES.update({
+    "batch": None,
+    "cache_batch": None,
+    "cache_seq": ("pod", "data"),
+    "seq": ("pod", "data"),
+})
+
+RULESETS = {"train": TRAIN_RULES, "serve": SERVE_RULES, "long": LONG_RULES}
+
+
+# ---------------------------------------------------------------------------
+# context
+# ---------------------------------------------------------------------------
+
+@contextlib.contextmanager
+def axis_rules(mesh: Optional[Mesh], mode: str = "serve"):
+    """Activate logical->mesh mapping for `constrain` calls under `mesh`."""
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = (mesh, RULESETS[mode]) if mesh is not None else None
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    ctx = getattr(_state, "ctx", None)
+    return ctx[0] if ctx else None
+
+
+def logical_to_spec(*logical: Optional[str], rules=None) -> P:
+    ctx = getattr(_state, "ctx", None)
+    if rules is None:
+        if ctx is None:
+            return P()
+        rules = ctx[1]
+    mesh = ctx[0] if ctx else None
+    used = set()
+    parts = []
+    for name in logical:
+        ax = rules.get(name) if name else None
+        if ax is None:
+            parts.append(None)
+            continue
+        cand = ax if isinstance(ax, tuple) else (ax,)
+        if mesh is not None:
+            cand = tuple(a for a in cand if a in mesh.axis_names and a not in used)
+        else:
+            cand = tuple(a for a in cand if a not in used)
+        used.update(cand)
+        parts.append(cand if len(cand) > 1 else (cand[0] if cand else None))
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def constrain(x: jnp.ndarray, *logical: Optional[str]) -> jnp.ndarray:
+    """Apply a logical sharding constraint; no-op outside a mesh context.
+
+    Shape-aware in a single pass: an axis whose size doesn't divide the mesh
+    extent is skipped *and doesn't consume the mesh axis*, so a later
+    logical axis can claim it (e.g. 36 query heads can't take the 16-way
+    `model` axis → the kv-sequence axis gets it instead: sequence-parallel
+    attention as the fallback for odd head counts)."""
+    ctx = getattr(_state, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    used = set()
+    parts = []
+    for i, name in enumerate(logical[: x.ndim]):
+        ax = rules.get(name) if name else None
+        if ax is None:
+            parts.append(None)
+            continue
+        cand = tuple(a for a in (ax if isinstance(ax, tuple) else (ax,))
+                     if a in mesh.axis_names and a not in used)
+        extent = 1
+        for a in cand:
+            extent *= mesh.shape[a]
+        if not cand or extent <= 1 or x.shape[i] % extent != 0:
+            parts.append(None)
+            continue
+        used.update(cand)
+        parts.append(cand if len(cand) > 1 else cand[0])
+    while parts and parts[-1] is None:
+        parts.pop()
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*parts)))
+
+
+def named_sharding(mesh: Mesh, *logical, mode: str = "serve") -> NamedSharding:
+    spec = _spec_for(mesh, logical, RULESETS[mode])
+    return NamedSharding(mesh, spec)
+
+
+def _spec_for(mesh, logical, rules) -> P:
+    used = set()
+    parts = []
+    for name in logical:
+        ax = rules.get(name) if name else None
+        if ax is None:
+            parts.append(None)
+            continue
+        cand = ax if isinstance(ax, tuple) else (ax,)
+        cand = tuple(a for a in cand if a in mesh.axis_names and a not in used)
+        used.update(cand)
+        parts.append(cand if len(cand) > 1 else (cand[0] if cand else None))
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)

@@ -1,0 +1,247 @@
+"""PartitionSpec assignment for parameter and serving-state pytrees.
+
+Parameters: name-based rules over the trailing two (matrix) axes.
+  serve : output-feature dims of QKV/up projections → `model`; input dims of
+          down/output projections → `model`; vocab → `model`; rest replicated
+          (weights replicated across `data` so each data replica decodes
+          independently).
+  train : same `model` placement + the opposite matrix dim → `data` (FSDP),
+          so params/grads/AdamW state shard over all 256|512 chips.
+
+Expert tensors additionally shard their expert axis over `model`
+(expert parallelism); the per-expert matrix dims then only use `data`.
+
+Serving state: structural walk over the cache containers (type dispatch,
+no name parsing): batch → `data`, kv-heads → `model`; in long-context mode
+(batch=1) the cache *sequence* axis shards over `data` instead — chip-level
+flash-decoding (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import hier_kv_cache as HC
+from repro.models import mamba as M
+from repro.models import rwkv6 as R
+from repro.models.stack import AttnState, CrossKV, SnapKVCache
+
+# name -> (in_dim_role, out_dim_role); roles: 'model' | 'fsdp' | None
+_MATRIX_ROLES = {
+    "wq": ("fsdp", "model"), "wk": ("fsdp", "model"), "wv": ("fsdp", "model"),
+    "wo": ("model", "fsdp"),
+    "w_gate": ("fsdp", "model"), "w_up": ("fsdp", "model"),
+    "w_down": ("model", "fsdp"),
+    "in_proj": ("fsdp", "model"), "out_proj": ("model", "fsdp"),
+    "x_proj": ("model", None), "dt_w": (None, "model"),
+    "wr": ("fsdp", "model"), "wg": ("fsdp", "model"),
+    "wr_cm": ("fsdp", "model"), "wk_cm": ("fsdp", "model"),
+    "wv_cm": ("model", "fsdp"),
+    "w_lora_a": (None, None), "w_lora_b": (None, None),
+    "embed": ("model", "fsdp"),       # [V, d]
+    "lm_head": ("fsdp", "model"),     # [d, V]
+    "router": (None, None),
+    "conv_w": (None, "model"),
+}
+
+_REPLICATED_HINTS = ("norm", "bias", "scale", "zero", "mu_", "w0",
+                     "a_log", "d_skip", "dt_bias", "ln_")
+_REPLICATED_EXACT = ("u",)  # RWKV per-head bonus
+
+
+def _role_axis(role, mode: str, mesh: Mesh):
+    if role == "model":
+        return "model" if "model" in mesh.axis_names else None
+    if role == "fsdp" and mode == "train":
+        return "data" if "data" in mesh.axis_names else None
+    return None
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        s = str(getattr(entry, "key", getattr(entry, "name", entry)))
+        if not s.isdigit():
+            return s.strip("'\"[]")
+    return ""
+
+
+def param_specs(params, mesh: Mesh, mode: str = "serve"):
+    """Pytree of NamedSharding mirroring `params`."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        pathstr = jax.tree_util.keystr(path)
+        name = _leaf_name(path)
+        ndim = np.ndim(leaf)
+        spec = P()
+        if ndim >= 2:
+            is_expert = "experts" in pathstr and name in (
+                "w_gate", "w_up", "w_down")
+            roles = _MATRIX_ROLES.get(name)
+            if (any(h in name.lower() for h in _REPLICATED_HINTS)
+                    or name.lower() in _REPLICATED_EXACT):
+                roles = None
+            if is_expert:
+                # [..., E, d_in, d_out]: E -> model, d_in -> fsdp
+                parts = [None] * ndim
+                parts[-3] = _role_axis("model", mode, mesh)
+                parts[-2] = _role_axis("fsdp", mode, mesh)
+                spec = P(*parts)
+            elif roles is not None and ndim >= 2:
+                parts = [None] * ndim
+                parts[-2] = _role_axis(roles[0], mode, mesh)
+                parts[-1] = _role_axis(roles[1], mode, mesh)
+                spec = P(*parts)
+        # divisibility guard
+        shape = np.shape(leaf)
+        parts = list(tuple(spec) + (None,) * (ndim - len(tuple(spec))))
+        for i, part in enumerate(parts):
+            if part is None:
+                continue
+            if shape[i] % mesh.shape[part] != 0:
+                parts[i] = None
+        out.append(NamedSharding(mesh, P(*parts)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# serving state
+# ---------------------------------------------------------------------------
+
+def _fit(mesh: Mesh, shape, parts):
+    """Drop spec entries whose mesh extent doesn't divide the dim size."""
+    out = []
+    for i, part in enumerate(parts[: len(shape)]):
+        if part is None:
+            out.append(None)
+            continue
+        axes = part if isinstance(part, tuple) else (part,)
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        extent = 1
+        for a in axes:
+            extent *= mesh.shape[a]
+        ok = extent > 0 and shape[i] % extent == 0
+        out.append((axes if len(axes) > 1 else axes[0]) if ok and axes else None)
+    while out and out[-1] is None:
+        out.pop()
+    return NamedSharding(mesh, P(*out))
+
+
+def _cache_spec(obj, mesh: Mesh, long_ctx: bool, lead: int):
+    """Spec tree for one cache object; `lead` = number of stacked leading
+    axes (n_repeats) to pad with None.
+
+    Head axis shards over `model` when divisible; otherwise the sequence
+    (block) axis takes `model` — chip-level flash-decoding over the cache.
+    long_ctx (batch=1): batch unsharded, sequence over `data` (+`model` if
+    heads don't fit)."""
+    Lp = (None,) * lead
+    model_n = mesh.shape.get("model", 1)
+
+    def kv_like(shape_head_axis, leaf):
+        import os
+        H = leaf.shape[shape_head_axis]
+        heads_ok = H % model_n == 0
+        h = "model" if heads_ok else None
+        if long_ctx:
+            b = None
+            # REPRO_LONG_SEQ_DATA_ONLY=1: don't put `model` on the cache
+            # sequence even when heads don't divide (§Perf pair-C iteration:
+            # trades idle model shards for no cross-`model` gather)
+            data_only = os.environ.get("REPRO_LONG_SEQ_DATA_ONLY") == "1"
+            seq = ("data",) if (heads_ok or data_only) else ("data", "model")
+        else:
+            b = "data"
+            seq = None if heads_ok else "model"
+        return b, seq, h
+
+    if isinstance(obj, HC.HierKVCache):
+        b, seq, h = kv_like(-2, obj.k_upper)
+        plane = lambda leaf: _fit(mesh, leaf.shape, (*Lp, b, seq, None, h, None))
+        return HC.HierKVCache(
+            k_upper=plane(obj.k_upper), k_lower=plane(obj.k_lower),
+            k_scale=plane(obj.k_scale), k_zero=plane(obj.k_zero),
+            v_upper=plane(obj.v_upper), v_lower=plane(obj.v_lower),
+            v_scale=plane(obj.v_scale), v_zero=plane(obj.v_zero),
+            blocks=_fit(mesh, obj.blocks.shape, Lp),
+            buf_k=_fit(mesh, obj.buf_k.shape, (*Lp, b, None, h, None)),
+            buf_v=_fit(mesh, obj.buf_v.shape, (*Lp, b, None, h, None)),
+            buf_len=_fit(mesh, obj.buf_len.shape, Lp),
+        )
+    if isinstance(obj, HC.FullKVCache):
+        b, seq, h = kv_like(-2, obj.k)
+        kv = lambda leaf: _fit(mesh, leaf.shape, (*Lp, b, seq, h, None))
+        return HC.FullKVCache(k=kv(obj.k), v=kv(obj.v),
+                              length=_fit(mesh, obj.length.shape, Lp))
+    if isinstance(obj, HC.WindowKVCache):
+        b, seq, h = kv_like(-2, obj.ring_k)
+        kv = lambda leaf: _fit(mesh, leaf.shape, (*Lp, b, seq, h, None))
+        sink = lambda leaf: _fit(mesh, leaf.shape, (*Lp, b, None, h, None))
+        return HC.WindowKVCache(
+            sink_k=sink(obj.sink_k), sink_v=sink(obj.sink_v),
+            ring_k=kv(obj.ring_k), ring_v=kv(obj.ring_v),
+            pos=_fit(mesh, obj.pos.shape, Lp))
+    if isinstance(obj, SnapKVCache):
+        b, seq, h = kv_like(-2, obj.sel_k)
+        kv = lambda leaf: _fit(mesh, leaf.shape, (*Lp, b, None, h, None))
+        return SnapKVCache(
+            sel_k=kv(obj.sel_k), sel_v=kv(obj.sel_v),
+            sel_pos=_fit(mesh, obj.sel_pos.shape, (*Lp, b)),
+            recent=_cache_spec(obj.recent, mesh, long_ctx, lead))
+    if isinstance(obj, CrossKV):
+        b, _, h = kv_like(-2, obj.k)
+        kv = lambda leaf: _fit(mesh, leaf.shape, (*Lp, b, None, h, None))
+        return CrossKV(k=kv(obj.k), v=kv(obj.v))
+    if isinstance(obj, AttnState):
+        return AttnState(
+            primary=_cache_spec(obj.primary, mesh, long_ctx, lead),
+            draft=(None if obj.draft is None
+                   else _cache_spec(obj.draft, mesh, long_ctx, lead)))
+    if isinstance(obj, M.MambaCache):
+        b = None if long_ctx else "data"
+        return M.MambaCache(
+            conv=_fit(mesh, obj.conv.shape, (*Lp, b, None, "model")),
+            h=_fit(mesh, obj.h.shape, (*Lp, b, "model", None)))
+    if isinstance(obj, R.RWKVTMState):
+        b = None if long_ctx else "data"
+        return R.RWKVTMState(
+            x_prev=_fit(mesh, obj.x_prev.shape, (*Lp, b, None)),
+            S=_fit(mesh, obj.S.shape, (*Lp, b, "model", None, None)))
+    if isinstance(obj, R.RWKVCMState):
+        b = None if long_ctx else "data"
+        return R.RWKVCMState(
+            x_prev=_fit(mesh, obj.x_prev.shape, (*Lp, b, None)))
+    if obj is None:
+        return None
+    raise TypeError(type(obj))
+
+
+def state_specs(state, mesh: Mesh, long_ctx: bool = False):
+    """Spec tree mirroring a serve state (dict head/blocks/tail of
+    (mixer, mlp) pairs)."""
+    def entry(pair, lead):
+        mixer, mlp = pair
+        return (_cache_spec(mixer, mesh, long_ctx, lead),
+                _cache_spec(mlp, mesh, long_ctx, lead))
+
+    return {
+        "head": [entry(p, 0) for p in state["head"]],
+        "tail": [entry(p, 0) for p in state["tail"]],
+        "blocks": (tuple(entry(p, 1) for p in state["blocks"])
+                   if state["blocks"] is not None else None),
+    }
+
+
+def replicated(tree, mesh: Mesh):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def apply_sharding_to_shapes(shapes, shardings):
+    """Attach NamedShardings to a ShapeDtypeStruct pytree (for .lower())."""
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings)

@@ -1,0 +1,93 @@
+"""jit'd wrappers tying the Pallas kernels to the cache/model layer.
+
+`hier_attention` implements the same contract as
+`models.common.attend_hier` (impl="pallas"): Pallas flash-decoding over the
+quantized region + one jnp flash chunk for the FP buffer, merged by
+log-sum-exp (paper App. E).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hier_kv_cache import HierKVCache
+from repro.kernels.quant_attention import quant_region_attention
+
+
+def _bh(x):
+    """[B, NB, G, H, X] -> [B*H, NB, G, X]"""
+    B, NB, G, H, X = x.shape
+    return x.transpose(0, 3, 1, 2, 4).reshape(B * H, NB, G, X)
+
+
+def _attention_with_lse(q, k, v, mask):
+    """q [BH,gT,D]; k,v [BH,S,D]; mask [BH,gT,S] (True=attend).
+    Returns normalized out + lse (−inf where no key valid)."""
+    D = q.shape[-1]
+    s = jnp.einsum("btd,bsd->bts", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    s = jnp.where(mask, s, -jnp.inf)
+    m = jnp.max(s, axis=-1)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.where(mask, jnp.exp(s - m_safe[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    out = jnp.einsum("bts,bsd->btd", p, v.astype(jnp.float32))
+    out = out / jnp.maximum(l, 1e-30)[..., None]
+    lse = jnp.where(l > 0, m_safe + jnp.log(jnp.maximum(l, 1e-30)), -jnp.inf)
+    return out, lse
+
+
+def _combine(out_a, lse_a, out_b, lse_b, dtype):
+    m = jnp.maximum(lse_a, lse_b)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    wa = jnp.exp(lse_a - m)[..., None]
+    wb = jnp.exp(lse_b - m)[..., None]
+    out = (out_a.astype(jnp.float32) * wa + out_b.astype(jnp.float32) * wb) \
+        / jnp.maximum(wa + wb, 1e-30)
+    return out.astype(dtype)
+
+
+def hier_attention(q, cache: HierKVCache, stream_pos, mode: str,
+                   softcap: float = 0.0, interpret: bool = True):
+    """q [B, T, Hq, D] over a hierarchical cache (post-append).
+
+    Draft mode streams 4 bits/KV element through the kernel, target mode 8 —
+    the QuantSpec bandwidth win. Softcap is not fused (only needed by archs
+    with softcap=0 here)."""
+    if softcap != 0.0:
+        raise NotImplementedError("softcap not fused in the Pallas kernel")
+    B, T, Hq, D = q.shape
+    H = cache.buf_k.shape[2]
+    g = Hq // H
+    G = cache.group
+
+    # ---- quantized region via Pallas ---------------------------------------
+    qr = q.reshape(B, T, H, g, D).transpose(0, 2, 3, 1, 4)  # [B,H,g,T,D]
+    qr = qr.reshape(B * H, g * T, D)
+    out_q, lse_q = quant_region_attention(
+        qr,
+        _bh(cache.k_upper), _bh(cache.k_lower),
+        _bh(cache.k_scale), _bh(cache.k_zero),
+        _bh(cache.v_upper), _bh(cache.v_lower),
+        _bh(cache.v_scale), _bh(cache.v_zero),
+        cache.blocks, mode, interpret=interpret)
+
+    # ---- FP buffer chunk ----------------------------------------------------
+    buf_k = cache.buf_k.transpose(0, 2, 1, 3).reshape(B * H, 2 * G, D)
+    buf_v = cache.buf_v.transpose(0, 2, 1, 3).reshape(B * H, 2 * G, D)
+    quant_len = cache.blocks * G
+    t_idx = jnp.arange(g * T) % T
+    q_pos = stream_pos + t_idx                                # [gT]
+    j = jnp.arange(2 * G)
+    mask = (j[None, :] < cache.buf_len) & \
+           (quant_len + j[None, :] <= q_pos[:, None])         # [gT, 2G]
+    mask = jnp.broadcast_to(mask[None], (B * H, g * T, 2 * G))
+    out_b, lse_b = _attention_with_lse(qr, buf_k, buf_v, mask)
+
+    out = _combine(out_q, lse_q, out_b, lse_b, q.dtype)       # [BH, gT, D]
+    out = out.reshape(B, H, g, T, D).transpose(0, 3, 1, 2, 4)
+    return out.reshape(B, T, Hq, D)

@@ -1,0 +1,137 @@
+"""Pallas TPU kernel: flash-decoding attention over the hierarchical
+quantized KV region (QuantSpec §5.2.1, adapted to TPU).
+
+Grid = (B·H_kv, NB): the KV-block axis is innermost, so each (batch, head)
+streams its quantized blocks through VMEM once, carrying the online-softmax
+state (m, l, acc) in VMEM scratch across grid steps — the TPU analogue of
+FlashDecoding's split-K loop.
+
+Per grid step the kernel loads the *packed* planes:
+    draft  mode: upper plane only  — 4 bits/element off HBM
+    target mode: upper + lower     — 8 bits/element
+and dequantizes in-register after the VMEM copy; the MXU sees fp32 tiles of
+[G, D] with G = quant group (128) and D = head_dim (128) — both
+hardware-aligned. This is where the paper's 2.88×/1.51× bandwidth win
+comes from: bytes moved per KV element drop 4×/2× vs fp16.
+
+The recent-token FP buffer (≤ 2G tokens) is handled outside the kernel as
+one extra flash chunk and merged via log-sum-exp (App. E of the paper).
+
+Validated in interpret mode against kernels/ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(blocks_ref,                      # scalar prefetch: [1] i32
+            q_ref, ku_ref, kl_ref, ks_ref, kz_ref,
+            vu_ref, vl_ref, vs_ref, vz_ref,
+            out_ref, lse_ref,
+            m_scr, l_scr, acc_scr,
+            *, mode: str, nb_total: int):
+    nb = pl.program_id(1)
+
+    @pl.when(nb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(nb < blocks_ref[0])
+    def _process():
+        q = q_ref[0].astype(jnp.float32)                  # [gT, D]
+        D = q.shape[-1]
+
+        def dequant(u_ref, l_ref, s_ref, z_ref):
+            qu = u_ref[0, 0]
+            hi = (qu >> 4).astype(jnp.float32)
+            lo = (qu & 0xF).astype(jnp.float32)
+            quf = jnp.concatenate([hi, lo], axis=-1)      # [G, D]
+            s = s_ref[0, 0].astype(jnp.float32)
+            z = z_ref[0, 0].astype(jnp.float32)
+            if mode == "draft":
+                return quf * s + z
+            ql = l_ref[0, 0]
+            lhi = (ql >> 4).astype(jnp.float32)
+            llo = (ql & 0xF).astype(jnp.float32)
+            qlf = jnp.concatenate([lhi, llo], axis=-1) - 8.0
+            return (16.0 * quf + qlf) * (s / 16.0) + z
+
+        k = dequant(ku_ref, kl_ref, ks_ref, kz_ref)       # [G, D]
+        v = dequant(vu_ref, vl_ref, vs_ref, vz_ref)       # [G, D]
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s / math.sqrt(D)                               # [gT, G]
+
+        m_prev = m_scr[...]                                # [gT, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                             # [gT, G]
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(nb == nb_total - 1)
+    def _finalize():
+        l = l_scr[...]
+        out_ref[0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(out_ref.dtype)
+        lse = jnp.where(l > 0, m_scr[...] + jnp.log(jnp.maximum(l, 1e-30)),
+                        -jnp.inf)
+        lse_ref[0] = lse[:, 0]
+
+
+def quant_region_attention(q, k_upper, k_lower, k_scale, k_zero,
+                           v_upper, v_lower, v_scale, v_zero,
+                           blocks, mode: str, *, interpret: bool = True):
+    """q [BH, gT, D]; packed planes [BH, NB, G, D//2];
+    k_scale/zero [BH, NB, 1, D]; v_scale/zero [BH, NB, G, 1].
+    Returns (out [BH, gT, D], lse [BH, gT])."""
+    BH, gT, D = q.shape
+    NB, G = k_upper.shape[1], k_upper.shape[2]
+    Dp = D // 2
+
+    # broadcast scale layouts the kernel expects: [BH, NB, G|1, D]
+    ks = jnp.broadcast_to(k_scale, (BH, NB, 1, D))
+    kz = jnp.broadcast_to(k_zero, (BH, NB, 1, D))
+    vs = jnp.broadcast_to(v_scale, (BH, NB, G, 1))
+    vz = jnp.broadcast_to(v_zero, (BH, NB, G, 1))
+
+    grid = (BH, NB)
+    # index maps take a trailing ref arg for the scalar-prefetch operand
+    qspec = pl.BlockSpec((1, gT, D), lambda i, j, s: (i, 0, 0))
+    pspec = pl.BlockSpec((1, 1, G, Dp), lambda i, j, s: (i, j, 0, 0))
+    ksspec = pl.BlockSpec((1, 1, 1, D), lambda i, j, s: (i, j, 0, 0))
+    vsspec = pl.BlockSpec((1, 1, G, 1), lambda i, j, s: (i, j, 0, 0))
+
+    out, lse = pl.pallas_call(
+        functools.partial(_kernel, mode=mode, nb_total=NB),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[qspec, pspec, pspec, ksspec, ksspec,
+                      pspec, pspec, vsspec, vsspec],
+            out_specs=[pl.BlockSpec((1, gT, D), lambda i, j, s: (i, 0, 0)),
+                       pl.BlockSpec((1, gT), lambda i, j, s: (i, 0))],
+            scratch_shapes=[pltpu.VMEM((gT, 1), jnp.float32),
+                            pltpu.VMEM((gT, 1), jnp.float32),
+                            pltpu.VMEM((gT, D), jnp.float32)],
+        ),
+        out_shape=[jax.ShapeDtypeStruct((BH, gT, D), q.dtype),
+                   jax.ShapeDtypeStruct((BH, gT), jnp.float32)],
+        interpret=interpret,
+    )(jnp.asarray(blocks, jnp.int32).reshape(1), q,
+      k_upper, k_lower, ks, kz, v_upper, v_lower, vs, vz)
+    return out, lse

@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: hierarchical quantize+pack of one KV group block.
+
+Runs at every buffer flush (once per G accepted tokens) and over all blocks
+at prefill. Grid = (B·H_kv,); each step quantizes a [G, D] tile held in
+VMEM: keys per-channel (reduce over tokens), values per-token (reduce over
+head_dim), emitting both nibble-packed INT4 planes plus fp32 scale/zero.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_EPS = 1e-8
+
+
+def _quant_hier(x, axis):
+    mn = jnp.min(x, axis=axis, keepdims=True)
+    mx = jnp.max(x, axis=axis, keepdims=True)
+    s4 = jnp.maximum((mx - mn) / 15.0, _EPS)
+    qu = jnp.clip(jnp.round((x - mn) / s4), 0.0, 15.0)
+    err = x - (qu * s4 + mn)
+    ql = jnp.clip(jnp.round(err / (s4 / 16.0)), -8.0, 7.0) + 8.0
+    return qu, ql, s4, mn
+
+
+def _pack(q):  # [G, D] float of ints -> [G, D//2] uint8, halves layout
+    D = q.shape[-1]
+    qi = q.astype(jnp.uint8)
+    return (qi[:, : D // 2] << 4) | qi[:, D // 2:]
+
+
+def _kernel(k_ref, v_ref,
+            ku_ref, kl_ref, ks_ref, kz_ref,
+            vu_ref, vl_ref, vs_ref, vz_ref):
+    k = k_ref[0].astype(jnp.float32)   # [G, D]
+    v = v_ref[0].astype(jnp.float32)
+
+    qu, ql, s, z = _quant_hier(k, axis=0)     # keys: per-channel
+    ku_ref[0] = _pack(qu)
+    kl_ref[0] = _pack(ql)
+    ks_ref[0] = s
+    kz_ref[0] = z
+
+    qu, ql, s, z = _quant_hier(v, axis=1)     # values: per-token
+    vu_ref[0] = _pack(qu)
+    vl_ref[0] = _pack(ql)
+    vs_ref[0] = s
+    vz_ref[0] = z
+
+
+def quantize_kv_block(k, v, *, interpret: bool = True):
+    """k, v [BH, G, D] -> dict of packed planes + scales (see ref.py)."""
+    BH, G, D = k.shape
+    Dp = D // 2
+    spec_in = pl.BlockSpec((1, G, D), lambda i: (i, 0, 0))
+    outs = pl.pallas_call(
+        _kernel,
+        grid=(BH,),
+        in_specs=[spec_in, spec_in],
+        out_specs=[
+            pl.BlockSpec((1, G, Dp), lambda i: (i, 0, 0)),  # ku
+            pl.BlockSpec((1, G, Dp), lambda i: (i, 0, 0)),  # kl
+            pl.BlockSpec((1, 1, D), lambda i: (i, 0, 0)),   # ks
+            pl.BlockSpec((1, 1, D), lambda i: (i, 0, 0)),   # kz
+            pl.BlockSpec((1, G, Dp), lambda i: (i, 0, 0)),  # vu
+            pl.BlockSpec((1, G, Dp), lambda i: (i, 0, 0)),  # vl
+            pl.BlockSpec((1, G, 1), lambda i: (i, 0, 0)),   # vs
+            pl.BlockSpec((1, G, 1), lambda i: (i, 0, 0)),   # vz
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, G, Dp), jnp.uint8),
+            jax.ShapeDtypeStruct((BH, G, Dp), jnp.uint8),
+            jax.ShapeDtypeStruct((BH, 1, D), jnp.float32),
+            jax.ShapeDtypeStruct((BH, 1, D), jnp.float32),
+            jax.ShapeDtypeStruct((BH, G, Dp), jnp.uint8),
+            jax.ShapeDtypeStruct((BH, G, Dp), jnp.uint8),
+            jax.ShapeDtypeStruct((BH, G, 1), jnp.float32),
+            jax.ShapeDtypeStruct((BH, G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(k, v)
+    keys = ("k_upper", "k_lower", "k_scale", "k_zero",
+            "v_upper", "v_lower", "v_scale", "v_zero")
+    return dict(zip(keys, outs))

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for the Pallas kernels (shapes match the kernel API)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def unpack(p):
+    return jnp.concatenate([(p >> 4).astype(jnp.int32),
+                            (p & 0xF).astype(jnp.int32)], axis=-1)
+
+
+def dequant_k(upper, lower, scale, zero, mode: str):
+    """upper/lower [..., G, Dp]; scale/zero broadcastable [..., 1|G, D]."""
+    qu = unpack(upper).astype(jnp.float32)
+    if mode == "draft":
+        return qu * scale + zero
+    ql = unpack(lower).astype(jnp.float32) - 8.0
+    return (16.0 * qu + ql) * (scale / 16.0) + zero
+
+
+def quant_region_attention_ref(q, k_upper, k_lower, k_scale, k_zero,
+                               v_upper, v_lower, v_scale, v_zero,
+                               blocks, mode: str):
+    """Flash-decoding reference over the quantized region only.
+
+    q        [BH, gT, D]
+    k/v_*    [BH, NB, G, Dp]; k_scale/zero [BH, NB, 1, D];
+             v_scale/zero [BH, NB, G, 1]
+    blocks   i32 — number of valid blocks
+    Returns (out [BH, gT, D] normalized, lse [BH, gT]); empty region → lse=-inf.
+    """
+    BH, NB, G, Dp = k_upper.shape
+    D = Dp * 2
+    k = dequant_k(k_upper, k_lower, k_scale, k_zero, mode)   # [BH, NB, G, D]
+    v = dequant_k(v_upper, v_lower, v_scale, v_zero, mode)
+    k = k.reshape(BH, NB * G, D)
+    v = v.reshape(BH, NB * G, D)
+    valid = (jnp.arange(NB * G) // G) < blocks
+    logits = jnp.einsum("btd,bsd->bts", q.astype(jnp.float32), k)
+    logits = logits / math.sqrt(D)
+    logits = jnp.where(valid[None, None, :], logits, -jnp.inf)
+    m = jnp.max(logits, axis=-1)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(logits - m_safe[..., None])
+    p = jnp.where(valid[None, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    out = jnp.einsum("bts,bsd->btd", p, v) / jnp.maximum(l, 1e-30)[..., None]
+    lse = jnp.where(l > 0, m_safe + jnp.log(jnp.maximum(l, 1e-30)), -jnp.inf)
+    return out.astype(q.dtype), lse
+
+
+def quantize_kv_block_ref(k, v):
+    """Hierarchically quantize one block. k,v [BH, G, D].
+    Keys per-channel (reduce over G), values per-token (reduce over D).
+    Returns dict of (upper, lower packed [BH, G, D//2], scale, zero)."""
+    from repro.core.quantization import quantize_k_block, quantize_v_block
+    # adapt: core fns expect [..., G, H, D]; insert H=1
+    kq = quantize_k_block(k[:, :, None, :])
+    vq = quantize_v_block(v[:, :, None, :])
+    sq = lambda t: t.squeeze(2)
+    return {
+        "k_upper": sq(kq.upper), "k_lower": sq(kq.lower),
+        "k_scale": kq.scale.squeeze(2), "k_zero": kq.zero.squeeze(2),
+        "v_upper": sq(vq.upper), "v_lower": sq(vq.lower),
+        "v_scale": sq(vq.scale), "v_zero": sq(vq.zero),
+    }

@@ -1,0 +1,332 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes, record memory/cost/collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-27b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+
+The first two lines above force 512 host platform devices BEFORE any jax
+initialization — only this entry point sees them; tests/benches see 1 CPU.
+"""
+
+import argparse
+import json
+import re
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.distributed import specs as SP
+from repro.distributed.sharding import axis_rules
+from repro.launch.mesh import make_production_mesh
+from repro.models.stack import StackModel
+from repro.training.optimizer import AdamW, AdamWState
+from repro.training.train_step import make_train_step
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1, long=True),
+}
+
+DRYRUN_ARCHS = [a for a in ARCHS if a not in ("tiny-lm", "llama2-7b-32k")]
+
+# pure full-attention archs run long_500k in streaming (sink+window) mode —
+# the sub-quadratic variant (DESIGN.md §4); natives run their real caches.
+LONG_NATIVE = {"gemma3-27b", "rwkv6-1.6b", "jamba-v0.1-52b"}
+STREAM_WINDOW = 8192
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op, by op kind."""
+    out = {c: 0 for c in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        for c in _COLLECTIVES:
+            token = f" {c}("
+            if token in line or f" {c}-start(" in line:
+                lhs = line.split("=")[0] if "=" in line else ""
+                rhs_head = line.split(token)[0] if token in line \
+                    else line.split(f" {c}-start(")[0]
+                # result shape(s) appear between '=' and the op name
+                seg = rhs_head.split("=")[-1]
+                out[c] += _shape_bytes(seg)
+                out["count"] += 1
+                break
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-shape step builders
+# ---------------------------------------------------------------------------
+
+def _batch_axes(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _token_struct(cfg, batch, seq, mesh, *, long=False):
+    shape = (batch, seq, cfg.num_codebooks) if cfg.num_codebooks \
+        else (batch, seq)
+    spec = jax.sharding.PartitionSpec(
+        None if long else _batch_axes(mesh) or None)
+    return jax.ShapeDtypeStruct(
+        shape, jnp.int32, sharding=jax.sharding.NamedSharding(mesh, spec))
+
+
+def _memory_struct(cfg, batch, mesh, long=False):
+    if not cfg.num_image_tokens:
+        return None
+    spec = jax.sharding.PartitionSpec(
+        None if long else _batch_axes(mesh) or None)
+    return jax.ShapeDtypeStruct(
+        (batch, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16,
+        sharding=jax.sharding.NamedSharding(mesh, spec))
+
+
+def build_step(arch: str, shape_name: str, mesh, n_repeats=None,
+               cfg_opts=None):
+    """Returns (jitted_fn, example_shaped_args, cfg).
+
+    n_repeats override builds the cost *probe*: a 2-super-block variant
+    compiled fully unrolled, whose cost delta vs the full (scan, unroll=1)
+    program isolates one super-block's FLOPs/bytes/collectives exactly —
+    XLA's cost_analysis counts a while body once, so the full program's
+    costs are reconstructed as  full + (n-1)·(probe2 - full).
+    """
+    info = SHAPES[shape_name]
+    cfg_opts = dict(cfg_opts or {})
+    unroll_override = cfg_opts.pop("scan_unroll", None)
+    cfg = get_config(arch).replace(dtype="bfloat16", **cfg_opts)
+    if n_repeats is not None:
+        cfg = cfg.replace(n_repeats=n_repeats)
+        model = StackModel(cfg, remat=True, scan_unroll=n_repeats)
+    else:
+        model = StackModel(cfg, remat=True,
+                           scan_unroll=unroll_override or 1)
+    long = info.get("long", False)
+
+    params_sh = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    mode = "train" if info["kind"] == "train" else "serve"
+    p_specs = SP.param_specs(params_sh, mesh, mode)
+    params_in = SP.apply_sharding_to_shapes(params_sh, p_specs)
+
+    if info["kind"] == "train":
+        opt = AdamW()
+        opt_sh = jax.eval_shape(opt.init, params_sh)
+        o_specs = SP.param_specs(opt_sh.m, mesh, "train")
+        opt_in = AdamWState(
+            step=jax.ShapeDtypeStruct(
+                (), jnp.int32,
+                sharding=jax.sharding.NamedSharding(
+                    mesh, jax.sharding.PartitionSpec())),
+            m=SP.apply_sharding_to_shapes(opt_sh.m, o_specs),
+            v=SP.apply_sharding_to_shapes(opt_sh.v, o_specs))
+        batch = {"tokens": _token_struct(cfg, info["batch"], info["seq"], mesh)}
+        mem = _memory_struct(cfg, info["batch"], mesh)
+        if mem is not None:
+            batch["memory"] = mem
+        step = make_train_step(model, opt)
+        fn = jax.jit(step)
+        return fn, (params_in, opt_in, batch), cfg
+
+    policy = "quantspec"
+    ctx_kw = {}
+    if long and arch not in LONG_NATIVE and not cfg.is_attention_free:
+        policy = "streaming_only"
+        ctx_kw = dict(draft_window=STREAM_WINDOW)
+
+    # round the cache capacity so the block axis shards cleanly (16-way)
+    G = cfg.group_size
+    max_seq = -(-(info["seq"] + 64) // (G * 16)) * (G * 16)
+    state_sh = jax.eval_shape(
+        partial(model.init_serve_state, info["batch"], max_seq,
+                policy=policy, ctx_kw=ctx_kw or None, dtype=jnp.bfloat16))
+    s_specs = SP.state_specs(state_sh, mesh, long_ctx=long)
+    state_in = SP.apply_sharding_to_shapes(state_sh, s_specs)
+
+    if info["kind"] == "prefill":
+        tokens = _token_struct(cfg, info["batch"], info["seq"], mesh)
+        mem = _memory_struct(cfg, info["batch"], mesh)
+
+        def prefill_step(params, tokens, state, memory=None):
+            return model.prefill(params, tokens, state, policy=policy,
+                                 memory=memory, ctx_kw=ctx_kw or None)
+
+        fn = jax.jit(prefill_step)
+        args = (params_in, tokens, state_in) + ((mem,) if mem is not None else ())
+        return fn, args, cfg
+
+    # decode: ONE new token against a seq_len cache
+    tokens = _token_struct(cfg, info["batch"], 1, mesh, long=long)
+    pos = jax.ShapeDtypeStruct((), jnp.int32,
+                               sharding=jax.sharding.NamedSharding(
+                                   mesh, jax.sharding.PartitionSpec()))
+
+    def serve_step(params, tokens, state, stream_pos):
+        logits, new_state, _ = model.decode(
+            params, tokens, state, stream_pos, kv_mode="target",
+            policy=policy, ctx_kw=ctx_kw or None)
+        return logits, new_state
+
+    fn = jax.jit(serve_step)
+    return fn, (params_in, tokens, state_in, pos), cfg
+
+
+def _analyse(compiled, skip_hlo: bool) -> dict:
+    cost = compiled.cost_analysis() or {}
+    coll = {} if skip_hlo else collective_bytes(compiled.as_text())
+    return {
+        "flops": cost.get("flops", 0.0) or 0.0,
+        "bytes_accessed": cost.get("bytes accessed", 0.0) or 0.0,
+        "transcendentals": cost.get("transcendentals", 0.0) or 0.0,
+        "collectives": coll,
+    }
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+            skip_hlo: bool = False, cfg_opts=None, tag: str = "") -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    t0 = time.time()
+    mode = "train" if SHAPES[shape_name]["kind"] == "train" else (
+        "long" if SHAPES[shape_name].get("long") else "serve")
+    rules_mode = "train" if mode == "train" else (
+        "long" if mode == "long" else "serve")
+    with mesh, axis_rules(mesh, rules_mode):
+        # 1) the real program (full depth, scan unroll=1)
+        fn, args, cfg = build_step(arch, shape_name, mesh, cfg_opts=cfg_opts)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        full = _analyse(compiled, skip_hlo)
+
+        # 2) cost probe: n_repeats=0 → the constant part C (embed, head,
+        # unembed, unscanned head/tail layers). XLA counts the while body
+        # once, so   total = C + n_repeats · (full − C).
+        probe = None
+        n = cfg.n_repeats
+        fully_unrolled = (cfg_opts or {}).get("scan_unroll", 1) >= n
+        if n > 1 and not fully_unrolled:
+            fn0, args0, _ = build_step(arch, shape_name, mesh, n_repeats=0,
+                                       cfg_opts=cfg_opts)
+            probe = _analyse(fn0.lower(*args0).compile(), skip_hlo)
+
+    def corrected(key):
+        if probe is None:
+            return full[key]
+        c = min(probe[key], full[key])
+        return c + n * (full[key] - c)
+
+    coll_corr = dict(full["collectives"])
+    if probe is not None:
+        for k in coll_corr:
+            c = min(probe["collectives"].get(k, 0),
+                    full["collectives"].get(k, 0))
+            coll_corr[k] = c + n * (full["collectives"].get(k, 0) - c)
+
+    mem = compiled.memory_analysis()
+    mem_d = {attr: getattr(mem, attr, None)
+             for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                          "output_size_in_bytes", "alias_size_in_bytes",
+                          "generated_code_size_in_bytes")}
+
+    res = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "flops": corrected("flops"),
+        "bytes_accessed": corrected("bytes_accessed"),
+        "collectives": coll_corr,
+        "raw_full": full, "raw_probe2": probe,
+        "n_repeats": n,
+        "memory": mem_d,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "params": cfg.param_count(),
+        "params_active": cfg.param_count(active_only=True),
+        "cfg_opts": cfg_opts or {},
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    path = os.path.join(out_dir,
+                        f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+    print(f"[dryrun] {arch} × {shape_name} × {mesh_name}: "
+          f"flops={res['flops']:.3e} bytes={res['bytes_accessed']:.3e} "
+          f"coll={sum(v for k, v in coll_corr.items() if k != 'count'):.3e} "
+          f"compile={t_compile:.0f}s", flush=True)
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=DRYRUN_ARCHS + ["all"], default="all")
+    ap.add_argument("--shape", choices=list(SHAPES) + ["all"], default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-hlo", action="store_true",
+                    help="skip collective parsing (faster)")
+    ap.add_argument("--opt", action="append", default=[],
+                    help="config override key=value (perf iterations), "
+                         "e.g. --opt hier_attn_impl=blocked")
+    ap.add_argument("--tag", default="", help="output filename suffix")
+    args = ap.parse_args()
+
+    cfg_opts = {}
+    for kv in args.opt:
+        k, v = kv.split("=", 1)
+        cfg_opts[k] = int(v) if v.isdigit() else v
+
+    archs = DRYRUN_ARCHS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    run_one(arch, shape, mp, args.out, args.skip_hlo,
+                            cfg_opts=cfg_opts or None, tag=args.tag)
+                except Exception as e:  # noqa: BLE001 — report, keep going
+                    failures.append((arch, shape, mp, repr(e)[:500]))
+                    print(f"[dryrun] FAIL {arch} × {shape} × mp={mp}: "
+                          f"{e!r}"[:600], flush=True)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nall dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

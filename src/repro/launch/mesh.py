@@ -1,0 +1,30 @@
+"""Production meshes.
+
+Single pod : (16, 16)      axes ("data", "model")  — 256 × TPU v5e
+Multi-pod  : (2, 16, 16)   axes ("pod", "data", "model") — 512 chips
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state; the dry-run must set
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax init.
+"""
+
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants (roofline)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """1-device mesh with the production axis names — lets the same sharded
+    step functions run on a laptop/CI CPU."""
+    return jax.make_mesh((1, 1), ("data", "model"))

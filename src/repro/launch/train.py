@@ -1,0 +1,74 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tiny-lm --steps 200
+    PYTHONPATH=src python -m repro.launch.train --arch gemma3-27b --smoke
+
+Runs the sharded train step under the local mesh (1 device) or, on real
+hardware, the production mesh (--mesh single|multi). The same step function
+the dry-run lowers for 256/512 chips.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import ARCHS, get_config
+from repro.data.pipeline import SyntheticCorpus
+from repro.distributed.sharding import axis_rules
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.models.stack import StackModel
+from repro.training.checkpoint import save_checkpoint
+from repro.training.optimizer import AdamW
+from repro.training.train_step import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCHS), default="tiny-lm")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--mesh", choices=["local", "single", "multi"],
+                    default="local")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = StackModel(cfg, remat=True)
+    mesh = (make_local_mesh() if args.mesh == "local" else
+            make_production_mesh(multi_pod=args.mesh == "multi"))
+
+    with mesh, axis_rules(mesh, "train"):
+        params = model.init(jax.random.PRNGKey(0))
+        opt = AdamW(lr=args.lr, warmup_steps=min(20, args.steps // 5 + 1),
+                    total_steps=args.steps)
+        opt_state = opt.init(params)
+        step_fn = jax.jit(make_train_step(model, opt))
+        corpus = SyntheticCorpus(cfg.vocab_size, seed=0, bigram_temp=0.3)
+        it = corpus.batches(args.batch, args.seq,
+                            codebooks=cfg.num_codebooks)
+        t0 = time.time()
+        for i in range(args.steps):
+            batch = next(it)
+            if cfg.num_image_tokens:
+                batch["memory"] = jax.random.normal(
+                    jax.random.fold_in(jax.random.PRNGKey(3), i),
+                    (args.batch, cfg.num_image_tokens, cfg.d_model)) * 0.02
+            params, opt_state, m = step_fn(params, opt_state, batch)
+            if i % 10 == 0 or i == args.steps - 1:
+                print(f"step {i:4d} loss={float(m['loss']):.4f} "
+                      f"ppl={float(m['ppl']):.2f} "
+                      f"({(time.time()-t0)/(i+1):.2f}s/step)", flush=True)
+    if args.ckpt:
+        save_checkpoint(args.ckpt, params, opt_state, step=args.steps)
+        print("saved", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,345 @@
+"""Shared layers: norms, RoPE, linear, attention (train + decode over every
+cache type), dense MLP.
+
+Attention conventions: activations are ``[B, T, d]``; per-head tensors are
+``[B, T, H, hd]``; caches are batch-first (see core/hier_kv_cache.py).
+Softmax and norms compute in float32 regardless of model dtype.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hier_kv_cache as HC
+from repro.core.weight_quant import resolve
+from repro.distributed.sharding import constrain
+from repro.models.config import ModelConfig
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(dt)
+
+
+def linear(x: jnp.ndarray, w, b=None) -> jnp.ndarray:
+    y = x @ resolve(w, x.dtype)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def rope_cos_sin(positions: jnp.ndarray, dim: int, theta: float):
+    """positions [...,T] -> cos/sin [...,T, dim//2] (float32)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x [B, T, H, D]; cos/sin [T, D//2] or [B, T, D//2]."""
+    if cos.ndim == 2:
+        cos, sin = cos[None], sin[None]
+    cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    o1 = xf1 * cos - xf2 * sin
+    o2 = xf2 * cos + xf1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention core
+# ---------------------------------------------------------------------------
+
+def gqa_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None,
+                  softcap: float = 0.0) -> jnp.ndarray:
+    """Grouped-query attention. q [B,T,Hq,D]; k,v [B,S,Hkv,D];
+    mask broadcastable to [B, T, S] (True = attend).
+
+    Attention logits are sharding-constrained: kv-heads → `model` when the
+    head count divides, otherwise the kv-sequence axis takes `model`
+    (sequence-parallel attention — the fallback that keeps 36/40-head archs
+    sharded; SPMD inserts the partial-softmax combine)."""
+    B, T, Hq, D = q.shape
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    qg = q.reshape(B, T, Hkv, g, D)
+    logits = jnp.einsum("bthgd,bshd->bhgts", qg, k).astype(jnp.float32)
+    logits = constrain(logits, "batch", "kv_heads", None, None, "kv_seq")
+    logits = logits / math.sqrt(D)
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    if mask is not None:
+        m = jnp.broadcast_to(mask, (B, T, k.shape[1]))
+        logits = jnp.where(m[:, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgts,bshd->bthgd", probs, v)
+    return out.reshape(B, T, Hq, D)
+
+
+def causal_full_attention(q, k, v, softcap=0.0, q_chunk: int = 512):
+    """Causal attention, query-chunked: a Python-unrolled loop over query
+    chunks where chunk i only reads keys[: end_i]. Peak temp memory is one
+    chunk's logits (XLA liveness reuses the buffer across chunks) and FLOPs
+    follow the true causal triangle — both matter for the 32k-prefill
+    dry-run's memory/cost analysis."""
+    B, T, Hq, D = q.shape
+    S = k.shape[1]
+    if T <= q_chunk:
+        mask = jnp.tril(jnp.ones((T, S), bool), k=S - T)
+        return gqa_attention(q, k, v, mask[None], softcap)
+    assert T == S, "chunked path expects self-attention"
+    outs = []
+    for start in range(0, T, q_chunk):
+        end = min(start + q_chunk, T)
+        qc = q[:, start:end]
+        kc, vc = k[:, :end], v[:, :end]
+        mask = jnp.tril(jnp.ones((end - start, end), bool), k=start)
+        outs.append(gqa_attention(qc, kc, vc, mask[None], softcap))
+    return jnp.concatenate(outs, axis=1)
+
+
+def window_attention_chunked(q, k, v, window: int, softcap=0.0):
+    """Sliding-window causal attention with banded (chunked) compute:
+    each W-chunk of queries attends to its own + previous key chunk, so
+    FLOPs are O(S·2W) instead of O(S²)."""
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    W = window
+    if S <= W:
+        return causal_full_attention(q, k, v, softcap)
+    pad = (-S) % W
+    if pad:
+        zq = jnp.zeros((B, pad, Hq, D), q.dtype)
+        zk = jnp.zeros((B, pad, Hkv, D), k.dtype)
+        q = jnp.concatenate([q, zq], 1)
+        k = jnp.concatenate([k, zk], 1)
+        v = jnp.concatenate([v, zk], 1)
+    Sp = S + pad
+    nc = Sp // W
+    qc = q.reshape(B, nc, W, Hq, D)
+    kc = k.reshape(B, nc, W, Hkv, D)
+    vc = v.reshape(B, nc, W, Hkv, D)
+    kprev = jnp.concatenate([jnp.zeros_like(kc[:, :1]), kc[:, :-1]], 1)
+    vprev = jnp.concatenate([jnp.zeros_like(vc[:, :1]), vc[:, :-1]], 1)
+    k2 = jnp.concatenate([kprev, kc], axis=2)  # [B, nc, 2W, Hkv, D]
+    v2 = jnp.concatenate([vprev, vc], axis=2)
+    # mask: query i (local) vs key j in [-W, W): attend iff 0 <= i-(j-W) < W
+    qi = jnp.arange(W)[:, None]
+    kj = jnp.arange(2 * W)[None, :] - W
+    mask = (qi >= kj) & (qi - kj < W)
+    first_chunk = jnp.concatenate(
+        [jnp.zeros((1, W, W), bool), jnp.broadcast_to(mask[None, :, W:],
+                                                      (1, W, W))], axis=-1)
+    rest = jnp.broadcast_to(mask[None], (nc - 1, W, 2 * W))
+    full_mask = jnp.concatenate([first_chunk, rest], axis=0)  # [nc, W, 2W]
+
+    def chunk_attn(qc_, k2_, v2_, m_):
+        return gqa_attention(qc_, k2_, v2_, m_[None], softcap)
+
+    out = jax.vmap(chunk_attn, in_axes=(1, 1, 1, 0), out_axes=1)(
+        qc, k2, v2, full_mask)
+    out = out.reshape(B, Sp, Hq, D)
+    return out[:, :S]
+
+
+# ---------------------------------------------------------------------------
+# attention layer params
+# ---------------------------------------------------------------------------
+
+def init_attn_params(key, cfg: ModelConfig, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    Hq, Hkv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    s = cfg.init_scale
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, Hq * hd)) * s).astype(dt),
+        "wk": (jax.random.normal(ks[1], (d, Hkv * hd)) * s).astype(dt),
+        "wv": (jax.random.normal(ks[2], (d, Hkv * hd)) * s).astype(dt),
+        "wo": (jax.random.normal(ks[3], (Hq * hd, d)) * s).astype(dt),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((Hq * hd,), dt)
+        p["bk"] = jnp.zeros((Hkv * hd,), dt)
+        p["bv"] = jnp.zeros((Hkv * hd,), dt)
+    return p
+
+
+def project_qkv(p: dict, cfg: ModelConfig, x: jnp.ndarray,
+                positions: Optional[jnp.ndarray], use_rope: bool = True):
+    """x [B, T, d] -> q [B,T,Hq,hd], k/v [B,T,Hkv,hd]; RoPE on q,k."""
+    B, T, _ = x.shape
+    hd = cfg.hd
+    q = linear(x, p["wq"], p.get("bq")).reshape(B, T, cfg.num_heads, hd)
+    k = linear(x, p["wk"], p.get("bk")).reshape(B, T, cfg.num_kv_heads, hd)
+    v = linear(x, p["wv"], p.get("bv")).reshape(B, T, cfg.num_kv_heads, hd)
+    if use_rope and positions is not None:
+        cos, sin = rope_cos_sin(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def attn_out(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    B, T, H, D = x.shape
+    return linear(x.reshape(B, T, H * D), p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# decode-time attention over caches
+# ---------------------------------------------------------------------------
+
+def attend_hier(q, cache: HC.HierKVCache, stream_pos, mode: str,
+                softcap=0.0, impl: str = "flat", deq_dtype=jnp.float32):
+    """Attend q [B,T,H,hd] (new tokens already appended to `cache`) over the
+    hierarchical cache. mode: 'draft' (upper-4) | 'target' (INT8 recon)."""
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.hier_attention(q, cache, stream_pos, mode, softcap)
+    if impl == "blocked":
+        return _attend_hier_blocked(q, cache, stream_pos, mode, softcap,
+                                    deq_dtype)
+    k, v, valid, quant_len = HC.materialize(cache, mode, deq_dtype)
+    Sq = k.shape[1] - cache.buf_k.shape[1]
+    pos_keys = jnp.concatenate(
+        [jnp.arange(Sq), quant_len + jnp.arange(cache.buf_k.shape[1])])
+    T = q.shape[1]
+    q_pos = stream_pos + jnp.arange(T)
+    mask = valid[None, None, :] & (pos_keys[None, None, :] <= q_pos[None, :, None])
+    return gqa_attention(q, k.astype(q.dtype), v.astype(q.dtype), mask, softcap)
+
+
+def _attend_hier_blocked(q, cache: HC.HierKVCache, stream_pos, mode: str,
+                         softcap, deq_dtype):
+    """Blocked hierarchical attention: the quantized region keeps its
+    [NB, G] structure through dequant → logits → softmax → PV, so the
+    sharded block axis is never reshaped away (no SPMD reshard), and the
+    FP buffer is merged as one extra flash chunk (paper App. E).
+
+    §Perf iteration for decode shapes; numerically identical to 'flat'
+    (same masks, f32 softmax) up to summation order."""
+    if softcap != 0.0:
+        raise NotImplementedError("blocked impl assumes softcap=0")
+    B, T, Hq, D = q.shape
+    H = cache.buf_k.shape[2]
+    g = Hq // H
+    G = cache.group
+    kq, vq = HC.dequant_region(cache, mode, deq_dtype)   # [B, NB*G, H, D]
+    NB = cache.k_upper.shape[1]
+    kb = kq.reshape(B, NB, G, H, D)
+    vb = vq.reshape(B, NB, G, H, D)
+    qg = q.reshape(B, T, H, g, D)
+
+    # --- quantized region (all blocks < cache.blocks are fully attendable)
+    # keep operands in deq_dtype; accumulate f32 on the MXU
+    logits = jnp.einsum("bthgd,bnshd->bhgtns", qg.astype(deq_dtype), kb,
+                        preferred_element_type=jnp.float32) / math.sqrt(D)
+    logits = constrain(logits, "batch", "kv_heads", None, None, "kv_seq")
+    block_ok = jnp.arange(NB) < cache.blocks
+    logits = jnp.where(block_ok[None, None, None, None, :, None],
+                       logits, -jnp.inf)
+    m_q = jnp.max(logits, axis=(-2, -1))                     # [B,H,g,T]
+    m_safe = jnp.where(jnp.isfinite(m_q), m_q, 0.0)
+    p = jnp.exp(logits - m_safe[..., None, None])
+    p = jnp.where(block_ok[None, None, None, None, :, None], p, 0.0)
+    l_q = jnp.sum(p, axis=(-2, -1))
+    acc_q = jnp.einsum("bhgtns,bnshd->bhgtd", p.astype(deq_dtype),
+                       vb).astype(jnp.float32)
+
+    # --- FP buffer chunk
+    quant_len = cache.blocks * G
+    S_buf = cache.buf_k.shape[1]
+    q_pos = stream_pos + jnp.arange(T)
+    j = jnp.arange(S_buf)
+    buf_mask = (j[None, :] < cache.buf_len) & \
+               (quant_len + j[None, :] <= q_pos[:, None])     # [T, S_buf]
+    lb = jnp.einsum("bthgd,bshd->bhgts", qg.astype(cache.buf_k.dtype),
+                    cache.buf_k, preferred_element_type=jnp.float32
+                    ) / math.sqrt(D)
+    lb = jnp.where(buf_mask[None, None, None], lb, -jnp.inf)
+    m_b = jnp.max(lb, axis=-1)
+    mb_safe = jnp.where(jnp.isfinite(m_b), m_b, 0.0)
+    pb = jnp.where(buf_mask[None, None, None], jnp.exp(lb - mb_safe[..., None]),
+                   0.0)
+    l_b = jnp.sum(pb, axis=-1)
+    acc_b = jnp.einsum("bhgts,bshd->bhgtd", pb.astype(cache.buf_v.dtype),
+                       cache.buf_v).astype(jnp.float32)
+
+    # --- flash combine
+    m_tot = jnp.maximum(m_safe, mb_safe)
+    w_q = jnp.exp(m_safe - m_tot) * jnp.where(l_q > 0, 1.0, 0.0)
+    w_b = jnp.exp(mb_safe - m_tot) * jnp.where(l_b > 0, 1.0, 0.0)
+    denom = jnp.maximum(l_q * w_q + l_b * w_b, 1e-30)
+    out = (acc_q * w_q[..., None] + acc_b * w_b[..., None]) / denom[..., None]
+    out = out.astype(q.dtype)                                  # [B,H,g,T,D]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, T, Hq, D)
+
+
+def attend_full(q, cache: HC.FullKVCache, stream_pos, softcap=0.0):
+    S = cache.k.shape[1]
+    pos_keys = jnp.arange(S)
+    T = q.shape[1]
+    q_pos = stream_pos + jnp.arange(T)
+    mask = (pos_keys[None, None, :] < cache.length) & \
+           (pos_keys[None, None, :] <= q_pos[None, :, None])
+    return gqa_attention(q, cache.k.astype(q.dtype), cache.v.astype(q.dtype),
+                         mask, softcap)
+
+
+def attend_window(q, cache: HC.WindowKVCache, stream_pos, softcap=0.0):
+    """Attend over sink + ring. Ring slot s holds the most recent stream
+    position ≡ s (mod W) that is < cache.pos."""
+    n_sink = cache.sink_k.shape[1]
+    W = cache.ring_k.shape[1]
+    P = cache.pos  # stream length after append
+    s = jnp.arange(W)
+    ring_pos = P - 1 - ((P - 1 - s) % W)
+    ring_valid = (ring_pos >= n_sink) & (ring_pos >= 0) & (ring_pos < P)
+    sink_pos = jnp.arange(n_sink)
+    sink_valid = sink_pos < P
+    k = jnp.concatenate([cache.sink_k, cache.ring_k], 1)
+    v = jnp.concatenate([cache.sink_v, cache.ring_v], 1)
+    pos_keys = jnp.concatenate([sink_pos, ring_pos])
+    valid = jnp.concatenate([sink_valid, ring_valid])
+    T = q.shape[1]
+    q_pos = stream_pos + jnp.arange(T)
+    mask = valid[None, None, :] & (pos_keys[None, None, :] <= q_pos[None, :, None])
+    return gqa_attention(q, k.astype(q.dtype), v.astype(q.dtype), mask, softcap)
+
+
+# ---------------------------------------------------------------------------
+# dense MLP (gated SiLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp_params(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    s = cfg.init_scale
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "w_gate": (jax.random.normal(ks[0], (d, f)) * s).astype(dt),
+        "w_up": (jax.random.normal(ks[1], (d, f)) * s).astype(dt),
+        "w_down": (jax.random.normal(ks[2], (f, d)) * s).astype(dt),
+    }
+
+
+def apply_mlp(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    g = jax.nn.silu(linear(x, p["w_gate"]))
+    return linear(g * linear(x, p["w_up"]), p["w_down"])
+
+
+def init_norm(cfg: ModelConfig) -> dict:
+    return {"scale": jnp.ones((cfg.d_model,), jnp.dtype(cfg.dtype))}

@@ -1,0 +1,140 @@
+"""Model configuration schema.
+
+Every architecture is described as a *layer pattern*: an optional head (un-
+scanned leading layers), a super-block of `LayerSpec`s scanned `n_repeats`
+times, and an optional tail. This lets heterogeneous stacks (gemma3's 5:1
+local:global, jamba's 1:7 attn:mamba with alternating MoE, llama-vision's
+4:1 self:cross) compile as a single `lax.scan` over super-blocks — compile
+time stays O(pattern), not O(depth).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# sequence-mixer kinds
+ATTN_FULL = "full"        # causal full attention, hierarchical-quant cache
+ATTN_WINDOW = "window"    # sliding-window causal attention, ring cache
+ATTN_CROSS = "cross"      # cross-attention to static (image/text) memory
+MIX_MAMBA = "mamba"       # selective SSM (jamba)
+MIX_RWKV = "rwkv"         # RWKV6 time-mix
+
+# channel-mixer kinds
+MLP_DENSE = "dense"
+MLP_MOE = "moe"
+MLP_RWKV = "rwkv_cm"      # RWKV channel-mix
+MLP_NONE = "none"
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    mixer: str = ATTN_FULL
+    mlp: str = MLP_DENSE
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                      # dense|moe|ssm|hybrid|vlm|audio
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    # layer pattern ---------------------------------------------------------
+    pattern: Tuple[LayerSpec, ...]
+    n_repeats: int
+    head_layers: Tuple[LayerSpec, ...] = ()
+    tail_layers: Tuple[LayerSpec, ...] = ()
+    head_dim: Optional[int] = None      # default d_model // num_heads
+    # attention -------------------------------------------------------------
+    window: int = 1024                  # for ATTN_WINDOW layers
+    n_sink: int = 4
+    rope_theta: float = 10_000.0
+    qkv_bias: bool = False
+    logit_softcap: float = 0.0
+    # MoE ---------------------------------------------------------------------
+    num_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    num_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    # SSM ---------------------------------------------------------------------
+    d_state: int = 16
+    d_conv: int = 4
+    ssm_expand: int = 2
+    # VLM / audio ---------------------------------------------------------------
+    num_image_tokens: int = 0           # cross-attn memory slots (stub frontend)
+    num_codebooks: int = 0              # musicgen EnCodec codebooks
+    # QuantSpec ---------------------------------------------------------------
+    group_size: int = 128               # quant group G (== double-buffer half)
+    weight_quant_group: int = 128
+    # MoE dispatch implementation:
+    #   'scatter'   — pjit scatter into the global [E, cap, d] buffer
+    #                 (baseline; SPMD lowers the combine to an all-reduce of
+    #                 the full expert buffer)
+    #   'shard_map' — explicit expert parallelism: tokens stay data-sharded,
+    #                 each model shard dispatches locally to its E/16 experts,
+    #                 one psum over `model` combines (§Perf iteration)
+    moe_impl: str = "scatter"
+    # decode-attention implementation over the hierarchical cache:
+    #   'flat'    — dequantize + flatten [NB,G]→[S] (baseline; reshapes a
+    #               sharded axis → SPMD involuntary reshard)
+    #   'blocked' — keep [NB, G] axes through softmax (§Perf iteration)
+    hier_attn_impl: str = "flat"
+    hier_deq_dtype: str = "float32"     # dequantized cache dtype (§Perf)
+    # numerics ------------------------------------------------------------------
+    norm_eps: float = 1e-6
+    dtype: str = "float32"
+    init_scale: float = 0.02
+    # citation (assigned-architecture provenance)
+    source: str = ""
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def layers(self) -> Tuple[LayerSpec, ...]:
+        return (self.head_layers + self.pattern * self.n_repeats
+                + self.tail_layers)
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.layers)
+
+    @property
+    def is_attention_free(self) -> bool:
+        kinds = {s.mixer for s in self.layers}
+        return not (kinds & {ATTN_FULL, ATTN_WINDOW, ATTN_CROSS})
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ---- parameter count (for roofline MODEL_FLOPS = 6·N·D) -----------------
+    def param_count(self, active_only: bool = False) -> int:
+        d, hd = self.d_model, self.hd
+        n = self.vocab_size * d * 2  # embed + unembed
+        for spec in self.layers:
+            if spec.mixer in (ATTN_FULL, ATTN_WINDOW, ATTN_CROSS):
+                n += d * hd * (self.num_heads + 2 * self.num_kv_heads)
+                n += self.num_heads * hd * d
+            elif spec.mixer == MIX_MAMBA:
+                din = self.ssm_expand * d
+                n += d * din * 2 + din * self.d_conv
+                n += din * (2 * self.d_state + 1) + din  # B,C,dt proj + A,D
+                n += din * d
+            elif spec.mixer == MIX_RWKV:
+                n += 4 * d * d + d * d  # r,k,v,g,o projections (approx)
+            if spec.mlp == MLP_DENSE:
+                n += 3 * d * self.d_ff
+            elif spec.mlp == MLP_MOE:
+                e = self.top_k if active_only else self.num_experts
+                n += 3 * d * self.moe_d_ff * (e + self.num_shared_experts)
+                n += d * self.num_experts  # router
+            elif spec.mlp == MLP_RWKV:
+                n += 2 * d * self.d_ff
+        return n

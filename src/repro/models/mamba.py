@@ -1,0 +1,141 @@
+"""Mamba-1 selective-SSM mixer (Jamba's recurrent layers).
+
+Prefill/train run a `lax.scan` over time with per-step discretization —
+nothing of shape [B, T, d_inner, d_state] is ever materialized, so memory
+stays O(B·d_inner·d_state) regardless of sequence length (this is what
+makes `long_500k` native for SSM/hybrid archs).
+
+Decode keeps a `MambaCache` (conv tail + SSM state) and returns per-token
+state snapshots so the speculative-decoding engine can commit the state at
+the acceptance point (SSM analogue of KV-cache rollback; see DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.config import ModelConfig
+
+
+class MambaCache(NamedTuple):
+    conv: jnp.ndarray  # [B, d_conv-1, din] — trailing conv inputs
+    h: jnp.ndarray     # [B, din, d_state]  — SSM state (float32)
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    din = cfg.ssm_expand * cfg.d_model
+    return MambaCache(
+        conv=jnp.zeros((batch, cfg.d_conv - 1, din), dtype),
+        h=jnp.zeros((batch, din, cfg.d_state), jnp.float32),
+    )
+
+
+def init_mamba_params(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    ds = cfg.d_state
+    dt_rank = max(1, math.ceil(d / 16))
+    ks = jax.random.split(key, 6)
+    s = cfg.init_scale
+    dt = jnp.dtype(cfg.dtype)
+    # S4D-real initialization for A
+    a = jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (din, ds))
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * din)) * s).astype(dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, din)) * s).astype(dt),
+        "conv_b": jnp.zeros((din,), dt),
+        "x_proj": (jax.random.normal(ks[2], (din, dt_rank + 2 * ds)) * s).astype(dt),
+        "dt_w": (jax.random.normal(ks[3], (dt_rank, din)) * s).astype(dt),
+        "dt_bias": jnp.full((din,), -4.6, dt),  # softplus^-1(0.01)
+        "a_log": jnp.log(a),
+        "d_skip": jnp.ones((din,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[5], (din, d)) * s).astype(dt),
+    }
+
+
+def _conv_causal(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 history: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv. x [B, T, din]; history [B, K-1, din]."""
+    K = w.shape[0]
+    xp = jnp.concatenate([history.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    return out + b
+
+
+def _ssm_scan(p: dict, xc: jnp.ndarray, dtv: jnp.ndarray, Bm: jnp.ndarray,
+              Cm: jnp.ndarray, h0: jnp.ndarray):
+    """Selective scan. xc,dtv [B,T,din]; Bm,Cm [B,T,ds]; h0 [B,din,ds].
+    Returns (y [B,T,din], h_all [T,B,din,ds])."""
+    A = -jnp.exp(p["a_log"])  # [din, ds]
+
+    def step(h, inp):
+        xc_t, dt_t, B_t, C_t = inp  # [B,din],[B,din],[B,ds],[B,ds]
+        dA = jnp.exp(dt_t[..., None] * A)                     # [B,din,ds]
+        dBx = (dt_t * xc_t)[..., None] * B_t[:, None, :]
+        h = dA * h + dBx
+        y = jnp.einsum("bds,bs->bd", h, C_t)
+        return h, (y, h)
+
+    xs = (jnp.moveaxis(xc, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dtv, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Bm, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Cm, 1, 0).astype(jnp.float32))
+    h_last, (ys, h_all) = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + p["d_skip"] * xc.astype(jnp.float32)
+    return y, h_all
+
+
+def apply_mamba(p: dict, cfg: ModelConfig, x: jnp.ndarray,
+                cache: MambaCache | None = None, collect: bool = False):
+    """x [B, T, d] -> (y [B, T, d], new_cache, snapshots|None).
+
+    cache=None → train/prefill from zero state (cache returned if collect is
+    False but a final state is still needed: pass an initialized cache).
+    collect=True → also return per-token MambaCache snapshots (decode).
+    """
+    B, T, d = x.shape
+    din = cfg.ssm_expand * d
+    dt_rank = max(1, math.ceil(d / 16))
+    if cache is None:
+        cache = init_mamba_cache(cfg, B, x.dtype)
+
+    xz = x @ p["in_proj"].astype(x.dtype)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_in = constrain(x_in, "batch", "seq", "ssm_inner")
+    xc = jax.nn.silu(_conv_causal(x_in, p["conv_w"].astype(x.dtype),
+                                  p["conv_b"].astype(x.dtype), cache.conv))
+    proj = xc @ p["x_proj"].astype(x.dtype)
+    dt_r = proj[..., :dt_rank]
+    Bm = proj[..., dt_rank:dt_rank + cfg.d_state]
+    Cm = proj[..., dt_rank + cfg.d_state:]
+    dtv = jax.nn.softplus(dt_r @ p["dt_w"].astype(x.dtype)
+                          + p["dt_bias"].astype(x.dtype))
+
+    y, h_all = _ssm_scan(p, xc, dtv, Bm, Cm, cache.h)
+    out = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"].astype(x.dtype)
+
+    # conv history for the next call: last K-1 raw inputs
+    K = cfg.d_conv
+    hist = jnp.concatenate([cache.conv.astype(x.dtype), x_in], axis=1)[:, -(K - 1):]
+    new_cache = MambaCache(conv=hist, h=h_all[-1])
+
+    snaps = None
+    if collect:
+        # conv history after each token t: inputs [t-K+2 .. t]
+        xp = jnp.concatenate([cache.conv.astype(x.dtype), x_in], axis=1)
+        idx = jnp.arange(T)[:, None] + jnp.arange(K - 1)[None, :] + 1
+        conv_snaps = xp[:, idx]                        # [B, T, K-1, din]
+        snaps = MambaCache(conv=jnp.moveaxis(conv_snaps, 1, 0),  # [T,B,K-1,din]
+                           h=h_all)                               # [T,B,din,ds]
+    return out, new_cache, snaps
+
+
+def select_snapshot(snaps: MambaCache, idx) -> MambaCache:
+    """Commit the state after input token `idx` (0-based)."""
+    return MambaCache(conv=jax.lax.dynamic_index_in_dim(snaps.conv, idx, 0, False),
+                      h=jax.lax.dynamic_index_in_dim(snaps.h, idx, 0, False))

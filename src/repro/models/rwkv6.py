@@ -1,0 +1,165 @@
+"""RWKV6 ("Finch") — attention-free mixer with data-dependent decay.
+
+Time-mix recurrence per head (state S in R^{hd×hd}):
+
+    S_t = diag(w_t) · S_{t-1} + k_tᵀ v_t
+    y_t = r_t · (S_{t-1} + diag(u) · k_tᵀ v_t)
+
+with per-channel decay w_t = exp(-exp(w0 + tanh(x̄_t A_w) B_w)) — the
+data-dependent decay that distinguishes RWKV6 from RWKV4/5. Token shift is
+the learned static lerp μ (the full data-dependent-shift LoRA stack of the
+paper is simplified; noted in DESIGN.md).
+
+QuantSpec applicability: no KV cache exists — the paper's hierarchical KV
+technique is inapplicable (DESIGN.md §Arch-applicability); self-speculation
+still works through INT4 draft weights, and the engine snapshots/commits the
+recurrent state exactly like Mamba.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+_LORA_RANK = 64
+
+
+class RWKVTMState(NamedTuple):
+    x_prev: jnp.ndarray  # [B, d] — previous token's input (token shift)
+    S: jnp.ndarray       # [B, H, hd, hd] — wkv state (float32)
+
+
+class RWKVCMState(NamedTuple):
+    x_prev: jnp.ndarray  # [B, d]
+
+
+def init_tm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    H, hd = cfg.num_heads, cfg.hd
+    return RWKVTMState(x_prev=jnp.zeros((batch, cfg.d_model), dtype),
+                       S=jnp.zeros((batch, H, hd, hd), jnp.float32))
+
+
+def init_cm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    return RWKVCMState(x_prev=jnp.zeros((batch, cfg.d_model), dtype))
+
+
+def init_tm_params(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    H, hd = cfg.num_heads, cfg.hd
+    r = _LORA_RANK
+    ks = jax.random.split(key, 8)
+    s = cfg.init_scale
+    dt = jnp.dtype(cfg.dtype)
+    n = lambda k, sh: (jax.random.normal(k, sh) * s).astype(dt)
+    return {
+        "mu_r": jnp.full((d,), 0.5, dt), "mu_k": jnp.full((d,), 0.5, dt),
+        "mu_v": jnp.full((d,), 0.5, dt), "mu_g": jnp.full((d,), 0.5, dt),
+        "mu_w": jnp.full((d,), 0.5, dt),
+        "wr": n(ks[0], (d, d)), "wk": n(ks[1], (d, d)),
+        "wv": n(ks[2], (d, d)), "wg": n(ks[3], (d, d)),
+        "wo": n(ks[4], (d, d)),
+        "w0": jnp.full((d,), -2.0, jnp.float32),
+        "w_lora_a": n(ks[5], (d, r)).astype(jnp.float32),
+        "w_lora_b": n(ks[6], (r, d)).astype(jnp.float32),
+        "u": (jax.random.normal(ks[7], (H, hd)) * s).astype(jnp.float32),
+        "ln_scale": jnp.ones((d,), dt),
+    }
+
+
+def init_cm_params(key, cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    s = cfg.init_scale
+    dt = jnp.dtype(cfg.dtype)
+    n = lambda k, sh: (jax.random.normal(k, sh) * s).astype(dt)
+    return {
+        "mu_r": jnp.full((d,), 0.5, dt), "mu_k": jnp.full((d,), 0.5, dt),
+        "wr_cm": n(ks[0], (d, d)), "wk_cm": n(ks[1], (d, f)),
+        "wv_cm": n(ks[2], (f, d)),
+    }
+
+
+def _shift(x: jnp.ndarray, x_prev: jnp.ndarray) -> jnp.ndarray:
+    """[B,T,d] -> previous-token stream with carried x_prev at t=0."""
+    return jnp.concatenate([x_prev[:, None].astype(x.dtype), x[:, :-1]], axis=1)
+
+
+def _lerp(x, x_shift, mu):
+    return x + (x_shift - x) * mu.astype(x.dtype)
+
+
+def apply_time_mix(p: dict, cfg: ModelConfig, x: jnp.ndarray,
+                   state: RWKVTMState | None = None, collect: bool = False):
+    """x [B, T, d] -> (y, new_state, snapshots|None)."""
+    B, T, d = x.shape
+    H, hd = cfg.num_heads, cfg.hd
+    if state is None:
+        state = init_tm_state(cfg, B, x.dtype)
+    xs = _shift(x, state.x_prev)
+
+    def heads(t):
+        return t.reshape(B, T, H, hd)
+
+    r = heads(_lerp(x, xs, p["mu_r"]) @ p["wr"].astype(x.dtype))
+    k = heads(_lerp(x, xs, p["mu_k"]) @ p["wk"].astype(x.dtype))
+    v = heads(_lerp(x, xs, p["mu_v"]) @ p["wv"].astype(x.dtype))
+    g = _lerp(x, xs, p["mu_g"]) @ p["wg"].astype(x.dtype)
+    xw = _lerp(x, xs, p["mu_w"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(p["w0"] + jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]))
+    w = w.reshape(B, T, H, hd)
+
+    u = p["u"]
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp  # [B,H,hd] each, float32
+        kv = k_t[..., :, None] * v_t[..., None, :]           # [B,H,hd,hd]
+        y = jnp.einsum("bhi,bhij->bhj", r_t, S + u[..., None] * kv)
+        S = w_t[..., None] * S + kv
+        return S, (y, S)
+
+    xs_scan = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0)
+                    for t in (r, k, v, w))
+    S_last, (ys, S_all) = jax.lax.scan(step, state.S, xs_scan)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T, d)
+
+    # per-head group norm then gate
+    y = y * jax.lax.rsqrt(jnp.mean(
+        y.reshape(B, T, H, hd) ** 2, -1, keepdims=True) + cfg.norm_eps
+    ).reshape(B, T, H, 1).repeat(hd, -1).reshape(B, T, d)
+    y = (y * p["ln_scale"].astype(jnp.float32)).astype(x.dtype)
+    out = (y * jax.nn.silu(g)) @ p["wo"].astype(x.dtype)
+
+    new_state = RWKVTMState(x_prev=x[:, -1], S=S_last)
+    snaps = None
+    if collect:
+        snaps = RWKVTMState(x_prev=jnp.moveaxis(x, 1, 0), S=S_all)
+    return out, new_state, snaps
+
+
+def apply_channel_mix(p: dict, cfg: ModelConfig, x: jnp.ndarray,
+                      state: RWKVCMState | None = None, collect: bool = False):
+    B, T, d = x.shape
+    if state is None:
+        state = init_cm_state(cfg, B, x.dtype)
+    xs = _shift(x, state.x_prev)
+    kk = jnp.square(jax.nn.relu(_lerp(x, xs, p["mu_k"]) @ p["wk_cm"].astype(x.dtype)))
+    out = jax.nn.sigmoid(_lerp(x, xs, p["mu_r"]) @ p["wr_cm"].astype(x.dtype)) \
+        * (kk @ p["wv_cm"].astype(x.dtype))
+    new_state = RWKVCMState(x_prev=x[:, -1])
+    snaps = RWKVCMState(x_prev=jnp.moveaxis(x, 1, 0)) if collect else None
+    return out, new_state, snaps
+
+
+def select_tm_snapshot(snaps: RWKVTMState, idx) -> RWKVTMState:
+    return RWKVTMState(
+        x_prev=jax.lax.dynamic_index_in_dim(snaps.x_prev, idx, 0, False),
+        S=jax.lax.dynamic_index_in_dim(snaps.S, idx, 0, False))
+
+
+def select_cm_snapshot(snaps: RWKVCMState, idx) -> RWKVCMState:
+    return RWKVCMState(
+        x_prev=jax.lax.dynamic_index_in_dim(snaps.x_prev, idx, 0, False))

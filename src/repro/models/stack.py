@@ -1,0 +1,572 @@
+"""Pattern-stack decoder: one engine for all assigned architectures.
+
+A model is `head_layers + pattern × n_repeats + tail_layers` of `LayerSpec`s
+(see models/config.py). The repeated pattern compiles as a single `lax.scan`
+over super-blocks with stacked params/caches, so a 100-layer model costs the
+same compile time as its pattern.
+
+Three execution modes:
+  train   — full-sequence causal forward, no caches (remat-able).
+  prefill — full-sequence forward that also fills the serving caches
+            (hierarchical quantization of all but the last G..2G tokens).
+  decode  — T new tokens against the caches; `kv_mode` selects the
+            QuantSpec draft (upper-4-bit) or target (INT8) view, or the
+            sparse-KV baseline draft caches.
+
+Serving cache policies: 'quantspec' (hierarchical cache, the paper),
+'fp' (FP16 autoregressive baseline), 'streaming' (StreamingLLM sink+window
+draft over an FP target cache), 'snapkv' (SnapKV selected draft over an FP
+target cache).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hier_kv_cache as HC
+from repro.distributed.sharding import constrain
+from repro.models import common as L
+from repro.models import mamba as M
+from repro.models import rwkv6 as R
+from repro.models.config import (ATTN_CROSS, ATTN_FULL, ATTN_WINDOW,
+                                 MIX_MAMBA, MIX_RWKV, MLP_DENSE, MLP_MOE,
+                                 MLP_NONE, MLP_RWKV, LayerSpec, ModelConfig)
+from repro.models.moe import apply_moe, init_moe_params
+
+
+# ---------------------------------------------------------------------------
+# per-layer state containers
+# ---------------------------------------------------------------------------
+
+class CrossKV(NamedTuple):
+    k: jnp.ndarray  # [B, n_mem, Hkv, hd]
+    v: jnp.ndarray
+
+
+class SnapKVCache(NamedTuple):
+    """SnapKV draft cache: prefill-selected important tokens + recent ring."""
+    sel_k: jnp.ndarray    # [B, budget, H, hd]
+    sel_v: jnp.ndarray
+    sel_pos: jnp.ndarray  # [B, budget] absolute positions
+    recent: HC.WindowKVCache
+
+
+class AttnState(NamedTuple):
+    """Serving state of one attention layer: the primary (target) cache and
+    an optional sparse draft cache (baselines only)."""
+    primary: Any          # HierKVCache | FullKVCache | WindowKVCache
+    draft: Any            # None | WindowKVCache | SnapKVCache
+
+
+@dataclasses.dataclass(frozen=True)
+class RunCtx:
+    mode: str                    # 'train' | 'prefill' | 'decode'
+    kv_mode: str = "target"      # 'draft' | 'target' (decode only)
+    policy: str = "quantspec"    # cache policy
+    collect: bool = False        # collect per-token snapshots (decode)
+    memory: Optional[jnp.ndarray] = None   # [B, n_mem, d] cross-attn stub
+    draft_window: int = 256
+    draft_budget: int = 256
+    obs_window: int = 32
+    # KV-quantization simulation in full-sequence forward (quality benches):
+    # (key_axis, value_axis, bits, residual) e.g. ('channel','token',4,256)
+    kv_sim: Optional[tuple] = None
+
+
+# ---------------------------------------------------------------------------
+# layer init
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ModelConfig, spec: LayerSpec) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"ln1": L.init_norm(cfg)}
+    if spec.mixer in (ATTN_FULL, ATTN_WINDOW):
+        p["attn"] = L.init_attn_params(k1, cfg)
+    elif spec.mixer == ATTN_CROSS:
+        p["attn"] = L.init_attn_params(k1, cfg, cross=True)
+    elif spec.mixer == MIX_MAMBA:
+        p["mamba"] = M.init_mamba_params(k1, cfg)
+    elif spec.mixer == MIX_RWKV:
+        p["rwkv_tm"] = R.init_tm_params(k1, cfg)
+    if spec.mlp != MLP_NONE:
+        p["ln2"] = L.init_norm(cfg)
+    if spec.mlp == MLP_DENSE:
+        p["mlp"] = L.init_mlp_params(k2, cfg)
+    elif spec.mlp == MLP_MOE:
+        p["moe"] = init_moe_params(k2, cfg)
+    elif spec.mlp == MLP_RWKV:
+        p["rwkv_cm"] = R.init_cm_params(k2, cfg)
+    return p
+
+
+def init_layer_state(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                     max_blocks: int, ctx: RunCtx, dtype) -> Tuple[Any, Any]:
+    """(mixer_state, mlp_state) for serving."""
+    H, hd, G = cfg.num_kv_heads, cfg.hd, cfg.group_size
+    mixer: Any = None
+    if spec.mixer == ATTN_FULL:
+        if ctx.policy == "quantspec":
+            primary = HC.init_cache(batch, max_blocks, G, H, hd, dtype)
+            draft = None
+        elif ctx.policy == "streaming_only":
+            # long-context sub-quadratic mode for pure full-attention archs:
+            # the *only* cache is a StreamingLLM sink+window ring
+            primary = HC.init_window_cache(
+                batch, ctx.draft_window, H, hd, cfg.n_sink, dtype)
+            draft = None
+        else:
+            primary = HC.init_full_cache(
+                batch, max_blocks * G + 2 * G, H, hd, dtype)
+            if ctx.policy == "streaming":
+                draft = HC.init_window_cache(
+                    batch, ctx.draft_window, H, hd, cfg.n_sink, dtype)
+            elif ctx.policy == "snapkv":
+                draft = SnapKVCache(
+                    sel_k=jnp.zeros((batch, ctx.draft_budget, H, hd), dtype),
+                    sel_v=jnp.zeros((batch, ctx.draft_budget, H, hd), dtype),
+                    sel_pos=jnp.zeros((batch, ctx.draft_budget), jnp.int32),
+                    recent=HC.init_window_cache(
+                        batch, ctx.draft_window, H, hd, 0, dtype))
+            else:
+                draft = None
+        mixer = AttnState(primary=primary, draft=draft)
+    elif spec.mixer == ATTN_WINDOW:
+        mixer = AttnState(primary=HC.init_window_cache(
+            batch, cfg.window, H, hd, cfg.n_sink, dtype), draft=None)
+    elif spec.mixer == ATTN_CROSS:
+        n_mem = max(cfg.num_image_tokens, 1)
+        mixer = CrossKV(k=jnp.zeros((batch, n_mem, H, hd), dtype),
+                        v=jnp.zeros((batch, n_mem, H, hd), dtype))
+    elif spec.mixer == MIX_MAMBA:
+        mixer = M.init_mamba_cache(cfg, batch, dtype)
+    elif spec.mixer == MIX_RWKV:
+        mixer = R.init_tm_state(cfg, batch, dtype)
+    mlp_state = R.init_cm_state(cfg, batch, dtype) if spec.mlp == MLP_RWKV else None
+    return (mixer, mlp_state)
+
+
+# ---------------------------------------------------------------------------
+# layer apply
+# ---------------------------------------------------------------------------
+
+def _snapkv_select(q, k, v, budget: int, obs: int):
+    """SnapKV: score keys by attention mass from the last `obs` queries."""
+    B, S, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    qo = q[:, -obs:].reshape(B, obs, Hkv, g, hd)
+    logits = jnp.einsum("bohgd,bshd->bhos", qo.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(float(hd))
+    mass = jax.nn.softmax(logits, axis=-1).sum(axis=(1, 2))   # [B, S]
+    _, top_idx = jax.lax.top_k(mass, min(budget, S))
+    top_idx = jnp.sort(top_idx, axis=-1)
+    if top_idx.shape[1] < budget:
+        top_idx = jnp.pad(top_idx, ((0, 0), (0, budget - top_idx.shape[1])),
+                          constant_values=0)
+    sel_k = jnp.take_along_axis(k, top_idx[:, :, None, None], axis=1)
+    sel_v = jnp.take_along_axis(v, top_idx[:, :, None, None], axis=1)
+    return sel_k, sel_v, top_idx
+
+
+def _attend_snapkv(q, cache: SnapKVCache, stream_pos, softcap):
+    T = q.shape[1]
+    q_pos = stream_pos + jnp.arange(T)
+    # selected (static) part
+    mask_sel = cache.sel_pos[:, None, :] <= q_pos[None, :, None]
+    # recent ring part
+    W = cache.recent.ring_k.shape[1]
+    P = cache.recent.pos
+    s = jnp.arange(W)
+    ring_pos = P - 1 - ((P - 1 - s) % W)
+    ring_valid = (ring_pos >= 0) & (ring_pos < P)
+    k = jnp.concatenate([cache.sel_k, cache.recent.ring_k], 1)
+    v = jnp.concatenate([cache.sel_v, cache.recent.ring_v], 1)
+    mask_ring = (ring_valid[None, :] &
+                 (ring_pos[None, None, :] <= q_pos[None, :, None]))
+    mask = jnp.concatenate(
+        [jnp.broadcast_to(mask_sel, (q.shape[0], T, cache.sel_k.shape[1])),
+         jnp.broadcast_to(mask_ring, (q.shape[0], T, W))], axis=-1)
+    return L.gqa_attention(q, k.astype(q.dtype), v.astype(q.dtype), mask,
+                           softcap)
+
+
+def apply_mixer(spec: LayerSpec, p: dict, cfg: ModelConfig, h: jnp.ndarray,
+                state, ctx: RunCtx, stream_pos):
+    """h is post-ln1. Returns (mixer_out, new_state, snaps)."""
+    B, T, _ = h.shape
+    sc = cfg.logit_softcap
+
+    if spec.mixer in (ATTN_FULL, ATTN_WINDOW, ATTN_CROSS):
+        if spec.mixer == ATTN_CROSS:
+            q, _, _ = L.project_qkv(p["attn"], cfg, h, None, use_rope=False)
+            if ctx.mode == "decode":
+                att = L.gqa_attention(q, state.k.astype(q.dtype),
+                                      state.v.astype(q.dtype), None, sc)
+                return L.attn_out(p["attn"], att), state, None
+            mem = ctx.memory
+            _, mk, mv = L.project_qkv(p["attn"], cfg, mem, None, use_rope=False)
+            att = L.gqa_attention(q, mk, mv, None, sc)
+            new_state = CrossKV(mk, mv) if ctx.mode == "prefill" else state
+            return L.attn_out(p["attn"], att), new_state, None
+
+        positions = (stream_pos + jnp.arange(T)) if ctx.mode == "decode" \
+            else jnp.arange(T)
+        q, k, v = L.project_qkv(p["attn"], cfg, h, positions)
+        q = constrain(q, "batch", "seq", "heads", "head_dim")
+
+        if ctx.mode == "train" and ctx.kv_sim is not None:
+            from repro.core.quantization import simulate_cache_quant
+            k_axis, v_axis, bits, residual = ctx.kv_sim
+            k = simulate_cache_quant(k, group=cfg.group_size,
+                                     residual=residual, axis=k_axis, bits=bits)
+            v = simulate_cache_quant(v, group=cfg.group_size,
+                                     residual=residual, axis=v_axis, bits=bits)
+
+        if ctx.mode == "train":
+            if spec.mixer == ATTN_WINDOW:
+                att = L.window_attention_chunked(q, k, v, cfg.window, sc)
+            else:
+                att = L.causal_full_attention(q, k, v, sc)
+            return L.attn_out(p["attn"], att), None, None
+
+        if ctx.mode == "prefill":
+            if spec.mixer == ATTN_WINDOW:
+                att = L.window_attention_chunked(q, k, v, cfg.window, sc)
+                new = HC.window_append(state.primary, k, v)
+                return L.attn_out(p["attn"], att), state._replace(primary=new), None
+            att = L.causal_full_attention(q, k, v, sc)
+            if ctx.policy == "quantspec":
+                new_primary = HC.prefill(state.primary, k, v)
+            elif ctx.policy == "streaming_only":
+                new_primary = HC.window_append(state.primary, k, v)
+            else:
+                new_primary = HC.full_append(state.primary, k, v)
+            new_draft = state.draft
+            if ctx.policy == "streaming":
+                new_draft = HC.window_append(state.draft, k, v)
+            elif ctx.policy == "snapkv":
+                sk, sv, spos = _snapkv_select(q, k, v, ctx.draft_budget,
+                                              ctx.obs_window)
+                new_draft = SnapKVCache(
+                    sel_k=sk, sel_v=sv, sel_pos=spos,
+                    recent=HC.window_append(state.draft.recent,
+                                            k[:, -1:], v[:, -1:]))
+            return (L.attn_out(p["attn"], att),
+                    AttnState(new_primary, new_draft), None)
+
+        # ---- decode -------------------------------------------------------
+        if spec.mixer == ATTN_WINDOW:
+            new = HC.window_append(state.primary, k, v)
+            att = L.attend_window(q, new, stream_pos, sc)
+            return L.attn_out(p["attn"], att), state._replace(primary=new), None
+
+        if ctx.policy == "quantspec":
+            cache = HC.maybe_flush(state.primary, headroom=T)
+            cache = HC.append(cache, k, v)
+            att = L.attend_hier(q, cache, stream_pos, ctx.kv_mode, sc,
+                                impl=cfg.hier_attn_impl,
+                                deq_dtype=jnp.dtype(cfg.hier_deq_dtype))
+            return L.attn_out(p["attn"], att), AttnState(cache, None), None
+
+        if ctx.policy == "streaming_only":
+            new = HC.window_append(state.primary, k, v)
+            att = L.attend_window(q, new, stream_pos, sc)
+            return L.attn_out(p["attn"], att), AttnState(new, None), None
+
+        # baselines: target cache always appended; draft cache too
+        new_primary = HC.full_append(state.primary, k, v)
+        new_draft = state.draft
+        if ctx.policy == "streaming":
+            new_draft = HC.window_append(state.draft, k, v)
+        elif ctx.policy == "snapkv":
+            new_draft = state.draft._replace(
+                recent=HC.window_append(state.draft.recent, k, v))
+        if ctx.kv_mode == "draft" and ctx.policy == "streaming":
+            att = L.attend_window(q, new_draft, stream_pos, sc)
+        elif ctx.kv_mode == "draft" and ctx.policy == "snapkv":
+            att = _attend_snapkv(q, new_draft, stream_pos, sc)
+        else:
+            att = L.attend_full(q, new_primary, stream_pos, sc)
+        return (L.attn_out(p["attn"], att),
+                AttnState(new_primary, new_draft), None)
+
+    if spec.mixer == MIX_MAMBA:
+        cache = None if ctx.mode == "train" else state
+        y, new_state, snaps = M.apply_mamba(p["mamba"], cfg, h, cache,
+                                            collect=ctx.collect)
+        return y, (None if ctx.mode == "train" else new_state), snaps
+
+    if spec.mixer == MIX_RWKV:
+        st = None if ctx.mode == "train" else state
+        y, new_state, snaps = R.apply_time_mix(p["rwkv_tm"], cfg, h, st,
+                                               collect=ctx.collect)
+        return y, (None if ctx.mode == "train" else new_state), snaps
+
+    raise ValueError(spec.mixer)
+
+
+def apply_layer(spec: LayerSpec, p: dict, cfg: ModelConfig, x: jnp.ndarray,
+                state, ctx: RunCtx, stream_pos):
+    """Returns (x, new_state, snaps, aux)."""
+    mixer_state, mlp_state = state if state is not None else (None, None)
+    h = L.rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
+    mix, new_mixer, mix_snaps = apply_mixer(spec, p, cfg, h, mixer_state,
+                                            ctx, stream_pos)
+    x = x + mix
+    aux = jnp.zeros((), jnp.float32)
+    new_mlp, mlp_snaps = mlp_state, None
+    if spec.mlp != MLP_NONE:
+        h2 = L.rms_norm(x, p["ln2"]["scale"], cfg.norm_eps)
+        if spec.mlp == MLP_DENSE:
+            x = x + L.apply_mlp(p["mlp"], h2)
+        elif spec.mlp == MLP_MOE:
+            y, aux = apply_moe(p["moe"], cfg, h2)
+            x = x + y
+        elif spec.mlp == MLP_RWKV:
+            st = None if ctx.mode == "train" else mlp_state
+            y, new_cm, mlp_snaps = R.apply_channel_mix(
+                p["rwkv_cm"], cfg, h2, st, collect=ctx.collect)
+            x = x + y
+            new_mlp = None if ctx.mode == "train" else new_cm
+    x = constrain(x, "batch", "seq", "embed")
+    return x, (new_mixer, new_mlp), (mix_snaps, mlp_snaps), aux
+
+
+# ---------------------------------------------------------------------------
+# the model
+# ---------------------------------------------------------------------------
+
+class StackModel:
+    def __init__(self, cfg: ModelConfig, remat: bool = False,
+                 scan_unroll: int = 1):
+        self.cfg = cfg
+        self.remat = remat  # checkpoint each super-block in train mode
+        # dry-run sets scan_unroll=n_repeats so XLA cost_analysis (which
+        # counts a while body once) sees every layer's FLOPs/bytes
+        self.scan_unroll = scan_unroll
+
+    # ---- params -------------------------------------------------------------
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        k_embed, k_head, k_blocks, k_tail, k_lm = jax.random.split(key, 5)
+        V = cfg.vocab_size
+        if cfg.num_codebooks:
+            embed = (jax.random.normal(
+                k_embed, (cfg.num_codebooks, V, cfg.d_model)) * cfg.init_scale
+            ).astype(dt)
+            lm_head = (jax.random.normal(
+                k_lm, (cfg.d_model, cfg.num_codebooks * V)) * cfg.init_scale
+            ).astype(dt)
+        else:
+            embed = (jax.random.normal(k_embed, (V, cfg.d_model))
+                     * cfg.init_scale).astype(dt)
+            lm_head = (jax.random.normal(k_lm, (cfg.d_model, V))
+                       * cfg.init_scale).astype(dt)
+        params = {
+            "embed": embed,
+            "lm_head": lm_head,
+            "final_norm": L.init_norm(cfg),
+            "head": tuple(
+                init_layer(k, cfg, s) for k, s in
+                zip(jax.random.split(k_head, max(len(cfg.head_layers), 1)),
+                    cfg.head_layers)),
+            "tail": tuple(
+                init_layer(k, cfg, s) for k, s in
+                zip(jax.random.split(k_tail, max(len(cfg.tail_layers), 1)),
+                    cfg.tail_layers)),
+            "blocks": tuple(
+                jax.vmap(lambda kk, s=spec: init_layer(kk, cfg, s))(
+                    jax.random.split(jax.random.fold_in(k_blocks, j),
+                                     cfg.n_repeats))
+                for j, spec in enumerate(cfg.pattern)
+            ) if cfg.n_repeats > 0 else (),
+        }
+        return params
+
+    # ---- embedding ----------------------------------------------------------
+    def embed(self, params, tokens):
+        cfg = self.cfg
+        if cfg.num_codebooks:
+            # tokens [B, T, K] -> sum of codebook embeddings
+            embs = jax.vmap(lambda e, t: jnp.take(e, t, axis=0))(
+                params["embed"], jnp.moveaxis(tokens, -1, 0))  # [K,B,T,d]
+            x = embs.sum(0)
+        else:
+            x = jnp.take(params["embed"], tokens, axis=0)
+        return constrain(x, "batch", "seq", "embed")
+
+    def unembed(self, params, x):
+        cfg = self.cfg
+        from repro.core.weight_quant import resolve
+        logits = x @ resolve(params["lm_head"], x.dtype)
+        if cfg.num_codebooks:
+            B, T, _ = logits.shape
+            logits = logits.reshape(B, T, cfg.num_codebooks, cfg.vocab_size)
+        return constrain(logits.astype(jnp.float32), "batch", "seq", "vocab")
+
+    # ---- stack runner ---------------------------------------------------------
+    def _run(self, params, x, states, ctx: RunCtx, stream_pos):
+        cfg = self.cfg
+        aux_total = jnp.zeros((), jnp.float32)
+        new_states = {"head": [], "blocks": None, "tail": []}
+        snaps_out = {"head": [], "blocks": None, "tail": []}
+
+        def run_flat(x, layers, specs, lstates, aux_total):
+            outs, snps = [], []
+            for p, s, st in zip(layers, specs, lstates):
+                x, ns, sn, aux = apply_layer(s, p, cfg, x, st, ctx, stream_pos)
+                outs.append(ns)
+                snps.append(sn)
+                aux_total = aux_total + aux
+            return x, outs, snps, aux_total
+
+        head_states = (states["head"] if states is not None
+                       else [None] * len(cfg.head_layers))
+        x, hs, hsn, aux_total = run_flat(
+            x, params["head"], cfg.head_layers, head_states, aux_total)
+        new_states["head"], snaps_out["head"] = hs, hsn
+
+        if cfg.n_repeats > 0:
+            block_states = states["blocks"] if states is not None else None
+
+            def body(carry, xs):
+                xc, auxc = carry
+                bp = xs[0]
+                bst = xs[1] if states is not None else None
+                new_bst, new_snp = [], []
+                for j, spec in enumerate(cfg.pattern):
+                    st = bst[j] if bst is not None else None
+                    xc, ns, sn, aux = apply_layer(spec, bp[j], cfg, xc, st,
+                                                  ctx, stream_pos)
+                    new_bst.append(ns)
+                    new_snp.append(sn)
+                return (xc, auxc + aux), (tuple(new_bst), tuple(new_snp))
+
+            xs = (params["blocks"], block_states) if states is not None \
+                else (params["blocks"],)
+            if ctx.mode == "train" and self.remat:
+                body = jax.checkpoint(body)
+            (x, aux_total), (nbs, nsn) = jax.lax.scan(
+                body, (x, aux_total), xs,
+                unroll=min(self.scan_unroll, cfg.n_repeats))
+            new_states["blocks"] = nbs
+            snaps_out["blocks"] = nsn
+
+        tail_states = (states["tail"] if states is not None
+                       else [None] * len(cfg.tail_layers))
+        x, ts, tsn, aux_total = run_flat(
+            x, params["tail"], cfg.tail_layers, tail_states, aux_total)
+        new_states["tail"], snaps_out["tail"] = ts, tsn
+
+        x = L.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+        return x, new_states, snaps_out, aux_total
+
+    # ---- public entry points ---------------------------------------------------
+    def train_logits(self, params, tokens, memory=None, kv_sim=None):
+        ctx = RunCtx(mode="train", memory=memory, kv_sim=kv_sim)
+        x = self.embed(params, tokens)
+        x, _, _, aux = self._run(params, x, None, ctx, 0)
+        return self.unembed(params, x), aux
+
+    def init_serve_state(self, batch: int, max_seq: int, policy: str,
+                         ctx_kw: Optional[dict] = None, dtype=jnp.float32):
+        cfg = self.cfg
+        ctx = RunCtx(mode="prefill", policy=policy, **(ctx_kw or {}))
+        max_blocks = max(1, -(-max_seq // cfg.group_size))
+
+        def make(spec):
+            return init_layer_state(cfg, spec, batch, max_blocks, ctx, dtype)
+
+        state = {
+            "head": [make(s) for s in cfg.head_layers],
+            "tail": [make(s) for s in cfg.tail_layers],
+            "blocks": tuple(
+                jax.tree.map(lambda y: jnp.stack([y] * cfg.n_repeats),
+                             make(spec))
+                for spec in cfg.pattern
+            ) if cfg.n_repeats > 0 else (),
+        }
+        return state
+
+    def prefill(self, params, tokens, state, policy: str = "quantspec",
+                memory=None, ctx_kw: Optional[dict] = None):
+        ctx = RunCtx(mode="prefill", policy=policy, memory=memory,
+                     **(ctx_kw or {}))
+        x = self.embed(params, tokens)
+        x, new_states, _, _ = self._run(params, x, state, ctx, 0)
+        return self.unembed(params, x[:, -1:]), new_states
+
+    def decode(self, params, tokens, state, stream_pos, kv_mode: str,
+               policy: str = "quantspec", collect: bool = False,
+               ctx_kw: Optional[dict] = None):
+        ctx = RunCtx(mode="decode", kv_mode=kv_mode, policy=policy,
+                     collect=collect, **(ctx_kw or {}))
+        x = self.embed(params, tokens)
+        x, new_states, snaps, _ = self._run(params, x, state, ctx, stream_pos)
+        return self.unembed(params, x), new_states, snaps
+
+    # ---- speculative-decoding commit ----------------------------------------
+    def commit(self, states, snaps, n_accepted, total_appended):
+        """After a target verify pass that appended `total_appended` tokens,
+        keep the first `n_accepted`+1 of them: attention caches roll back
+        `total_appended - n_accepted - 1` entries; recurrent states commit
+        the snapshot taken after input `n_accepted`."""
+        cfg = self.cfg
+        rb = total_appended - n_accepted - 1
+        idx = n_accepted
+
+        def commit_one(spec, st, sn, stacked):
+            mixer, mlp = st
+            msn = sn[0] if sn is not None else None
+            lsn = sn[1] if sn is not None else None
+            if isinstance(mixer, AttnState):
+                primary = mixer.primary
+                if isinstance(primary, HC.HierKVCache):
+                    primary = HC.rollback(primary, rb)
+                elif isinstance(primary, HC.FullKVCache):
+                    primary = HC.full_rollback(primary, rb)
+                elif isinstance(primary, HC.WindowKVCache):
+                    primary = HC.window_rollback(primary, rb)
+                draft = mixer.draft
+                if isinstance(draft, HC.WindowKVCache):
+                    draft = HC.window_rollback(draft, rb)
+                elif isinstance(draft, SnapKVCache):
+                    draft = draft._replace(
+                        recent=HC.window_rollback(draft.recent, rb))
+                mixer = AttnState(primary, draft)
+            elif isinstance(mixer, HC.WindowKVCache):
+                mixer = HC.window_rollback(mixer, rb)
+            elif isinstance(mixer, M.MambaCache):
+                sel = M.select_snapshot
+                mixer = (jax.vmap(sel, in_axes=(0, None))(msn, idx)
+                         if stacked else sel(msn, idx))
+            elif isinstance(mixer, R.RWKVTMState):
+                sel = R.select_tm_snapshot
+                mixer = (jax.vmap(sel, in_axes=(0, None))(msn, idx)
+                         if stacked else sel(msn, idx))
+            if isinstance(mlp, R.RWKVCMState):
+                sel = R.select_cm_snapshot
+                mlp = (jax.vmap(sel, in_axes=(0, None))(lsn, idx)
+                       if stacked else sel(lsn, idx))
+            return (mixer, mlp)
+
+        new = {"head": [], "tail": [], "blocks": None}
+        for i, spec in enumerate(cfg.head_layers):
+            new["head"].append(commit_one(
+                spec, states["head"][i], snaps["head"][i], False))
+        for i, spec in enumerate(cfg.tail_layers):
+            new["tail"].append(commit_one(
+                spec, states["tail"][i], snaps["tail"][i], False))
+        if cfg.n_repeats > 0:
+            new["blocks"] = tuple(
+                commit_one(spec, states["blocks"][j],
+                           (snaps["blocks"][j] if snaps["blocks"] is not None
+                            else None), True)
+                for j, spec in enumerate(cfg.pattern))
+        return new

@@ -1,0 +1,23 @@
+"""Token sampling."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_token(logits: jnp.ndarray, key, greedy: bool = False):
+    """logits [B, V] or [B, K, V] -> [B] or [B, K]."""
+    if greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def top_p_filter(logits: jnp.ndarray, top_p: float) -> jnp.ndarray:
+    """Nucleus filtering: mask logits outside the top-p mass."""
+    sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    cutoff_idx = jnp.sum(cum < top_p, axis=-1, keepdims=True)
+    cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
+    return jnp.where(logits < cutoff, -1e30, logits)

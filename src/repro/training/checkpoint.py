@@ -1,0 +1,49 @@
+"""Checkpointing: flat-path .npz + JSON treedef (no orbax offline)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return {jax.tree_util.keystr(p): np.asarray(v) for p, v in flat}
+
+
+def save_checkpoint(path: str, params, opt_state=None, step: int = 0,
+                    metadata=None):
+    os.makedirs(path, exist_ok=True)
+    np.savez(os.path.join(path, "params.npz"), **_flatten(params))
+    if opt_state is not None:
+        np.savez(os.path.join(path, "opt_state.npz"), **_flatten(opt_state))
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump({"step": step, "metadata": metadata or {}}, f)
+
+
+def load_checkpoint(path: str, params_template, opt_template=None):
+    """Restores arrays into the structure of the given templates."""
+    def restore(npz_path, template):
+        data = np.load(npz_path)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for p, t in flat:
+            key = jax.tree_util.keystr(p)
+            arr = jnp.asarray(data[key])
+            assert arr.shape == t.shape, (key, arr.shape, t.shape)
+            leaves.append(arr.astype(t.dtype))
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(template), leaves)
+
+    params = restore(os.path.join(path, "params.npz"), params_template)
+    out = [params]
+    if opt_template is not None:
+        out.append(restore(os.path.join(path, "opt_state.npz"), opt_template))
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    out.append(meta["step"])
+    return tuple(out)

@@ -1,0 +1,48 @@
+"""LM training step: next-token cross-entropy (+ MoE aux loss), AdamW."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.stack import StackModel
+from repro.training.optimizer import AdamW
+
+
+def lm_loss(model: StackModel, params, batch) -> tuple[jnp.ndarray, dict]:
+    """batch: {'tokens': [B,S] or [B,S,K], optional 'memory': [B,M,d]}.
+    Next-token CE over positions 0..S-2."""
+    tokens = batch["tokens"]
+    memory = batch.get("memory")
+    logits, aux = model.train_logits(params, tokens, memory=memory)
+    logits = logits[:, :-1]
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(nll)  # mean over B, S (and K for codebooks)
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux,
+                  "ppl": jnp.exp(jnp.clip(ce, max=20.0))}
+
+
+def make_train_step(model: StackModel, optimizer: AdamW):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: lm_loss(model, p, batch), has_aux=True)(params)
+        new_params, new_opt, gnorm = optimizer.update(grads, opt_state, params)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_ppl(model: StackModel):
+    def eval_step(params, batch):
+        _, metrics = lm_loss(model, params, batch)
+        return metrics["ce"]
+
+    return eval_step

@@ -1,0 +1,117 @@
+"""Pin every assigned architecture config to its published spec
+(the bracketed source in the assignment). Guards against config drift."""
+
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models.config import (ATTN_CROSS, ATTN_FULL, ATTN_WINDOW,
+                                 MIX_MAMBA, MIX_RWKV, MLP_DENSE, MLP_MOE)
+
+# (layers, d_model, heads, kv_heads, d_ff, vocab)
+SPECS = {
+    "gemma3-27b": (62, 5376, 32, 16, 21504, 262144),
+    "llama-3.2-vision-90b": (100, 8192, 64, 8, 28672, 128256),
+    "mistral-large-123b": (88, 12288, 96, 8, 28672, 32768),
+    "starcoder2-7b": (32, 4608, 36, 4, 18432, 49152),
+    "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+    "rwkv6-1.6b": (24, 2048, 32, 32, 7168, 65536),
+    "qwen2.5-14b": (48, 5120, 40, 8, 13824, 152064),
+    "deepseek-moe-16b": (28, 2048, 16, 16, 10944, 102400),
+    "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+    "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+}
+
+
+@pytest.mark.parametrize("arch", list(SPECS))
+def test_exact_dims(arch):
+    cfg = get_config(arch)
+    L, d, h, kv, ff, v = SPECS[arch]
+    assert cfg.num_layers == L, (cfg.num_layers, L)
+    assert cfg.d_model == d
+    assert cfg.num_heads == h
+    assert cfg.num_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == v
+    assert cfg.source  # provenance required
+
+
+def test_gemma3_local_global_ratio():
+    cfg = get_config("gemma3-27b")
+    kinds = [s.mixer for s in cfg.layers]
+    assert kinds.count(ATTN_WINDOW) == 51 and kinds.count(ATTN_FULL) == 11
+    # 5:1 within each repeated super-block
+    assert tuple(s.mixer for s in cfg.pattern) == (ATTN_WINDOW,) * 5 + (ATTN_FULL,)
+
+
+def test_vision_cross_attn_every_5th():
+    cfg = get_config("llama-3.2-vision-90b")
+    kinds = [s.mixer for s in cfg.layers]
+    assert kinds.count(ATTN_CROSS) == 20
+    assert all(kinds[i] == ATTN_CROSS for i in range(4, 100, 5))
+    assert cfg.num_image_tokens > 0
+
+
+def test_qwen3_moe_routing():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    assert cfg.num_experts == 128 and cfg.top_k == 8
+    assert cfg.num_shared_experts == 0
+    assert all(s.mlp == MLP_MOE for s in cfg.layers)
+
+
+def test_deepseek_fine_grained():
+    cfg = get_config("deepseek-moe-16b")
+    assert cfg.num_experts == 64 and cfg.top_k == 6
+    assert cfg.num_shared_experts == 2
+    assert cfg.layers[0].mlp == MLP_DENSE          # first layer dense
+    assert all(s.mlp == MLP_MOE for s in cfg.layers[1:])
+
+
+def test_jamba_interleave():
+    cfg = get_config("jamba-v0.1-52b")
+    kinds = [s.mixer for s in cfg.layers]
+    assert kinds.count(ATTN_FULL) == 4 and kinds.count(MIX_MAMBA) == 28
+    # attention at index 4 of each 8-layer block (1:7 ratio)
+    assert all(kinds[b * 8 + 4] == ATTN_FULL for b in range(4))
+    moes = [s.mlp == MLP_MOE for s in cfg.layers]
+    assert sum(moes) == 16 and cfg.num_experts == 16 and cfg.top_k == 2
+
+
+def test_rwkv_attention_free():
+    cfg = get_config("rwkv6-1.6b")
+    assert cfg.is_attention_free
+    assert all(s.mixer == MIX_RWKV for s in cfg.layers)
+
+
+def test_musicgen_codebooks():
+    cfg = get_config("musicgen-large")
+    assert cfg.num_codebooks == 4
+    assert cfg.num_kv_heads == cfg.num_heads  # MHA
+
+
+def test_qkv_bias_flags():
+    assert get_config("qwen2.5-14b").qkv_bias
+    assert get_config("starcoder2-7b").qkv_bias
+    assert not get_config("mistral-large-123b").qkv_bias
+
+
+@pytest.mark.parametrize("arch", list(SPECS))
+def test_smoke_variants_reduced(arch):
+    cfg = get_config(arch, smoke=True)
+    assert cfg.num_layers <= 2
+    assert cfg.d_model <= 512
+    if cfg.num_experts:
+        assert cfg.num_experts <= 4
+
+
+@pytest.mark.parametrize("arch", list(SPECS))
+def test_param_counts_in_family_range(arch):
+    """Total parameter count should be in the ballpark the name claims."""
+    expected_b = {
+        "gemma3-27b": 27, "llama-3.2-vision-90b": 90,
+        "mistral-large-123b": 123, "starcoder2-7b": 7,
+        "qwen3-moe-235b-a22b": 235, "rwkv6-1.6b": 1.6,
+        "qwen2.5-14b": 14, "deepseek-moe-16b": 16,
+        "musicgen-large": 3.3, "jamba-v0.1-52b": 52,
+    }[arch]
+    n = get_config(arch).param_count() / 1e9
+    assert 0.55 * expected_b < n < 1.6 * expected_b, n

@@ -1,0 +1,85 @@
+"""Distribution-layer tests: logical-axis rules, spec assignment, and a
+sharded end-to-end step on a local (1,1) mesh with the production axis
+names — the same code path the 256/512-chip dry-run exercises."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.distributed import specs as SP
+from repro.distributed.sharding import axis_rules, constrain
+from repro.launch.mesh import make_local_mesh
+from repro.models.stack import StackModel
+from repro.training.optimizer import AdamW
+from repro.training.train_step import make_train_step
+
+
+class TestConstrain:
+    def test_noop_outside_context(self):
+        x = jnp.ones((4, 4))
+        y = constrain(x, "batch", "model")
+        assert y is x
+
+    def test_divisibility_fallback(self):
+        """36 heads can't take a 16-way axis; kv_seq should claim it."""
+        mesh = make_local_mesh()
+        with mesh, axis_rules(mesh, "serve"):
+            x = jnp.ones((2, 36, 1, 1, 32))
+            y = constrain(x, "batch", "kv_heads", None, None, "kv_seq")
+            assert y.shape == x.shape  # compiles + runs on 1-device mesh
+
+
+class TestParamSpecs:
+    def test_shapes_respected(self):
+        cfg = get_config("llama2-7b-32k", smoke=True)
+        model = StackModel(cfg)
+        params_sh = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        mesh = make_local_mesh()
+        shardings = SP.param_specs(params_sh, mesh, "train")
+        # structure mirrors params
+        jax.tree.map(lambda a, b: None, params_sh, shardings)
+
+    def test_state_specs_structure(self):
+        cfg = get_config("jamba-v0.1-52b", smoke=True)
+        model = StackModel(cfg)
+        state_sh = jax.eval_shape(
+            lambda: model.init_serve_state(2, 128, policy="quantspec"))
+        mesh = make_local_mesh()
+        sspec = SP.state_specs(state_sh, mesh, long_ctx=False)
+        jax.tree.map(lambda a, b: None, state_sh, sspec)
+
+
+class TestLocalMeshEndToEnd:
+    @pytest.mark.parametrize("arch", ["llama2-7b-32k", "qwen3-moe-235b-a22b",
+                                      "jamba-v0.1-52b"])
+    def test_sharded_train_step(self, arch):
+        cfg = get_config(arch, smoke=True)
+        model = StackModel(cfg, remat=True)
+        params = model.init(jax.random.PRNGKey(0))
+        opt = AdamW(lr=1e-3)
+        opt_state = opt.init(params)
+        batch = {"tokens": jax.random.randint(
+            jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab_size)}
+        mesh = make_local_mesh()
+        with mesh, axis_rules(mesh, "train"):
+            step = jax.jit(make_train_step(model, opt))
+            _, _, m = step(params, opt_state, batch)
+        assert np.isfinite(float(m["loss"]))
+
+    def test_sharded_decode_step(self):
+        cfg = get_config("llama2-7b-32k", smoke=True)
+        model = StackModel(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        mesh = make_local_mesh()
+        with mesh, axis_rules(mesh, "serve"):
+            state = model.init_serve_state(2, 96, policy="quantspec")
+            tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 48), 0,
+                                        cfg.vocab_size)
+            _, state = model.prefill(params, tokens, state)
+            dl, _, _ = jax.jit(
+                lambda p, t, s: model.decode(p, t, s, 48, "target"))(
+                    params, tokens[:, :1], state)
+        assert np.isfinite(np.asarray(dl)).all()

@@ -1,0 +1,45 @@
+"""Dry-run integration tests: run the actual dryrun entry point (with its
+512 forced host devices) in a subprocess for a cheap combo on both meshes.
+The full 10×4×2 sweep runs via `python -m repro.launch.dryrun --both-meshes`
+and is recorded in EXPERIMENTS.md §Dry-run."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_dryrun(arch, shape, multi=False, timeout=900):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", arch, "--shape", shape, "--out",
+           "experiments/dryrun_test"]
+    if multi:
+        cmd.append("--multi-pod")
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    return subprocess.run(cmd, cwd=REPO, env=env, capture_output=True,
+                          text=True, timeout=timeout)
+
+
+@pytest.mark.slow
+def test_dryrun_single_pod_decode():
+    r = _run_dryrun("rwkv6-1.6b", "decode_32k")
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    path = os.path.join(REPO, "experiments/dryrun_test",
+                        "rwkv6-1.6b__decode_32k__16x16.json")
+    with open(path) as f:
+        rec = json.load(f)
+    assert rec["flops"] > 0
+    assert rec["bytes_accessed"] > 0
+
+
+@pytest.mark.slow
+def test_dryrun_multi_pod_decode():
+    r = _run_dryrun("rwkv6-1.6b", "decode_32k", multi=True)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    path = os.path.join(REPO, "experiments/dryrun_test",
+                        "rwkv6-1.6b__decode_32k__2x16x16.json")
+    assert os.path.exists(path)

@@ -1,0 +1,162 @@
+"""Pallas kernel tests (interpret mode): shape/dtype sweeps vs pure-jnp
+oracles, plus end-to-end equivalence of the pallas attention path against
+the model's jnp reference attention."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hier_kv_cache as HC
+from repro.core.quantization import quantize_k_block, quantize_v_block
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.kernels.quant_attention import quant_region_attention
+from repro.kernels.quant_pack import quantize_kv_block
+from repro.models import common as L
+
+
+def make_quant_region(key, BH, NB, G, D):
+    k1, k2 = jax.random.split(key)
+    k = jax.random.normal(k1, (BH, NB, G, 1, D))
+    v = jax.random.normal(k2, (BH, NB, G, 1, D))
+    kq = quantize_k_block(k)
+    vq = quantize_v_block(v)
+    sq = lambda t: t.squeeze(3)
+    return (sq(kq.upper), sq(kq.lower), kq.scale.squeeze(3), kq.zero.squeeze(3),
+            sq(vq.upper), sq(vq.lower), sq(vq.scale), sq(vq.zero))
+
+
+@pytest.mark.parametrize("shape", [
+    # (BH, NB, G, D, gT, blocks)
+    (2, 3, 16, 32, 4, 3),
+    (1, 4, 8, 64, 1, 2),
+    (3, 2, 32, 128, 8, 1),
+    (2, 5, 16, 32, 4, 0),     # empty quant region
+])
+@pytest.mark.parametrize("mode", ["draft", "target"])
+def test_quant_attention_vs_ref(shape, mode):
+    BH, NB, G, D, gT, blocks = shape
+    key = jax.random.PRNGKey(hash(shape) % 2**31)
+    planes = make_quant_region(key, BH, NB, G, D)
+    q = jax.random.normal(jax.random.fold_in(key, 1), (BH, gT, D))
+
+    out_k, lse_k = quant_region_attention(q, *planes, blocks, mode)
+    out_r, lse_r = kref.quant_region_attention_ref(q, *planes, blocks, mode)
+
+    if blocks > 0:
+        np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                                   atol=2e-5, rtol=2e-5)
+        np.testing.assert_allclose(np.asarray(lse_k), np.asarray(lse_r),
+                                   atol=2e-5, rtol=2e-5)
+    else:
+        assert not np.isfinite(np.asarray(lse_k)).any()
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quant_attention_dtypes(dtype):
+    BH, NB, G, D, gT = 2, 3, 16, 64, 4
+    key = jax.random.PRNGKey(7)
+    planes = make_quant_region(key, BH, NB, G, D)
+    q = jax.random.normal(jax.random.fold_in(key, 1), (BH, gT, D)).astype(dtype)
+    out_k, _ = quant_region_attention(q, *planes, 3, "target")
+    out_r, _ = kref.quant_region_attention_ref(q, *planes, 3, "target")
+    assert out_k.dtype == dtype
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_r, np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
+@pytest.mark.parametrize("shape", [(2, 16, 32), (4, 8, 64), (1, 32, 128)])
+def test_quant_pack_vs_ref(shape):
+    BH, G, D = shape
+    key = jax.random.PRNGKey(11)
+    k = jax.random.normal(key, (BH, G, D)) * 2.0 + 0.5
+    v = jax.random.normal(jax.random.fold_in(key, 1), (BH, G, D))
+    got = quantize_kv_block(k, v)
+    want = kref.quantize_kv_block_ref(k, v)
+    for name in want:
+        g = np.asarray(got[name], np.float32)
+        w = np.asarray(want[name], np.float32)
+        if name.endswith("_lower"):
+            # rounding ties may flip ±1 code (FMA ordering); bound the
+            # dequantized effect instead of exact code equality
+            gu, gl = np.divmod(g, 16) if False else (g // 16, g % 16)
+            wu, wl = w // 16, w % 16
+            np.testing.assert_array_equal(gu, wu, err_msg=name + " hi")
+            assert np.abs(gl - wl).max() <= 1, name
+            assert (np.abs(gl - wl) > 0).mean() < 0.005, name
+        else:
+            np.testing.assert_allclose(g, w, atol=1e-5, err_msg=name)
+
+
+class TestEndToEndPallasAttention:
+    """pallas hier_attention == jnp attend_hier on a real cache."""
+
+    @pytest.mark.parametrize("Hq,Hkv", [(4, 4), (8, 2)])
+    @pytest.mark.parametrize("T", [1, 4])
+    def test_matches_jnp_path(self, Hq, Hkv, T):
+        B, G, D, NB = 2, 16, 32, 5
+        S = 3 * G + 5
+        key = jax.random.PRNGKey(3)
+        cache = HC.init_cache(B, NB, G, Hkv, D)
+        k = jax.random.normal(key, (B, S, Hkv, D))
+        v = jax.random.normal(jax.random.fold_in(key, 1), (B, S, Hkv, D))
+        cache = HC.prefill(cache, k, v)
+        nk = jax.random.normal(jax.random.fold_in(key, 2), (B, T, Hkv, D))
+        nv = jax.random.normal(jax.random.fold_in(key, 3), (B, T, Hkv, D))
+        cache = HC.append(cache, nk, nv)
+        q = jax.random.normal(jax.random.fold_in(key, 4), (B, T, Hq, D))
+
+        for mode in ("draft", "target"):
+            ref = L.attend_hier(q, cache, S, mode)
+            got = kops.hier_attention(q, cache, S, mode)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                       atol=3e-5, rtol=3e-5,
+                                       err_msg=f"mode={mode}")
+
+    def test_jit_compiles(self):
+        B, G, D, Hkv, NB, T = 1, 16, 32, 2, 3, 2
+        cache = HC.init_cache(B, NB, G, Hkv, D)
+        k = jax.random.normal(jax.random.PRNGKey(0), (B, 2 * G, Hkv, D))
+        cache = HC.prefill(cache, k, k)
+        q = jax.random.normal(jax.random.PRNGKey(1), (B, T, Hkv, D))
+        cache = HC.append(cache, q[:, :, :Hkv], q[:, :, :Hkv])
+        f = jax.jit(lambda q, c: kops.hier_attention(q, c, 2 * G, "target"))
+        out = f(q, cache)
+        assert np.isfinite(np.asarray(out)).all()
+
+
+class TestBlockedImpl:
+    """'blocked' hierarchical attention (§Perf iteration) == 'flat'."""
+
+    @pytest.mark.parametrize("Hq,Hkv,T", [(4, 4, 1), (8, 2, 4)])
+    def test_blocked_matches_flat(self, Hq, Hkv, T):
+        B, G, D, NB = 2, 16, 32, 5
+        S = 3 * G + 5
+        key = jax.random.PRNGKey(13)
+        cache = HC.init_cache(B, NB, G, Hkv, D)
+        k = jax.random.normal(key, (B, S, Hkv, D))
+        v = jax.random.normal(jax.random.fold_in(key, 1), (B, S, Hkv, D))
+        cache = HC.prefill(cache, k, v)
+        nk = jax.random.normal(jax.random.fold_in(key, 2), (B, T, Hkv, D))
+        cache = HC.append(cache, nk, nk)
+        q = jax.random.normal(jax.random.fold_in(key, 4), (B, T, Hq, D))
+        for mode in ("draft", "target"):
+            flat = L.attend_hier(q, cache, S, mode, impl="flat")
+            blocked = L.attend_hier(q, cache, S, mode, impl="blocked")
+            np.testing.assert_allclose(np.asarray(blocked), np.asarray(flat),
+                                       atol=3e-5, rtol=3e-5,
+                                       err_msg=f"mode={mode}")
+
+    def test_blocked_empty_quant_region(self):
+        B, G, D, Hkv = 1, 16, 32, 2
+        cache = HC.init_cache(B, 3, G, Hkv, D)
+        k = jax.random.normal(jax.random.PRNGKey(0), (B, 10, Hkv, D))
+        cache = HC.prefill(cache, k, k)  # all in buffer
+        q = jax.random.normal(jax.random.PRNGKey(1), (B, 2, Hkv, D))
+        cache = HC.append(cache, q, q)
+        flat = L.attend_hier(q, cache, 10, "target", impl="flat")
+        blocked = L.attend_hier(q, cache, 10, "target", impl="blocked")
+        np.testing.assert_allclose(np.asarray(blocked), np.asarray(flat),
+                                   atol=3e-5)

@@ -1,0 +1,163 @@
+"""Tests for the hierarchical KV cache + double FP buffer lifecycle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hier_kv_cache as C
+
+B, G, H, D, NB = 2, 8, 2, 16, 6
+
+
+def rand(seed, shape):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape)
+
+
+def make_kv(seed, s):
+    return rand(seed, (B, s, H, D)), rand(seed + 1000, (B, s, H, D))
+
+
+def logical_kv(cache, mode="target"):
+    """Gather the cache back into a dense [B, S, H, D] pair for checking."""
+    k, v, valid, _ = C.materialize(cache, mode)
+    idx = np.where(np.asarray(valid))[0]
+    return np.asarray(k)[:, idx], np.asarray(v)[:, idx]
+
+
+class TestPrefill:
+    def test_short_prefill_all_in_buffer(self):
+        cache = C.init_cache(B, NB, G, H, D)
+        k, v = make_kv(0, 5)
+        cache = C.prefill(cache, k, v)
+        assert int(cache.blocks) == 0
+        assert int(cache.buf_len) == 5
+        ck, cv = logical_kv(cache)
+        np.testing.assert_allclose(ck, k, atol=1e-6)
+
+    def test_long_prefill_splits(self):
+        cache = C.init_cache(B, NB, G, H, D)
+        s = 3 * G + 3  # -> 2 blocks quantized, G+3 in buffer
+        k, v = make_kv(1, s)
+        cache = C.prefill(cache, k, v)
+        assert int(cache.blocks) == 2
+        assert int(cache.buf_len) == G + 3
+        assert int(cache.seq_len) == s
+
+    def test_buffer_keeps_recent_fp_exact(self):
+        cache = C.init_cache(B, NB, G, H, D)
+        s = 2 * G + 1
+        k, v = make_kv(2, s)
+        cache = C.prefill(cache, k, v)
+        ck, cv = logical_kv(cache)
+        # trailing G+1 tokens must be bit-exact (FP buffer)
+        np.testing.assert_allclose(ck[:, G:], k[:, G:], atol=1e-6)
+        np.testing.assert_allclose(cv[:, G:], v[:, G:], atol=1e-6)
+        # quantized head tokens close but not exact
+        assert np.abs(ck[:, :G] - np.asarray(k)[:, :G]).max() < 0.2
+
+    def test_exact_multiple_of_g(self):
+        cache = C.init_cache(B, NB, G, H, D)
+        k, v = make_kv(3, 2 * G)
+        cache = C.prefill(cache, k, v)
+        assert int(cache.blocks) == 1 and int(cache.buf_len) == G
+
+
+class TestAppendRollbackFlush:
+    def _prefilled(self, s=2 * G + 2):
+        cache = C.init_cache(B, NB, G, H, D)
+        k, v = make_kv(4, s)
+        return C.prefill(cache, k, v), k, v
+
+    def test_append(self):
+        cache, k, v = self._prefilled()
+        nk, nv = make_kv(5, 3)
+        cache2 = C.append(cache, nk, nv)
+        assert int(cache2.seq_len) == int(cache.seq_len) + 3
+        ck, cv = logical_kv(cache2)
+        np.testing.assert_allclose(ck[:, -3:], nk, atol=1e-6)
+
+    def test_rollback_drops_tail(self):
+        cache, k, v = self._prefilled()
+        nk, nv = make_kv(6, 4)
+        cache2 = C.rollback(C.append(cache, nk, nv), 3)
+        ck, _ = logical_kv(cache2)
+        ck0, _ = logical_kv(cache)
+        np.testing.assert_allclose(ck[:, -1], nk[:, 0], atol=1e-6)
+        assert int(cache2.seq_len) == int(cache.seq_len) + 1
+
+    def test_flush_quantizes_cf1(self):
+        cache, k, v = self._prefilled(2 * G + 2)  # buf has G+2
+        nk, nv = make_kv(7, G - 3)                # buf -> 2G-1 (full for headroom 1)
+        cache = C.append(cache, nk, nv)
+        flushed = C.maybe_flush(cache, headroom=1)
+        assert int(flushed.blocks) == int(cache.blocks) + 1
+        assert int(flushed.buf_len) == int(cache.buf_len) - G
+        # logical stream must be preserved (up to quant error on flushed block)
+        ck, _ = logical_kv(cache)
+        fk, _ = logical_kv(flushed)
+        assert ck.shape == fk.shape
+        n_fp = int(flushed.buf_len)  # only the remaining buffer stays FP-exact
+        np.testing.assert_allclose(ck[:, -n_fp:], fk[:, -n_fp:], atol=1e-6)
+        assert np.abs(ck - fk).max() < 0.25  # flushed block only quant-error off
+
+    def test_no_flush_when_room(self):
+        cache, *_ = self._prefilled()
+        out = C.maybe_flush(cache, headroom=1)
+        assert int(out.blocks) == int(cache.blocks)
+
+    def test_flush_is_jittable(self):
+        cache, *_ = self._prefilled()
+        jitted = jax.jit(lambda c: C.maybe_flush(c, 1))
+        out = jitted(cache)
+        assert int(out.blocks) == int(cache.blocks)
+
+
+class TestDraftVsTargetView:
+    def test_draft_noisier_than_target(self):
+        cache = C.init_cache(B, NB, G, H, D)
+        k, v = make_kv(8, 4 * G)
+        cache = C.prefill(cache, k, v)
+        kd, _, valid, _ = C.materialize(cache, "draft")
+        kt, _, _, _ = C.materialize(cache, "target")
+        idx = np.where(np.asarray(valid))[0][: 3 * G]  # quantized region
+        e_d = np.abs(np.asarray(kd)[:, idx] - np.asarray(k)[:, idx]).mean()
+        e_t = np.abs(np.asarray(kt)[:, idx] - np.asarray(k)[:, idx]).mean()
+        assert e_t < e_d / 8
+
+
+class TestWindowCache:
+    def test_sink_and_ring(self):
+        cache = C.init_window_cache(B, window=8, heads=H, head_dim=D, n_sink=2)
+        k, v = make_kv(9, 12)
+        cache = C.window_append(cache, k, v)
+        assert int(cache.pos) == 12
+        # sink holds tokens 0,1
+        np.testing.assert_allclose(cache.sink_k, k[:, :2], atol=1e-6)
+        # ring holds last 8 of tokens 2..11 -> tokens 4..11 at slots pos%8
+        np.testing.assert_allclose(cache.ring_k[:, 11 % 8], k[:, 11], atol=1e-6)
+        np.testing.assert_allclose(cache.ring_k[:, 4 % 8], k[:, 4], atol=1e-6)
+
+    def test_rollback_then_rewrite(self):
+        cache = C.init_window_cache(B, window=8, heads=H, head_dim=D, n_sink=2)
+        k, v = make_kv(10, 10)
+        cache = C.window_append(cache, k, v)
+        cache = C.window_rollback(cache, 2)
+        nk, nv = make_kv(11, 2)
+        cache = C.window_append(cache, nk, nv)
+        np.testing.assert_allclose(cache.ring_k[:, 9 % 8], nk[:, 1], atol=1e-6)
+
+
+class TestWindowFastPath:
+    def test_t1_fast_equals_scatter(self, monkeypatch):
+        import os
+        cache_f = C.init_window_cache(B, window=8, heads=H, head_dim=D, n_sink=2)
+        cache_s = cache_f
+        for t in range(12):
+            k, v = make_kv(100 + t, 1)
+            monkeypatch.setenv("REPRO_WINDOW_FAST", "1")
+            cache_f = C.window_append(cache_f, k, v)
+            monkeypatch.setenv("REPRO_WINDOW_FAST", "0")
+            cache_s = C.window_append(cache_s, k, v)
+        for a, b in zip(cache_f, cache_s):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)

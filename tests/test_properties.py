@@ -1,0 +1,96 @@
+"""Property-based tests (hypothesis) for system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import acceptance
+from repro.core import hier_kv_cache as HC
+from repro.core.quantization import simulate_cache_quant
+
+
+def _rand_probs(key, shape):
+    return jax.nn.softmax(jax.random.normal(key, shape) * 2.0, axis=-1)
+
+
+class TestVerifyInvariants:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), gamma=st.integers(1, 6),
+           vocab=st.integers(2, 32), greedy=st.booleans())
+    def test_bounds_and_prefix(self, seed, gamma, vocab, greedy):
+        """0 <= n_accepted <= γ; emitted tokens are a prefix of the draft up
+        to the acceptance point; all emitted ids are valid."""
+        k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(seed), 4)
+        B = 2
+        q = _rand_probs(k1, (B, gamma, vocab))
+        p = _rand_probs(k2, (B, gamma + 1, vocab))
+        g = jax.random.categorical(k3, jnp.log(q), axis=-1)
+        res = acceptance.verify(g, q, p, k4, greedy=greedy)
+        n = int(res.n_accepted)
+        assert 0 <= n <= gamma
+        assert int(res.n_new) == n + 1
+        toks = np.asarray(res.tokens)
+        assert ((0 <= toks) & (toks < vocab)).all()
+        np.testing.assert_array_equal(toks[:, :n], np.asarray(g)[:, :n])
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), gamma=st.integers(1, 4))
+    def test_identical_dists_accept_all(self, seed, gamma):
+        k1, k3, k4 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        p = _rand_probs(k1, (1, gamma + 1, 16))
+        q = p[:, :gamma]
+        g = jax.random.categorical(k3, jnp.log(q), axis=-1)
+        res = acceptance.verify(g, q, p, k4, greedy=False)
+        assert int(res.n_accepted) == gamma
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_disjoint_dists_reject_all(self, seed):
+        """Draft samples from mass the target assigns ~0 → rejection at 0,
+        and the correction token comes from the target's support."""
+        V = 8
+        q = jnp.zeros((1, 2, V)).at[:, :, 0].set(1.0)
+        p = jnp.zeros((1, 3, V)).at[:, :, 1].set(1.0)
+        g = jnp.zeros((1, 2), jnp.int32)  # always token 0
+        res = acceptance.verify(g, q, p, jax.random.PRNGKey(seed))
+        assert int(res.n_accepted) == 0
+        assert int(res.tokens[0, 0]) == 1
+
+
+class TestCacheInvariants:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           s=st.integers(1, 40), n_new=st.integers(0, 6))
+    def test_seq_len_accounting(self, seed, s, n_new):
+        G, H, D = 8, 2, 16
+        cache = HC.init_cache(1, 8, G, H, D)
+        key = jax.random.PRNGKey(seed)
+        k = jax.random.normal(key, (1, s, H, D))
+        cache = HC.prefill(cache, k, k)
+        assert int(cache.seq_len) == s
+        if n_new:
+            cache = HC.maybe_flush(cache, headroom=n_new)
+            nk = jax.random.normal(jax.random.fold_in(key, 1), (1, n_new, H, D))
+            cache = HC.append(cache, nk, nk)
+            assert int(cache.seq_len) == s + n_new
+            cache = HC.rollback(cache, min(n_new, 3))
+            assert int(cache.seq_len) == s + n_new - min(n_new, 3)
+        # invariant: buffer never overflows and C_F1 stays populated
+        assert 0 <= int(cache.buf_len) <= 2 * G
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), bits=st.sampled_from([4, 8, 16]))
+    def test_sim_quant_preserves_residual(self, seed, bits):
+        """The FP-buffer residual must be bit-exact for any precision."""
+        key = jax.random.PRNGKey(seed)
+        x = jax.random.normal(key, (2, 64, 2, 8))
+        out = simulate_cache_quant(x, group=16, residual=16,
+                                   axis="channel", bits=bits)
+        np.testing.assert_array_equal(np.asarray(out[:, -16:]),
+                                      np.asarray(x[:, -16:]))
+        if bits >= 16:
+            np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+        else:
+            err = float(jnp.abs(out - x).max())
+            assert err < (0.6 if bits == 4 else 0.05)

@@ -1,0 +1,125 @@
+"""Unit + property tests for hierarchical quantization (core of QuantSpec)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantization as Q
+from repro.core import weight_quant as WQ
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+class TestNibblePacking:
+    def test_roundtrip(self):
+        x = jnp.arange(64).reshape(4, 16) % 16
+        assert (Q.unpack_nibbles(Q.pack_nibbles(x)) == x).all()
+
+    def test_packed_half_size(self):
+        x = jnp.zeros((2, 8), jnp.int32)
+        assert Q.pack_nibbles(x).shape == (2, 4)
+
+
+class TestHierarchicalQuant:
+    def test_upper_is_4bit_asym(self):
+        x = rand(0, (16, 8))
+        hq = Q.hier_quantize(x, axis=-1)
+        up = Q.unpack_nibbles(hq.upper)
+        assert (up >= 0).all() and (up <= 15).all()
+
+    def test_full_matches_int8_error_bound(self):
+        """INT8 reconstruction error must be ~S8/2 = S4/32 per element."""
+        x = rand(1, (64, 128))
+        hq = Q.hier_quantize(x, axis=-1)
+        full = Q.dequant_full(hq)
+        err = jnp.abs(full - x)
+        # allowed: half a lower-plane step, plus clipping slack at group edges
+        bound = (hq.scale / 16.0) * 0.51 + 1e-6
+        assert (err <= jnp.broadcast_to(bound, err.shape) + hq.scale / 16).all()
+
+    def test_hier_better_than_upper(self):
+        x = rand(2, (32, 128))
+        hq = Q.hier_quantize(x, axis=-1)
+        err_full = jnp.mean((Q.dequant_full(hq) - x) ** 2)
+        err_up = jnp.mean((Q.dequant_upper(hq) - x) ** 2)
+        assert err_full < err_up / 10  # 4 extra bits => ~256x MSE; 10x is safe
+
+    def test_scale_identity(self):
+        """S4 = 16 * S8 and Z4 = Z8: hierarchical INT8 ~= direct INT8."""
+        x = rand(3, (8, 256))
+        hq = Q.hier_quantize(x, axis=-1)
+        direct8 = Q.int8_reference_quant(x, axis=-1)
+        # both are 8-bit quantizers over the same range; errors same magnitude
+        e_h = jnp.sqrt(jnp.mean((Q.dequant_full(hq) - x) ** 2))
+        e_d = jnp.sqrt(jnp.mean((direct8 - x) ** 2))
+        assert e_h < 3.0 * e_d + 1e-6
+
+    def test_constant_group_exact(self):
+        x = jnp.full((4, 16), 3.25)
+        hq = Q.hier_quantize(x, axis=-1)
+        np.testing.assert_allclose(Q.dequant_full(hq), x, atol=1e-5)
+        np.testing.assert_allclose(Q.dequant_upper(hq), x, atol=1e-5)
+
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           scale=st.floats(1e-3, 1e3),
+           offset=st.floats(-100, 100))
+    def test_property_error_shrinks_with_bits(self, seed, scale, offset):
+        x = rand(seed, (8, 32), scale) + offset
+        hq = Q.hier_quantize(x, axis=-1)
+        e_up = float(jnp.max(jnp.abs(Q.dequant_upper(hq) - x)))
+        e_full = float(jnp.max(jnp.abs(Q.dequant_full(hq) - x)))
+        s4 = float(jnp.max(hq.scale))
+        assert e_up <= 0.51 * s4 + 1e-5 * abs(offset) + 1e-6
+        assert e_full <= e_up + 1e-6
+
+    def test_kv_block_axes(self):
+        k = rand(4, (2, 16, 4, 8))  # [B, G, H, D]
+        v = rand(5, (2, 16, 4, 8))
+        kq = Q.quantize_k_block(k)
+        vq = Q.quantize_v_block(v)
+        assert kq.scale.shape == (2, 1, 4, 8)   # per-channel
+        assert vq.scale.shape == (2, 16, 4, 1)  # per-token
+        assert kq.upper.shape == (2, 16, 4, 4)  # packed along D
+
+
+class TestWeightQuant:
+    def test_roundtrip_shape(self):
+        w = rand(6, (256, 64))
+        qw = WQ.quantize_weight(w, group=128)
+        assert qw.shape == (256, 64)
+        assert qw.dequant().shape == (256, 64)
+
+    def test_error_bound(self):
+        w = rand(7, (256, 64))
+        qw = WQ.quantize_weight(w, group=128)
+        err = jnp.abs(qw.dequant() - w)
+        assert (err <= 0.51 * qw.scale.max() + 1e-6).all()
+
+    def test_stacked_layers(self):
+        w = rand(8, (3, 256, 64))  # layer-stacked
+        qw = WQ.quantize_weight(w)
+        assert qw.shape == (3, 256, 64)
+        err = jnp.sqrt(jnp.mean((qw.dequant() - w) ** 2))
+        # INT4, groups of 128 over N(0,1): scale ~= 6sigma/15, RMSE ~= scale/sqrt(12)
+        assert err < 0.15
+
+    def test_quantize_tree_policy(self):
+        params = {"embed": rand(9, (128, 16)), "wq": rand(10, (128, 16)),
+                  "norm_scale": jnp.ones((16,))}
+        qt = WQ.quantize_tree(params)
+        assert isinstance(qt["wq"], WQ.Int4Weight)
+        assert not isinstance(qt["embed"], WQ.Int4Weight)
+        assert not isinstance(qt["norm_scale"], WQ.Int4Weight)
+
+    def test_resolve(self):
+        w = rand(11, (128, 8))
+        assert WQ.resolve(w).dtype == jnp.float32
+        qw = WQ.quantize_weight(w)
+        np.testing.assert_allclose(WQ.resolve(qw), qw.dequant(), atol=0)

@@ -1,0 +1,134 @@
+"""Speculative-decoding correctness tests.
+
+The gold invariant: with greedy sampling and an *identical* draft (FP
+weights, FP cache), speculative decoding must produce exactly the same
+token stream as plain autoregressive greedy decoding, with 100% acceptance.
+With the QuantSpec draft (INT4 weights + upper-4-bit cache) the stream must
+still match — the target verifies every token — but acceptance < 100%.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import acceptance
+from repro.models.stack import StackModel
+from repro.serving.engine import Engine
+
+B, S_PROMPT, MAX_NEW = 2, 40, 24
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("llama2-7b-32k", smoke=True)
+    model = StackModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (B, S_PROMPT), 0,
+                                cfg.vocab_size)
+    return cfg, model, params, prompt
+
+
+class TestVerifyUnit:
+    def _probs(self, key, b, t, v):
+        return jax.nn.softmax(jax.random.normal(key, (b, t, v)), -1)
+
+    def test_greedy_all_match(self):
+        p = self._probs(jax.random.PRNGKey(0), 2, 5, 11)
+        g = jnp.argmax(p[:, :4], -1)
+        q = p[:, :4]
+        res = acceptance.verify(g, q, p, jax.random.PRNGKey(1), greedy=True)
+        assert int(res.n_accepted) == 4
+        assert int(res.n_new) == 5
+        # bonus token is target argmax at position 4
+        np.testing.assert_array_equal(np.asarray(res.tokens[:, 4]),
+                                      np.asarray(jnp.argmax(p[:, 4], -1)))
+
+    def test_greedy_first_reject(self):
+        p = self._probs(jax.random.PRNGKey(2), 1, 4, 7)
+        g = jnp.argmax(p[:, :3], -1)
+        g = g.at[0, 1].set((g[0, 1] + 1) % 7)  # break token 1
+        res = acceptance.verify(g, p[:, :3], p, jax.random.PRNGKey(3),
+                                greedy=True)
+        assert int(res.n_accepted) == 1
+        # correction token = argmax at rejected position
+        assert int(res.tokens[0, 1]) == int(jnp.argmax(p[0, 1], -1))
+
+    def test_stochastic_identical_always_accepts(self):
+        p = self._probs(jax.random.PRNGKey(4), 2, 6, 13)
+        q = p[:, :5]
+        g = jax.random.categorical(jax.random.PRNGKey(5), jnp.log(q), -1)
+        res = acceptance.verify(g, q, p, jax.random.PRNGKey(6), greedy=False)
+        assert int(res.n_accepted) == 5  # p/q = 1 -> accept surely
+
+    def test_stochastic_preserves_distribution(self):
+        """Empirical check of the residual-resampling correctness for a
+        single position: histogram of outputs ~ target distribution."""
+        v = 5
+        p = jnp.array([[0.5, 0.2, 0.1, 0.1, 0.1]])
+        q = jnp.array([[0.1, 0.5, 0.2, 0.1, 0.1]])
+        n = 4000
+        counts = np.zeros(v)
+        for i in range(n):
+            key = jax.random.PRNGKey(i)
+            k1, k2 = jax.random.split(key)
+            g = jax.random.categorical(k1, jnp.log(q), -1)
+            res = acceptance.verify(
+                g[:, None], q[:, None], jnp.stack([p, p], 1), k2)
+            counts[int(res.tokens[0, 0])] += 1
+        freq = counts / n
+        np.testing.assert_allclose(freq, np.asarray(p[0]), atol=0.03)
+
+
+class TestEngineEquivalence:
+    def test_fp_spec_greedy_matches_ar(self, setup):
+        cfg, model, params, prompt = setup
+        ar = Engine(model, params, policy="fp", gamma=0, greedy=True,
+                    max_seq=S_PROMPT + MAX_NEW + 8)
+        # identical draft: fp cache policy but speculative rounds
+        sp = Engine(model, params, policy="fp", gamma=3, greedy=True,
+                    quantize_weights=False,
+                    max_seq=S_PROMPT + MAX_NEW + 8)
+        r_ar = ar.generate(prompt, MAX_NEW, speculative=False)
+        r_sp = sp.generate(prompt, MAX_NEW, speculative=True)
+        np.testing.assert_array_equal(r_ar.tokens, r_sp.tokens)
+        assert r_sp.stats.acceptance_rate == 1.0
+
+    def test_quantspec_greedy_matches_ar(self, setup):
+        """The verified stream equals target-greedy decoding: with greedy
+        verification every emitted token is the target's argmax."""
+        cfg, model, params, prompt = setup
+        qs = Engine(model, params, policy="quantspec", gamma=3, greedy=True,
+                    max_seq=S_PROMPT + MAX_NEW + 8)
+        # AR with the quantspec cache policy = target view throughout
+        ar = Engine(model, params, policy="quantspec", gamma=0, greedy=True,
+                    max_seq=S_PROMPT + MAX_NEW + 8)
+        r_qs = qs.generate(prompt, MAX_NEW, speculative=True)
+        r_ar = ar.generate(prompt, MAX_NEW, speculative=False)
+        np.testing.assert_array_equal(r_qs.tokens, r_ar.tokens)
+        assert 0.0 < r_qs.stats.acceptance_rate <= 1.0
+
+    def test_baselines_run(self, setup):
+        cfg, model, params, prompt = setup
+        for policy in ("streaming", "snapkv"):
+            eng = Engine(model, params, policy=policy, gamma=2, greedy=True,
+                         quantize_weights=False,
+                         max_seq=S_PROMPT + MAX_NEW + 8,
+                         ctx_kw=dict(draft_window=16, draft_budget=16,
+                                     obs_window=8))
+            res = eng.generate(prompt, MAX_NEW)
+            assert res.tokens.shape == (B, MAX_NEW)
+            assert res.stats.rounds > 0
+
+    def test_musicgen_frame_spec(self):
+        cfg = get_config("musicgen-large", smoke=True)
+        model = StackModel(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        prompt = jax.random.randint(jax.random.PRNGKey(1),
+                                    (1, 16, cfg.num_codebooks), 0,
+                                    cfg.vocab_size)
+        eng = Engine(model, params, policy="quantspec", gamma=2, greedy=True,
+                     max_seq=64)
+        res = eng.generate(prompt, 8)
+        assert res.tokens.shape == (1, 8, cfg.num_codebooks)

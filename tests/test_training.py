@@ -1,0 +1,93 @@
+"""Training substrate tests: loss goes down, optimizer sane, checkpoint
+round-trips, remat preserves gradients, per-arch one train step."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.data.pipeline import SyntheticCorpus
+from repro.models.stack import StackModel
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+from repro.training.optimizer import AdamW
+from repro.training.train_step import lm_loss, make_train_step
+
+
+def test_loss_decreases():
+    cfg = get_config("tiny-lm", smoke=True).replace(vocab_size=64)
+    model = StackModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = AdamW(lr=3e-3, warmup_steps=5, total_steps=100)
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(model, opt))
+    corpus = SyntheticCorpus(cfg.vocab_size, seed=0, bigram_temp=0.25)
+    it = corpus.batches(batch=8, seq=64)
+    losses = []
+    for i in range(30):
+        params, opt_state, metrics = step(params, opt_state, next(it))
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 1.0, losses[::6]
+    assert np.isfinite(losses).all()
+
+
+def test_copy_structure_learnable():
+    corpus = SyntheticCorpus(64, seed=0)
+    toks = corpus.sample(jax.random.PRNGKey(1), 4, 256)
+    assert toks.shape == (4, 256)
+    assert corpus.entropy_floor() < np.log(64) * 0.9
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS if a != "tiny-lm"])
+def test_one_train_step_per_arch(arch):
+    cfg = get_config(arch, smoke=True)
+    model = StackModel(cfg, remat=True)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = AdamW(lr=1e-3)
+    opt_state = opt.init(params)
+    corpus = SyntheticCorpus(cfg.vocab_size, seed=0)
+    batch = {"tokens": corpus.sample(jax.random.PRNGKey(2), 2, 32)}
+    if cfg.num_codebooks:
+        batch = {"tokens": jnp.stack(
+            [corpus.sample(jax.random.fold_in(jax.random.PRNGKey(2), k), 2, 32)
+             for k in range(cfg.num_codebooks)], axis=-1)}
+    if cfg.num_image_tokens:
+        batch["memory"] = jax.random.normal(
+            jax.random.PRNGKey(3), (2, cfg.num_image_tokens, cfg.d_model)) * 0.02
+    step = jax.jit(make_train_step(model, opt))
+    new_params, _, metrics = step(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert float(metrics["grad_norm"]) > 0
+    # params actually moved
+    delta = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()),
+                     params, new_params))
+    assert delta > 0
+
+
+def test_remat_matches_no_remat():
+    cfg = get_config("tiny-lm", smoke=True)
+    batch = {"tokens": SyntheticCorpus(cfg.vocab_size).sample(
+        jax.random.PRNGKey(1), 2, 32)}
+    params = StackModel(cfg).init(jax.random.PRNGKey(0))
+    g1 = jax.grad(lambda p: lm_loss(StackModel(cfg, remat=False), p, batch)[0])(params)
+    g2 = jax.grad(lambda p: lm_loss(StackModel(cfg, remat=True), p, batch)[0])(params)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), atol=1e-5), g1, g2)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get_config("tiny-lm", smoke=True)
+    model = StackModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = AdamW()
+    opt_state = opt.init(params)
+    path = os.path.join(tmp_path, "ckpt")
+    save_checkpoint(path, params, opt_state, step=7)
+    p2, o2, step = load_checkpoint(path, params, opt_state)
+    assert step == 7
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), params, p2)

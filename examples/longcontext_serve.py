@@ -13,11 +13,12 @@ import argparse
 import time
 
 import jax
+import numpy as np
 
 from repro.configs import get_config
 from repro.data.pipeline import SyntheticCorpus
 from repro.models.stack import StackModel
-from repro.serving.engine import Engine
+from repro.serving.engine import ContinuousEngine, Engine
 
 
 def main():
@@ -61,6 +62,19 @@ def main():
         acc = res.stats.acceptance_rate if res.stats.proposed else float("nan")
         print(f"{name:<14} {acc:>7.1%} {res.stats.tokens_per_round:>10.2f} "
               f"{dt:>9.2f}")
+
+    # continuous batching over the paged cache: ragged prompt lengths,
+    # requests admitted/retired between rounds (per-request acceptance)
+    ceng = ContinuousEngine(model, params, gamma=args.gamma, greedy=True,
+                            max_slots=args.batch, max_seq=max_seq)
+    ragged = [np.asarray(prompt[i, : args.prompt_len - 16 * i])
+              for i in range(args.batch)]
+    t0 = time.perf_counter()
+    results = ceng.generate(ragged, args.max_new, key=jax.random.PRNGKey(7))
+    dt = time.perf_counter() - t0
+    acc = float(np.mean([r.stats.acceptance_rate for r in results]))
+    tpr = float(np.mean([r.stats.tokens_per_round for r in results]))
+    print(f"{'QS-paged (CB)':<14} {acc:>7.1%} {tpr:>10.2f} {dt:>9.2f}")
 
 
 if __name__ == "__main__":

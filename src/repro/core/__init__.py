@@ -1,3 +1,3 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""QuantSpec core: hierarchical INT4+INT4 quantization, the contiguous and
+paged hierarchical KV caches, speculative-sampling acceptance, and the
+draft→verify→commit spec-decode rounds (static and continuous-batching)."""

@@ -25,8 +25,9 @@ import jax.numpy as jnp
 class VerifyResult(NamedTuple):
     tokens: jnp.ndarray       # [B, gamma+1] — accepted + correction/bonus,
                               # positions >= n_new are padding
-    n_accepted: jnp.ndarray   # i32 scalar — accepted draft tokens (min over batch)
-    n_new: jnp.ndarray        # i32 scalar — n_accepted + 1 (correction/bonus)
+    n_accepted: jnp.ndarray   # i32 — accepted draft tokens; scalar lockstep
+                              # min (verify) or per-sequence [B] (verify_per_seq)
+    n_new: jnp.ndarray        # i32 — n_accepted + 1 (correction/bonus)
     accept_mask_b: jnp.ndarray  # [B, gamma] — per-sequence accept flags (stats)
 
 
@@ -79,6 +80,60 @@ def verify(draft_tokens: jnp.ndarray,
                        jnp.where(pos[None, :] == n, extra[:, None], 0))
     return VerifyResult(tokens=tokens, n_accepted=n,
                         n_new=n + 1, accept_mask_b=accept)
+
+
+def verify_per_seq(draft_tokens: jnp.ndarray,
+                   draft_probs: jnp.ndarray,
+                   target_probs: jnp.ndarray,
+                   key: jax.Array,
+                   greedy: bool = False) -> VerifyResult:
+    """Per-sequence verification — no lockstep minimum.
+
+    Same accept/reject math as :func:`verify`, but each sequence keeps its
+    own accepted length (``n_accepted``/``n_new`` are ``[B]`` vectors).
+    Used by the continuous-batching engine, where requests progress
+    raggedly; for any single sequence the result is identical to a
+    batch-1 :func:`verify`.
+    """
+    B, gamma = draft_tokens.shape
+    key_u, key_res = jax.random.split(key)
+
+    p_draft_tok = _gather_probs(target_probs[:, :gamma], draft_tokens)
+    q_draft_tok = _gather_probs(draft_probs, draft_tokens)
+
+    if greedy:
+        accept = draft_tokens == jnp.argmax(target_probs[:, :gamma], axis=-1)
+    else:
+        u = jax.random.uniform(key_u, (B, gamma))
+        accept = u * q_draft_tok <= p_draft_tok
+
+    prefix = jnp.cumprod(accept.astype(jnp.int32), axis=-1)
+    n_b = jnp.sum(prefix, axis=-1).astype(jnp.int32)          # [B]
+
+    # (n_b+1)-th token per sequence: residual at the rejection point, or the
+    # target bonus when everything was accepted
+    p_next = jnp.take_along_axis(
+        target_probs, n_b[:, None, None], axis=1)[:, 0]       # [B, V]
+    if greedy:
+        extra = jnp.argmax(p_next, axis=-1)
+    else:
+        q_at_n = jnp.take_along_axis(
+            jnp.pad(draft_probs, ((0, 0), (0, 1), (0, 0))),
+            n_b[:, None, None], axis=1)[:, 0]
+        residual = jnp.maximum(p_next - q_at_n, 0.0)
+        is_bonus = (n_b == gamma)[:, None]
+        dist = jnp.where(is_bonus, p_next, residual)
+        dist = dist / jnp.maximum(dist.sum(-1, keepdims=True), 1e-20)
+        extra = jax.random.categorical(key_res, jnp.log(dist + 1e-20),
+                                       axis=-1)
+
+    pos = jnp.arange(gamma + 1)
+    padded_draft = jnp.pad(draft_tokens, ((0, 0), (0, 1)))
+    tokens = jnp.where(pos[None, :] < n_b[:, None], padded_draft,
+                       jnp.where(pos[None, :] == n_b[:, None],
+                                 extra[:, None], 0))
+    return VerifyResult(tokens=tokens, n_accepted=n_b,
+                        n_new=n_b + 1, accept_mask_b=accept)
 
 
 def verify_greedy_multi(draft_tokens: jnp.ndarray,

@@ -18,6 +18,10 @@ All shapes are static; ``blocks`` / ``buf_len`` are traced scalars so every
 operation jits. Sequence-position bookkeeping: token ``t`` of the stream
 lives either in quant block ``t // G`` or in the buffer at
 ``t - blocks*G``.
+
+This is the *contiguous* layout (one dense region per request, uniform
+batch). The paged layout for ragged multi-request serving — same planes,
+block-pool storage — lives in core/paged_kv_cache.py.
 """
 
 from __future__ import annotations

@@ -1,0 +1,376 @@
+"""Paged hierarchical quantized KV cache: a global block pool indexed by
+per-request block tables (paged-attention-style memory management for the
+QuantSpec cache).
+
+The contiguous :class:`~repro.core.hier_kv_cache.HierKVCache` stores each
+request's quantized region as one dense ``[NB, G]`` buffer — capacity is
+reserved per request up-front and ragged batches waste HBM. Here the
+quantized INT4 upper/lower planes live in a **pool** of ``P`` fixed-size
+blocks shared by all requests; request ``r`` owns the blocks listed in row
+``r`` of a block table. The recent-token FP double buffer stays per-slot
+(it is small: ``2G`` tokens).
+
+Two pytrees, split so that bookkeeping is computed once per step while the
+(per-layer) plane data is updated layer-by-layer:
+
+``PageTable`` — **shared across layers.** Block table, per-slot block/buffer
+    lengths, committed stream positions, active mask, and the free stack.
+    Every attention layer sees the same admission/flush/append schedule, so
+    one table serves the whole stack.
+
+``PagedKVPool`` — **one per attention layer.** The packed plane arrays
+    (``[P+1, G, H, D//2]`` — block ``P`` is a scratch block that absorbs
+    masked-out writes) plus the per-slot FP buffers ``[R, 2G, H, D]``.
+
+Step protocol (all jittable):
+  1. ``plan_step(table, T, group)`` → ``(new_table, PageStep)`` decides,
+     per slot, whether C_F1 flushes to a freshly allocated pool block and
+     where the ``T`` new tokens land in the FP buffer.
+  2. every layer calls ``apply_step(pool, step, k, v)`` to execute the plan
+     on its own planes/buffers.
+  3. after verification, ``rollback(table, rb)`` shrinks each slot's C_F2 by
+     its own rejected-tail length ``rb[r]`` and ``commit(table, n_new)``
+     advances the committed positions — both per-sequence.
+
+Admission/retirement (eager, between jitted rounds): ``alloc_blocks`` +
+``adopt_hier`` move a batch-1 contiguous prefill into a slot;
+``free_slot`` returns a retired slot's blocks to the pool.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hier_kv_cache import HierKVCache
+from repro.core.quantization import (
+    HierQuant,
+    dequant_full,
+    dequant_upper,
+    quantize_k_block,
+    quantize_v_block,
+)
+
+
+class PageTable(NamedTuple):
+    """Shared paging state: one row per request slot (R slots, P pool blocks).
+
+    ``free_stack[:free_top]`` holds the ids of free pool blocks; allocation
+    pops from the top, freeing pushes back. Block ids are in ``[0, P)``;
+    id ``P`` is the layers' scratch block and never appears in the table.
+    """
+
+    block_table: jnp.ndarray  # i32 [R, NBmax] — pool ids, first blocks[r] valid
+    blocks: jnp.ndarray       # i32 [R] — quantized blocks owned by slot r
+    buf_len: jnp.ndarray      # i32 [R] — tokens in slot r's FP buffer
+    pos: jnp.ndarray          # i32 [R] — committed stream length of slot r
+    active: jnp.ndarray       # bool [R]
+    free_stack: jnp.ndarray   # i32 [P]
+    free_top: jnp.ndarray     # i32 scalar — number of free pool blocks
+
+    @property
+    def seq_len(self) -> jnp.ndarray:
+        """Per-slot committed stream length."""
+        return self.pos
+
+    @property
+    def num_slots(self) -> int:
+        return self.block_table.shape[0]
+
+    @property
+    def max_blocks_per_seq(self) -> int:
+        return self.block_table.shape[1]
+
+
+class PagedKVPool(NamedTuple):
+    """One attention layer's plane pool + per-slot FP buffers.
+
+    Plane layouts match the contiguous cache block-for-block (see
+    docs/kv_cache_format.md); the leading axis is the pool block id. Index
+    ``P`` (the last block) is write-scratch for masked flushes.
+    """
+
+    k_upper: jnp.ndarray  # u8 [P+1, G, H, D//2]
+    k_lower: jnp.ndarray  # u8 [P+1, G, H, D//2]
+    k_scale: jnp.ndarray  # f32 [P+1, 1, H, D]
+    k_zero: jnp.ndarray   # f32 [P+1, 1, H, D]
+    v_upper: jnp.ndarray  # u8 [P+1, G, H, D//2]
+    v_lower: jnp.ndarray  # u8 [P+1, G, H, D//2]
+    v_scale: jnp.ndarray  # f32 [P+1, G, H, 1]
+    v_zero: jnp.ndarray   # f32 [P+1, G, H, 1]
+    buf_k: jnp.ndarray    # [R, 2G, H, D] compute dtype
+    buf_v: jnp.ndarray    # [R, 2G, H, D]
+
+    @property
+    def group(self) -> int:
+        return self.buf_k.shape[1] // 2
+
+
+class PageStep(NamedTuple):
+    """One decode step's paging plan, shared by every layer."""
+
+    do_flush: jnp.ndarray   # bool [R] — quantize C_F1 this step
+    flush_dst: jnp.ndarray  # i32 [R] — pool block receiving C_F1 (P = scratch)
+    append_at: jnp.ndarray  # i32 [R] — FP-buffer offset for the new tokens
+    active: jnp.ndarray     # bool [R]
+
+
+class PagedPlan(NamedTuple):
+    """What attention layers need for one paged decode step: the executed
+    bookkeeping (``step``) and the post-step table to mask against."""
+
+    step: PageStep
+    table: PageTable
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_table(num_slots: int, max_blocks_per_seq: int,
+               pool_blocks: int) -> PageTable:
+    R, NBmax, P = num_slots, max_blocks_per_seq, pool_blocks
+    return PageTable(
+        block_table=jnp.zeros((R, NBmax), jnp.int32),
+        blocks=jnp.zeros((R,), jnp.int32),
+        buf_len=jnp.zeros((R,), jnp.int32),
+        pos=jnp.zeros((R,), jnp.int32),
+        active=jnp.zeros((R,), bool),
+        free_stack=jnp.arange(P, dtype=jnp.int32),
+        free_top=jnp.asarray(P, jnp.int32),
+    )
+
+
+def init_pool(num_slots: int, pool_blocks: int, group: int, heads: int,
+              head_dim: int, dtype=jnp.float32) -> PagedKVPool:
+    R, P, G, H, D = num_slots, pool_blocks, group, heads, head_dim
+    u8 = partial(jnp.zeros, dtype=jnp.uint8)
+    f32 = partial(jnp.zeros, dtype=jnp.float32)
+    return PagedKVPool(
+        k_upper=u8((P + 1, G, H, D // 2)),
+        k_lower=u8((P + 1, G, H, D // 2)),
+        k_scale=f32((P + 1, 1, H, D)),
+        k_zero=f32((P + 1, 1, H, D)),
+        v_upper=u8((P + 1, G, H, D // 2)),
+        v_lower=u8((P + 1, G, H, D // 2)),
+        v_scale=f32((P + 1, G, H, 1)),
+        v_zero=f32((P + 1, G, H, 1)),
+        buf_k=jnp.zeros((R, 2 * G, H, D), dtype),
+        buf_v=jnp.zeros((R, 2 * G, H, D), dtype),
+    )
+
+
+# ---------------------------------------------------------------------------
+# the jittable step protocol
+# ---------------------------------------------------------------------------
+
+def plan_step(table: PageTable, T: int, group: int
+              ) -> Tuple[PageTable, PageStep]:
+    """Plan appending ``T`` tokens to every **active** slot.
+
+    Per slot: if the FP buffer cannot absorb ``T`` more tokens, C_F1 is
+    flushed into a pool block popped off the free stack (allocation is a
+    masked cumulative-rank pop, so any subset of slots can flush in one
+    step); the new tokens then land at the (possibly shifted) buffer end.
+    Inactive slots are ignored: no flush, no length advance.
+    """
+    G = group
+    P = table.free_stack.shape[0]
+    act = table.active
+    need = act & (table.buf_len + T > 2 * G - 1)
+
+    # masked stack pop: the i-th flushing slot takes free_stack[free_top-i-1]
+    rank = jnp.cumsum(need.astype(jnp.int32)) - need.astype(jnp.int32)
+    pop_idx = table.free_top - 1 - rank
+    dst = jnp.where(need,
+                    table.free_stack[jnp.clip(pop_idx, 0, P - 1)],
+                    jnp.asarray(P, jnp.int32))
+    new_free_top = table.free_top - jnp.sum(need.astype(jnp.int32))
+
+    # record the new block at column blocks[r] of each flushing row
+    NBmax = table.max_blocks_per_seq
+    col = jnp.arange(NBmax)[None, :] == jnp.clip(
+        table.blocks, 0, NBmax - 1)[:, None]
+    bt = jnp.where(col & need[:, None], dst[:, None], table.block_table)
+
+    blocks = table.blocks + need.astype(jnp.int32)
+    buf_after_flush = table.buf_len - G * need.astype(jnp.int32)
+    buf_len = buf_after_flush + jnp.where(act, T, 0)
+
+    new_table = table._replace(block_table=bt, blocks=blocks,
+                               buf_len=buf_len, free_top=new_free_top)
+    step = PageStep(do_flush=need, flush_dst=dst,
+                    append_at=buf_after_flush, active=act)
+    return new_table, step
+
+
+def apply_step(pool: PagedKVPool, step: PageStep, k: jnp.ndarray,
+               v: jnp.ndarray) -> PagedKVPool:
+    """Execute a :class:`PageStep` on one layer's pool. k/v ``[R, T, H, D]``.
+
+    Quantization of C_F1 runs for every slot and is masked into the pool by
+    scattering non-flushing slots to the scratch block — the work is
+    O(R · G) regardless of how many slots flush, which keeps the step a
+    single fused program (no per-slot control flow).
+    """
+    G = pool.group
+    kq = quantize_k_block(pool.buf_k[:, :G])   # [R, ...]
+    vq = quantize_v_block(pool.buf_v[:, :G])
+    dst = step.flush_dst
+
+    new = pool._replace(
+        k_upper=pool.k_upper.at[dst].set(kq.upper),
+        k_lower=pool.k_lower.at[dst].set(kq.lower),
+        k_scale=pool.k_scale.at[dst].set(kq.scale),
+        k_zero=pool.k_zero.at[dst].set(kq.zero),
+        v_upper=pool.v_upper.at[dst].set(vq.upper),
+        v_lower=pool.v_lower.at[dst].set(vq.lower),
+        v_scale=pool.v_scale.at[dst].set(vq.scale),
+        v_zero=pool.v_zero.at[dst].set(vq.zero),
+    )
+
+    # shift C_F2 → C_F1 on flushed slots
+    m = step.do_flush[:, None, None, None]
+    shift = lambda b: jnp.where(
+        m, jnp.concatenate([b[:, G:], jnp.zeros_like(b[:, :G])], axis=1), b)
+    buf_k, buf_v = shift(new.buf_k), shift(new.buf_v)
+
+    # ragged append: each slot writes its T tokens at its own offset
+    upd = jax.vmap(lambda b, x, s: jax.lax.dynamic_update_slice(
+        b, x.astype(b.dtype), (s, 0, 0)))
+    buf_k = upd(buf_k, k, step.append_at)
+    buf_v = upd(buf_v, v, step.append_at)
+    return new._replace(buf_k=buf_k, buf_v=buf_v)
+
+
+def rollback(table: PageTable, n: jnp.ndarray) -> PageTable:
+    """Per-sequence flexible discard: drop slot r's last ``n[r]`` buffer
+    tokens (the rejected speculative tail). Quantized blocks are never
+    touched — the engine invariant guarantees the tail lives in C_F2."""
+    n = jnp.where(table.active, jnp.asarray(n, jnp.int32), 0)
+    return table._replace(buf_len=table.buf_len - n)
+
+
+def commit(table: PageTable, n_new: jnp.ndarray) -> PageTable:
+    """Advance each active slot's committed stream position by ``n_new[r]``."""
+    n = jnp.where(table.active, jnp.asarray(n_new, jnp.int32), 0)
+    return table._replace(pos=table.pos + n)
+
+
+# ---------------------------------------------------------------------------
+# admission / retirement (eager; called between jitted rounds)
+# ---------------------------------------------------------------------------
+
+def alloc_blocks(table: PageTable, slot: int, n: int
+                 ) -> Tuple[PageTable, jnp.ndarray]:
+    """Pop ``n`` blocks for ``slot`` and point its table row at them."""
+    top = int(table.free_top)
+    if n > top:
+        raise RuntimeError(f"pool exhausted: want {n} blocks, {top} free")
+    if n > table.max_blocks_per_seq:
+        raise RuntimeError(f"request needs {n} blocks > NBmax "
+                           f"{table.max_blocks_per_seq}")
+    ids = table.free_stack[top - n:top]
+    bt = table.block_table.at[slot, :n].set(ids) if n else table.block_table
+    return table._replace(
+        block_table=bt,
+        blocks=table.blocks.at[slot].set(n),
+        free_top=jnp.asarray(top - n, jnp.int32),
+    ), ids
+
+
+def adopt_hier(pool: PagedKVPool, slot: int, ids: jnp.ndarray,
+               hier: HierKVCache) -> PagedKVPool:
+    """Copy a batch-1 contiguous prefill cache into pool blocks ``ids`` and
+    buffer row ``slot`` — how an admitted request's prefill (run through the
+    existing dense path) enters the paged world."""
+    n = ids.shape[0]
+    new = pool
+    if n:
+        new = new._replace(
+            k_upper=new.k_upper.at[ids].set(hier.k_upper[0, :n]),
+            k_lower=new.k_lower.at[ids].set(hier.k_lower[0, :n]),
+            k_scale=new.k_scale.at[ids].set(hier.k_scale[0, :n]),
+            k_zero=new.k_zero.at[ids].set(hier.k_zero[0, :n]),
+            v_upper=new.v_upper.at[ids].set(hier.v_upper[0, :n]),
+            v_lower=new.v_lower.at[ids].set(hier.v_lower[0, :n]),
+            v_scale=new.v_scale.at[ids].set(hier.v_scale[0, :n]),
+            v_zero=new.v_zero.at[ids].set(hier.v_zero[0, :n]),
+        )
+    return new._replace(
+        buf_k=new.buf_k.at[slot].set(hier.buf_k[0].astype(new.buf_k.dtype)),
+        buf_v=new.buf_v.at[slot].set(hier.buf_v[0].astype(new.buf_v.dtype)),
+    )
+
+
+def admit_slot(table: PageTable, slot: int, seq_len: int,
+               buf_len: int) -> PageTable:
+    """Mark ``slot`` live after adoption (blocks set by alloc_blocks)."""
+    return table._replace(
+        buf_len=table.buf_len.at[slot].set(buf_len),
+        pos=table.pos.at[slot].set(seq_len),
+        active=table.active.at[slot].set(True),
+    )
+
+
+def free_slot(table: PageTable, slot: int) -> PageTable:
+    """Retire ``slot``: push its blocks back onto the free stack."""
+    n = int(table.blocks[slot])
+    top = int(table.free_top)
+    free_stack = table.free_stack
+    if n:
+        ids = table.block_table[slot, :n]
+        free_stack = free_stack.at[top:top + n].set(ids)
+    return table._replace(
+        block_table=table.block_table.at[slot].set(0),
+        blocks=table.blocks.at[slot].set(0),
+        buf_len=table.buf_len.at[slot].set(0),
+        pos=table.pos.at[slot].set(0),
+        active=table.active.at[slot].set(False),
+        free_stack=free_stack,
+        free_top=jnp.asarray(top + n, jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# gather views (reference path; the Pallas kernel reads the pool in place)
+# ---------------------------------------------------------------------------
+
+def gather_quant(pool: PagedKVPool, table: PageTable) -> Tuple[HierQuant,
+                                                               HierQuant]:
+    """Gather each slot's blocks into contiguous HierQuants
+    ``[R, NBmax, G, H, ...]`` — the paged analogue of the dense cache's
+    quantized region. Rows beyond ``blocks[r]`` gather block-table padding
+    (id 0) and must be masked by the caller."""
+    bt = table.block_table
+    kq = HierQuant(pool.k_upper[bt], pool.k_lower[bt],
+                   pool.k_scale[bt], pool.k_zero[bt])
+    vq = HierQuant(pool.v_upper[bt], pool.v_lower[bt],
+                   pool.v_scale[bt], pool.v_zero[bt])
+    return kq, vq
+
+
+def materialize_slots(pool: PagedKVPool, table: PageTable, mode: str,
+                      dtype=jnp.float32):
+    """Full logical K/V ``[R, NBmax*G + 2G, H, D]`` + validity mask — the
+    oracle used by tests and the flat jnp attention path."""
+    G = pool.group
+    kq, vq = gather_quant(pool, table)
+    deq = dequant_upper if mode == "draft" else dequant_full
+    k = deq(kq, dtype)
+    v = deq(vq, dtype)
+    R, NB, G_, H, D = k.shape
+    k = k.reshape(R, NB * G_, H, D)
+    v = v.reshape(R, NB * G_, H, D)
+    k = jnp.concatenate([k, pool.buf_k.astype(dtype)], axis=1)
+    v = jnp.concatenate([v, pool.buf_v.astype(dtype)], axis=1)
+    quant_len = table.blocks * G
+    Sq = NB * G_
+    s = jnp.arange(k.shape[1])
+    valid = jnp.where(s[None, :] < Sq,
+                      s[None, :] < quant_len[:, None],
+                      s[None, :] - Sq < table.buf_len[:, None])
+    return k, v, valid, quant_len

@@ -15,6 +15,11 @@ One round =
 
 The whole round is one jittable function; the engine drives it in a Python
 loop until `max_new_tokens`.
+
+`paged_spec_round` is the continuous-batching variant over the paged cache
+(core/paged_kv_cache.py): per-slot stream positions, per-sequence
+accept/rollback — requests of different lengths progress raggedly within
+one jitted program.
 """
 
 from __future__ import annotations
@@ -81,6 +86,92 @@ def spec_round(model, target_params, draft_params, state, last_token,
     last = jax.lax.dynamic_slice_in_dim(res.tokens, res.n_accepted, 1, axis=1)
     return RoundResult(state=new_state, tokens=res.tokens, n_new=res.n_new,
                        last_token=last, accept_mask=res.accept_mask_b)
+
+
+class PagedRoundResult(NamedTuple):
+    state: dict
+    table: object             # PageTable pytree (post commit/rollback)
+    tokens: jnp.ndarray       # [R, gamma+1] new tokens (n_new[r] valid)
+    n_new: jnp.ndarray        # [R]
+    last_token: jnp.ndarray   # [R, 1] token to feed next round
+    accept_mask: jnp.ndarray  # [R, gamma]
+
+
+def paged_spec_round(model, target_params, draft_params, state, table,
+                     last_token, key, *, gamma: int, greedy: bool = False,
+                     temperature: float = 1.0, ctx_kw=None
+                     ) -> PagedRoundResult:
+    """One continuous-batching QuantSpec round over the paged cache.
+
+    Unlike :func:`spec_round`, every request slot keeps its own stream
+    position (``table.pos``) and its own accepted length — commits and
+    rollbacks are per-sequence, so requests of different lengths progress
+    raggedly in one jitted program. Inactive slots compute garbage that is
+    masked out of the table update and ignored by the engine.
+    """
+    from repro.core import paged_kv_cache as PC
+
+    assert model.cfg.num_codebooks == 0, "paged engine is single-codebook"
+    G = model.cfg.group_size
+    keys = jax.random.split(key, gamma + 2)
+
+    def run(params, tokens, st, tbl, pos, kv_mode, T):
+        tbl2, step = PC.plan_step(tbl, T, G)
+        kw = dict(ctx_kw or {})
+        kw["plan"] = PC.PagedPlan(step, tbl2)
+        logits, new_st, _ = model.decode(params, tokens, st, pos,
+                                         kv_mode=kv_mode, policy="paged",
+                                         ctx_kw=kw)
+        return logits, new_st, tbl2
+
+    # ---- 1. draft γ tokens (cache writes discarded wholesale) --------------
+    d_state, d_table = state, table
+    cur = last_token
+    toks, qlist = [], []
+    for i in range(gamma):
+        dl, d_state, d_table = run(draft_params, cur, d_state, d_table,
+                                   table.pos + i, "draft", 1)
+        logits = dl[:, -1] / temperature
+        nxt = sample_token(logits, keys[i], greedy)            # [R]
+        toks.append(nxt)
+        qlist.append(jax.nn.softmax(logits, axis=-1))
+        cur = nxt[:, None]
+    draft_tokens = jnp.stack(toks, axis=1)                     # [R, γ]
+    draft_probs = jnp.stack(qlist, axis=1)                     # [R, γ, V]
+
+    # ---- 2. target verifies all γ+1 positions in one pass ------------------
+    tgt_in = jnp.concatenate([last_token, draft_tokens], axis=1)
+    tl, t_state, v_table = run(target_params, tgt_in, state, table,
+                               table.pos, "target", gamma + 1)
+    target_probs = jax.nn.softmax(tl / temperature, axis=-1)
+
+    # ---- 3. per-sequence verify + commit -----------------------------------
+    res = acceptance.verify_per_seq(draft_tokens, draft_probs, target_probs,
+                                    keys[gamma], greedy=greedy)
+    rb = (gamma + 1) - res.n_new                               # [R]
+    new_table = PC.commit(PC.rollback(v_table, rb), res.n_new)
+    last = jnp.take_along_axis(res.tokens, res.n_accepted[:, None], axis=1)
+    return PagedRoundResult(state=t_state, table=new_table, tokens=res.tokens,
+                            n_new=res.n_new, last_token=last,
+                            accept_mask=res.accept_mask_b)
+
+
+def paged_ar_step(model, params, state, table, last_token, key, *,
+                  greedy: bool = False, temperature: float = 1.0,
+                  ctx_kw=None):
+    """Plain autoregressive step on the paged cache (per-slot positions)."""
+    from repro.core import paged_kv_cache as PC
+
+    G = model.cfg.group_size
+    tbl2, step = PC.plan_step(table, 1, G)
+    kw = dict(ctx_kw or {})
+    kw["plan"] = PC.PagedPlan(step, tbl2)
+    tl, new_state, _ = model.decode(params, last_token, state, table.pos,
+                                    kv_mode="target", policy="paged",
+                                    ctx_kw=kw)
+    nxt = sample_token(tl[:, -1] / temperature, key, greedy)
+    n_new = jnp.ones((table.pos.shape[0],), jnp.int32)
+    return new_state, PC.commit(tbl2, n_new), nxt[:, None]
 
 
 def ar_step(model, params, state, last_token, stream_pos, key, *,

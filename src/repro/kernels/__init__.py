@@ -1,3 +1,3 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the hierarchical quantized KV cache (contiguous
+and block-table paged flash decoding), their pure-jnp oracles (ref.py), and
+the jit wrappers tying kernels to the cache/model layer (ops.py)."""

@@ -4,6 +4,12 @@
 `models.common.attend_hier` (impl="pallas"): Pallas flash-decoding over the
 quantized region + one jnp flash chunk for the FP buffer, merged by
 log-sum-exp (paper App. E).
+
+`paged_hier_attention` is the block-table analogue over a
+`core.paged_kv_cache` pool: the Pallas kernel gathers each sequence's pool
+blocks through a scalar-prefetched block table, and the per-slot FP buffers
+form the extra flash chunk (per-slot stream positions — continuous
+batching is ragged).
 """
 
 from __future__ import annotations
@@ -15,7 +21,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.hier_kv_cache import HierKVCache
-from repro.kernels.quant_attention import quant_region_attention
+from repro.core.paged_kv_cache import PagedKVPool, PageTable
+from repro.kernels.quant_attention import (
+    paged_quant_region_attention,
+    quant_region_attention,
+)
 
 
 def _bh(x):
@@ -91,3 +101,55 @@ def hier_attention(q, cache: HierKVCache, stream_pos, mode: str,
     out = _combine(out_q, lse_q, out_b, lse_b, q.dtype)       # [BH, gT, D]
     out = out.reshape(B, H, g, T, D).transpose(0, 3, 1, 2, 4)
     return out.reshape(B, T, Hq, D)
+
+
+def _pool_bh(x):
+    """[P1, G|1, H, X] -> [P1*H, G|1, X] (row p*H + h)."""
+    P1, G, H, X = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(P1 * H, G, X)
+
+
+def paged_hier_attention(q, pool: PagedKVPool, table: PageTable, stream_pos,
+                         mode: str, softcap: float = 0.0,
+                         interpret: bool = True):
+    """q [R, T, Hq, D] over a paged hierarchical cache (post-`apply_step`).
+
+    `stream_pos` is per-slot [R] — the stream position of each slot's first
+    query token (requests progress raggedly under continuous batching). The
+    quantized pool is streamed through the block-table Pallas kernel; each
+    slot's FP buffer is one extra flash chunk merged by log-sum-exp."""
+    if softcap != 0.0:
+        raise NotImplementedError("softcap not fused in the Pallas kernel")
+    R, T, Hq, D = q.shape
+    H = pool.buf_k.shape[2]
+    g = Hq // H
+    G = pool.group
+
+    # ---- paged quantized region via Pallas ---------------------------------
+    qr = q.reshape(R, T, H, g, D).transpose(0, 2, 3, 1, 4)   # [R,H,g,T,D]
+    qr = qr.reshape(R * H, g * T, D)
+    out_q, lse_q = paged_quant_region_attention(
+        qr,
+        _pool_bh(pool.k_upper), _pool_bh(pool.k_lower),
+        _pool_bh(pool.k_scale), _pool_bh(pool.k_zero),
+        _pool_bh(pool.v_upper), _pool_bh(pool.v_lower),
+        _pool_bh(pool.v_scale), _pool_bh(pool.v_zero),
+        table.block_table, table.blocks, H, mode, interpret=interpret)
+
+    # ---- per-slot FP buffer chunk ------------------------------------------
+    buf_k = pool.buf_k.transpose(0, 2, 1, 3).reshape(R * H, 2 * G, D)
+    buf_v = pool.buf_v.transpose(0, 2, 1, 3).reshape(R * H, 2 * G, D)
+    quant_len = table.blocks * G                              # [R]
+    t_idx = jnp.arange(g * T) % T
+    q_pos = jnp.asarray(stream_pos, jnp.int32)[:, None] + t_idx[None]  # [R,gT]
+    j = jnp.arange(2 * G)
+    mask = (j[None, None, :] < table.buf_len[:, None, None]) & \
+           (quant_len[:, None, None] + j[None, None, :]
+            <= q_pos[:, :, None])                             # [R, gT, 2G]
+    mask = jnp.broadcast_to(mask[:, None], (R, H, g * T, 2 * G))
+    mask = mask.reshape(R * H, g * T, 2 * G)
+    out_b, lse_b = _attention_with_lse(qr, buf_k, buf_v, mask)
+
+    out = _combine(out_q, lse_q, out_b, lse_b, q.dtype)       # [RH, gT, D]
+    out = out.reshape(R, H, g, T, D).transpose(0, 3, 1, 2, 4)
+    return out.reshape(R, T, Hq, D)

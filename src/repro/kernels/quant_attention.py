@@ -17,6 +17,13 @@ comes from: bytes moved per KV element drop 4×/2× vs fp16.
 The recent-token FP buffer (≤ 2G tokens) is handled outside the kernel as
 one extra flash chunk and merged via log-sum-exp (App. E of the paper).
 
+Two variants share the kernel body math:
+  * `quant_region_attention` — contiguous per-request regions ([B·H, NB, …]).
+  * `paged_quant_region_attention` — a global block pool addressed through a
+    scalar-prefetched per-sequence block table (paged-attention layout); the
+    BlockSpec index maps dereference the table so each grid step DMAs the
+    owning pool block directly, with per-sequence valid-block counts.
+
 Validated in interpret mode against kernels/ref.py.
 """
 
@@ -33,6 +40,64 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+def _flash_init(m_scr, l_scr, acc_scr):
+    m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+    l_scr[...] = jnp.zeros_like(l_scr)
+    acc_scr[...] = jnp.zeros_like(acc_scr)
+
+
+def _flash_block_update(q_ref, ku_ref, kl_ref, ks_ref, kz_ref,
+                        vu_ref, vl_ref, vs_ref, vz_ref,
+                        m_scr, l_scr, acc_scr, *, mode: str, ix: tuple):
+    """Dequantize one KV block and fold it into the online-softmax state.
+
+    Shared by the contiguous and paged kernels; ``ix`` is the ref index of
+    the current block's data (the paged specs carry one fewer leading
+    block axis)."""
+    q = q_ref[0].astype(jnp.float32)                  # [gT, D]
+    D = q.shape[-1]
+
+    def dequant(u_ref, l_ref, s_ref, z_ref):
+        qu = u_ref[ix]
+        hi = (qu >> 4).astype(jnp.float32)
+        lo = (qu & 0xF).astype(jnp.float32)
+        quf = jnp.concatenate([hi, lo], axis=-1)      # [G, D]
+        s = s_ref[ix].astype(jnp.float32)
+        z = z_ref[ix].astype(jnp.float32)
+        if mode == "draft":
+            return quf * s + z
+        ql = l_ref[ix]
+        lhi = (ql >> 4).astype(jnp.float32)
+        llo = (ql & 0xF).astype(jnp.float32)
+        qlf = jnp.concatenate([lhi, llo], axis=-1) - 8.0
+        return (16.0 * quf + qlf) * (s / 16.0) + z
+
+    k = dequant(ku_ref, kl_ref, ks_ref, kz_ref)       # [G, D]
+    v = dequant(vu_ref, vl_ref, vs_ref, vz_ref)       # [G, D]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s / math.sqrt(D)                               # [gT, G]
+
+    m_prev = m_scr[...]                                # [gT, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                             # [gT, G]
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, -1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+
+def _flash_finalize(out_ref, lse_ref, m_scr, l_scr, acc_scr):
+    l = l_scr[...]
+    out_ref[0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(out_ref.dtype)
+    lse = jnp.where(l > 0, m_scr[...] + jnp.log(jnp.maximum(l, 1e-30)),
+                    -jnp.inf)
+    lse_ref[0] = lse[:, 0]
+
+
 def _kernel(blocks_ref,                      # scalar prefetch: [1] i32
             q_ref, ku_ref, kl_ref, ks_ref, kz_ref,
             vu_ref, vl_ref, vs_ref, vz_ref,
@@ -43,54 +108,108 @@ def _kernel(blocks_ref,                      # scalar prefetch: [1] i32
 
     @pl.when(nb == 0)
     def _init():
-        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
-        l_scr[...] = jnp.zeros_like(l_scr)
-        acc_scr[...] = jnp.zeros_like(acc_scr)
+        _flash_init(m_scr, l_scr, acc_scr)
 
     @pl.when(nb < blocks_ref[0])
     def _process():
-        q = q_ref[0].astype(jnp.float32)                  # [gT, D]
-        D = q.shape[-1]
-
-        def dequant(u_ref, l_ref, s_ref, z_ref):
-            qu = u_ref[0, 0]
-            hi = (qu >> 4).astype(jnp.float32)
-            lo = (qu & 0xF).astype(jnp.float32)
-            quf = jnp.concatenate([hi, lo], axis=-1)      # [G, D]
-            s = s_ref[0, 0].astype(jnp.float32)
-            z = z_ref[0, 0].astype(jnp.float32)
-            if mode == "draft":
-                return quf * s + z
-            ql = l_ref[0, 0]
-            lhi = (ql >> 4).astype(jnp.float32)
-            llo = (ql & 0xF).astype(jnp.float32)
-            qlf = jnp.concatenate([lhi, llo], axis=-1) - 8.0
-            return (16.0 * quf + qlf) * (s / 16.0) + z
-
-        k = dequant(ku_ref, kl_ref, ks_ref, kz_ref)       # [G, D]
-        v = dequant(vu_ref, vl_ref, vs_ref, vz_ref)       # [G, D]
-
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32)
-        s = s / math.sqrt(D)                               # [gT, G]
-
-        m_prev = m_scr[...]                                # [gT, 1]
-        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
-        alpha = jnp.exp(m_prev - m_new)
-        p = jnp.exp(s - m_new)                             # [gT, G]
-        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, -1, keepdims=True)
-        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
-        m_scr[...] = m_new
+        _flash_block_update(q_ref, ku_ref, kl_ref, ks_ref, kz_ref,
+                            vu_ref, vl_ref, vs_ref, vz_ref,
+                            m_scr, l_scr, acc_scr, mode=mode, ix=(0, 0))
 
     @pl.when(nb == nb_total - 1)
     def _finalize():
-        l = l_scr[...]
-        out_ref[0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(out_ref.dtype)
-        lse = jnp.where(l > 0, m_scr[...] + jnp.log(jnp.maximum(l, 1e-30)),
-                        -jnp.inf)
-        lse_ref[0] = lse[:, 0]
+        _flash_finalize(out_ref, lse_ref, m_scr, l_scr, acc_scr)
+
+
+def _paged_kernel(blocks_ref,                 # scalar prefetch: [R] i32
+                  bt_ref,                     # scalar prefetch: [R, NBmax] i32
+                  q_ref, ku_ref, kl_ref, ks_ref, kz_ref,
+                  vu_ref, vl_ref, vs_ref, vz_ref,
+                  out_ref, lse_ref,
+                  m_scr, l_scr, acc_scr,
+                  *, mode: str, nb_total: int, nh: int):
+    """Block-table flash decoding: grid (R·H, NBmax). Same per-block math
+    as `_kernel` (shared `_flash_block_update`), but the KV operands arrive
+    through a scalar-prefetched block table (see the index maps in
+    `paged_quant_region_attention`) and the per-sequence valid-block count
+    comes from ``blocks_ref[r]``. ``bt_ref`` is consumed by the index maps
+    only."""
+    del bt_ref
+    i = pl.program_id(0)
+    nb = pl.program_id(1)
+    r = i // nh
+
+    @pl.when(nb == 0)
+    def _init():
+        _flash_init(m_scr, l_scr, acc_scr)
+
+    @pl.when(nb < blocks_ref[r])
+    def _process():
+        _flash_block_update(q_ref, ku_ref, kl_ref, ks_ref, kz_ref,
+                            vu_ref, vl_ref, vs_ref, vz_ref,
+                            m_scr, l_scr, acc_scr, mode=mode, ix=(0,))
+
+    @pl.when(nb == nb_total - 1)
+    def _finalize():
+        _flash_finalize(out_ref, lse_ref, m_scr, l_scr, acc_scr)
+
+
+def paged_quant_region_attention(q, k_upper, k_lower, k_scale, k_zero,
+                                 v_upper, v_lower, v_scale, v_zero,
+                                 block_table, blocks, nh: int, mode: str, *,
+                                 interpret: bool = True):
+    """Flash decoding over a **paged** quantized region.
+
+    q ``[R*H, gT, D]``; pool planes flattened per (block, head):
+    ``k/v_upper/lower [(P+1)*H, G, D//2]``, ``k_scale/zero [(P+1)*H, 1, D]``,
+    ``v_scale/zero [(P+1)*H, G, 1]`` (row ``p*H + h`` = head ``h`` of pool
+    block ``p``). ``block_table [R, NBmax]`` and ``blocks [R]`` are
+    scalar-prefetched: the BlockSpec index maps dereference the table, so
+    each grid step DMAs exactly the pool block the sequence owns — the
+    gather never materializes. Columns ≥ ``blocks[r]`` stream the (valid)
+    pool block their table padding points at but are masked out of the
+    online softmax. Returns ``(out [R*H, gT, D], lse [R*H, gT])``.
+    """
+    RH, gT, D = q.shape
+    NBmax = block_table.shape[1]
+    G = k_upper.shape[1]
+    Dp = D // 2
+
+    ks = jnp.broadcast_to(k_scale, (k_upper.shape[0], 1, D))
+    kz = jnp.broadcast_to(k_zero, (k_upper.shape[0], 1, D))
+    vs = jnp.broadcast_to(v_scale, (k_upper.shape[0], G, 1))
+    vz = jnp.broadcast_to(v_zero, (k_upper.shape[0], G, 1))
+
+    grid = (RH, NBmax)
+    # index maps receive the two scalar-prefetch refs after the grid indices
+    def page(i, j, blk, bt):
+        return (bt[i // nh, j] * nh + i % nh, 0, 0)
+
+    qspec = pl.BlockSpec((1, gT, D), lambda i, j, blk, bt: (i, 0, 0))
+    pspec = pl.BlockSpec((1, G, Dp), page)
+    ksspec = pl.BlockSpec((1, 1, D), page)
+    vsspec = pl.BlockSpec((1, G, 1), page)
+
+    out, lse = pl.pallas_call(
+        functools.partial(_paged_kernel, mode=mode, nb_total=NBmax, nh=nh),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[qspec, pspec, pspec, ksspec, ksspec,
+                      pspec, pspec, vsspec, vsspec],
+            out_specs=[
+                pl.BlockSpec((1, gT, D), lambda i, j, blk, bt: (i, 0, 0)),
+                pl.BlockSpec((1, gT), lambda i, j, blk, bt: (i, 0))],
+            scratch_shapes=[pltpu.VMEM((gT, 1), jnp.float32),
+                            pltpu.VMEM((gT, 1), jnp.float32),
+                            pltpu.VMEM((gT, D), jnp.float32)],
+        ),
+        out_shape=[jax.ShapeDtypeStruct((RH, gT, D), q.dtype),
+                   jax.ShapeDtypeStruct((RH, gT), jnp.float32)],
+        interpret=interpret,
+    )(jnp.asarray(blocks, jnp.int32), jnp.asarray(block_table, jnp.int32),
+      q, k_upper, k_lower, ks, kz, v_upper, v_lower, vs, vz)
+    return out, lse
 
 
 def quant_region_attention(q, k_upper, k_lower, k_scale, k_zero,

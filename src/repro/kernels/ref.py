@@ -53,6 +53,43 @@ def quant_region_attention_ref(q, k_upper, k_lower, k_scale, k_zero,
     return out.astype(q.dtype), lse
 
 
+def paged_quant_region_attention_ref(q, k_upper, k_lower, k_scale, k_zero,
+                                     v_upper, v_lower, v_scale, v_zero,
+                                     block_table, blocks, nh: int, mode: str):
+    """Oracle for the paged kernel: materialize the gather, then run the
+    contiguous reference with per-sequence valid-block masks.
+
+    q [R*H, gT, D]; pool planes [(P+1)*H, G, Dp] (row p*H + h);
+    block_table [R, NBmax]; blocks [R].
+    """
+    RH, gT, D = q.shape
+    R, NBmax = block_table.shape
+    G = k_upper.shape[1]
+
+    # gather pool rows into [RH, NBmax, ...]
+    h = jnp.arange(RH) % nh                            # head of each q row
+    rows = block_table[jnp.arange(RH) // nh] * nh + h[:, None]  # [RH, NBmax]
+    gk = lambda a: a[rows]
+    k = dequant_k(gk(k_upper), gk(k_lower), gk(k_scale), gk(k_zero), mode)
+    v = dequant_k(gk(v_upper), gk(v_lower), gk(v_scale), gk(v_zero), mode)
+    k = k.reshape(RH, NBmax * G, D)
+    v = v.reshape(RH, NBmax * G, D)
+
+    nblk = blocks[jnp.arange(RH) // nh]                # [RH]
+    valid = (jnp.arange(NBmax * G)[None, :] // G) < nblk[:, None]
+    logits = jnp.einsum("btd,bsd->bts", q.astype(jnp.float32), k)
+    logits = logits / math.sqrt(D)
+    logits = jnp.where(valid[:, None, :], logits, -jnp.inf)
+    m = jnp.max(logits, axis=-1)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(logits - m_safe[..., None])
+    p = jnp.where(valid[:, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    out = jnp.einsum("bts,bsd->btd", p, v) / jnp.maximum(l, 1e-30)[..., None]
+    lse = jnp.where(l > 0, m_safe + jnp.log(jnp.maximum(l, 1e-30)), -jnp.inf)
+    return out.astype(q.dtype), lse
+
+
 def quantize_kv_block_ref(k, v):
     """Hierarchically quantize one block. k,v [BH, G, D].
     Keys per-channel (reduce over G), values per-token (reduce over D).

@@ -1,17 +1,17 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (architecture × input shape) on
 the production meshes, record memory/cost/collective analysis.
 
     PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-27b --shape train_4k
     PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
 
-The first two lines above force 512 host platform devices BEFORE any jax
+The XLA_FLAGS line below forces 512 host platform devices BEFORE any jax
 initialization — only this entry point sees them; tests/benches see 1 CPU.
 """
 
-import argparse
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
 import json
 import re
 import time
@@ -202,6 +202,8 @@ def build_step(arch: str, shape_name: str, mesh, n_repeats=None,
 
 def _analyse(compiled, skip_hlo: bool) -> dict:
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jax: one dict per program
+        cost = cost[0] if cost else {}
     coll = {} if skip_hlo else collective_bytes(compiled.as_text())
     return {
         "flops": cost.get("flops", 0.0) or 0.0,

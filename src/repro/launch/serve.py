@@ -2,6 +2,12 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama2-7b-32k --smoke \
         --policy quantspec --gamma 4 --prompt-len 256 --max-new 64
+
+`--engine continuous` switches to the paged-cache continuous-batching
+engine (ragged prompt lengths, admission/retirement between spec rounds):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tiny-lm \
+        --engine continuous --slots 2 --batch 4 --max-new 32 --greedy
 """
 
 from __future__ import annotations
@@ -9,13 +15,14 @@ from __future__ import annotations
 import argparse
 
 import jax
+import numpy as np
 
 from repro.configs import ARCHS, get_config
 from repro.data.pipeline import SyntheticCorpus
 from repro.distributed.sharding import axis_rules
 from repro.launch.mesh import make_local_mesh, make_production_mesh
 from repro.models.stack import StackModel
-from repro.serving.engine import Engine
+from repro.serving.engine import ContinuousEngine, Engine
 
 
 def main():
@@ -29,6 +36,10 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=256)
     ap.add_argument("--max-new", type=int, default=64)
     ap.add_argument("--greedy", action="store_true")
+    ap.add_argument("--engine", choices=["static", "continuous"],
+                    default="static")
+    ap.add_argument("--slots", type=int, default=2,
+                    help="concurrent request slots (continuous engine)")
     ap.add_argument("--mesh", choices=["local", "single", "multi"],
                     default="local")
     args = ap.parse_args()
@@ -51,10 +62,25 @@ def main():
                 jax.random.PRNGKey(2),
                 (args.batch, cfg.num_image_tokens, cfg.d_model)) * 0.02
 
+        max_seq = args.prompt_len + args.max_new + 2 * cfg.group_size + 8
+        if args.engine == "continuous":
+            eng = ContinuousEngine(model, params, gamma=args.gamma,
+                                   greedy=args.greedy, max_slots=args.slots,
+                                   max_seq=max_seq)
+            # ragged prompts: vary lengths so requests join/retire mid-stream
+            prompts = [np.asarray(prompt[i, : args.prompt_len - 7 * i])
+                       for i in range(args.batch)]
+            results = eng.generate(prompts, args.max_new,
+                                   key=jax.random.PRNGKey(7))
+            for i, res in enumerate(results):
+                s = res.stats
+                print(f"req {i}: {s.generated} tokens in {s.rounds} rounds, "
+                      f"acceptance {s.acceptance_rate:.1%}, "
+                      f"prefill {s.prefill_s:.2f}s decode {s.decode_s:.2f}s")
+            print("first request tokens:", results[0].tokens[0][:32].tolist())
+            return
         eng = Engine(model, params, policy=args.policy, gamma=args.gamma,
-                     greedy=args.greedy,
-                     max_seq=args.prompt_len + args.max_new
-                     + 2 * cfg.group_size + 8)
+                     greedy=args.greedy, max_seq=max_seq)
         res = eng.generate(prompt, args.max_new, key=jax.random.PRNGKey(7),
                            memory=memory)
         s = res.stats

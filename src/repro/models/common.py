@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import hier_kv_cache as HC
+from repro.core import paged_kv_cache as PC
 from repro.core.weight_quant import resolve
 from repro.distributed.sharding import constrain
 from repro.models.config import ModelConfig
@@ -285,6 +286,33 @@ def _attend_hier_blocked(q, cache: HC.HierKVCache, stream_pos, mode: str,
     out = (acc_q * w_q[..., None] + acc_b * w_b[..., None]) / denom[..., None]
     out = out.astype(q.dtype)                                  # [B,H,g,T,D]
     return out.transpose(0, 3, 1, 2, 4).reshape(B, T, Hq, D)
+
+
+def attend_hier_paged(q, pool: PC.PagedKVPool, table: PC.PageTable,
+                      stream_pos, mode: str, softcap=0.0, impl: str = "flat",
+                      deq_dtype=jnp.float32):
+    """Attend q ``[R, T, Hq, hd]`` over a paged hierarchical cache (new
+    tokens already applied via ``apply_step``). ``stream_pos`` is per-slot
+    ``[R]`` — under continuous batching every request is at its own
+    position. mode: 'draft' (upper-4) | 'target' (INT8 recon)."""
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.paged_hier_attention(q, pool, table, stream_pos, mode,
+                                         softcap)
+    k, v, valid, quant_len = PC.materialize_slots(pool, table, mode,
+                                                  deq_dtype)
+    Sq = k.shape[1] - pool.buf_k.shape[1]
+    s = jnp.arange(k.shape[1])
+    # stream position of key s: block region is absolute; buffer keys start
+    # at each slot's quantized length
+    pos_keys = jnp.where(s[None, :] < Sq, s[None, :],
+                         quant_len[:, None] + (s[None, :] - Sq))   # [R, S]
+    T = q.shape[1]
+    q_pos = jnp.asarray(stream_pos, jnp.int32)[:, None] + jnp.arange(T)
+    mask = valid[:, None, :] & \
+        (pos_keys[:, None, :] <= q_pos[:, :, None])                # [R, T, S]
+    return gqa_attention(q, k.astype(q.dtype), v.astype(q.dtype), mask,
+                         softcap)
 
 
 def attend_full(q, cache: HC.FullKVCache, stream_pos, softcap=0.0):

@@ -136,7 +136,10 @@ def _apply_moe_shard_map(p: dict, cfg: ModelConfig, x: jnp.ndarray, mesh
     Expert weights keep their FSDP sharding over `data` in train mode; the
     local matmul all-gathers them (tiled) like any FSDP layer.
     """
-    from jax import shard_map
+    try:
+        from jax import shard_map  # jax >= 0.5
+    except ImportError:
+        from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
     B, T, d = x.shape
@@ -219,13 +222,18 @@ def _apply_moe_shard_map(p: dict, cfg: ModelConfig, x: jnp.ndarray, mesh
             aux = jax.lax.pmean(aux, data_axes)
         return y.reshape(Bl, Tl, d), aux
 
-    y, aux = shard_map(
-        local_fn, mesh=mesh,
+    smap_kw = dict(
+        mesh=mesh,
         in_specs=(P(), especs["w_gate"][0], especs["w_up"][0],
                   especs["w_down"][0], xspec),
         out_specs=(xspec, P()),
-        check_vma=False,
-    )(p["router"], experts["w_gate"], experts["w_up"], experts["w_down"], x)
+    )
+    try:
+        smapped = shard_map(local_fn, check_vma=False, **smap_kw)
+    except TypeError:  # older jax: the kwarg is check_rep
+        smapped = shard_map(local_fn, check_rep=False, **smap_kw)
+    y, aux = smapped(
+        p["router"], experts["w_gate"], experts["w_up"], experts["w_down"], x)
 
     if "shared" in p:
         y = y + apply_mlp(p["shared"], x.reshape(B * T, d)[None])[0].reshape(

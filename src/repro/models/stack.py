@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import hier_kv_cache as HC
+from repro.core import paged_kv_cache as PC
 from repro.distributed.sharding import constrain
 from repro.models import common as L
 from repro.models import mamba as M
@@ -73,6 +74,11 @@ class RunCtx:
     draft_window: int = 256
     draft_budget: int = 256
     obs_window: int = 32
+    # paged policy (continuous batching): pool size for init, and the
+    # per-step paging plan (PagedPlan: flush/append decisions + post-step
+    # table) computed once by the engine and applied by every layer
+    pool_blocks: int = 0
+    plan: Optional[PC.PagedPlan] = None
     # KV-quantization simulation in full-sequence forward (quality benches):
     # (key_axis, value_axis, bits, residual) e.g. ('channel','token',4,256)
     kv_sim: Optional[tuple] = None
@@ -108,10 +114,20 @@ def init_layer_state(cfg: ModelConfig, spec: LayerSpec, batch: int,
                      max_blocks: int, ctx: RunCtx, dtype) -> Tuple[Any, Any]:
     """(mixer_state, mlp_state) for serving."""
     H, hd, G = cfg.num_kv_heads, cfg.hd, cfg.group_size
+    if ctx.policy == "paged" and spec.mixer != ATTN_FULL:
+        raise NotImplementedError(
+            "continuous batching (policy='paged') requires a pure "
+            f"full-attention stack; got mixer {spec.mixer!r} — window/"
+            "recurrent layers keep scalar stream positions")
     mixer: Any = None
     if spec.mixer == ATTN_FULL:
         if ctx.policy == "quantspec":
             primary = HC.init_cache(batch, max_blocks, G, H, hd, dtype)
+            draft = None
+        elif ctx.policy == "paged":
+            # batch = request slots; the shared PageTable lives in the
+            # engine (one table serves every layer)
+            primary = PC.init_pool(batch, ctx.pool_blocks, G, H, hd, dtype)
             draft = None
         elif ctx.policy == "streaming_only":
             # long-context sub-quadratic mode for pure full-attention archs:
@@ -214,8 +230,14 @@ def apply_mixer(spec: LayerSpec, p: dict, cfg: ModelConfig, h: jnp.ndarray,
             new_state = CrossKV(mk, mv) if ctx.mode == "prefill" else state
             return L.attn_out(p["attn"], att), new_state, None
 
-        positions = (stream_pos + jnp.arange(T)) if ctx.mode == "decode" \
-            else jnp.arange(T)
+        if ctx.mode == "decode":
+            sp = jnp.asarray(stream_pos)
+            # scalar stream_pos → [T]; per-slot vector [B] → [B, T]
+            # (continuous batching: every request at its own position)
+            positions = sp[..., None] + jnp.arange(T) if sp.ndim \
+                else sp + jnp.arange(T)
+        else:
+            positions = jnp.arange(T)
         q, k, v = L.project_qkv(p["attn"], cfg, h, positions)
         q = constrain(q, "batch", "seq", "heads", "head_dim")
 
@@ -240,6 +262,10 @@ def apply_mixer(spec: LayerSpec, p: dict, cfg: ModelConfig, h: jnp.ndarray,
                 new = HC.window_append(state.primary, k, v)
                 return L.attn_out(p["attn"], att), state._replace(primary=new), None
             att = L.causal_full_attention(q, k, v, sc)
+            if ctx.policy == "paged":
+                raise NotImplementedError(
+                    "paged prefill goes through the dense batch-1 path + "
+                    "adopt_hier (see serving.engine.ContinuousEngine)")
             if ctx.policy == "quantspec":
                 new_primary = HC.prefill(state.primary, k, v)
             elif ctx.policy == "streaming_only":
@@ -272,6 +298,17 @@ def apply_mixer(spec: LayerSpec, p: dict, cfg: ModelConfig, h: jnp.ndarray,
                                 impl=cfg.hier_attn_impl,
                                 deq_dtype=jnp.dtype(cfg.hier_deq_dtype))
             return L.attn_out(p["attn"], att), AttnState(cache, None), None
+
+        if ctx.policy == "paged":
+            # the engine planned this step once (flush decisions + block
+            # allocation); each layer executes it on its own pool
+            plan = ctx.plan
+            pool = PC.apply_step(state.primary, plan.step, k, v)
+            att = L.attend_hier_paged(
+                q, pool, plan.table, stream_pos, ctx.kv_mode, sc,
+                impl=cfg.hier_attn_impl,
+                deq_dtype=jnp.dtype(cfg.hier_deq_dtype))
+            return L.attn_out(p["attn"], att), AttnState(pool, None), None
 
         if ctx.policy == "streaming_only":
             new = HC.window_append(state.primary, k, v)

@@ -1,11 +1,20 @@
-"""Serving engine: batched request generation with QuantSpec, autoregressive
-FP, and sparse-KV self-speculative baselines (StreamingLLM / SnapKV).
+"""Serving engines: static-batch and continuous-batching request generation
+with QuantSpec, autoregressive FP, and sparse-KV self-speculative baselines
+(StreamingLLM / SnapKV).
 
-The engine jits one `spec_round` (draft γ → verify → commit) and drives it
-in a Python loop; prefill is jitted separately per prompt length.
+`Engine` (static batch) jits one `spec_round` (draft γ → verify → commit)
+over a fixed ``[B, S]`` prompt batch and drives it in a Python loop;
+prefill is jitted separately per prompt length.
 
-Policies
---------
+`ContinuousEngine` serves ragged multi-request traffic over the **paged**
+hierarchical cache (core/paged_kv_cache.py): requests are admitted into
+slots and retired between spec rounds, each slot progresses at its own
+stream position with per-sequence accept/rollback, and KV blocks come from
+a shared pool. Admission prefills through the existing dense batch-1 path
+and adopts the result into pool blocks (`adopt_hier`).
+
+Policies (static engine)
+------------------------
 quantspec : hierarchical INT4/INT8 shared cache, INT4 draft weights (paper)
 fp        : plain FP cache, no speculation (AR baseline)
 streaming : FP target cache + StreamingLLM sink+window draft cache
@@ -13,7 +22,8 @@ snapkv    : FP target cache + SnapKV prefill-selected draft cache
 
 For the baselines the draft weights stay full precision (matching the
 MagicDec-style sparse-KV baselines of the paper, whose draft cost savings
-come from the sparse cache only).
+come from the sparse cache only). The continuous engine always runs the
+paged quantspec cache; set ``gamma=0`` for its AR baseline.
 """
 
 from __future__ import annotations
@@ -21,16 +31,19 @@ from __future__ import annotations
 import dataclasses
 import time
 from functools import partial
-from typing import Optional
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.spec_decode import ar_step, spec_round
+from repro.core import paged_kv_cache as PC
+from repro.core.spec_decode import (ar_step, paged_ar_step, paged_spec_round,
+                                    spec_round)
 from repro.core.weight_quant import quantize_tree
-from repro.models.stack import StackModel
+from repro.models.stack import AttnState, StackModel
 from repro.serving.sampling import sample_token
+from repro.serving.scheduler import Request, Scheduler
 
 
 @dataclasses.dataclass
@@ -72,6 +85,11 @@ class Engine:
         self.temperature = temperature
         self.ctx_kw = ctx_kw or {}
         self.max_seq = max_seq
+        if policy == "quantspec" and gamma + 1 > self.cfg.group_size:
+            # one verify pass appends gamma+1 tokens; maybe_flush frees at
+            # most G buffer slots, so the append must fit one group
+            raise ValueError(f"gamma+1 = {gamma + 1} exceeds the quant "
+                             f"group size {self.cfg.group_size}")
         if quantize_weights is None:
             quantize_weights = policy == "quantspec"
         self.draft_params = (quantize_tree(
@@ -152,6 +170,214 @@ class Engine:
 
         tokens = np.concatenate(out, axis=1)[:, :max_new_tokens]
         return GenerationResult(tokens=tokens, stats=stats)
+
+
+class ContinuousEngine:
+    """Continuous-batching engine over the paged hierarchical cache.
+
+    ``max_slots`` requests decode concurrently; waiting requests are
+    admitted the moment a slot frees *and* the block pool can hold their
+    worst-case footprint. One jitted `paged_spec_round` serves every round
+    regardless of which requests occupy which slots (shapes are static in
+    [slots, pool]); admission/retirement mutate only the page table.
+
+    Greedy decoding is schedule-invariant: each request's output tokens are
+    identical to a batch-1 run of the static engine on the same prompt
+    (verified in tests/test_paged_engine.py and benchmarks/paged_serving.py).
+    """
+
+    def __init__(self, model: StackModel, params, *, gamma: int = 4,
+                 greedy: bool = False, temperature: float = 1.0,
+                 quantize_weights: bool = True, max_slots: int = 4,
+                 max_seq: int = 4096, pool_blocks: Optional[int] = None,
+                 ctx_kw: Optional[dict] = None):
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        self.gamma = gamma
+        self.greedy = greedy
+        self.temperature = temperature
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        G = self.cfg.group_size
+        if gamma + 1 > G:
+            # plan_step flushes at most one block per step, so a verify
+            # append of gamma+1 tokens must fit one group
+            raise ValueError(f"gamma+1 = {gamma + 1} exceeds the quant "
+                             f"group size {G}; the FP buffer would overflow")
+        self.nbmax = max(1, -(-max_seq // G))
+        self.pool_blocks = pool_blocks or max_slots * self.nbmax
+        self.ctx_kw = ctx_kw or {}
+        self.draft_params = (quantize_tree(
+            params, group=self.cfg.weight_quant_group)
+            if quantize_weights else params)
+
+        self.state = model.init_serve_state(
+            max_slots, max_seq=max_seq, policy="paged",
+            ctx_kw={**self.ctx_kw, "pool_blocks": self.pool_blocks})
+        self.table = PC.init_table(max_slots, self.nbmax, self.pool_blocks)
+        self.last = jnp.zeros((max_slots, 1), jnp.int32)
+        self.scheduler = Scheduler(max_slots, self.pool_blocks, G)
+        self._retired: List[Request] = []   # finished, not yet run()-claimed
+
+        self._round = jax.jit(partial(
+            paged_spec_round, model, gamma=gamma, greedy=greedy,
+            temperature=temperature, ctx_kw=self.ctx_kw or None))
+        self._ar = jax.jit(partial(
+            paged_ar_step, model, greedy=greedy, temperature=temperature,
+            ctx_kw=self.ctx_kw or None))
+        self._prefill_jit = jax.jit(self._dense_prefill)
+
+    # ------------------------------------------------------------------
+    def _dense_prefill(self, prompt):
+        """Batch-1 prefill through the existing dense quantspec path."""
+        state = self.model.init_serve_state(
+            1, max_seq=self.max_seq, policy="quantspec", ctx_kw=self.ctx_kw)
+        logits, state = self.model.prefill(
+            self.params, prompt, state, policy="quantspec",
+            ctx_kw=self.ctx_kw)
+        return logits, state
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _walk_attn(pst, dst, fn):
+        """Apply ``fn(paged_mixer, dense_mixer, stacked)`` over every layer
+        of (paged state, dense prefill state) in parallel, returning the
+        updated paged state."""
+        new = {"head": [], "tail": [], "blocks": None}
+        for k in ("head", "tail"):
+            for (pm, pl), (dm, _) in zip(pst[k], dst[k]):
+                new[k].append((fn(pm, dm, False), pl))
+        new["blocks"] = tuple(
+            (fn(pm, dm, True), pl)
+            for (pm, pl), (dm, _) in zip(pst["blocks"], dst["blocks"]))
+        return new
+
+    def _first_attn_cache(self, dense_state):
+        for k in ("head", "tail"):
+            for mix, _ in dense_state[k]:
+                if isinstance(mix, AttnState):
+                    return mix.primary, False
+        for mix, _ in dense_state["blocks"]:
+            if isinstance(mix, AttnState):
+                return mix.primary, True
+        raise ValueError("no attention layer in state")
+
+    def _adopt(self, slot: int, dense_state, prompt_len: int):
+        """Move a dense batch-1 prefill into pool blocks + slot buffers."""
+        hier, stacked = self._first_attn_cache(dense_state)
+        n = int(hier.blocks[0] if stacked else hier.blocks)
+        buf_len = int(hier.buf_len[0] if stacked else hier.buf_len)
+        self.table, ids = PC.alloc_blocks(self.table, slot, n)
+
+        def adopt_mixer(pm, dm, layer_stacked):
+            if not isinstance(pm, AttnState):
+                return pm
+            if layer_stacked:
+                pool = jax.vmap(
+                    lambda p, h: PC.adopt_hier(p, slot, ids, h))(
+                        pm.primary, dm.primary)
+            else:
+                pool = PC.adopt_hier(pm.primary, slot, ids, dm.primary)
+            return AttnState(pool, None)
+
+        self.state = self._walk_attn(self.state, dense_state, adopt_mixer)
+        self.table = PC.admit_slot(self.table, slot, prompt_len, buf_len)
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int) -> Request:
+        prompt = np.asarray(prompt, np.int32)
+        total = prompt.shape[0] + max_new_tokens
+        if total > self.max_seq:
+            raise ValueError(
+                f"prompt+generation = {total} tokens exceeds the engine's "
+                f"max_seq {self.max_seq} (block tables hold "
+                f"{self.nbmax} blocks/request)")
+        return self.scheduler.submit(prompt, max_new_tokens)
+
+    def _admit_ready(self, key):
+        while True:
+            req = self.scheduler.next_admission()
+            if req is None:
+                return key
+            t0 = time.perf_counter()
+            logits, dense = jax.block_until_ready(
+                self._prefill_jit(jnp.asarray(req.prompt)[None]))
+            key, k0 = jax.random.split(key)
+            first = sample_token(logits[:, -1] / self.temperature, k0,
+                                 self.greedy)
+            self._adopt(req.slot, dense, req.prompt_len)
+            self.last = self.last.at[req.slot, 0].set(first[0])
+            if req.max_new_tokens > 0:   # match the static engine's [:, :0]
+                req.tokens.append(int(first[0]))
+            req.prefill_s = time.perf_counter() - t0
+            req.admit_t = t0
+            if req.generated >= req.max_new_tokens:
+                self._retire(req.slot)
+
+    def _retire(self, slot: int):
+        self.table = PC.free_slot(self.table, slot)
+        req = self.scheduler.retire(slot)
+        req.finish_t = time.perf_counter()
+        self._retired.append(req)
+
+    # ------------------------------------------------------------------
+    def step(self, key):
+        """One engine iteration: admit, one spec round, harvest, retire."""
+        key = self._admit_ready(key)
+        if not self.scheduler.active:
+            return key
+        key, kr = jax.random.split(key)
+        if self.gamma > 0:
+            res = self._round(self.params, self.draft_params, self.state,
+                              self.table, self.last, kr)
+            self.state, self.table, self.last = (res.state, res.table,
+                                                 res.last_token)
+            n_new = np.asarray(res.n_new)
+            toks = np.asarray(res.tokens)
+        else:
+            self.state, self.table, self.last = self._ar(
+                self.params, self.state, self.table, self.last, kr)
+            n_new = np.ones((self.max_slots,), np.int64)
+            toks = np.asarray(self.last)
+
+        for slot, req in list(self.scheduler.active.items()):
+            take = min(int(n_new[slot]),
+                       req.max_new_tokens - req.generated)
+            req.tokens.extend(int(t) for t in toks[slot, :take])
+            req.rounds += 1
+            req.proposed += self.gamma
+            req.accepted += int(n_new[slot]) - 1
+            if req.generated >= req.max_new_tokens:
+                self._retire(slot)
+        return key
+
+    def run(self, key=None) -> List[Request]:
+        """Drive until every submitted request has finished; returns, in
+        submission order, every request retired since the last `run` (so
+        requests that finished in manual `step` calls are included)."""
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        while self.scheduler.has_work:
+            key = self.step(key)
+        done, self._retired = self._retired, []
+        return sorted(done, key=lambda r: r.req_id)
+
+    def generate(self, prompts: Sequence[np.ndarray], max_new_tokens: int,
+                 key=None) -> List[GenerationResult]:
+        """Convenience API mirroring `Engine.generate` for ragged prompts."""
+        reqs = [self.submit(p, max_new_tokens) for p in prompts]
+        self.run(key)
+        out = []
+        for r in reqs:
+            stats = GenStats(proposed=r.proposed, accepted=r.accepted,
+                             rounds=r.rounds, generated=r.generated,
+                             prefill_s=r.prefill_s,
+                             decode_s=max(r.finish_t - r.admit_t
+                                          - r.prefill_s, 0.0))
+            out.append(GenerationResult(
+                tokens=np.asarray(r.tokens, np.int64)[None, :], stats=stats))
+        return out
 
 
 def make_engine(model, params, policy: str, **kw) -> Engine:

@@ -1,0 +1,109 @@
+"""Continuous-batching scheduler: request queue + slot/block accounting.
+
+The scheduler is pure host-side bookkeeping — it decides *which* request
+enters *which* slot and when a slot retires; all array work (prefill
+adoption, the jitted spec round) stays in the engine. Separating the two
+keeps admission policy swappable (FCFS here) without touching jitted code.
+
+Admission is capacity-safe: a request is only admitted when the block pool
+can hold its **worst-case** footprint (every token of prompt + generation
+quantized), so the free stack can never underflow mid-decode, no matter
+how the ragged flush schedules interleave.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request and its lifecycle state."""
+
+    req_id: int
+    prompt: np.ndarray                  # [S] i32
+    max_new_tokens: int
+    # -- runtime ------------------------------------------------------------
+    slot: Optional[int] = None
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    proposed: int = 0
+    accepted: int = 0
+    rounds: int = 0
+    prefill_s: float = 0.0
+    admit_t: float = 0.0
+    finish_t: float = 0.0
+    done: bool = False
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def generated(self) -> int:
+        return len(self.tokens)
+
+
+class Scheduler:
+    """FCFS continuous-batching scheduler over ``num_slots`` request slots
+    and a pool of ``pool_blocks`` KV blocks (block size ``group``)."""
+
+    def __init__(self, num_slots: int, pool_blocks: int, group: int):
+        self.num_slots = num_slots
+        self.pool_blocks = pool_blocks
+        self.group = group
+        self.pending: Deque[Request] = deque()
+        self.active: Dict[int, Request] = {}
+        self.free_slots = list(range(num_slots))
+        self.reserved_blocks = 0
+        self._next_id = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int) -> Request:
+        req = Request(req_id=self._next_id, prompt=np.asarray(prompt),
+                      max_new_tokens=max_new_tokens)
+        bound = self.block_bound(req)
+        if bound > self.pool_blocks:
+            # would never be admissible — with FCFS it would livelock the
+            # queue, so reject at submission time
+            raise ValueError(
+                f"request needs up to {bound} KV blocks but the pool has "
+                f"{self.pool_blocks}; shorten the request or grow the pool")
+        self._next_id += 1
+        self.pending.append(req)
+        return req
+
+    def block_bound(self, req: Request) -> int:
+        """Worst-case pool blocks the request can ever own."""
+        total = req.prompt_len + req.max_new_tokens
+        return -(-total // self.group)
+
+    def next_admission(self) -> Optional[Request]:
+        """Pop the next admissible request, assigning it a slot, or None if
+        the head of the queue doesn't fit yet (FCFS — no overtaking)."""
+        if not self.pending or not self.free_slots:
+            return None
+        req = self.pending[0]
+        bound = self.block_bound(req)
+        if self.reserved_blocks + bound > self.pool_blocks:
+            return None
+        self.pending.popleft()
+        req.slot = self.free_slots.pop(0)
+        self.active[req.slot] = req
+        self.reserved_blocks += bound
+        return req
+
+    def retire(self, slot: int) -> Request:
+        req = self.active.pop(slot)
+        req.done = True
+        self.free_slots.append(slot)
+        self.free_slots.sort()
+        self.reserved_blocks -= self.block_bound(req)
+        return req
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.pending or self.active)

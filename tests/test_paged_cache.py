@@ -1,0 +1,224 @@
+"""Paged hierarchical KV cache: pool/block-table lifecycle + paged kernels.
+
+The dense `HierKVCache` is the oracle throughout: a slot that went through
+alloc → adopt → (plan/apply/commit)* → rollback must materialize to the
+same logical K/V stream a dense batch-1 cache produces under the same
+token schedule.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hier_kv_cache as HC
+from repro.core import paged_kv_cache as PC
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.kernels.quant_attention import paged_quant_region_attention
+from repro.models import common as L
+
+R, P, NBmax, G, H, D = 3, 10, 5, 8, 2, 16
+
+
+def rand(seed, shape):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape)
+
+
+def fresh():
+    return PC.init_table(R, NBmax, P), PC.init_pool(R, P, G, H, D)
+
+
+def admit(table, pool, slot, s, seed):
+    """Prefill a length-s request through the dense path into `slot`."""
+    k = rand(seed, (1, s, H, D))
+    v = rand(seed + 500, (1, s, H, D))
+    hier = HC.prefill(HC.init_cache(1, NBmax, G, H, D), k, v)
+    table, ids = PC.alloc_blocks(table, slot, int(hier.blocks))
+    pool = PC.adopt_hier(pool, slot, ids, hier)
+    table = PC.admit_slot(table, slot, s, int(hier.buf_len))
+    return table, pool, hier, (k, v)
+
+
+def slot_kv(pool, table, slot, mode="target"):
+    """Dense logical [S, H, D] view of one slot."""
+    k, v, valid, _ = PC.materialize_slots(pool, table, mode)
+    idx = np.where(np.asarray(valid[slot]))[0]
+    return np.asarray(k)[slot, idx], np.asarray(v)[slot, idx]
+
+
+class TestAdoption:
+    def test_adopt_matches_dense(self):
+        table, pool = fresh()
+        table, pool, hier, _ = admit(table, pool, 1, 2 * G + 5, seed=0)
+        pk, pv = slot_kv(pool, table, 1)
+        dk, dv, dvalid, _ = HC.materialize(hier, "target")
+        idx = np.where(np.asarray(dvalid))[0]
+        np.testing.assert_allclose(pk, np.asarray(dk)[0, idx], atol=1e-6)
+        np.testing.assert_allclose(pv, np.asarray(dv)[0, idx], atol=1e-6)
+
+    def test_alloc_respects_capacity(self):
+        table, _ = fresh()
+        with pytest.raises(RuntimeError):
+            PC.alloc_blocks(table, 0, P + 1)
+
+    def test_nbmax_bound(self):
+        table, _ = fresh()
+        with pytest.raises(RuntimeError):
+            PC.alloc_blocks(table, 0, NBmax + 1)
+
+
+class TestRaggedLifecycle:
+    def _dual(self, slots_lens, seeds):
+        """A paged table/pool + per-slot dense caches under one schedule."""
+        table, pool = fresh()
+        dense = {}
+        for (slot, s), seed in zip(slots_lens, seeds):
+            table, pool, hier, _ = admit(table, pool, slot, s, seed)
+            dense[slot] = hier
+        return table, pool, dense
+
+    def test_ragged_append_rollback_roundtrip(self):
+        slots = [(0, 2 * G + 2), (2, G + 5)]
+        table, pool, dense = self._dual(slots, seeds=[1, 2])
+        # append 3 tokens to every active slot, roll 2 back on slot 0 only
+        k = rand(10, (R, 3, H, D))
+        v = rand(11, (R, 3, H, D))
+        table, step = PC.plan_step(table, 3, G)
+        pool = PC.apply_step(pool, step, k, v)
+        table = PC.rollback(table, jnp.array([2, 0, 0]))
+        table = PC.commit(table, jnp.array([1, 3, 3]))  # net committed
+        for slot in (0, 2):
+            d = HC.maybe_flush(dense[slot], headroom=3)  # same flush rule
+            d = HC.append(d, k[slot:slot + 1], v[slot:slot + 1])
+            if slot == 0:
+                d = HC.rollback(d, 2)
+            pk, pv = slot_kv(pool, table, slot)
+            dk, dv, dvalid, _ = HC.materialize(d, "target")
+            idx = np.where(np.asarray(dvalid))[0]
+            np.testing.assert_allclose(pk, np.asarray(dk)[0, idx], atol=1e-6,
+                                       err_msg=f"slot {slot}")
+            np.testing.assert_allclose(pv, np.asarray(dv)[0, idx], atol=1e-6)
+
+    def test_ragged_flush_matches_dense(self):
+        """Slots flush on different steps; each must match its own dense
+        cache driven by the same appends."""
+        slots = [(0, 2 * G - 2), (1, G + 1)]
+        table, pool, dense = self._dual(slots, seeds=[3, 4])
+        for t in range(G + 3):
+            k = rand(100 + t, (R, 1, H, D))
+            v = rand(200 + t, (R, 1, H, D))
+            table, step = PC.plan_step(table, 1, G)
+            pool = PC.apply_step(pool, step, k, v)
+            table = PC.commit(table, jnp.ones((R,), jnp.int32))
+            for slot in (0, 1):
+                d = HC.maybe_flush(dense[slot], headroom=1)
+                dense[slot] = HC.append(d, k[slot:slot + 1], v[slot:slot + 1])
+        for slot in (0, 1):
+            assert int(table.blocks[slot]) == int(dense[slot].blocks)
+            pk, _ = slot_kv(pool, table, slot)
+            dk, _, dvalid, _ = HC.materialize(dense[slot], "target")
+            idx = np.where(np.asarray(dvalid))[0]
+            np.testing.assert_allclose(pk, np.asarray(dk)[0, idx], atol=1e-6,
+                                       err_msg=f"slot {slot}")
+
+    def test_free_returns_blocks_and_slot_reusable(self):
+        table, pool = fresh()
+        table, pool, _, _ = admit(table, pool, 0, 3 * G + 1, seed=5)
+        used = P - int(table.free_top)
+        assert used == int(table.blocks[0]) == 2
+        table = PC.free_slot(table, 0)
+        assert int(table.free_top) == P
+        assert not bool(table.active[0])
+        # re-admit a different request into the same slot
+        table, pool, hier, _ = admit(table, pool, 0, G + 3, seed=6)
+        pk, _ = slot_kv(pool, table, 0)
+        dk, _, dvalid, _ = HC.materialize(hier, "target")
+        idx = np.where(np.asarray(dvalid))[0]
+        np.testing.assert_allclose(pk, np.asarray(dk)[0, idx], atol=1e-6)
+
+    def test_inactive_slots_untouched(self):
+        table, pool = fresh()
+        table, pool, _, _ = admit(table, pool, 1, G + 2, seed=7)
+        before = (int(table.blocks[0]), int(table.buf_len[0]))
+        for t in range(2 * G):
+            k = rand(300 + t, (R, 1, H, D))
+            table, step = PC.plan_step(table, 1, G)
+            pool = PC.apply_step(pool, step, k, k)
+            table = PC.commit(table, jnp.ones((R,), jnp.int32))
+        assert (int(table.blocks[0]), int(table.buf_len[0])) == before
+        assert int(table.pos[0]) == 0
+
+    def test_plan_step_jits(self):
+        table, pool = fresh()
+        table, pool, _, _ = admit(table, pool, 0, 2 * G, seed=8)
+        f = jax.jit(lambda t: PC.plan_step(t, 1, G))
+        t2, step = f(table)
+        assert int(t2.buf_len[0]) == int(table.buf_len[0]) + 1
+
+
+class TestPagedKernel:
+    def _pool_setup(self, lens, seeds):
+        table, pool = fresh()
+        for slot, (s, seed) in enumerate(zip(lens, seeds)):
+            table, pool, _, _ = admit(table, pool, slot, s, seed)
+        return table, pool
+
+    @pytest.mark.parametrize("mode", ["draft", "target"])
+    def test_kernel_vs_ref(self, mode):
+        table, pool = self._pool_setup(
+            [3 * G + 2, 5, 2 * G + 1], seeds=[20, 21, 22])
+        planes = tuple(kops._pool_bh(x) for x in
+                       (pool.k_upper, pool.k_lower, pool.k_scale, pool.k_zero,
+                        pool.v_upper, pool.v_lower, pool.v_scale, pool.v_zero))
+        q = rand(30, (R * H, 4, D))
+        ok, ol = paged_quant_region_attention(
+            q, *planes, table.block_table, table.blocks, H, mode)
+        rk, rl = kref.paged_quant_region_attention_ref(
+            q, *planes, table.block_table, table.blocks, H, mode)
+        np.testing.assert_allclose(np.asarray(ok), np.asarray(rk),
+                                   atol=2e-5, rtol=2e-5)
+        np.testing.assert_allclose(np.asarray(ol), np.asarray(rl),
+                                   atol=2e-5, rtol=2e-5)
+
+    @pytest.mark.parametrize("Hq,T", [(H, 1), (2 * H, 4)])
+    def test_paged_attention_matches_flat(self, Hq, T):
+        """pallas paged path == flat jnp paged path on a real pool."""
+        table, pool = self._pool_setup([3 * G + 2, G + 4], seeds=[23, 24])
+        k = rand(31, (R, T, H, D))
+        v = rand(32, (R, T, H, D))
+        table, step = PC.plan_step(table, T, G)
+        pool = PC.apply_step(pool, step, k, v)
+        q = rand(33, (R, T, Hq, D))
+        for mode in ("draft", "target"):
+            flat = L.attend_hier_paged(q, pool, table, table.pos, mode,
+                                       impl="flat")
+            pallas = L.attend_hier_paged(q, pool, table, table.pos, mode,
+                                         impl="pallas")
+            # inactive slots (slot 2 here) are garbage by contract
+            np.testing.assert_allclose(np.asarray(pallas)[:2],
+                                       np.asarray(flat)[:2],
+                                       atol=3e-5, rtol=3e-5,
+                                       err_msg=f"mode={mode}")
+
+    def test_paged_flat_matches_dense_flat(self):
+        """One slot's paged attention == dense attention on the same data."""
+        table, pool = fresh()
+        s = 2 * G + 6
+        table, pool, hier, _ = admit(table, pool, 2, s, seed=25)
+        T = 2
+        k = rand(34, (1, T, H, D))
+        v = rand(35, (1, T, H, D))
+        kR = jnp.zeros((R, T, H, D)).at[2].set(k[0])
+        table, step = PC.plan_step(table, T, G)
+        pool = PC.apply_step(pool, step, kR,
+                             jnp.zeros((R, T, H, D)).at[2].set(v[0]))
+        dense = HC.append(HC.maybe_flush(hier, headroom=T), k, v)
+        q = rand(36, (1, T, H, D))
+        qR = jnp.zeros((R, T, H, D)).at[2].set(q[0])
+        for mode in ("draft", "target"):
+            got = L.attend_hier_paged(qR, pool, table, table.pos, mode)[2]
+            want = L.attend_hier(q, dense, s, mode)[0]
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       atol=1e-5, rtol=1e-5,
+                                       err_msg=f"mode={mode}")

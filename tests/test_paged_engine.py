@@ -1,0 +1,147 @@
+"""Continuous-batching engine: ragged requests joining and retiring
+mid-stream must produce greedy outputs token-identical to the static
+engine (continuous batching changes the schedule, not the math)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.stack import StackModel
+from repro.serving.engine import ContinuousEngine, Engine
+from repro.serving.scheduler import Scheduler
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("tiny-lm", smoke=True)
+    model = StackModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def make_prompts(cfg, lens):
+    return [np.asarray(jax.random.randint(
+        jax.random.fold_in(jax.random.PRNGKey(1), i), (s,), 0,
+        cfg.vocab_size)) for i, s in enumerate(lens)]
+
+
+class TestContinuousVsStatic:
+    def test_ragged_join_retire_token_identical(self, tiny):
+        cfg, model, params = tiny
+        G = cfg.group_size
+        lens = [2 * G + 5, G + 3, 17]          # ragged; flushes mid-stream
+        max_new = 8
+        max_seq = max(lens) + max_new + 2 * G + 8
+        prompts = make_prompts(cfg, lens)
+
+        static = []
+        for p in prompts:
+            eng = Engine(model, params, policy="quantspec", gamma=3,
+                         greedy=True, max_seq=max_seq)
+            res = eng.generate(jax.numpy.asarray(p)[None], max_new,
+                               key=jax.random.PRNGKey(7))
+            static.append(res.tokens[0])
+
+        # 2 slots for 3 requests → the third joins when a slot retires
+        ceng = ContinuousEngine(model, params, gamma=3, greedy=True,
+                                max_slots=2, max_seq=max_seq)
+        results = ceng.generate(prompts, max_new, key=jax.random.PRNGKey(7))
+        for i, r in enumerate(results):
+            np.testing.assert_array_equal(r.tokens[0], static[i],
+                                          err_msg=f"request {i}")
+            assert r.stats.generated == max_new
+            assert r.stats.rounds >= 1
+
+    def test_ar_mode(self, tiny):
+        """gamma=0 runs plain AR steps on the paged cache."""
+        cfg, model, params = tiny
+        G = cfg.group_size
+        max_seq = 64 + 2 * G
+        prompts = make_prompts(cfg, [11, 7])
+        static = []
+        for p in prompts:
+            eng = Engine(model, params, policy="quantspec", gamma=0,
+                         greedy=True, max_seq=max_seq)
+            res = eng.generate(jax.numpy.asarray(p)[None], 5,
+                               key=jax.random.PRNGKey(7), speculative=False)
+            static.append(res.tokens[0])
+        ceng = ContinuousEngine(model, params, gamma=0, greedy=True,
+                                max_slots=2, max_seq=max_seq)
+        results = ceng.generate(prompts, 5, key=jax.random.PRNGKey(7))
+        for i, r in enumerate(results):
+            np.testing.assert_array_equal(r.tokens[0], static[i])
+
+    def test_run_returns_requests_finished_in_manual_steps(self, tiny):
+        cfg, model, params = tiny
+        G = cfg.group_size
+        ceng = ContinuousEngine(model, params, gamma=2, greedy=True,
+                                max_slots=1, max_seq=2 * G)
+        req = ceng.submit(np.zeros(9, np.int32), 3)
+        key = ceng.step(jax.random.PRNGKey(0))   # may finish req entirely
+        done = ceng.run(key)
+        assert done == [req] and req.generated == 3
+
+    def test_max_new_zero_emits_nothing(self, tiny):
+        cfg, model, params = tiny
+        G = cfg.group_size
+        ceng = ContinuousEngine(model, params, gamma=2, greedy=True,
+                                max_slots=1, max_seq=2 * G)
+        (res,) = ceng.generate(make_prompts(cfg, [9]), 0)
+        assert res.tokens.shape[1] == 0
+        assert not ceng.scheduler.has_work
+
+    def test_pool_fully_freed_after_run(self, tiny):
+        cfg, model, params = tiny
+        G = cfg.group_size
+        ceng = ContinuousEngine(model, params, gamma=2, greedy=True,
+                                max_slots=2, max_seq=64 + 2 * G)
+        ceng.generate(make_prompts(cfg, [19, 23, 9]), 4,
+                      key=jax.random.PRNGKey(7))
+        assert int(ceng.table.free_top) == ceng.pool_blocks
+        assert not bool(np.asarray(ceng.table.active).any())
+        assert ceng.scheduler.reserved_blocks == 0
+
+
+class TestScheduler:
+    def test_fcfs_and_capacity(self):
+        sched = Scheduler(num_slots=2, pool_blocks=4, group=8)
+        a = sched.submit(np.zeros(16, np.int32), 8)   # bound = 3
+        b = sched.submit(np.zeros(8, np.int32), 8)    # bound = 2
+        assert sched.next_admission() is a
+        # b would need 2 more blocks; only 1 unreserved → blocked (FCFS)
+        assert sched.next_admission() is None
+        sched.retire(a.slot)
+        got = sched.next_admission()
+        assert got is b and b.slot == 0
+        assert sched.reserved_blocks == 2
+
+    def test_no_overtaking(self):
+        sched = Scheduler(num_slots=3, pool_blocks=4, group=8)
+        a = sched.submit(np.zeros(16, np.int32), 8)      # bound 3
+        big = sched.submit(np.zeros(24, np.int32), 8)    # bound 4 — fits an
+        small = sched.submit(np.zeros(8, np.int32), 0)   # empty pool; 1 blk
+        assert sched.next_admission() is a
+        assert sched.next_admission() is None            # head blocks queue
+        assert sched.pending[0] is big and small in sched.pending
+
+    def test_impossible_request_rejected_at_submit(self):
+        sched = Scheduler(num_slots=2, pool_blocks=3, group=8)
+        with pytest.raises(ValueError):                  # bound 4 > pool 3
+            sched.submit(np.zeros(24, np.int32), 8)
+
+    def test_gamma_exceeding_group_rejected(self, tiny):
+        cfg, model, params = tiny
+        with pytest.raises(ValueError):
+            ContinuousEngine(model, params, gamma=cfg.group_size,
+                             max_slots=1, max_seq=4 * cfg.group_size)
+        with pytest.raises(ValueError):
+            Engine(model, params, policy="quantspec", gamma=cfg.group_size)
+
+    def test_oversized_request_rejected_by_engine(self, tiny):
+        cfg, model, params = tiny
+        G = cfg.group_size
+        eng = ContinuousEngine(model, params, gamma=2, greedy=True,
+                               max_slots=1, max_seq=2 * G)
+        with pytest.raises(ValueError):
+            eng.submit(np.zeros(2 * G, np.int32), 8)

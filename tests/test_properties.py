@@ -3,7 +3,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis is an optional test dep")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import acceptance
 from repro.core import hier_kv_cache as HC

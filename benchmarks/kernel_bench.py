@@ -12,6 +12,8 @@ are the only overhead and TPU has no tail-quantization effects).
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -19,7 +21,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hier_kv_cache as HC
+from repro.core import weight_quant as WQ
 from repro.kernels import ops as kops
+from repro.kernels import quant_matmul as QM
 from repro.launch.mesh import HBM_BW
 from repro.models import common as L
 
@@ -59,7 +63,134 @@ def cpu_wall_us(S_small=2048, iters=3):
     return out
 
 
-def run(csv_rows):
+# ---------------------------------------------------------------------------
+# BENCH_decode.json — the decode hot path's perf trajectory (started by the
+# fused-kernel PR). Decode attention AND the draft matmul are ~60× below the
+# v5e ridge point, so projected rates are bytes-bound (bytes / 819 GB/s);
+# measured CPU columns are relative sanity only.
+# ---------------------------------------------------------------------------
+
+def weight_matmul_bytes(K, N, group=128, kind="fp16"):
+    """HBM bytes one decode token streams for a [K, N] weight."""
+    scales = 2 * 4.0 * (K // group) * N          # fp32 scale + zero
+    if kind == "fp16":
+        return 2.0 * K * N
+    if kind == "fused_int4":                      # packed plane + scales only
+        return 0.5 * K * N + scales
+    if kind == "dequant_int4":                    # + fp32 round-trip when the
+        return 0.5 * K * N + scales + 8.0 * K * N  # dequant materializes
+    raise ValueError(kind)
+
+
+def matmul_cpu_wall_us(M=4, K=2048, N=2048, iters=5):
+    """Relative CPU sanity: jit'd dequant+dot vs fp32 dot."""
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (K, N))
+    x = jax.random.normal(jax.random.fold_in(key, 1), (M, K))
+    q = WQ.quantize_weight(w)
+    out = {}
+    for name, f in (("dequant_dot", jax.jit(lambda x, q=q: x @ q.dequant())),
+                    ("fp32_dot", jax.jit(lambda x, w=w: x @ w))):
+        f(x).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            f(x).block_until_ready()
+        out[name] = (time.perf_counter() - t0) / iters * 1e6
+    return out
+
+
+def fused_parity_max_err(M=2, K=256, N=128, group=128):
+    """Interpret-mode fused kernel vs dequant()@x — the number the parity
+    tests bound (documents that the fast path is the same math)."""
+    key = jax.random.PRNGKey(2)
+    w = jax.random.normal(key, (K, N)) * 0.3
+    x = jax.random.normal(jax.random.fold_in(key, 1), (M, K))
+    q = WQ.quantize_weight(w, group=group)
+    got = QM.int4_matmul(x, q.packed, q.scale, q.zero)
+    ref = x @ q.dequant()
+    return float(jnp.max(jnp.abs(got - ref)))
+
+
+def decode_metrics(smoke: bool = False) -> dict:
+    """The BENCH_decode.json payload: HBM bytes/token + projected tokens/s
+    for the three attention precisions and the three matmul paths, plus a
+    whole-decode projection for a 7B-class model."""
+    Ss = (4096,) if smoke else (65536, 262144, 524288)
+    attention = {}
+    for S in Ss:
+        row = {}
+        for mode, kind in (("fp16", "fp16"), ("int8_target", "int8"),
+                           ("int4_draft", "int4")):
+            b = kv_bytes(S, kind)
+            row[mode] = {"bytes_per_token": b,
+                         "proj_tokens_per_s": HBM_BW / b}
+        for mode in ("int8_target", "int4_draft"):
+            row[mode]["speedup_vs_fp16"] = (row["fp16"]["bytes_per_token"]
+                                            / row[mode]["bytes_per_token"])
+        # single-pass saving vs the old two-pass path: second out+lse write,
+        # re-read of both partial outputs for the merge, and the
+        # materialized [B·H, gT, 2G] FP-buffer mask
+        BH, gT = H, 1
+        two_pass_extra = (BH * gT * (D + 1) * 4        # buffer-pass out + lse
+                          + 3 * BH * gT * D * 4        # LSE-merge traffic
+                          + BH * gT * 2 * G)           # bool mask
+        row["single_pass_saved_bytes_per_token"] = float(two_pass_extra)
+        attention[f"S={S}"] = row
+
+    K = N = 1024 if smoke else 4096
+    matmul = {
+        "shape": {"d_in": K, "d_out": N, "group": 128},
+        "bytes_per_token": {
+            kind: weight_matmul_bytes(K, N, kind=kind)
+            for kind in ("fp16", "fused_int4", "dequant_int4")},
+        "interpret_parity_max_err": fused_parity_max_err(),
+    }
+    bpt = matmul["bytes_per_token"]
+    matmul["proj_speedup"] = {
+        "fused_vs_fp16": bpt["fp16"] / bpt["fused_int4"],
+        "fused_vs_dequant": bpt["dequant_int4"] / bpt["fused_int4"],
+    }
+    if not smoke:
+        matmul["measured_cpu_us"] = matmul_cpu_wall_us()
+
+    # whole-decode projection (7B-class, weights + KV both streamed/token)
+    n_params = 7e9
+    S_ref = Ss[0]
+    decode = {}
+    for name, wb, kv in (
+            ("fp16_baseline", 2.0 * n_params, kv_bytes(S_ref, "fp16")),
+            ("draft_int4", (0.5 + 8.0 / 128) * n_params,
+             kv_bytes(S_ref, "int4")),
+            ("target_verify", 2.0 * n_params, kv_bytes(S_ref, "int8"))):
+        b = wb + 32 * kv                     # 32 layers' attention
+        decode[name] = {"bytes_per_token": b, "proj_tokens_per_s": HBM_BW / b}
+    decode["meta"] = {"n_params": n_params, "layers": 32, "S": S_ref,
+                      "note": "int4 weight bytes include 1/16 group-scale "
+                              "overhead (fp32 scale+zero per 128-group)"}
+
+    return {
+        "meta": {"H": H, "D": D, "G": G, "hbm_bw_bytes_per_s": HBM_BW,
+                 "smoke": smoke, "source": "benchmarks/kernel_bench.py "
+                 "(projection: decode is bandwidth-bound, see "
+                 "arithmetic_intensity.py)"},
+        "attention": attention,
+        "matmul": matmul,
+        "decode_projection": decode,
+    }
+
+
+def write_decode_json(path: str, smoke: bool = False) -> dict:
+    m = decode_metrics(smoke=smoke)
+    with open(path, "w") as f:
+        json.dump(m, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"\nwrote {path} (attention {len(m['attention'])} context sizes, "
+          f"fused-vs-fp16 matmul {m['matmul']['proj_speedup']['fused_vs_fp16']:.2f}x, "
+          f"parity max err {m['matmul']['interpret_parity_max_err']:.1e})")
+    return m
+
+
+def run(csv_rows, json_path="BENCH_decode.json"):
     print("\n# Table 4 — attention kernel: projected TPU-v5e latency "
           "(bytes / 819 GB/s), B=1, 32 heads, head_dim 128")
     print(f"{'kernel':<24} {'64k':>12} {'256k':>12} {'512k':>12}")
@@ -86,8 +217,36 @@ def run(csv_rows):
           f"target {wall['target']:.0f}us")
     csv_rows.append(("tab4_cpu_sanity", "draft_vs_target",
                      f"{wall['draft']:.1f};{wall['target']:.1f}"))
+
+    # ---- decode hot path (fused matmul + single-pass attention) ------------
+    m = write_decode_json(json_path)
+    bpt = m["matmul"]["bytes_per_token"]
+    print(f"\n# decode matmul (d={m['matmul']['shape']['d_in']}): "
+          f"HBM bytes/token fp16 {bpt['fp16']/1e6:.1f}MB, fused INT4 "
+          f"{bpt['fused_int4']/1e6:.1f}MB "
+          f"({m['matmul']['proj_speedup']['fused_vs_fp16']:.2f}x), "
+          f"unfused dequant {bpt['dequant_int4']/1e6:.1f}MB")
+    for kind in ("fp16", "fused_int4", "dequant_int4"):
+        csv_rows.append(("decode_matmul", kind, f"{bpt[kind]:.0f}"))
+    for name, row in m["decode_projection"].items():
+        if name != "meta":
+            csv_rows.append(("decode_proj", name,
+                             f"{row['proj_tokens_per_s']:.1f}"))
     return csv_rows
 
 
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_decode.json",
+                    help="where to write the decode-hot-path metrics")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes + skip CPU wall timing (CI)")
+    args = ap.parse_args()
+    if args.smoke:
+        write_decode_json(args.json, smoke=True)
+    else:
+        run([], json_path=args.json)
+
+
 if __name__ == "__main__":
-    run([])
+    main()

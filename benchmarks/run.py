@@ -9,6 +9,7 @@ Emits human-readable tables per benchmark plus a final
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 
@@ -55,6 +56,12 @@ def main() -> None:
     for name, variant, derived in csv_rows:
         us = timings.get(prefix.get(name, ""), 0.0) * 1e6
         print(f"{name}.{variant},{us:.0f},{derived}")
+
+    # kernel_bench's decode section wrote the perf-trajectory artifact
+    assert os.path.exists("BENCH_decode.json"), \
+        "kernel_bench did not emit BENCH_decode.json"
+    print(f"\ndecode hot-path metrics: BENCH_decode.json "
+          f"({os.path.getsize('BENCH_decode.json')} bytes)")
 
 
 if __name__ == "__main__":

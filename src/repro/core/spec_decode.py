@@ -52,21 +52,25 @@ def spec_round(model, target_params, draft_params, state, last_token,
     keys = jax.random.split(key, gamma + 2)
 
     # ---- 1. draft γ tokens -------------------------------------------------
-    draft_state = state
-    cur = last_token
-    toks, qlist = [], []
-    for i in range(gamma):
-        dl, draft_state, _ = model.decode(
-            draft_params, cur, draft_state, stream_pos + i,
+    # One traced step + lax.scan over γ: trace/compile time is constant in
+    # gamma instead of linear (the γ-unrolled loop re-traced the whole
+    # decode stack per draft token).
+    def draft_step(carry, inp):
+        d_state, cur = carry
+        i, k_i = inp
+        dl, d_state, _ = model.decode(
+            draft_params, cur, d_state, stream_pos + i,
             kv_mode="draft", policy=policy, ctx_kw=ctx_kw)
         logits = dl[:, -1] / temperature
-        nxt = sample_token(logits, keys[i], greedy)       # [B] or [B, K]
+        nxt = sample_token(logits, k_i, greedy)           # [B] or [B, K]
         q = jax.nn.softmax(logits, axis=-1)
-        toks.append(nxt)
-        qlist.append(q)
-        cur = nxt[:, None]
-    draft_tokens = jnp.stack(toks, axis=1)                # [B, γ(,K)]
-    draft_probs = jnp.stack(qlist, axis=1)                # [B, γ(,K), V]
+        return (d_state, nxt[:, None].astype(cur.dtype)), (nxt, q)
+
+    _, (toks, qlist) = jax.lax.scan(
+        draft_step, (state, last_token),
+        (jnp.arange(gamma), keys[:gamma]))
+    draft_tokens = jnp.moveaxis(toks, 0, 1)               # [B, γ(,K)]
+    draft_probs = jnp.moveaxis(qlist, 0, 1)               # [B, γ(,K), V]
 
     # ---- 2. target verifies in one pass ------------------------------------
     tgt_in = jnp.concatenate([last_token, draft_tokens], axis=1)  # [B, γ+1]
@@ -125,19 +129,23 @@ def paged_spec_round(model, target_params, draft_params, state, table,
         return logits, new_st, tbl2
 
     # ---- 1. draft γ tokens (cache writes discarded wholesale) --------------
-    d_state, d_table = state, table
-    cur = last_token
-    toks, qlist = [], []
-    for i in range(gamma):
+    # lax.scan over γ (constant-in-gamma trace/compile, same as spec_round);
+    # the per-slot table rides in the carry so flush decisions chain.
+    def draft_step(carry, inp):
+        d_state, d_table, cur = carry
+        i, k_i = inp
         dl, d_state, d_table = run(draft_params, cur, d_state, d_table,
                                    table.pos + i, "draft", 1)
         logits = dl[:, -1] / temperature
-        nxt = sample_token(logits, keys[i], greedy)            # [R]
-        toks.append(nxt)
-        qlist.append(jax.nn.softmax(logits, axis=-1))
-        cur = nxt[:, None]
-    draft_tokens = jnp.stack(toks, axis=1)                     # [R, γ]
-    draft_probs = jnp.stack(qlist, axis=1)                     # [R, γ, V]
+        nxt = sample_token(logits, k_i, greedy)                # [R]
+        q = jax.nn.softmax(logits, axis=-1)
+        return (d_state, d_table, nxt[:, None].astype(cur.dtype)), (nxt, q)
+
+    _, (toks, qlist) = jax.lax.scan(
+        draft_step, (state, table, last_token),
+        (jnp.arange(gamma), keys[:gamma]))
+    draft_tokens = jnp.moveaxis(toks, 0, 1)                    # [R, γ]
+    draft_probs = jnp.moveaxis(qlist, 0, 1)                    # [R, γ, V]
 
     # ---- 2. target verifies all γ+1 positions in one pass ------------------
     tgt_in = jnp.concatenate([last_token, draft_tokens], axis=1)

@@ -12,6 +12,8 @@ fusion for the `dequant → dot` pattern, see benchmarks/kernel_bench.py).
 
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 
@@ -48,8 +50,20 @@ class Int4Weight:
 
     @property
     def nbytes(self):
-        return (self.packed.size + 4 * self.scale.size + 4 * self.zero.size
-                if hasattr(self.packed, "size") else 0)
+        if not hasattr(self.packed, "size"):
+            return 0
+        return (self.packed.size * self.packed.dtype.itemsize
+                + self.scale.size * self.scale.dtype.itemsize
+                + self.zero.size * self.zero.dtype.itemsize)
+
+    def compression_ratio(self, ref_dtype=jnp.float16) -> float:
+        """Full-precision bytes / quantized bytes (scales included)."""
+        if not hasattr(self.packed, "size") or self.nbytes == 0:
+            return 1.0
+        n_elem = 1
+        for d in self.shape:
+            n_elem *= d
+        return n_elem * jnp.dtype(ref_dtype).itemsize / self.nbytes
 
     def dequant(self, dtype=jnp.float32) -> jnp.ndarray:
         p = self.packed
@@ -105,3 +119,57 @@ def resolve(w, dtype=jnp.float32) -> jnp.ndarray:
     if isinstance(w, Int4Weight):
         return w.dequant(dtype)
     return w.astype(dtype)
+
+
+def tree_compression(params, ref_dtype=jnp.float16):
+    """Aggregate (quant_bytes, fp_bytes, ratio) over a param pytree —
+    benchmark helper for the weight-bandwidth story."""
+    qb = fb = 0
+    leaves = jax.tree_util.tree_leaves(
+        params, is_leaf=lambda x: isinstance(x, Int4Weight))
+    for leaf in leaves:
+        if isinstance(leaf, Int4Weight):
+            qb += int(leaf.nbytes)
+            n = 1
+            for d in leaf.shape:
+                n *= d
+            fb += n * jnp.dtype(ref_dtype).itemsize
+        elif hasattr(leaf, "size"):
+            b = leaf.size * jnp.dtype(leaf.dtype).itemsize
+            qb += b
+            fb += b
+    return qb, fb, (fb / qb if qb else 1.0)
+
+
+# ---------------------------------------------------------------------------
+# the draft matmul hot path
+# ---------------------------------------------------------------------------
+
+def matmul_impl() -> str:
+    """Which INT4 matmul runs: 'fused' (Pallas, compiled on TPU / interpret
+    elsewhere) or 'dequant' (materialize + dot, XLA fuses on TPU).
+
+    REPRO_QUANT_MATMUL ∈ {auto, fused, dequant} overrides; 'auto' picks
+    fused only on a real TPU backend — in interpret mode the kernel is a
+    parity tool, not a fast path."""
+    impl = os.environ.get("REPRO_QUANT_MATMUL", "auto")
+    if impl == "auto":
+        return "fused" if jax.default_backend() == "tpu" else "dequant"
+    return impl
+
+
+def matmul(x: jnp.ndarray, w) -> jnp.ndarray:
+    """``x [..., d_in] @ w`` where ``w`` may be an :class:`Int4Weight`.
+
+    Quantized 2-D weights route through the fused Pallas dequant×matmul
+    kernel (kernels/quant_matmul.py) when enabled; everything else falls
+    back to ``dequant() @ x`` (the jnp reference the kernel is tested
+    against)."""
+    if not isinstance(w, Int4Weight):
+        return x @ w.astype(x.dtype)
+    if matmul_impl() == "fused":
+        from repro.kernels import quant_matmul as QM
+        if QM.supports(x, w):
+            return QM.fused_matmul(x, w,
+                                   interpret=jax.default_backend() != "tpu")
+    return x @ w.dequant(x.dtype)

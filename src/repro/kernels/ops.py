@@ -1,30 +1,28 @@
 """jit'd wrappers tying the Pallas kernels to the cache/model layer.
 
 `hier_attention` implements the same contract as
-`models.common.attend_hier` (impl="pallas"): Pallas flash-decoding over the
-quantized region + one jnp flash chunk for the FP buffer, merged by
-log-sum-exp (paper App. E).
+`models.common.attend_hier` (impl="pallas"): one single-pass Pallas flash
+kernel over the *entire* hierarchical cache — quantized region + FP recent
+buffer — with the buffer handled as trailing grid steps of the same online
+softmax (no second jnp pass, no materialized ``[B·H, γ·g, 2G]`` mask, no
+log-sum-exp merge).
 
 `paged_hier_attention` is the block-table analogue over a
-`core.paged_kv_cache` pool: the Pallas kernel gathers each sequence's pool
-blocks through a scalar-prefetched block table, and the per-slot FP buffers
-form the extra flash chunk (per-slot stream positions — continuous
-batching is ragged).
+`core.paged_kv_cache` pool: the kernel gathers each sequence's pool blocks
+through a scalar-prefetched block table and folds the per-slot FP buffers
+in the same pass (per-slot stream positions — continuous batching is
+ragged).
 """
 
 from __future__ import annotations
 
-import math
-from functools import partial
-
-import jax
 import jax.numpy as jnp
 
 from repro.core.hier_kv_cache import HierKVCache
 from repro.core.paged_kv_cache import PagedKVPool, PageTable
 from repro.kernels.quant_attention import (
-    paged_quant_region_attention,
-    quant_region_attention,
+    hier_flash_attention,
+    paged_hier_flash_attention,
 )
 
 
@@ -34,40 +32,13 @@ def _bh(x):
     return x.transpose(0, 3, 1, 2, 4).reshape(B * H, NB, G, X)
 
 
-def _attention_with_lse(q, k, v, mask):
-    """q [BH,gT,D]; k,v [BH,S,D]; mask [BH,gT,S] (True=attend).
-    Returns normalized out + lse (−inf where no key valid)."""
-    D = q.shape[-1]
-    s = jnp.einsum("btd,bsd->bts", q.astype(jnp.float32),
-                   k.astype(jnp.float32)) / math.sqrt(D)
-    s = jnp.where(mask, s, -jnp.inf)
-    m = jnp.max(s, axis=-1)
-    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
-    p = jnp.where(mask, jnp.exp(s - m_safe[..., None]), 0.0)
-    l = jnp.sum(p, axis=-1)
-    out = jnp.einsum("bts,bsd->btd", p, v.astype(jnp.float32))
-    out = out / jnp.maximum(l, 1e-30)[..., None]
-    lse = jnp.where(l > 0, m_safe + jnp.log(jnp.maximum(l, 1e-30)), -jnp.inf)
-    return out, lse
-
-
-def _combine(out_a, lse_a, out_b, lse_b, dtype):
-    m = jnp.maximum(lse_a, lse_b)
-    m = jnp.where(jnp.isfinite(m), m, 0.0)
-    wa = jnp.exp(lse_a - m)[..., None]
-    wb = jnp.exp(lse_b - m)[..., None]
-    out = (out_a.astype(jnp.float32) * wa + out_b.astype(jnp.float32) * wb) \
-        / jnp.maximum(wa + wb, 1e-30)
-    return out.astype(dtype)
-
-
 def hier_attention(q, cache: HierKVCache, stream_pos, mode: str,
                    softcap: float = 0.0, interpret: bool = True):
     """q [B, T, Hq, D] over a hierarchical cache (post-append).
 
-    Draft mode streams 4 bits/KV element through the kernel, target mode 8 —
-    the QuantSpec bandwidth win. Softcap is not fused (only needed by archs
-    with softcap=0 here)."""
+    Draft mode streams 4 bits/KV element through the kernel (the lower
+    plane is not an operand), target mode 8 — the QuantSpec bandwidth win.
+    Softcap is not fused (only needed by archs with softcap=0 here)."""
     if softcap != 0.0:
         raise NotImplementedError("softcap not fused in the Pallas kernel")
     B, T, Hq, D = q.shape
@@ -75,30 +46,21 @@ def hier_attention(q, cache: HierKVCache, stream_pos, mode: str,
     g = Hq // H
     G = cache.group
 
-    # ---- quantized region via Pallas ---------------------------------------
     qr = q.reshape(B, T, H, g, D).transpose(0, 2, 3, 1, 4)  # [B,H,g,T,D]
     qr = qr.reshape(B * H, g * T, D)
-    out_q, lse_q = quant_region_attention(
+    buf_k = cache.buf_k.transpose(0, 2, 1, 3).reshape(B * H, 2 * G, D)
+    buf_v = cache.buf_v.transpose(0, 2, 1, 3).reshape(B * H, 2 * G, D)
+
+    out = hier_flash_attention(
         qr,
         _bh(cache.k_upper), _bh(cache.k_lower),
         _bh(cache.k_scale), _bh(cache.k_zero),
         _bh(cache.v_upper), _bh(cache.v_lower),
         _bh(cache.v_scale), _bh(cache.v_zero),
-        cache.blocks, mode, interpret=interpret)
+        buf_k, buf_v,
+        cache.blocks, cache.buf_len, stream_pos, T, mode,
+        interpret=interpret)                                  # [BH, gT, D]
 
-    # ---- FP buffer chunk ----------------------------------------------------
-    buf_k = cache.buf_k.transpose(0, 2, 1, 3).reshape(B * H, 2 * G, D)
-    buf_v = cache.buf_v.transpose(0, 2, 1, 3).reshape(B * H, 2 * G, D)
-    quant_len = cache.blocks * G
-    t_idx = jnp.arange(g * T) % T
-    q_pos = stream_pos + t_idx                                # [gT]
-    j = jnp.arange(2 * G)
-    mask = (j[None, :] < cache.buf_len) & \
-           (quant_len + j[None, :] <= q_pos[:, None])         # [gT, 2G]
-    mask = jnp.broadcast_to(mask[None], (B * H, g * T, 2 * G))
-    out_b, lse_b = _attention_with_lse(qr, buf_k, buf_v, mask)
-
-    out = _combine(out_q, lse_q, out_b, lse_b, q.dtype)       # [BH, gT, D]
     out = out.reshape(B, H, g, T, D).transpose(0, 3, 1, 2, 4)
     return out.reshape(B, T, Hq, D)
 
@@ -115,9 +77,9 @@ def paged_hier_attention(q, pool: PagedKVPool, table: PageTable, stream_pos,
     """q [R, T, Hq, D] over a paged hierarchical cache (post-`apply_step`).
 
     `stream_pos` is per-slot [R] — the stream position of each slot's first
-    query token (requests progress raggedly under continuous batching). The
-    quantized pool is streamed through the block-table Pallas kernel; each
-    slot's FP buffer is one extra flash chunk merged by log-sum-exp."""
+    query token (requests progress raggedly under continuous batching).
+    Quantized pool blocks and each slot's FP buffer stream through one
+    single-pass block-table kernel."""
     if softcap != 0.0:
         raise NotImplementedError("softcap not fused in the Pallas kernel")
     R, T, Hq, D = q.shape
@@ -125,31 +87,21 @@ def paged_hier_attention(q, pool: PagedKVPool, table: PageTable, stream_pos,
     g = Hq // H
     G = pool.group
 
-    # ---- paged quantized region via Pallas ---------------------------------
     qr = q.reshape(R, T, H, g, D).transpose(0, 2, 3, 1, 4)   # [R,H,g,T,D]
     qr = qr.reshape(R * H, g * T, D)
-    out_q, lse_q = paged_quant_region_attention(
+    buf_k = pool.buf_k.transpose(0, 2, 1, 3).reshape(R * H, 2 * G, D)
+    buf_v = pool.buf_v.transpose(0, 2, 1, 3).reshape(R * H, 2 * G, D)
+
+    out = paged_hier_flash_attention(
         qr,
         _pool_bh(pool.k_upper), _pool_bh(pool.k_lower),
         _pool_bh(pool.k_scale), _pool_bh(pool.k_zero),
         _pool_bh(pool.v_upper), _pool_bh(pool.v_lower),
         _pool_bh(pool.v_scale), _pool_bh(pool.v_zero),
-        table.block_table, table.blocks, H, mode, interpret=interpret)
+        buf_k, buf_v,
+        table.block_table, table.blocks, table.buf_len,
+        jnp.asarray(stream_pos, jnp.int32), H, T, mode,
+        interpret=interpret)                                  # [RH, gT, D]
 
-    # ---- per-slot FP buffer chunk ------------------------------------------
-    buf_k = pool.buf_k.transpose(0, 2, 1, 3).reshape(R * H, 2 * G, D)
-    buf_v = pool.buf_v.transpose(0, 2, 1, 3).reshape(R * H, 2 * G, D)
-    quant_len = table.blocks * G                              # [R]
-    t_idx = jnp.arange(g * T) % T
-    q_pos = jnp.asarray(stream_pos, jnp.int32)[:, None] + t_idx[None]  # [R,gT]
-    j = jnp.arange(2 * G)
-    mask = (j[None, None, :] < table.buf_len[:, None, None]) & \
-           (quant_len[:, None, None] + j[None, None, :]
-            <= q_pos[:, :, None])                             # [R, gT, 2G]
-    mask = jnp.broadcast_to(mask[:, None], (R, H, g * T, 2 * G))
-    mask = mask.reshape(R * H, g * T, 2 * G)
-    out_b, lse_b = _attention_with_lse(qr, buf_k, buf_v, mask)
-
-    out = _combine(out_q, lse_q, out_b, lse_b, q.dtype)       # [RH, gT, D]
     out = out.reshape(R, H, g, T, D).transpose(0, 3, 1, 2, 4)
     return out.reshape(R, T, Hq, D)

@@ -1,30 +1,41 @@
-"""Pallas TPU kernel: flash-decoding attention over the hierarchical
-quantized KV region (QuantSpec §5.2.1, adapted to TPU).
+"""Pallas TPU kernels: single-pass flash-decoding attention over the
+hierarchical quantized KV cache (QuantSpec §5.2.1, adapted to TPU).
 
-Grid = (B·H_kv, NB): the KV-block axis is innermost, so each (batch, head)
-streams its quantized blocks through VMEM once, carrying the online-softmax
-state (m, l, acc) in VMEM scratch across grid steps — the TPU analogue of
-FlashDecoding's split-K loop.
+One kernel invocation covers the **whole** hierarchical cache — the
+quantized region *and* the recent-token FP buffer — as one online-softmax
+loop.  Grid = (B·H_kv, NSTEPS) with ``NSTEPS = NB/KB + 2``: the first
+``NB/KB`` steps stream the quantized blocks (``KB ≥ 2`` quant groups per
+step, so each (batch, head) DMAs wider tiles and amortizes the scale/zero
+loads), the trailing 2 steps run the FP double buffer (one G-token chunk
+each) through the *same* flash loop with per-position causal/validity
+masking in-kernel.  The softmax state (m, l, acc) is carried in VMEM
+scratch across all steps, so there is no separate FP pass, no
+``[B·H, γ·g, 2G]`` mask materialization, and no log-sum-exp merge — the
+App.-E combine happens implicitly in the running state.
 
-Per grid step the kernel loads the *packed* planes:
+Per quant step the kernel loads the *packed* planes:
     draft  mode: upper plane only  — 4 bits/element off HBM
     target mode: upper + lower     — 8 bits/element
-and dequantizes in-register after the VMEM copy; the MXU sees fp32 tiles of
-[G, D] with G = quant group (128) and D = head_dim (128) — both
-hardware-aligned. This is where the paper's 2.88×/1.51× bandwidth win
-comes from: bytes moved per KV element drop 4×/2× vs fp16.
+and dequantizes in-register after the VMEM copy (in draft mode the lower
+plane is **not an operand at all**, so its bytes never cross HBM — this is
+where the paper's 2.88×/1.51× bandwidth win comes from).
 
-The recent-token FP buffer (≤ 2G tokens) is handled outside the kernel as
-one extra flash chunk and merged via log-sum-exp (App. E of the paper).
+Two variants share the kernel body math (`_dequant` / `_fold`):
+  * `hier_flash_attention` — contiguous per-request regions
+    (``[B·H, NB, …]``; KB-wide BlockSpecs along the block axis).
+  * `paged_hier_flash_attention` — a global block pool addressed through a
+    scalar-prefetched per-sequence block table.  Pool blocks owned by a
+    sequence are scattered, so KB-wide tiles arrive as KB *lanes*: the pool
+    planes are passed KB times with lane-shifted index maps and folded
+    sequentially inside one grid step.
 
-Two variants share the kernel body math:
-  * `quant_region_attention` — contiguous per-request regions ([B·H, NB, …]).
-  * `paged_quant_region_attention` — a global block pool addressed through a
-    scalar-prefetched per-sequence block table (paged-attention layout); the
-    BlockSpec index maps dereference the table so each grid step DMAs the
-    owning pool block directly, with per-sequence valid-block counts.
+The legacy two-pass kernels (`quant_region_attention`,
+`paged_quant_region_attention`) are kept at the bottom of this module as
+the old-path baseline for parity tests and benchmarks; the serving paths
+(`kernels/ops.py`) only call the single-pass kernels.
 
-Validated in interpret mode against kernels/ref.py.
+Validated in interpret mode against kernels/ref.py and the flat jnp
+attention (tests/test_kernels.py, tests/test_paged_cache.py).
 """
 
 from __future__ import annotations
@@ -40,54 +51,357 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+# ---------------------------------------------------------------------------
+# shared kernel-body math
+# ---------------------------------------------------------------------------
+
 def _flash_init(m_scr, l_scr, acc_scr):
     m_scr[...] = jnp.full_like(m_scr, NEG_INF)
     l_scr[...] = jnp.zeros_like(l_scr)
     acc_scr[...] = jnp.zeros_like(acc_scr)
 
 
-def _flash_block_update(q_ref, ku_ref, kl_ref, ks_ref, kz_ref,
-                        vu_ref, vl_ref, vs_ref, vz_ref,
-                        m_scr, l_scr, acc_scr, *, mode: str, ix: tuple):
-    """Dequantize one KV block and fold it into the online-softmax state.
+def _dequant(u, low, s, z, mode: str):
+    """Dequantize packed planes ``[..., G, D//2]`` → fp32 ``[..., G, D]``.
 
-    Shared by the contiguous and paged kernels; ``ix`` is the ref index of
-    the current block's data (the paged specs carry one fewer leading
-    block axis)."""
-    q = q_ref[0].astype(jnp.float32)                  # [gT, D]
-    D = q.shape[-1]
+    Halves nibble layout (element j in the hi nibble of column j, element
+    D/2+j in the lo nibble); ``low`` is None in draft mode."""
+    hi = (u >> 4).astype(jnp.float32)
+    lo = (u & 0xF).astype(jnp.float32)
+    quf = jnp.concatenate([hi, lo], axis=-1)
+    s = s.astype(jnp.float32)
+    z = z.astype(jnp.float32)
+    if mode == "draft":
+        return quf * s + z
+    lhi = (low >> 4).astype(jnp.float32)
+    llo = (low & 0xF).astype(jnp.float32)
+    qlf = jnp.concatenate([lhi, llo], axis=-1) - 8.0
+    return (16.0 * quf + qlf) * (s / 16.0) + z
 
-    def dequant(u_ref, l_ref, s_ref, z_ref):
-        qu = u_ref[ix]
-        hi = (qu >> 4).astype(jnp.float32)
-        lo = (qu & 0xF).astype(jnp.float32)
-        quf = jnp.concatenate([hi, lo], axis=-1)      # [G, D]
-        s = s_ref[ix].astype(jnp.float32)
-        z = z_ref[ix].astype(jnp.float32)
-        if mode == "draft":
-            return quf * s + z
-        ql = l_ref[ix]
-        lhi = (ql >> 4).astype(jnp.float32)
-        llo = (ql & 0xF).astype(jnp.float32)
-        qlf = jnp.concatenate([lhi, llo], axis=-1) - 8.0
-        return (16.0 * quf + qlf) * (s / 16.0) + z
 
-    k = dequant(ku_ref, kl_ref, ks_ref, kz_ref)       # [G, D]
-    v = dequant(vu_ref, vl_ref, vs_ref, vz_ref)       # [G, D]
-
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32)
-    s = s / math.sqrt(D)                               # [gT, G]
-
+def _fold(s, v, mask, m_scr, l_scr, acc_scr):
+    """Fold one score tile ``s [gT, W]`` / value tile ``v [W, D]`` into the
+    online-softmax state. ``mask`` (True = attend) may be None = all valid."""
+    if mask is not None:
+        s = jnp.where(mask, s, NEG_INF)
     m_prev = m_scr[...]                                # [gT, 1]
     m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
     alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(s - m_new)                             # [gT, G]
+    p = jnp.exp(s - m_new)                             # [gT, W]
+    if mask is not None:
+        p = jnp.where(mask, p, 0.0)
     l_scr[...] = l_scr[...] * alpha + jnp.sum(p, -1, keepdims=True)
     acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
     m_scr[...] = m_new
+
+
+def _flash_out(out_ref, m_scr, l_scr, acc_scr):
+    l = l_scr[...]
+    out_ref[0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(out_ref.dtype)
+
+
+def _plane_args(mode: str, ku, kl, ks, kz, vu, vl, vs, vz):
+    """Operand order for one plane set; draft mode drops the lower planes
+    so their bytes never leave HBM."""
+    if mode == "draft":
+        return [ku, ks, kz, vu, vs, vz]
+    return [ku, kl, ks, kz, vu, vl, vs, vz]
+
+
+def _unpack_lane(mode: str, lane):
+    if mode == "draft":
+        ku, ks, kz, vu, vs, vz = lane
+        kl = vl = None
+    else:
+        ku, kl, ks, kz, vu, vl, vs, vz = lane
+    return ku, kl, ks, kz, vu, vl, vs, vz
+
+
+# ---------------------------------------------------------------------------
+# single-pass contiguous kernel
+# ---------------------------------------------------------------------------
+
+def _hier_kernel(meta_ref, q_ref, *rest, mode: str, T: int, KB: int,
+                 NBQ: int, G: int):
+    n_planes = 6 if mode == "draft" else 8
+    lane = rest[:n_planes]
+    bk_ref, bv_ref, out_ref, m_scr, l_scr, acc_scr = rest[n_planes:]
+    ku, kl, ks, kz, vu, vl, vs, vz = _unpack_lane(mode, lane)
+
+    j = pl.program_id(1)
+    blocks = meta_ref[0]
+    buf_len = meta_ref[1]
+    spos = meta_ref[2]
+
+    @pl.when(j == 0)
+    def _init():
+        _flash_init(m_scr, l_scr, acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                   # [gT, D]
+    gT, D = q.shape
+    inv_sqrt_d = 1.0 / math.sqrt(D)
+
+    @pl.when((j < NBQ) & (j * KB < blocks))
+    def _quant_step():
+        k = _dequant(ku[0], None if kl is None else kl[0],
+                     ks[0], kz[0], mode)               # [KB, G, D]
+        v = _dequant(vu[0], None if vl is None else vl[0],
+                     vs[0], vz[0], mode)
+        k = k.reshape(KB * G, D)
+        v = v.reshape(KB * G, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * inv_sqrt_d                             # [gT, KB*G]
+        if KB > 1:
+            grp = jax.lax.broadcasted_iota(
+                jnp.int32, (gT, KB * G), 1) // G + j * KB
+            mask = grp < blocks
+        else:
+            mask = None                                # step guard is exact
+        _fold(s, v, mask, m_scr, l_scr, acc_scr)
+
+    @pl.when((j >= NBQ) & ((j - NBQ) * G < buf_len))
+    def _buffer_step():
+        c = j - NBQ                                    # chunk 0 = C_F1, 1 = C_F2
+        k = bk_ref[0].astype(jnp.float32)              # [G, D]
+        v = bv_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * inv_sqrt_d                             # [gT, G]
+        col = jax.lax.broadcasted_iota(jnp.int32, (gT, G), 1) + c * G
+        row = jax.lax.broadcasted_iota(jnp.int32, (gT, G), 0)
+        q_pos = spos + row % T                         # stream pos per query
+        mask = (col < buf_len) & (blocks * G + col <= q_pos)
+        _fold(s, v, mask, m_scr, l_scr, acc_scr)
+
+    @pl.when(j == NBQ + 1)
+    def _finalize():
+        _flash_out(out_ref, m_scr, l_scr, acc_scr)
+
+
+def hier_flash_attention(q, k_upper, k_lower, k_scale, k_zero,
+                         v_upper, v_lower, v_scale, v_zero,
+                         buf_k, buf_v, blocks, buf_len, stream_pos,
+                         T: int, mode: str, *, kb: int = 2,
+                         interpret: bool = True):
+    """Single-pass hierarchical attention, contiguous layout.
+
+    q ``[BH, gT, D]`` (g = GQA replicas, T queries each, T inner); packed
+    planes ``[BH, NB, G, D//2]``; k_scale/zero ``[BH, NB, 1, D]``;
+    v_scale/zero ``[BH, NB, G, 1]``; FP buffer ``[BH, 2G, D]``.
+    ``blocks``/``buf_len``/``stream_pos`` are (traced) i32 scalars.
+    Returns out ``[BH, gT, D]`` — already softmax-normalized over the whole
+    cache; no LSE leaves the kernel.
+    """
+    BH, gT, D = q.shape
+    NB, G = k_upper.shape[1], k_upper.shape[2]
+    Dp = D // 2
+    assert NB >= 1, "hierarchical cache needs ≥ 1 quant block of capacity"
+    assert buf_k.shape[1] == 2 * G, (buf_k.shape, G)
+    KB = kb if kb >= 1 and NB % kb == 0 else 1
+    NBQ = NB // KB
+    nsteps = NBQ + 2
+
+    ks = jnp.broadcast_to(k_scale, (BH, NB, 1, D))
+    kz = jnp.broadcast_to(k_zero, (BH, NB, 1, D))
+    vs = jnp.broadcast_to(v_scale, (BH, NB, G, 1))
+    vz = jnp.broadcast_to(v_zero, (BH, NB, G, 1))
+
+    meta = jnp.stack([jnp.asarray(blocks, jnp.int32).reshape(()),
+                      jnp.asarray(buf_len, jnp.int32).reshape(()),
+                      jnp.asarray(stream_pos, jnp.int32).reshape(())])
+
+    # index maps get the scalar-prefetch ref after the grid indices; quant
+    # plane blocks clamp to the last KB-chunk during buffer steps (masked
+    # out by the kernel), buffer blocks clamp to chunk 0 during quant steps.
+    qspec = pl.BlockSpec((1, gT, D), lambda i, j, m: (i, 0, 0))
+    pmap = lambda i, j, m: (i, jnp.minimum(j, NBQ - 1), 0, 0)
+    pspec = pl.BlockSpec((1, KB, G, Dp), pmap)
+    ksspec = pl.BlockSpec((1, KB, 1, D), pmap)
+    vsspec = pl.BlockSpec((1, KB, G, 1), pmap)
+    bmap = lambda i, j, m: (i, jnp.clip(j - NBQ, 0, 1), 0)
+    bspec = pl.BlockSpec((1, G, D), bmap)
+
+    in_specs = [qspec] + _plane_args(mode, pspec, pspec, ksspec, ksspec,
+                                     pspec, pspec, vsspec, vsspec) \
+        + [bspec, bspec]
+    args = [q] + _plane_args(mode, k_upper, k_lower, ks, kz,
+                             v_upper, v_lower, vs, vz) + [buf_k, buf_v]
+
+    out = pl.pallas_call(
+        functools.partial(_hier_kernel, mode=mode, T=T, KB=KB, NBQ=NBQ, G=G),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(BH, nsteps),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, gT, D), lambda i, j, m: (i, 0, 0)),
+            scratch_shapes=[pltpu.VMEM((gT, 1), jnp.float32),
+                            pltpu.VMEM((gT, 1), jnp.float32),
+                            pltpu.VMEM((gT, D), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((BH, gT, D), q.dtype),
+        interpret=interpret,
+    )(meta, *args)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# single-pass paged kernel
+# ---------------------------------------------------------------------------
+
+def _paged_hier_kernel(meta_ref, bt_ref, q_ref, *rest, mode: str, T: int,
+                       KB: int, NBQ: int, G: int, nh: int):
+    """Block-table single-pass flash decoding: grid (R·H, NBQ + 2).
+
+    ``bt_ref`` is consumed by the index maps only.  KB quant groups arrive
+    per step as KB lane-shifted copies of the pool planes; each lane folds
+    one group when its group index is in range (exact per-lane guard, so no
+    column mask is needed for the quantized region)."""
+    del bt_ref
+    n_planes = 6 if mode == "draft" else 8
+    lanes = [rest[l * n_planes:(l + 1) * n_planes] for l in range(KB)]
+    bk_ref, bv_ref, out_ref, m_scr, l_scr, acc_scr = rest[KB * n_planes:]
+
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    r = i // nh
+    blocks = meta_ref[r, 0]
+    buf_len = meta_ref[r, 1]
+    spos = meta_ref[r, 2]
+
+    @pl.when(j == 0)
+    def _init():
+        _flash_init(m_scr, l_scr, acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                   # [gT, D]
+    gT, D = q.shape
+    inv_sqrt_d = 1.0 / math.sqrt(D)
+
+    for lidx in range(KB):
+        ku, kl, ks, kz, vu, vl, vs, vz = _unpack_lane(mode, lanes[lidx])
+
+        def _lane_step(ku=ku, kl=kl, ks=ks, kz=kz,
+                       vu=vu, vl=vl, vs=vs, vz=vz):
+            k = _dequant(ku[0], None if kl is None else kl[0],
+                         ks[0], kz[0], mode)           # [G, D]
+            v = _dequant(vu[0], None if vl is None else vl[0],
+                         vs[0], vz[0], mode)
+            s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+            _fold(s * inv_sqrt_d, v, None, m_scr, l_scr, acc_scr)
+
+        pl.when((j < NBQ) & (j * KB + lidx < blocks))(_lane_step)
+
+    @pl.when((j >= NBQ) & ((j - NBQ) * G < buf_len))
+    def _buffer_step():
+        c = j - NBQ
+        k = bk_ref[0].astype(jnp.float32)              # [G, D]
+        v = bv_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * inv_sqrt_d
+        col = jax.lax.broadcasted_iota(jnp.int32, (gT, G), 1) + c * G
+        row = jax.lax.broadcasted_iota(jnp.int32, (gT, G), 0)
+        q_pos = spos + row % T
+        mask = (col < buf_len) & (blocks * G + col <= q_pos)
+        _fold(s, v, mask, m_scr, l_scr, acc_scr)
+
+    @pl.when(j == NBQ + 1)
+    def _finalize():
+        _flash_out(out_ref, m_scr, l_scr, acc_scr)
+
+
+def paged_hier_flash_attention(q, k_upper, k_lower, k_scale, k_zero,
+                               v_upper, v_lower, v_scale, v_zero,
+                               buf_k, buf_v, block_table, blocks, buf_len,
+                               stream_pos, nh: int, T: int, mode: str, *,
+                               kb: int = 2, interpret: bool = True):
+    """Single-pass hierarchical attention over a **paged** pool.
+
+    q ``[R*H, gT, D]``; pool planes flattened per (block, head):
+    ``k/v_upper/lower [(P+1)*H, G, D//2]``, ``k_scale/zero [(P+1)*H, 1, D]``,
+    ``v_scale/zero [(P+1)*H, G, 1]`` (row ``p*H + h`` = head ``h`` of pool
+    block ``p``); per-slot FP buffers ``[R*H, 2G, D]``.  ``block_table
+    [R, NBmax]`` plus per-slot ``blocks``/``buf_len``/``stream_pos [R]`` are
+    scalar-prefetched; the BlockSpec index maps dereference the table so
+    each lane DMAs exactly the pool block the sequence owns — the gather
+    never materializes.  Returns out ``[R*H, gT, D]``.
+    """
+    RH, gT, D = q.shape
+    R, NBmax = block_table.shape
+    G = k_upper.shape[1]
+    Dp = D // 2
+    assert buf_k.shape[1] == 2 * G, (buf_k.shape, G)
+    KB = max(1, min(kb, NBmax))
+    NBQ = -(-NBmax // KB)                              # ceil
+    nsteps = NBQ + 2
+
+    ks = jnp.broadcast_to(k_scale, (k_upper.shape[0], 1, D))
+    kz = jnp.broadcast_to(k_zero, (k_upper.shape[0], 1, D))
+    vs = jnp.broadcast_to(v_scale, (k_upper.shape[0], G, 1))
+    vz = jnp.broadcast_to(v_zero, (k_upper.shape[0], G, 1))
+
+    meta = jnp.stack([jnp.asarray(blocks, jnp.int32),
+                      jnp.asarray(buf_len, jnp.int32),
+                      jnp.asarray(stream_pos, jnp.int32)], axis=1)  # [R, 3]
+
+    qspec = pl.BlockSpec((1, gT, D), lambda i, j, m, bt: (i, 0, 0))
+
+    def lane_map(l):
+        def f(i, j, m, bt):
+            col = jnp.minimum(j * KB + l, NBmax - 1)
+            return (bt[i // nh, col] * nh + i % nh, 0, 0)
+        return f
+
+    lane_specs = []
+    lane_args = []
+    for l in range(KB):
+        pspec = pl.BlockSpec((1, G, Dp), lane_map(l))
+        ksspec = pl.BlockSpec((1, 1, D), lane_map(l))
+        vsspec = pl.BlockSpec((1, G, 1), lane_map(l))
+        lane_specs += _plane_args(mode, pspec, pspec, ksspec, ksspec,
+                                  pspec, pspec, vsspec, vsspec)
+        lane_args += _plane_args(mode, k_upper, k_lower, ks, kz,
+                                 v_upper, v_lower, vs, vz)
+
+    bspec = pl.BlockSpec((1, G, D),
+                         lambda i, j, m, bt: (i, jnp.clip(j - NBQ, 0, 1), 0))
+
+    out = pl.pallas_call(
+        functools.partial(_paged_hier_kernel, mode=mode, T=T, KB=KB,
+                          NBQ=NBQ, G=G, nh=nh),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(RH, nsteps),
+            in_specs=[qspec] + lane_specs + [bspec, bspec],
+            out_specs=pl.BlockSpec((1, gT, D), lambda i, j, m, bt: (i, 0, 0)),
+            scratch_shapes=[pltpu.VMEM((gT, 1), jnp.float32),
+                            pltpu.VMEM((gT, 1), jnp.float32),
+                            pltpu.VMEM((gT, D), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((RH, gT, D), q.dtype),
+        interpret=interpret,
+    )(meta, jnp.asarray(block_table, jnp.int32), q, *lane_args, buf_k, buf_v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# legacy two-pass kernels (quantized region only, LSE out) — kept as the
+# old-path baseline for parity tests and benchmarks; not used for serving.
+# ---------------------------------------------------------------------------
+
+def _flash_block_update(q_ref, ku_ref, kl_ref, ks_ref, kz_ref,
+                        vu_ref, vl_ref, vs_ref, vz_ref,
+                        m_scr, l_scr, acc_scr, *, mode: str, ix: tuple):
+    """Dequantize one KV block and fold it into the online-softmax state."""
+    q = q_ref[0].astype(jnp.float32)                  # [gT, D]
+    D = q.shape[-1]
+    k = _dequant(ku_ref[ix], kl_ref[ix], ks_ref[ix], kz_ref[ix], mode)
+    v = _dequant(vu_ref[ix], vl_ref[ix], vs_ref[ix], vz_ref[ix], mode)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    _fold(s / math.sqrt(D), v, None, m_scr, l_scr, acc_scr)
 
 
 def _flash_finalize(out_ref, lse_ref, m_scr, l_scr, acc_scr):
@@ -128,12 +442,6 @@ def _paged_kernel(blocks_ref,                 # scalar prefetch: [R] i32
                   out_ref, lse_ref,
                   m_scr, l_scr, acc_scr,
                   *, mode: str, nb_total: int, nh: int):
-    """Block-table flash decoding: grid (R·H, NBmax). Same per-block math
-    as `_kernel` (shared `_flash_block_update`), but the KV operands arrive
-    through a scalar-prefetched block table (see the index maps in
-    `paged_quant_region_attention`) and the per-sequence valid-block count
-    comes from ``blocks_ref[r]``. ``bt_ref`` is consumed by the index maps
-    only."""
     del bt_ref
     i = pl.program_id(0)
     nb = pl.program_id(1)
@@ -158,18 +466,8 @@ def paged_quant_region_attention(q, k_upper, k_lower, k_scale, k_zero,
                                  v_upper, v_lower, v_scale, v_zero,
                                  block_table, blocks, nh: int, mode: str, *,
                                  interpret: bool = True):
-    """Flash decoding over a **paged** quantized region.
-
-    q ``[R*H, gT, D]``; pool planes flattened per (block, head):
-    ``k/v_upper/lower [(P+1)*H, G, D//2]``, ``k_scale/zero [(P+1)*H, 1, D]``,
-    ``v_scale/zero [(P+1)*H, G, 1]`` (row ``p*H + h`` = head ``h`` of pool
-    block ``p``). ``block_table [R, NBmax]`` and ``blocks [R]`` are
-    scalar-prefetched: the BlockSpec index maps dereference the table, so
-    each grid step DMAs exactly the pool block the sequence owns — the
-    gather never materializes. Columns ≥ ``blocks[r]`` stream the (valid)
-    pool block their table padding points at but are masked out of the
-    online softmax. Returns ``(out [R*H, gT, D], lse [R*H, gT])``.
-    """
+    """Legacy two-pass flash decoding over a **paged** quantized region
+    (no FP buffer; returns ``(out, lse)`` for an external merge)."""
     RH, gT, D = q.shape
     NBmax = block_table.shape[1]
     G = k_upper.shape[1]
@@ -215,9 +513,9 @@ def paged_quant_region_attention(q, k_upper, k_lower, k_scale, k_zero,
 def quant_region_attention(q, k_upper, k_lower, k_scale, k_zero,
                            v_upper, v_lower, v_scale, v_zero,
                            blocks, mode: str, *, interpret: bool = True):
-    """q [BH, gT, D]; packed planes [BH, NB, G, D//2];
-    k_scale/zero [BH, NB, 1, D]; v_scale/zero [BH, NB, G, 1].
-    Returns (out [BH, gT, D], lse [BH, gT])."""
+    """Legacy two-pass kernel: q [BH, gT, D]; packed planes
+    [BH, NB, G, D//2]; k_scale/zero [BH, NB, 1, D]; v_scale/zero
+    [BH, NB, G, 1]. Returns (out [BH, gT, D], lse [BH, gT])."""
     BH, gT, D = q.shape
     NB, G = k_upper.shape[1], k_upper.shape[2]
     Dp = D // 2

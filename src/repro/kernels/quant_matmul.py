@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: fused INT4 dequant×matmul for the draft linear path.
+
+QuantSpec §3.1: short-context decode is *weight*-bound — every decode step
+streams the full weight matrix through HBM for a handful of activation
+rows.  The jnp reference path (``Int4Weight.dequant() @ x``) materializes
+the fp32 weight before the dot, moving ``4 + 0.5`` bytes per element
+(packed read + fp32 round-trip when XLA fails to fuse).  This kernel keeps
+the weight packed all the way into VMEM and dequantizes in-register per
+``[group, TN]`` tile, so HBM traffic is the packed plane + per-group
+scale/zero only — the INT4 bandwidth win applied to the matmul half of
+decode.
+
+Layout (matches ``core.weight_quant.quantize_weight``):
+
+    packed  uint8 [ng, group//2, N]   row r of a packed group holds logical
+                                      rows (2r, 2r+1): hi nibble = even row
+    scale   f32   [ng, 1, N]
+    zero    f32   [ng, 1, N]
+
+Grid = (N // TN, ng): the contraction (quant-group) axis is innermost so a
+fp32 accumulator tile ``[M, TN]`` lives in VMEM scratch across grid steps;
+each step DMAs one ``[group//2, TN]`` packed tile + its scale/zero row and
+one ``[M, group]`` activation tile, unpacks the two nibble planes, applies
+``q * scale + zero`` and feeds the MXU.  Output is written once, at the
+last contraction step.
+
+Validated in interpret mode against ``Int4Weight.dequant() @ x``
+(tests/test_quant_matmul.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Decode activations are a few rows; above this the matmul is compute-bound
+# and the dequant+dot path (MXU-friendly fp tiles, XLA fusion) wins.
+MAX_FUSED_ROWS = 1024
+
+
+def _kernel(x_ref, p_ref, s_ref, z_ref, o_ref, acc_scr, *, ng: int):
+    kk = pl.program_id(1)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    p = p_ref[0]                                   # [group//2, TN] uint8
+    hi = (p >> 4).astype(jnp.float32)
+    lo = (p & 0xF).astype(jnp.float32)
+    gh, tn = p.shape
+    # packed row r holds logical rows (2r, 2r+1) → interleave back
+    w = jnp.stack([hi, lo], axis=1).reshape(2 * gh, tn)
+    w = w * s_ref[0] + z_ref[0]                    # [group, TN]
+
+    x = x_ref[...].astype(jnp.float32)             # [M, group]
+    acc_scr[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(kk == ng - 1)
+    def _finalize():
+        o_ref[...] = acc_scr[...].astype(o_ref.dtype)
+
+
+def int4_matmul(x, packed, scale, zero, *, interpret: bool = True):
+    """``x [M, K] @ dequant(packed, scale, zero) [K, N] -> [M, N]``.
+
+    ``K = ng * group`` with ``group = 2 * packed.shape[1]``. The weight
+    never materializes in HBM: dequantization happens in-register after the
+    VMEM copy of each packed tile.
+    """
+    M, K = x.shape
+    ng, gh, N = packed.shape
+    group = 2 * gh
+    assert K == ng * group, (x.shape, packed.shape)
+
+    TN = 128 if N % 128 == 0 else N
+    grid = (N // TN, ng)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, ng=ng),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((M, group), lambda n, kk: (0, kk)),
+            pl.BlockSpec((1, gh, TN), lambda n, kk: (kk, 0, n)),
+            pl.BlockSpec((1, 1, TN), lambda n, kk: (kk, 0, n)),
+            pl.BlockSpec((1, 1, TN), lambda n, kk: (kk, 0, n)),
+        ],
+        out_specs=pl.BlockSpec((M, TN), lambda n, kk: (0, n)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((M, TN), jnp.float32)],
+        interpret=interpret,
+    )(x, packed, scale.astype(jnp.float32), zero.astype(jnp.float32))
+    return out
+
+
+def fused_matmul(x, w, *, interpret: bool = True):
+    """``x [..., K]`` times an :class:`~repro.core.weight_quant.Int4Weight`
+    (duck-typed: needs ``.packed/.scale/.zero``; 2-D logical weights only).
+    Leading activation dims are flattened into the row axis."""
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    x2 = x.reshape(-1, K)
+    out = int4_matmul(x2, w.packed, w.scale, w.zero, interpret=interpret)
+    return out.reshape(*lead, out.shape[-1])
+
+
+def supports(x, w) -> bool:
+    """Whether the fused kernel handles this (activation, weight) pair:
+    2-D logical weight, modest row count (decode shapes)."""
+    packed = getattr(w, "packed", None)
+    if packed is None or packed.ndim != 3:
+        return False
+    rows = 1
+    for d in x.shape[:-1]:
+        rows *= d
+    return rows <= MAX_FUSED_ROWS

@@ -90,6 +90,85 @@ def paged_quant_region_attention_ref(q, k_upper, k_lower, k_scale, k_zero,
     return out.astype(q.dtype), lse
 
 
+def _attention_with_lse(q, k, v, mask):
+    """q [BH,gT,D]; k,v [BH,S,D]; mask [BH,gT,S] (True=attend).
+    Returns normalized out + lse (−inf where no key valid)."""
+    D = q.shape[-1]
+    s = jnp.einsum("btd,bsd->bts", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    s = jnp.where(mask, s, -jnp.inf)
+    m = jnp.max(s, axis=-1)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.where(mask, jnp.exp(s - m_safe[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    out = jnp.einsum("bts,bsd->btd", p, v.astype(jnp.float32))
+    out = out / jnp.maximum(l, 1e-30)[..., None]
+    lse = jnp.where(l > 0, m_safe + jnp.log(jnp.maximum(l, 1e-30)), -jnp.inf)
+    return out, lse
+
+
+def _combine(out_a, lse_a, out_b, lse_b, dtype):
+    m = jnp.maximum(lse_a, lse_b)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    wa = jnp.exp(lse_a - m)[..., None]
+    wb = jnp.exp(lse_b - m)[..., None]
+    out = (out_a.astype(jnp.float32) * wa + out_b.astype(jnp.float32) * wb) \
+        / jnp.maximum(wa + wb, 1e-30)
+    return out.astype(dtype)
+
+
+def hier_attention_twopass_ref(q, k_upper, k_lower, k_scale, k_zero,
+                               v_upper, v_lower, v_scale, v_zero,
+                               buf_k, buf_v, blocks, buf_len, stream_pos,
+                               T: int, mode: str):
+    """The *old two-pass path* at the kernel API level: quantized-region
+    flash (ref) + an FP-buffer chunk with a materialized ``[BH, gT, 2G]``
+    mask, merged by log-sum-exp.  Oracle for the single-pass
+    ``hier_flash_attention`` (same operand layouts)."""
+    BH, gT, D = q.shape
+    G = k_upper.shape[2]
+    out_q, lse_q = quant_region_attention_ref(
+        q, k_upper, k_lower, k_scale, k_zero,
+        v_upper, v_lower, v_scale, v_zero, blocks, mode)
+
+    quant_len = blocks * G
+    t_idx = jnp.arange(gT) % T
+    q_pos = stream_pos + t_idx                                # [gT]
+    j = jnp.arange(2 * G)
+    mask = (j[None, :] < buf_len) & \
+           (quant_len + j[None, :] <= q_pos[:, None])         # [gT, 2G]
+    mask = jnp.broadcast_to(mask[None], (BH, gT, 2 * G))
+    out_b, lse_b = _attention_with_lse(q, buf_k, buf_v, mask)
+    return _combine(out_q, lse_q, out_b, lse_b, q.dtype)
+
+
+def paged_hier_attention_twopass_ref(q, k_upper, k_lower, k_scale, k_zero,
+                                     v_upper, v_lower, v_scale, v_zero,
+                                     buf_k, buf_v, block_table, blocks,
+                                     buf_len, stream_pos, nh: int, T: int,
+                                     mode: str):
+    """Paged analogue of :func:`hier_attention_twopass_ref` — oracle for
+    ``paged_hier_flash_attention`` (per-slot ragged positions)."""
+    RH, gT, D = q.shape
+    G = k_upper.shape[1]
+    out_q, lse_q = paged_quant_region_attention_ref(
+        q, k_upper, k_lower, k_scale, k_zero,
+        v_upper, v_lower, v_scale, v_zero, block_table, blocks, nh, mode)
+
+    quant_len = blocks * G                                    # [R]
+    t_idx = jnp.arange(gT) % T
+    q_pos = jnp.asarray(stream_pos, jnp.int32)[:, None] + t_idx[None]  # [R,gT]
+    j = jnp.arange(2 * G)
+    mask = (j[None, None, :] < buf_len[:, None, None]) & \
+           (quant_len[:, None, None] + j[None, None, :]
+            <= q_pos[:, :, None])                             # [R, gT, 2G]
+    R = block_table.shape[0]
+    mask = jnp.broadcast_to(mask[:, None], (R, nh, gT, 2 * G))
+    mask = mask.reshape(RH, gT, 2 * G)
+    out_b, lse_b = _attention_with_lse(q, buf_k, buf_v, mask)
+    return _combine(out_q, lse_q, out_b, lse_b, q.dtype)
+
+
 def quantize_kv_block_ref(k, v):
     """Hierarchically quantize one block. k,v [BH, G, D].
     Keys per-channel (reduce over G), values per-token (reduce over D).

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 from repro.core import hier_kv_cache as HC
 from repro.core import paged_kv_cache as PC
-from repro.core.weight_quant import resolve
+from repro.core.weight_quant import matmul as quant_matmul, resolve
 from repro.distributed.sharding import constrain
 from repro.models.config import ModelConfig
 
@@ -32,7 +32,9 @@ def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
 
 
 def linear(x: jnp.ndarray, w, b=None) -> jnp.ndarray:
-    y = x @ resolve(w, x.dtype)
+    # Int4 draft weights dispatch through weight_quant.matmul — the fused
+    # Pallas dequant×matmul on TPU, dequant()+dot elsewhere.
+    y = quant_matmul(x, w)
     if b is not None:
         y = y + b.astype(y.dtype)
     return y

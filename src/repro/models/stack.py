@@ -440,8 +440,8 @@ class StackModel:
 
     def unembed(self, params, x):
         cfg = self.cfg
-        from repro.core.weight_quant import resolve
-        logits = x @ resolve(params["lm_head"], x.dtype)
+        from repro.core.weight_quant import matmul
+        logits = matmul(x, params["lm_head"])
         if cfg.num_codebooks:
             B, T, _ = logits.shape
             logits = logits.reshape(B, T, cfg.num_codebooks, cfg.vocab_size)

@@ -11,7 +11,11 @@ from repro.core import hier_kv_cache as HC
 from repro.core.quantization import quantize_k_block, quantize_v_block
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
-from repro.kernels.quant_attention import quant_region_attention
+from repro.kernels.quant_attention import (
+    hier_flash_attention,
+    paged_hier_flash_attention,
+    quant_region_attention,
+)
 from repro.kernels.quant_pack import quantize_kv_block
 from repro.models import common as L
 
@@ -88,6 +92,135 @@ def test_quant_pack_vs_ref(shape):
             assert (np.abs(gl - wl) > 0).mean() < 0.005, name
         else:
             np.testing.assert_allclose(g, w, atol=1e-5, err_msg=name)
+
+
+def make_buffer(key, BH, G, D, scale=1.0):
+    bk = jax.random.normal(key, (BH, 2 * G, D)) * scale
+    bv = jax.random.normal(jax.random.fold_in(key, 1), (BH, 2 * G, D)) * scale
+    return bk, bv
+
+
+class TestSinglePassHier:
+    """Single-pass hierarchical kernel == the old two-pass path (quant
+    flash + materialized-mask FP chunk + LSE merge, kernels/ref.py).
+    Tolerance 3e-5: both sides are f32 online softmax, differing only in
+    summation order."""
+
+    @pytest.mark.parametrize("shape", [
+        # (BH, NB, G, D, T, g, blocks, buf_len)
+        (2, 4, 16, 32, 1, 1, 3, 20),    # decode step, both chunks live
+        (2, 4, 16, 32, 4, 2, 3, 24),    # γ-window queries, GQA replicas
+        (1, 3, 8, 64, 2, 1, 0, 10),     # empty quant region
+        (3, 5, 16, 32, 1, 1, 5, 4),     # full region, C_F1-only buffer
+        (2, 3, 16, 32, 2, 1, 2, 0),     # empty FP buffer (odd NB → KB=1)
+    ])
+    @pytest.mark.parametrize("mode", ["draft", "target"])
+    def test_vs_twopass_ref(self, shape, mode):
+        BH, NB, G, D, T, g, blocks, buf_len = shape
+        key = jax.random.PRNGKey(hash(shape) % 2**31)
+        planes = make_quant_region(key, BH, NB, G, D)
+        bk, bv = make_buffer(jax.random.fold_in(key, 2), BH, G, D)
+        q = jax.random.normal(jax.random.fold_in(key, 3), (BH, g * T, D))
+        stream_pos = blocks * G + buf_len - T   # queries are the newest tokens
+
+        got = hier_flash_attention(q, *planes, bk, bv, blocks, buf_len,
+                                   stream_pos, T, mode)
+        want = kref.hier_attention_twopass_ref(q, *planes, bk, bv, blocks,
+                                               buf_len, stream_pos, T, mode)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=3e-5, rtol=3e-5,
+                                   err_msg=f"mode={mode}")
+
+    @pytest.mark.parametrize("kb", [1, 2, 4])
+    def test_kb_invariant(self, kb):
+        """KB (quant groups per grid step) must not change the math."""
+        BH, NB, G, D, T = 2, 4, 16, 32, 2
+        key = jax.random.PRNGKey(21)
+        planes = make_quant_region(key, BH, NB, G, D)
+        bk, bv = make_buffer(jax.random.fold_in(key, 2), BH, G, D)
+        q = jax.random.normal(jax.random.fold_in(key, 3), (BH, T, D))
+        out = hier_flash_attention(q, *planes, bk, bv, 3, 12, 3 * G + 12 - T,
+                                   T, "target", kb=kb)
+        want = kref.hier_attention_twopass_ref(q, *planes, bk, bv, 3, 12,
+                                               3 * G + 12 - T, T, "target")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=3e-5, rtol=3e-5)
+
+    def test_bf16_queries(self):
+        BH, NB, G, D, T = 2, 2, 16, 64, 1
+        key = jax.random.PRNGKey(23)
+        planes = make_quant_region(key, BH, NB, G, D)
+        bk, bv = make_buffer(jax.random.fold_in(key, 2), BH, G, D)
+        q = jax.random.normal(jax.random.fold_in(key, 3),
+                              (BH, T, D)).astype(jnp.bfloat16)
+        got = hier_flash_attention(q, *planes, bk, bv, 2, 18, 2 * G + 17,
+                                   T, "target")
+        assert got.dtype == jnp.bfloat16
+        want = kref.hier_attention_twopass_ref(
+            q.astype(jnp.float32), *planes, bk, bv, 2, 18, 2 * G + 17, T,
+            "target")
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want), atol=2e-2, rtol=2e-2)
+
+
+class TestSinglePassPaged:
+    """Paged single-pass kernel vs the paged two-pass reference, ragged
+    slots with non-empty FP buffers."""
+
+    def _make_pool(self, key, P, H, G, D):
+        # planes flattened per (block, head): row p*H + h
+        k = jax.random.normal(key, ((P + 1) * H, 1, G, 1, D))
+        v = jax.random.normal(jax.random.fold_in(key, 1),
+                              ((P + 1) * H, 1, G, 1, D))
+        kq = quantize_k_block(k)
+        vq = quantize_v_block(v)
+        sq = lambda t: t[:, 0].squeeze(2)
+        return (sq(kq.upper), sq(kq.lower),
+                kq.scale[:, 0].squeeze(2), kq.zero[:, 0].squeeze(2),
+                sq(vq.upper), sq(vq.lower), sq(vq.scale), sq(vq.zero))
+
+    @pytest.mark.parametrize("mode", ["draft", "target"])
+    @pytest.mark.parametrize("T,g", [(1, 1), (3, 2)])
+    def test_ragged_vs_twopass_ref(self, mode, T, g):
+        R, H, P, NBmax, G, D = 3, 2, 7, 4, 8, 32
+        key = jax.random.PRNGKey(31)
+        planes = self._make_pool(key, P, H, G, D)
+        bk, bv = make_buffer(jax.random.fold_in(key, 2), R * H, G, D)
+        q = jax.random.normal(jax.random.fold_in(key, 3), (R * H, g * T, D))
+
+        # ragged: slot 0 mid-stream, slot 1 buffer-only, slot 2 full table
+        blocks = jnp.asarray([2, 0, 4], jnp.int32)
+        buf_len = jnp.asarray([10, 2 * G, 5], jnp.int32)
+        block_table = jnp.asarray(
+            [[5, 1, 0, 0], [0, 0, 0, 0], [2, 6, 3, 4]], jnp.int32)
+        stream_pos = blocks * G + buf_len - T
+
+        got = paged_hier_flash_attention(
+            q, *planes, bk, bv, block_table, blocks, buf_len, stream_pos,
+            H, T, mode)
+        want = kref.paged_hier_attention_twopass_ref(
+            q, *planes, bk, bv, block_table, blocks, buf_len, stream_pos,
+            H, T, mode)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=3e-5, rtol=3e-5,
+                                   err_msg=f"mode={mode}")
+
+    def test_kb_lanes_invariant(self):
+        R, H, P, NBmax, G, D, T = 2, 1, 5, 3, 8, 32, 1
+        key = jax.random.PRNGKey(37)
+        planes = self._make_pool(key, P, H, G, D)
+        bk, bv = make_buffer(jax.random.fold_in(key, 2), R * H, G, D)
+        q = jax.random.normal(jax.random.fold_in(key, 3), (R * H, T, D))
+        blocks = jnp.asarray([3, 1], jnp.int32)
+        buf_len = jnp.asarray([9, 16], jnp.int32)
+        bt = jnp.asarray([[4, 0, 2], [1, 0, 0]], jnp.int32)
+        pos = blocks * G + buf_len - T
+        outs = [paged_hier_flash_attention(q, *planes, bk, bv, bt, blocks,
+                                           buf_len, pos, H, T, "target", kb=kb)
+                for kb in (1, 2, 3)]
+        for o in outs[1:]:
+            np.testing.assert_allclose(np.asarray(o), np.asarray(outs[0]),
+                                       atol=3e-5, rtol=3e-5)
 
 
 class TestEndToEndPallasAttention:

@@ -1,0 +1,114 @@
+"""Fused INT4 dequant×matmul kernel (interpret mode) vs the jnp reference
+``Int4Weight.dequant() @ x``, plus the weight_quant dispatch/bookkeeping
+satellites (nbytes, compression_ratio)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import weight_quant as WQ
+from repro.kernels import quant_matmul as QM
+
+# fp32 accumulation over per-group tiles vs one flat dot: summation-order
+# noise only. Documented tolerance for all parity checks in this file.
+ATOL = 1e-4
+RTOL = 1e-4
+
+
+@pytest.mark.parametrize("shape", [
+    # (M, K, N, group)
+    (1, 64, 48, 16),       # decode: single token, narrow out, TN = N
+    (4, 256, 128, 128),    # aligned tiles, TN = 128
+    (7, 96, 33, 32),       # odd rows / non-128 out dim
+    (2, 32, 256, 8),       # many tiny groups, multiple N tiles
+    (8, 512, 384, 64),     # multi-tile both axes
+])
+def test_int4_matmul_vs_dequant(shape):
+    M, K, N, g = shape
+    key = jax.random.PRNGKey(hash(shape) % 2**31)
+    w = jax.random.normal(key, (K, N)) * 0.3
+    x = jax.random.normal(jax.random.fold_in(key, 1), (M, K))
+    q = WQ.quantize_weight(w, group=g)
+    ref = x @ q.dequant()
+    got = QM.int4_matmul(x, q.packed, q.scale, q.zero)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=ATOL, rtol=RTOL)
+
+
+def test_fused_matmul_leading_dims_and_dtype():
+    key = jax.random.PRNGKey(5)
+    q = WQ.quantize_weight(jax.random.normal(key, (256, 64)), group=64)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 3, 256))
+    got = QM.fused_matmul(x, q)
+    assert got.shape == (2, 3, 64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x @ q.dequant()),
+                               atol=ATOL, rtol=RTOL)
+
+    xb = x.astype(jnp.bfloat16)
+    got_b = QM.fused_matmul(xb, q)
+    assert got_b.dtype == jnp.bfloat16
+    ref_b = (xb @ q.dequant(jnp.bfloat16)).astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(got_b, np.float32), np.asarray(ref_b),
+                               atol=0.15, rtol=0.1)
+
+
+def test_matmul_dispatch_fused_equals_dequant(monkeypatch):
+    """weight_quant.matmul: forced-fused == default dequant path == plain
+    fp matmul handling."""
+    key = jax.random.PRNGKey(9)
+    w = jax.random.normal(key, (128, 96))
+    x = jax.random.normal(jax.random.fold_in(key, 1), (3, 128))
+    q = WQ.quantize_weight(w, group=32)
+
+    monkeypatch.setenv("REPRO_QUANT_MATMUL", "dequant")
+    ref = WQ.matmul(x, q)
+    monkeypatch.setenv("REPRO_QUANT_MATMUL", "fused")
+    got = WQ.matmul(x, q)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=ATOL, rtol=RTOL)
+    # unquantized weights bypass the kernel entirely
+    np.testing.assert_allclose(np.asarray(WQ.matmul(x, w)), np.asarray(x @ w),
+                               atol=1e-6)
+
+
+def test_matmul_fused_falls_back_on_lead_dims(monkeypatch):
+    """3-D (stacked-expert) weights aren't fused — dequant fallback, same
+    numbers."""
+    key = jax.random.PRNGKey(11)
+    w = jax.random.normal(key, (2, 128, 32))
+    q = WQ.quantize_weight(w, group=64)
+    assert not QM.supports(jnp.zeros((1, 128)), q)
+    monkeypatch.setenv("REPRO_QUANT_MATMUL", "fused")
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 4, 128))
+    np.testing.assert_allclose(np.asarray(WQ.matmul(x, q)),
+                               np.asarray(x @ q.dequant()), atol=1e-6)
+
+
+def test_nbytes_uses_actual_dtypes():
+    w = jax.random.normal(jax.random.PRNGKey(0), (256, 64))
+    q = WQ.quantize_weight(w, group=64)
+    expected = (q.packed.size * 1
+                + q.scale.size * q.scale.dtype.itemsize
+                + q.zero.size * q.zero.dtype.itemsize)
+    assert q.nbytes == expected
+    # scale dtype changes must be reflected, not hard-coded as 4 bytes
+    q16 = WQ.Int4Weight(q.packed, q.scale.astype(jnp.bfloat16),
+                        q.zero.astype(jnp.bfloat16), q.group)
+    assert q16.nbytes == q.packed.size + 2 * 2 * q.scale.size
+    assert q16.nbytes < q.nbytes
+
+
+def test_compression_ratio():
+    w = jax.random.normal(jax.random.PRNGKey(1), (512, 128))
+    q = WQ.quantize_weight(w, group=128)
+    # vs fp16: 16 bits -> 4 bits + scale overhead => between 3x and 4x
+    r = float(q.compression_ratio(jnp.float16))
+    assert 3.0 < r < 4.0
+    assert float(q.compression_ratio(jnp.float32)) == pytest.approx(2 * r)
+
+    params = {"a": q, "b": jnp.zeros((4, 4), jnp.float32)}
+    qb, fb, ratio = WQ.tree_compression(params, jnp.float16)
+    assert qb == q.nbytes + 64
+    assert fb == 512 * 128 * 2 + 64
+    assert ratio == pytest.approx(fb / qb)

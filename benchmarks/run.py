@@ -57,11 +57,12 @@ def main() -> None:
         us = timings.get(prefix.get(name, ""), 0.0) * 1e6
         print(f"{name}.{variant},{us:.0f},{derived}")
 
-    # kernel_bench's decode section wrote the perf-trajectory artifact
-    assert os.path.exists("BENCH_decode.json"), \
-        "kernel_bench did not emit BENCH_decode.json"
-    print(f"\ndecode hot-path metrics: BENCH_decode.json "
-          f"({os.path.getsize('BENCH_decode.json')} bytes)")
+    # kernel_bench wrote the perf-trajectory artifacts
+    for artifact in ("BENCH_decode.json", "BENCH_prefill.json"):
+        assert os.path.exists(artifact), \
+            f"kernel_bench did not emit {artifact}"
+        print(f"\nperf-trajectory artifact: {artifact} "
+              f"({os.path.getsize(artifact)} bytes)")
 
 
 if __name__ == "__main__":

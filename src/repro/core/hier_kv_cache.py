@@ -36,8 +36,7 @@ from repro.core.quantization import (
     HierQuant,
     dequant_full,
     dequant_upper,
-    quantize_k_block,
-    quantize_v_block,
+    quantize_kv_block_pair,
 )
 
 
@@ -101,7 +100,7 @@ def _quantize_blocks(k: jnp.ndarray, v: jnp.ndarray, group: int):
     n = S // group
     kb = k.reshape(B, n, group, H, D)
     vb = v.reshape(B, n, group, H, D)
-    return quantize_k_block(kb), quantize_v_block(vb)
+    return quantize_kv_block_pair(kb, vb)
 
 
 def prefill(cache: HierKVCache, k: jnp.ndarray, v: jnp.ndarray) -> HierKVCache:
@@ -134,6 +133,64 @@ def prefill(cache: HierKVCache, k: jnp.ndarray, v: jnp.ndarray) -> HierKVCache:
         blocks=jnp.asarray(n_blocks, jnp.int32),
         buf_k=buf_k, buf_v=buf_v,
         buf_len=jnp.asarray(rem, jnp.int32),
+    )
+
+
+def prefill_dynamic(cache: HierKVCache, k: jnp.ndarray, v: jnp.ndarray,
+                    length) -> HierKVCache:
+    """Length-aware prefill for bucket-padded prompts.
+
+    ``k``/``v`` are ``[B, Sp, H, D]`` with ``Sp`` the (static) bucket size;
+    only the first ``length`` (traced i32) tokens are valid.  Produces, on a
+    freshly initialized cache, exactly the state
+    ``prefill(cache, k[:, :length], v[:, :length])`` would — so one
+    compiled program serves every prompt length in a bucket instead of
+    recompiling per length.
+
+    All ``Sp // G`` groups are quantized (padding garbage included) and the
+    writes of groups ≥ ``n_blocks`` are masked out; the double buffer is a
+    dynamic 2G-window slice with the invalid tail zeroed (matching the
+    zero-initialized buffer the unpadded path leaves there).
+    """
+    G = cache.group
+    B, Sp, H, D = k.shape
+    L = jnp.asarray(length, jnp.int32)
+    n_blocks = jnp.maximum(0, (L - G) // G)
+    NB = cache.k_upper.shape[1]
+    n_groups = min(Sp // G, NB)
+    new = cache
+    if n_groups > 0:
+        kq, vq = _quantize_blocks(k[:, : n_groups * G], v[:, : n_groups * G],
+                                  G)
+        ok = (jnp.arange(n_groups) < n_blocks)[None, :, None, None, None]
+
+        def put(dst, src):
+            cur = jax.lax.dynamic_slice_in_dim(dst, 0, n_groups, axis=1)
+            return jax.lax.dynamic_update_slice_in_dim(
+                dst, jnp.where(ok, src, cur), 0, axis=1)
+
+        new = new._replace(
+            k_upper=put(new.k_upper, kq.upper), k_lower=put(new.k_lower, kq.lower),
+            k_scale=put(new.k_scale, kq.scale), k_zero=put(new.k_zero, kq.zero),
+            v_upper=put(new.v_upper, vq.upper), v_lower=put(new.v_lower, vq.lower),
+            v_scale=put(new.v_scale, vq.scale), v_zero=put(new.v_zero, vq.zero),
+        )
+    # buffer window [n_blocks*G, n_blocks*G + 2G) of the stream; pad the
+    # source so the (dynamic-start) slice never clamps, then zero the tail
+    pad = jnp.zeros((B, 2 * G, H, D), k.dtype)
+    kp = jnp.concatenate([k, pad], axis=1)
+    vp = jnp.concatenate([v, pad], axis=1)
+    start = n_blocks * G
+    zero = jnp.zeros((), jnp.int32)
+    bk = jax.lax.dynamic_slice(kp, (zero, start, zero, zero), (B, 2 * G, H, D))
+    bv = jax.lax.dynamic_slice(vp, (zero, start, zero, zero), (B, 2 * G, H, D))
+    buf_len = L - start
+    live = (jnp.arange(2 * G) < buf_len)[None, :, None, None]
+    return new._replace(
+        blocks=n_blocks,
+        buf_k=jnp.where(live, bk.astype(cache.buf_k.dtype), 0),
+        buf_v=jnp.where(live, bv.astype(cache.buf_v.dtype), 0),
+        buf_len=buf_len,
     )
 
 
@@ -170,8 +227,9 @@ def maybe_flush(cache: HierKVCache, headroom: int = 0) -> HierKVCache:
     G = cache.group
 
     def do_flush(c: HierKVCache) -> HierKVCache:
-        kq = quantize_k_block(c.buf_k[:, :G])
-        vq = quantize_v_block(c.buf_v[:, :G])
+        # routes through the Pallas quantize+pack kernel on TPU (the decode
+        # hot path flushes once per G accepted tokens), jnp elsewhere
+        kq, vq = quantize_kv_block_pair(c.buf_k[:, :G], c.buf_v[:, :G])
         b = c.blocks
 
         def put(dst, src):
@@ -258,6 +316,19 @@ def init_full_cache(batch, max_seq, heads, head_dim, dtype=jnp.float32):
         v=jnp.zeros((batch, max_seq, heads, head_dim), dtype),
         length=jnp.zeros((), jnp.int32),
     )
+
+
+def full_prefill(cache: FullKVCache, k, v, length) -> FullKVCache:
+    """Length-aware prefill of a bucket-padded prompt into the plain FP
+    cache: the padded tail is written (and masked by ``length`` everywhere
+    the cache is read) — equivalent to ``full_append(cache, k[:, :length],
+    v[:, :length])`` on a fresh cache, without a per-length recompile."""
+    S = k.shape[1]
+    L = jnp.asarray(length, jnp.int32)
+    live = (jnp.arange(S) < L)[None, :, None, None]
+    kk = _update_at(cache.k, jnp.where(live, k.astype(cache.k.dtype), 0), 0)
+    vv = _update_at(cache.v, jnp.where(live, v.astype(cache.v.dtype), 0), 0)
+    return FullKVCache(kk, vv, L)
 
 
 def full_append(cache: FullKVCache, k, v) -> FullKVCache:

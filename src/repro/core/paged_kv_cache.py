@@ -32,9 +32,14 @@ Step protocol (all jittable):
      its own rejected-tail length ``rb[r]`` and ``commit(table, n_new)``
      advances the committed positions — both per-sequence.
 
-Admission/retirement (eager, between jitted rounds): ``alloc_blocks`` +
-``adopt_hier`` move a batch-1 contiguous prefill into a slot;
-``free_slot`` returns a retired slot's blocks to the pool.
+Admission (jittable, one chunk per engine iteration): the chunked-prefill
+protocol — ``plan_prefill_chunk`` pops pool blocks for the groups a prompt
+chunk completes, every layer runs ``apply_prefill_chunk`` (quantize straight
+into pool blocks, fp history in a transient :class:`PrefillScratch`), and
+``write_prefill_buffer`` + ``activate_slot`` finalize the slot.  Retirement:
+``free_slot`` returns a retired slot's blocks to the pool.  The legacy
+``alloc_blocks`` + ``adopt_hier`` dense-copy path is kept only as a test
+oracle.
 """
 
 from __future__ import annotations
@@ -50,8 +55,7 @@ from repro.core.quantization import (
     HierQuant,
     dequant_full,
     dequant_upper,
-    quantize_k_block,
-    quantize_v_block,
+    quantize_kv_block_pair,
 )
 
 
@@ -217,8 +221,8 @@ def apply_step(pool: PagedKVPool, step: PageStep, k: jnp.ndarray,
     single fused program (no per-slot control flow).
     """
     G = pool.group
-    kq = quantize_k_block(pool.buf_k[:, :G])   # [R, ...]
-    vq = quantize_v_block(pool.buf_v[:, :G])
+    # Pallas quantize+pack on TPU, jnp fallback elsewhere — [R, ...]
+    kq, vq = quantize_kv_block_pair(pool.buf_k[:, :G], pool.buf_v[:, :G])
     dst = step.flush_dst
 
     new = pool._replace(
@@ -261,6 +265,156 @@ def commit(table: PageTable, n_new: jnp.ndarray) -> PageTable:
 
 
 # ---------------------------------------------------------------------------
+# chunked prefill: the prompt enters the pool chunk-by-chunk, quantized
+# groups written straight into blocks — no dense intermediate cache and no
+# adopt copy.  Everything is jittable with a traced slot id, so one program
+# per (chunk size, scratch bucket) serves every admission.
+# ---------------------------------------------------------------------------
+
+class PrefillScratch(NamedTuple):
+    """Transient per-layer fp K/V of the prompt being admitted.
+
+    Sized to the prompt's chunk bucket (``+2G`` slack for the final buffer
+    window) — *not* ``max_seq`` — and freed when admission completes.  Chunk
+    attention reads history from here, so chunked prefill is numerically
+    identical to one-shot dense prefill (the paged engine stays
+    token-identical to the static engine); the quantized planes stream into
+    pool blocks incrementally and are never duplicated."""
+
+    k: jnp.ndarray  # [1, S_scratch, H, D] compute dtype
+    v: jnp.ndarray
+
+
+class PrefillChunkStep(NamedTuple):
+    """One prompt chunk's admission plan, shared by every layer."""
+
+    slot: jnp.ndarray         # i32 — request slot being prefilled
+    pos: jnp.ndarray          # i32 — tokens admitted before this chunk
+    valid: jnp.ndarray        # i32 — valid tokens in this (padded) chunk
+    blocks_prev: jnp.ndarray  # i32 — quantized blocks before this chunk
+    n_flush: jnp.ndarray      # i32 — groups this chunk completes
+    flush_dst: jnp.ndarray    # i32 [LANES] — pool block per lane (P = scratch)
+
+
+def init_prefill_scratch(bucket: int, group: int, heads: int, head_dim: int,
+                         dtype=jnp.float32) -> PrefillScratch:
+    """Scratch for one admission: bucket tokens + a 2G window of slack so
+    the finalize slice (``blocks*G .. +2G``) never clamps."""
+    S = bucket + 2 * group
+    return PrefillScratch(k=jnp.zeros((1, S, heads, head_dim), dtype),
+                          v=jnp.zeros((1, S, heads, head_dim), dtype))
+
+
+def plan_prefill_chunk(table: PageTable, slot, valid, chunk: int, group: int
+                       ) -> Tuple[PageTable, PrefillChunkStep]:
+    """Plan admitting one ``chunk``-sized prompt chunk (``valid`` ≤ chunk
+    tokens real) into ``slot``.
+
+    Groups completed by this chunk (the prefix rule: after ``P`` tokens,
+    ``blocks = max(0, (P-G)//G)``, the trailing ``[G, 2G)`` stay fp) get
+    pool blocks popped off the free stack — a masked multi-lane pop, so the
+    whole plan jits with a traced slot/progress.  Capacity is guaranteed by
+    the scheduler's worst-case reservation at admission time.
+    """
+    G = group
+    P = table.free_stack.shape[0]
+    R, NBmax = table.block_table.shape
+    LANES = chunk // G + 1                     # ≥ ceil(valid/G) groups/chunk
+    slot = jnp.asarray(slot, jnp.int32)
+    valid = jnp.asarray(valid, jnp.int32)
+    pos_prev = table.pos[slot]
+    blocks_prev = table.blocks[slot]
+    pos_new = pos_prev + valid
+    blocks_new = jnp.maximum(0, (pos_new - G) // G)
+    n_flush = blocks_new - blocks_prev
+
+    lanes = jnp.arange(LANES, dtype=jnp.int32)
+    pop_idx = table.free_top - 1 - lanes
+    dst = jnp.where(lanes < n_flush,
+                    table.free_stack[jnp.clip(pop_idx, 0, P - 1)],
+                    jnp.asarray(P, jnp.int32))
+
+    # record lane l at column blocks_prev + l of the slot's table row;
+    # masked/overflow lanes scatter into a dummy column that is sliced off
+    cols = blocks_prev + lanes
+    safe = jnp.where((lanes < n_flush) & (cols < NBmax), cols, NBmax)
+    padded = jnp.concatenate(
+        [table.block_table, jnp.zeros((R, 1), jnp.int32)], axis=1)
+    padded = padded.at[slot, safe].set(dst)
+    new_table = table._replace(
+        block_table=padded[:, :NBmax],
+        blocks=table.blocks.at[slot].set(blocks_new),
+        buf_len=table.buf_len.at[slot].set(pos_new - blocks_new * G),
+        pos=table.pos.at[slot].set(pos_new),
+        free_top=table.free_top - n_flush,
+    )
+    return new_table, PrefillChunkStep(slot=slot, pos=pos_prev, valid=valid,
+                                       blocks_prev=blocks_prev,
+                                       n_flush=n_flush, flush_dst=dst)
+
+
+def apply_prefill_chunk(pool: PagedKVPool, step: PrefillChunkStep,
+                        scratch: PrefillScratch) -> PagedKVPool:
+    """Execute a :class:`PrefillChunkStep` on one layer's pool: quantize the
+    groups this chunk completed straight from the fp scratch (which already
+    holds the chunk's K/V) into their pool blocks.  Masked lanes write the
+    scratch block ``P``, so the work per chunk is a static LANES groups."""
+    G = pool.group
+    LANES = step.flush_dst.shape[0]
+    _, _, H, D = scratch.k.shape
+    zero = jnp.zeros((), jnp.int32)
+    new = pool
+    for l in range(LANES):
+        start = (step.blocks_prev + l) * G
+        kb = jax.lax.dynamic_slice(scratch.k, (zero, start, zero, zero),
+                                   (1, G, H, D))[0]
+        vb = jax.lax.dynamic_slice(scratch.v, (zero, start, zero, zero),
+                                   (1, G, H, D))[0]
+        kq, vq = quantize_kv_block_pair(kb, vb)       # [G, H, ...] planes
+        dst = step.flush_dst[l]
+        new = new._replace(
+            k_upper=new.k_upper.at[dst].set(kq.upper),
+            k_lower=new.k_lower.at[dst].set(kq.lower),
+            k_scale=new.k_scale.at[dst].set(kq.scale),
+            k_zero=new.k_zero.at[dst].set(kq.zero),
+            v_upper=new.v_upper.at[dst].set(vq.upper),
+            v_lower=new.v_lower.at[dst].set(vq.lower),
+            v_scale=new.v_scale.at[dst].set(vq.scale),
+            v_zero=new.v_zero.at[dst].set(vq.zero),
+        )
+    return new
+
+
+def write_prefill_buffer(pool: PagedKVPool, slot, blocks, buf_len,
+                         scratch: PrefillScratch) -> PagedKVPool:
+    """Admission finalize (per layer): move the trailing fp window
+    ``[blocks*G, blocks*G + buf_len)`` from the scratch into the slot's
+    double buffer (invalid tail zeroed), after which the scratch is freed
+    and decode proceeds exactly as if the request had been dense-prefilled."""
+    G = pool.group
+    _, _, H, D = scratch.k.shape
+    start = jnp.asarray(blocks, jnp.int32) * G
+    zero = jnp.zeros((), jnp.int32)
+    bk = jax.lax.dynamic_slice(scratch.k, (zero, start, zero, zero),
+                               (1, 2 * G, H, D))[0]
+    bv = jax.lax.dynamic_slice(scratch.v, (zero, start, zero, zero),
+                               (1, 2 * G, H, D))[0]
+    live = (jnp.arange(2 * G) < jnp.asarray(buf_len, jnp.int32))[:, None, None]
+    return pool._replace(
+        buf_k=pool.buf_k.at[slot].set(
+            jnp.where(live, bk.astype(pool.buf_k.dtype), 0)),
+        buf_v=pool.buf_v.at[slot].set(
+            jnp.where(live, bv.astype(pool.buf_v.dtype), 0)),
+    )
+
+
+def activate_slot(table: PageTable, slot) -> PageTable:
+    """Mark a fully-prefilled slot live for decode rounds (its blocks,
+    buffer length and stream position were maintained by the chunk plans)."""
+    return table._replace(active=table.active.at[slot].set(True))
+
+
+# ---------------------------------------------------------------------------
 # admission / retirement (eager; called between jitted rounds)
 # ---------------------------------------------------------------------------
 
@@ -285,8 +439,12 @@ def alloc_blocks(table: PageTable, slot: int, n: int
 def adopt_hier(pool: PagedKVPool, slot: int, ids: jnp.ndarray,
                hier: HierKVCache) -> PagedKVPool:
     """Copy a batch-1 contiguous prefill cache into pool blocks ``ids`` and
-    buffer row ``slot`` — how an admitted request's prefill (run through the
-    existing dense path) enters the paged world."""
+    buffer row ``slot``.
+
+    This was how admissions entered the paged world before the chunked
+    prefill pipeline (``plan_prefill_chunk``/``apply_prefill_chunk``) wrote
+    pool blocks directly; the serving engine no longer calls it.  Kept as
+    the oracle for chunked-vs-dense cache-identity tests."""
     n = ids.shape[0]
     new = pool
     if n:

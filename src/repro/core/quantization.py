@@ -27,7 +27,7 @@ a separate array that only the target model touches).
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Tuple
 
 import jax.numpy as jnp
 
@@ -137,6 +137,52 @@ def quantize_v_block(v: jnp.ndarray) -> HierQuant:
     (scale, zero) are reduced over head_dim → shape ``[..., G, H, 1]``.
     """
     return hier_quantize(v, axis=-1)
+
+
+def quant_pack_impl() -> str:
+    """Which KV-block quantizer runs at cache flush/prefill time:
+    ``'pallas'`` (the kernels/quant_pack.py quantize+pack kernel) or
+    ``'jnp'`` (quantize_k_block/quantize_v_block).  ``REPRO_QUANT_PACK``
+    ∈ {auto, pallas, jnp}; 'auto' → pallas on TPU only."""
+    from repro.kernels import resolve_impl
+
+    return resolve_impl("REPRO_QUANT_PACK", "pallas", "jnp")
+
+
+def quantize_kv_block_pair(k: jnp.ndarray, v: jnp.ndarray
+                           ) -> Tuple[HierQuant, HierQuant]:
+    """Quantize one K block (per-channel) and one V block (per-token),
+    both ``[..., G, H, D]`` → HierQuants with the cache's plane layouts.
+
+    This is the single entry point every cache write goes through — the
+    decode-path buffer→block flush (`hier_kv_cache.maybe_flush`,
+    `paged_kv_cache.apply_step`), dense prefill, and the chunked paged
+    prefill — so the Pallas pack kernel and the jnp fallback are always
+    interchangeable per backend (see :func:`quant_pack_impl`)."""
+    if quant_pack_impl() == "pallas":
+        from repro.kernels.quant_pack import quantize_kv_block as _pk
+
+        lead = k.shape[:-3]
+        G, H, D = k.shape[-3:]
+        n = 1
+        for d in lead:
+            n *= d
+        # [..., G, H, D] -> [n*H, G, D] (head-major rows, kernel layout)
+        to_rows = lambda x: x.reshape(n, G, H, D).transpose(
+            0, 2, 1, 3).reshape(n * H, G, D)
+        planes = _pk(to_rows(k), to_rows(v))
+
+        def back(x, mid):  # [n*H, mid, X] -> [..., mid, H, X]
+            X = x.shape[-1]
+            return x.reshape(n, H, mid, X).transpose(
+                0, 2, 1, 3).reshape(*lead, mid, H, X)
+
+        kq = HierQuant(back(planes["k_upper"], G), back(planes["k_lower"], G),
+                       back(planes["k_scale"], 1), back(planes["k_zero"], 1))
+        vq = HierQuant(back(planes["v_upper"], G), back(planes["v_lower"], G),
+                       back(planes["v_scale"], G), back(planes["v_zero"], G))
+        return kq, vq
+    return quantize_k_block(k), quantize_v_block(v)
 
 
 def simulate_cache_quant(x: jnp.ndarray, *, group: int, residual: int,

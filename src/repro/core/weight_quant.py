@@ -12,8 +12,6 @@ fusion for the `dequant → dot` pattern, see benchmarks/kernel_bench.py).
 
 from __future__ import annotations
 
-import os
-
 import jax
 import jax.numpy as jnp
 
@@ -148,14 +146,11 @@ def tree_compression(params, ref_dtype=jnp.float16):
 def matmul_impl() -> str:
     """Which INT4 matmul runs: 'fused' (Pallas, compiled on TPU / interpret
     elsewhere) or 'dequant' (materialize + dot, XLA fuses on TPU).
+    REPRO_QUANT_MATMUL ∈ {auto, fused, dequant}; 'auto' → fused on TPU
+    only."""
+    from repro.kernels import resolve_impl
 
-    REPRO_QUANT_MATMUL ∈ {auto, fused, dequant} overrides; 'auto' picks
-    fused only on a real TPU backend — in interpret mode the kernel is a
-    parity tool, not a fast path."""
-    impl = os.environ.get("REPRO_QUANT_MATMUL", "auto")
-    if impl == "auto":
-        return "fused" if jax.default_backend() == "tpu" else "dequant"
-    return impl
+    return resolve_impl("REPRO_QUANT_MATMUL", "fused", "dequant")
 
 
 def matmul(x: jnp.ndarray, w) -> jnp.ndarray:
@@ -170,6 +165,6 @@ def matmul(x: jnp.ndarray, w) -> jnp.ndarray:
     if matmul_impl() == "fused":
         from repro.kernels import quant_matmul as QM
         if QM.supports(x, w):
-            return QM.fused_matmul(x, w,
-                                   interpret=jax.default_backend() != "tpu")
+            # interpret resolution deferred to kernels.interpret_default()
+            return QM.fused_matmul(x, w)
     return x @ w.dequant(x.dtype)

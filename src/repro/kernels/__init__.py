@@ -1,3 +1,44 @@
 """Pallas TPU kernels for the hierarchical quantized KV cache (contiguous
-and block-table paged flash decoding), their pure-jnp oracles (ref.py), and
-the jit wrappers tying kernels to the cache/model layer (ops.py)."""
+and block-table paged flash decoding), the causal flash-prefill kernel
+(prefill_attention.py), their pure-jnp oracles (ref.py), and the jit
+wrappers tying kernels to the cache/model layer (ops.py)."""
+
+from __future__ import annotations
+
+import os
+
+
+def resolve_impl(env_var: str, tpu_impl: str, fallback: str) -> str:
+    """Shared env-var/backend dispatch for every kernel fast path.
+
+    ``env_var`` ∈ {auto, ``tpu_impl``, ``fallback``}: 'auto' picks the
+    kernel implementation only on a real TPU backend — in interpret mode
+    the kernels are parity tools, not fast paths."""
+    impl = os.environ.get(env_var, "auto")
+    if impl == "auto":
+        import jax
+
+        return tpu_impl if jax.default_backend() == "tpu" else fallback
+    return impl
+
+
+def interpret_default() -> bool:
+    """Backend-aware default for every kernel's ``interpret`` flag.
+
+    Pallas kernels compile to real TPU programs on a TPU backend and run in
+    the (slow, but numerically faithful) interpreter everywhere else —
+    previously each entry point hardcoded ``interpret=True`` and callers had
+    to thread the right value through by hand.
+
+    ``REPRO_PALLAS_INTERPRET`` overrides: ``1``/``true`` forces interpret
+    mode (e.g. to exercise the interpreter on TPU in tests), ``0``/``false``
+    forces compiled mode. Unset/``auto`` → interpret only off-TPU.
+    """
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "auto").lower()
+    if env in ("1", "true", "yes", "interpret"):
+        return True
+    if env in ("0", "false", "no", "compile"):
+        return False
+    import jax
+
+    return jax.default_backend() != "tpu"

@@ -16,10 +16,13 @@ ragged).
 
 from __future__ import annotations
 
+from typing import Optional
+
 import jax.numpy as jnp
 
 from repro.core.hier_kv_cache import HierKVCache
 from repro.core.paged_kv_cache import PagedKVPool, PageTable
+from repro.kernels.prefill_attention import flash_prefill_attention
 from repro.kernels.quant_attention import (
     hier_flash_attention,
     paged_hier_flash_attention,
@@ -33,7 +36,7 @@ def _bh(x):
 
 
 def hier_attention(q, cache: HierKVCache, stream_pos, mode: str,
-                   softcap: float = 0.0, interpret: bool = True):
+                   softcap: float = 0.0, interpret: Optional[bool] = None):
     """q [B, T, Hq, D] over a hierarchical cache (post-append).
 
     Draft mode streams 4 bits/KV element through the kernel (the lower
@@ -73,7 +76,7 @@ def _pool_bh(x):
 
 def paged_hier_attention(q, pool: PagedKVPool, table: PageTable, stream_pos,
                          mode: str, softcap: float = 0.0,
-                         interpret: bool = True):
+                         interpret: Optional[bool] = None):
     """q [R, T, Hq, D] over a paged hierarchical cache (post-`apply_step`).
 
     `stream_pos` is per-slot [R] — the stream position of each slot's first
@@ -105,3 +108,32 @@ def paged_hier_attention(q, pool: PagedKVPool, table: PageTable, stream_pos,
 
     out = out.reshape(R, H, g, T, D).transpose(0, 3, 1, 2, 4)
     return out.reshape(R, T, Hq, D)
+
+
+def prefill_attention(q, k, v, q_start, kv_len, softcap: float = 0.0,
+                      interpret: Optional[bool] = None):
+    """Causal flash-prefill attention (serve-time prefill fast path).
+
+    q ``[B, T, Hq, D]`` are the chunk's queries at stream positions
+    ``q_start + [0, T)``; k/v ``[B, S, Hkv, D]`` hold the full key stream
+    (prompt-so-far + chunk), of which the first ``kv_len`` positions are
+    valid.  One-shot padded prefill is the ``q_start = 0, kv_len = L``
+    special case; a mid-prompt chunk is the rectangular causal band
+    ``q_start > 0``.  GQA folds the g query replicas into the row axis of
+    the same ``[B·Hkv, g·T, D]`` layout the decode kernels use, so each KV
+    tile is DMA'd once per kv-head."""
+    if softcap != 0.0:
+        raise NotImplementedError("softcap not fused in the Pallas kernel")
+    B, T, Hq, D = q.shape
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+
+    qr = q.reshape(B, T, Hkv, g, D).transpose(0, 2, 3, 1, 4)  # [B,H,g,T,D]
+    qr = qr.reshape(B * Hkv, g * T, D)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * Hkv, k.shape[1], D)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * Hkv, v.shape[1], D)
+
+    out = flash_prefill_attention(qr, kr, vr, q_start, kv_len, T,
+                                  interpret=interpret)        # [BH, gT, D]
+    out = out.reshape(B, Hkv, g, T, D).transpose(0, 3, 1, 2, 4)
+    return out.reshape(B, T, Hq, D)

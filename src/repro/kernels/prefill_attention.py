@@ -1,0 +1,142 @@
+"""Pallas TPU kernel: causal flash-attention for serve-time prefill.
+
+Long-context serving (the paper's 32k–512k regime) is admission-bound once
+decode is bandwidth-optimal: the jnp prefill path materializes per-chunk
+``[B, Hkv, g, Tc, S]`` logits, so a 128k prompt moves O(S²) float32 through
+HBM besides the O(S²) FLOPs it owes.  This kernel is the classic
+query-block × key-block flash schedule instead: grid ``(B·Hkv, NQ, NK)``
+with the online-softmax state ``(m, l, acc)`` carried in VMEM scratch
+across the (innermost, sequential) key-block axis — logits never leave
+registers.
+
+GQA uses the same ``[B·Hkv, g·T, D]`` layout as the decode kernels
+(kernels/quant_attention.py): the g query replicas of one KV head are
+stacked along the row axis, so each key/value tile is DMA'd **once per
+kv-head**, not once per query head; a row's stream position is
+``q_start + row % T``.
+
+The same kernel serves both prefill shapes:
+
+  * one-shot padded prefill (static engine): ``q_start = 0`` and
+    ``kv_len = L`` masks the bucket-padding tail, so one compiled program
+    covers every prompt length in a bucket;
+  * a mid-prompt chunk (chunked paged prefill): queries at stream
+    positions ``q_start + [0, T)`` over the full key stream so far — a
+    rectangular causal band.  Key blocks entirely above the band's causal
+    frontier or past ``kv_len`` are skipped via ``pl.when``.
+
+Both scalars are prefetched (``PrefetchScalarGridSpec``), so chunk
+position/raggedness never triggers a recompile — compile cost is
+O(#chunk-buckets), not O(#prompt lengths).
+
+The pure-jnp oracle is ``kernels/ref.py::prefill_attention_ref``; the
+model-level jnp path (`models.common.serve_prefill_attention`) remains the
+train-mode implementation and the parity reference.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import interpret_default
+from repro.kernels.quant_attention import _flash_init, _flash_out, _fold
+
+
+def _block_size(n: int, target: int) -> int:
+    """Largest divisor of ``n`` that is ≤ ``target`` (TPU-aligned shapes
+    divide evenly; ragged test shapes degrade gracefully)."""
+    b = min(n, target)
+    while n % b:
+        b -= 1
+    return b
+
+
+def _prefill_kernel(meta_ref, q_ref, k_ref, v_ref, out_ref,
+                    m_scr, l_scr, acc_scr, *, T: int, QB: int, KB: int,
+                    NK: int):
+    qb = pl.program_id(1)
+    kb = pl.program_id(2)
+    q0 = meta_ref[0]
+    kv_len = meta_ref[1]
+
+    @pl.when(kb == 0)
+    def _init():
+        _flash_init(m_scr, l_scr, acc_scr)
+
+    # rows of q-block qb are one contiguous position run (QB divides T):
+    # row r holds stream position q0 + r % T
+    blk_hi = q0 + (qb * QB) % T + QB - 1          # newest query in block
+
+    @pl.when((kb * KB <= blk_hi) & (kb * KB < kv_len))
+    def _process():
+        q = q_ref[0].astype(jnp.float32)           # [QB, D]
+        k = k_ref[0].astype(jnp.float32)           # [KB, D]
+        v = v_ref[0].astype(jnp.float32)
+        D = q.shape[-1]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * (1.0 / math.sqrt(D))               # [QB, KB]
+        row = jax.lax.broadcasted_iota(jnp.int32, (QB, KB), 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, (QB, KB), 1)
+        q_pos = q0 + (qb * QB + row) % T
+        k_pos = kb * KB + col
+        mask = (k_pos <= q_pos) & (k_pos < kv_len)
+        _fold(s, v, mask, m_scr, l_scr, acc_scr)
+
+    @pl.when(kb == NK - 1)
+    def _finalize():
+        _flash_out(out_ref, m_scr, l_scr, acc_scr)
+
+
+def flash_prefill_attention(q, k, v, q_start, kv_len, T: int, *,
+                            q_block: int = 128, k_block: int = 128,
+                            interpret: Optional[bool] = None):
+    """Causal flash prefill: q ``[BH, gT, D]`` (g GQA replicas × T query
+    positions, T inner), k/v ``[BH, S, D]``.
+
+    ``q_start`` (stream position of the chunk's first query) and ``kv_len``
+    (valid key prefix, ≤ S) are traced i32 scalars.  Query row ``r``
+    attends keys ``[0, min(q_start + r % T, kv_len - 1)]``.  Returns out
+    ``[BH, gT, D]``, softmax-normalized — padded queries (callers mask by
+    position) produce finite garbage rows.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    BH, gT, D = q.shape
+    S = k.shape[1]
+    assert gT % T == 0, (q.shape, T)
+    QB = _block_size(T, q_block)                  # QB | T ⇒ QB | gT
+    KB = _block_size(S, k_block)
+    NQ = gT // QB
+    NK = S // KB
+
+    meta = jnp.stack([jnp.asarray(q_start, jnp.int32).reshape(()),
+                      jnp.asarray(kv_len, jnp.int32).reshape(())])
+
+    out = pl.pallas_call(
+        functools.partial(_prefill_kernel, T=T, QB=QB, KB=KB, NK=NK),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(BH, NQ, NK),
+            in_specs=[
+                pl.BlockSpec((1, QB, D), lambda i, qb, kb, m: (i, qb, 0)),
+                pl.BlockSpec((1, KB, D), lambda i, qb, kb, m: (i, kb, 0)),
+                pl.BlockSpec((1, KB, D), lambda i, qb, kb, m: (i, kb, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, QB, D),
+                                   lambda i, qb, kb, m: (i, qb, 0)),
+            scratch_shapes=[pltpu.VMEM((QB, 1), jnp.float32),
+                            pltpu.VMEM((QB, 1), jnp.float32),
+                            pltpu.VMEM((QB, D), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((BH, gT, D), q.dtype),
+        interpret=interpret,
+    )(meta, q, k, v)
+    return out

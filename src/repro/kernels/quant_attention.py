@@ -42,11 +42,14 @@ from __future__ import annotations
 
 import functools
 import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import interpret_default
 
 NEG_INF = -1e30
 
@@ -184,7 +187,7 @@ def hier_flash_attention(q, k_upper, k_lower, k_scale, k_zero,
                          v_upper, v_lower, v_scale, v_zero,
                          buf_k, buf_v, blocks, buf_len, stream_pos,
                          T: int, mode: str, *, kb: int = 2,
-                         interpret: bool = True):
+                         interpret: Optional[bool] = None):
     """Single-pass hierarchical attention, contiguous layout.
 
     q ``[BH, gT, D]`` (g = GQA replicas, T queries each, T inner); packed
@@ -194,6 +197,8 @@ def hier_flash_attention(q, k_upper, k_lower, k_scale, k_zero,
     Returns out ``[BH, gT, D]`` — already softmax-normalized over the whole
     cache; no LSE leaves the kernel.
     """
+    if interpret is None:
+        interpret = interpret_default()
     BH, gT, D = q.shape
     NB, G = k_upper.shape[1], k_upper.shape[2]
     Dp = D // 2
@@ -316,7 +321,7 @@ def paged_hier_flash_attention(q, k_upper, k_lower, k_scale, k_zero,
                                v_upper, v_lower, v_scale, v_zero,
                                buf_k, buf_v, block_table, blocks, buf_len,
                                stream_pos, nh: int, T: int, mode: str, *,
-                               kb: int = 2, interpret: bool = True):
+                               kb: int = 2, interpret: Optional[bool] = None):
     """Single-pass hierarchical attention over a **paged** pool.
 
     q ``[R*H, gT, D]``; pool planes flattened per (block, head):
@@ -328,6 +333,8 @@ def paged_hier_flash_attention(q, k_upper, k_lower, k_scale, k_zero,
     each lane DMAs exactly the pool block the sequence owns — the gather
     never materializes.  Returns out ``[R*H, gT, D]``.
     """
+    if interpret is None:
+        interpret = interpret_default()
     RH, gT, D = q.shape
     R, NBmax = block_table.shape
     G = k_upper.shape[1]
@@ -465,9 +472,11 @@ def _paged_kernel(blocks_ref,                 # scalar prefetch: [R] i32
 def paged_quant_region_attention(q, k_upper, k_lower, k_scale, k_zero,
                                  v_upper, v_lower, v_scale, v_zero,
                                  block_table, blocks, nh: int, mode: str, *,
-                                 interpret: bool = True):
+                                 interpret: Optional[bool] = None):
     """Legacy two-pass flash decoding over a **paged** quantized region
     (no FP buffer; returns ``(out, lse)`` for an external merge)."""
+    if interpret is None:
+        interpret = interpret_default()
     RH, gT, D = q.shape
     NBmax = block_table.shape[1]
     G = k_upper.shape[1]
@@ -512,10 +521,12 @@ def paged_quant_region_attention(q, k_upper, k_lower, k_scale, k_zero,
 
 def quant_region_attention(q, k_upper, k_lower, k_scale, k_zero,
                            v_upper, v_lower, v_scale, v_zero,
-                           blocks, mode: str, *, interpret: bool = True):
+                           blocks, mode: str, *, interpret: Optional[bool] = None):
     """Legacy two-pass kernel: q [BH, gT, D]; packed planes
     [BH, NB, G, D//2]; k_scale/zero [BH, NB, 1, D]; v_scale/zero
     [BH, NB, G, 1]. Returns (out [BH, gT, D], lse [BH, gT])."""
+    if interpret is None:
+        interpret = interpret_default()
     BH, gT, D = q.shape
     NB, G = k_upper.shape[1], k_upper.shape[2]
     Dp = D // 2

@@ -31,11 +31,14 @@ Validated in interpret mode against ``Int4Weight.dequant() @ x``
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import interpret_default
 
 # Decode activations are a few rows; above this the matmul is compute-bound
 # and the dequant+dot path (MXU-friendly fp tiles, XLA fusion) wins.
@@ -66,13 +69,15 @@ def _kernel(x_ref, p_ref, s_ref, z_ref, o_ref, acc_scr, *, ng: int):
         o_ref[...] = acc_scr[...].astype(o_ref.dtype)
 
 
-def int4_matmul(x, packed, scale, zero, *, interpret: bool = True):
+def int4_matmul(x, packed, scale, zero, *, interpret: Optional[bool] = None):
     """``x [M, K] @ dequant(packed, scale, zero) [K, N] -> [M, N]``.
 
     ``K = ng * group`` with ``group = 2 * packed.shape[1]``. The weight
     never materializes in HBM: dequantization happens in-register after the
     VMEM copy of each packed tile.
     """
+    if interpret is None:
+        interpret = interpret_default()
     M, K = x.shape
     ng, gh, N = packed.shape
     group = 2 * gh
@@ -98,7 +103,7 @@ def int4_matmul(x, packed, scale, zero, *, interpret: bool = True):
     return out
 
 
-def fused_matmul(x, w, *, interpret: bool = True):
+def fused_matmul(x, w, *, interpret: Optional[bool] = None):
     """``x [..., K]`` times an :class:`~repro.core.weight_quant.Int4Weight`
     (duck-typed: needs ``.packed/.scale/.zero``; 2-D logical weights only).
     Leading activation dims are flattened into the row axis."""

@@ -9,11 +9,14 @@ head_dim), emitting both nibble-packed INT4 planes plus fp32 scale/zero.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import interpret_default
 
 _EPS = 1e-8
 
@@ -53,8 +56,10 @@ def _kernel(k_ref, v_ref,
     vz_ref[0] = z
 
 
-def quantize_kv_block(k, v, *, interpret: bool = True):
+def quantize_kv_block(k, v, *, interpret: Optional[bool] = None):
     """k, v [BH, G, D] -> dict of packed planes + scales (see ref.py)."""
+    if interpret is None:
+        interpret = interpret_default()
     BH, G, D = k.shape
     Dp = D // 2
     spec_in = pl.BlockSpec((1, G, D), lambda i: (i, 0, 0))

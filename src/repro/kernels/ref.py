@@ -169,6 +169,24 @@ def paged_hier_attention_twopass_ref(q, k_upper, k_lower, k_scale, k_zero,
     return _combine(out_q, lse_q, out_b, lse_b, q.dtype)
 
 
+def prefill_attention_ref(q, k, v, q_start, kv_len, T: int):
+    """Oracle for ``flash_prefill_attention`` (same operand layouts).
+
+    q ``[BH, gT, D]`` — g GQA replicas × T positions (row r at stream
+    position ``q_start + r % T``); k/v ``[BH, S, D]`` with the first
+    ``kv_len`` keys valid.  Returns the normalized output ``[BH, gT, D]``.
+    """
+    BH, gT, D = q.shape
+    S = k.shape[1]
+    q_pos = q_start + jnp.arange(gT) % T                       # [gT]
+    k_pos = jnp.arange(S)
+    mask = (k_pos[None, :] <= q_pos[:, None]) & \
+        (k_pos[None, :] < kv_len)                              # [gT, S]
+    mask = jnp.broadcast_to(mask[None], (BH, gT, S))
+    out, _ = _attention_with_lse(q, k, v, mask)
+    return out.astype(q.dtype)
+
+
 def quantize_kv_block_ref(k, v):
     """Hierarchically quantize one block. k,v [BH, G, D].
     Keys per-channel (reduce over G), values per-token (reduce over D).

@@ -40,6 +40,11 @@ def main():
                     default="static")
     ap.add_argument("--slots", type=int, default=2,
                     help="concurrent request slots (continuous engine)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="prefill chunk/bucket size in tokens: the static "
+                         "engine pads prompts to this grid (one compile "
+                         "per bucket); the continuous engine admits one "
+                         "chunk per iteration between spec rounds")
     ap.add_argument("--mesh", choices=["local", "single", "multi"],
                     default="local")
     args = ap.parse_args()
@@ -63,10 +68,13 @@ def main():
                 (args.batch, cfg.num_image_tokens, cfg.d_model)) * 0.02
 
         max_seq = args.prompt_len + args.max_new + 2 * cfg.group_size + 8
+        chunk_kw = {}
+        if args.prefill_chunk:
+            chunk_kw["prefill_chunk"] = args.prefill_chunk
         if args.engine == "continuous":
             eng = ContinuousEngine(model, params, gamma=args.gamma,
                                    greedy=args.greedy, max_slots=args.slots,
-                                   max_seq=max_seq)
+                                   max_seq=max_seq, **chunk_kw)
             # ragged prompts: vary lengths so requests join/retire mid-stream
             prompts = [np.asarray(prompt[i, : args.prompt_len - 7 * i])
                        for i in range(args.batch)]
@@ -80,7 +88,7 @@ def main():
             print("first request tokens:", results[0].tokens[0][:32].tolist())
             return
         eng = Engine(model, params, policy=args.policy, gamma=args.gamma,
-                     greedy=args.greedy, max_seq=max_seq)
+                     greedy=args.greedy, max_seq=max_seq, **chunk_kw)
         res = eng.generate(prompt, args.max_new, key=jax.random.PRNGKey(7),
                            memory=memory)
         s = res.stats

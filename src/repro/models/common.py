@@ -113,6 +113,70 @@ def causal_full_attention(q, k, v, softcap=0.0, q_chunk: int = 512):
     return jnp.concatenate(outs, axis=1)
 
 
+def prefill_impl() -> str:
+    """Which attention runs in serve-time prefill (quantspec/paged/fp
+    policies): 'pallas' (kernels/prefill_attention.py flash kernel) or
+    'jnp' (the chunked jnp path — also the train-mode implementation and
+    the kernel's parity oracle).  REPRO_PREFILL_ATTN ∈ {auto, pallas,
+    jnp}; 'auto' → the flash kernel on TPU only."""
+    from repro.kernels import resolve_impl
+
+    return resolve_impl("REPRO_PREFILL_ATTN", "pallas", "jnp")
+
+
+def serve_prefill_attention(q, k, v, valid_len=None, softcap: float = 0.0,
+                            q_chunk: int = 512):
+    """One-shot serve-prefill attention over a (possibly bucket-padded)
+    prompt: causal over the first ``valid_len`` tokens; padded queries
+    produce garbage rows the caller masks by position.
+
+    ``valid_len=None`` (unpadded) reduces to :func:`causal_full_attention`.
+    The jnp path keeps the same query-chunk structure as the unpadded path
+    so a padded prefill is numerically identical on the valid prefix.
+    """
+    if prefill_impl() == "pallas" and softcap == 0.0:
+        from repro.kernels import ops as kops
+        S = k.shape[1]
+        return kops.prefill_attention(q, k, v, 0,
+                                      S if valid_len is None else valid_len)
+    if valid_len is None:
+        return causal_full_attention(q, k, v, softcap, q_chunk)
+    B, T, Hq, D = q.shape
+    S = k.shape[1]
+    valid = jnp.asarray(valid_len, jnp.int32)
+    if T <= q_chunk:
+        mask = jnp.tril(jnp.ones((T, S), bool), k=S - T) & \
+            (jnp.arange(S)[None, :] < valid)
+        return gqa_attention(q, k, v, mask[None], softcap)
+    assert T == S, "chunked path expects self-attention"
+    outs = []
+    for start in range(0, T, q_chunk):
+        end = min(start + q_chunk, T)
+        mask = jnp.tril(jnp.ones((end - start, end), bool), k=start) & \
+            (jnp.arange(end)[None, :] < valid)
+        outs.append(gqa_attention(q[:, start:end], k[:, :end], v[:, :end],
+                                  mask[None], softcap))
+    return jnp.concatenate(outs, axis=1)
+
+
+def prefill_band_attention(q, k, v, q_start, kv_len, softcap: float = 0.0):
+    """Chunked-prefill attention: chunk queries ``[B, T]`` at stream
+    positions ``q_start + [0, T)`` over the full key stream so far
+    (``[B, S]``, first ``kv_len`` valid) — a rectangular causal band.
+    Both scalars are traced, so one compiled program serves every chunk."""
+    if prefill_impl() == "pallas" and softcap == 0.0:
+        from repro.kernels import ops as kops
+        return kops.prefill_attention(q, k, v, q_start, kv_len)
+    T = q.shape[1]
+    S = k.shape[1]
+    q_pos = jnp.asarray(q_start, jnp.int32) + jnp.arange(T)
+    k_pos = jnp.arange(S)
+    mask = (k_pos[None, :] <= q_pos[:, None]) & \
+        (k_pos[None, :] < jnp.asarray(kv_len, jnp.int32))
+    return gqa_attention(q, k.astype(q.dtype), v.astype(q.dtype),
+                         mask[None], softcap)
+
+
 def window_attention_chunked(q, k, v, window: int, softcap=0.0):
     """Sliding-window causal attention with banded (chunked) compute:
     each W-chunk of queries attends to its own + previous key chunk, so

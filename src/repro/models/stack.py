@@ -7,8 +7,12 @@ same compile time as its pattern.
 
 Three execution modes:
   train   — full-sequence causal forward, no caches (remat-able).
-  prefill — full-sequence forward that also fills the serving caches
-            (hierarchical quantization of all but the last G..2G tokens).
+  prefill — forward that also fills the serving caches (hierarchical
+            quantization of all but the last G..2G tokens).  Three serve
+            shapes: legacy full-sequence, bucket-padded one-shot
+            (`RunCtx.prefill_len` — length-masked, compiles per bucket),
+            and chunked paged admission (`RunCtx.prefill_chunk` — band
+            attention + fused quantize-to-pool, one chunk at a time).
   decode  — T new tokens against the caches; `kv_mode` selects the
             QuantSpec draft (upper-4-bit) or target (INT8) view, or the
             sparse-KV baseline draft caches.
@@ -79,6 +83,15 @@ class RunCtx:
     # table) computed once by the engine and applied by every layer
     pool_blocks: int = 0
     plan: Optional[PC.PagedPlan] = None
+    # serve-time prefill:
+    #  prefill_len   — valid prompt length of a bucket-padded one-shot
+    #                  prefill (quantspec/fp policies); padding past it is
+    #                  position-masked, so one compile serves a bucket
+    #  prefill_chunk — chunked paged prefill: this chunk's admission plan
+    #                  (PrefillChunkStep), computed once by the engine and
+    #                  executed by every attention layer
+    prefill_len: Optional[jnp.ndarray] = None
+    prefill_chunk: Optional[PC.PrefillChunkStep] = None
     # KV-quantization simulation in full-sequence forward (quality benches):
     # (key_axis, value_axis, bits, residual) e.g. ('channel','token',4,256)
     kv_sim: Optional[tuple] = None
@@ -236,6 +249,8 @@ def apply_mixer(spec: LayerSpec, p: dict, cfg: ModelConfig, h: jnp.ndarray,
             # (continuous batching: every request at its own position)
             positions = sp[..., None] + jnp.arange(T) if sp.ndim \
                 else sp + jnp.arange(T)
+        elif ctx.mode == "prefill" and ctx.prefill_chunk is not None:
+            positions = ctx.prefill_chunk.pos + jnp.arange(T)
         else:
             positions = jnp.arange(T)
         q, k, v = L.project_qkv(p["attn"], cfg, h, positions)
@@ -261,15 +276,54 @@ def apply_mixer(spec: LayerSpec, p: dict, cfg: ModelConfig, h: jnp.ndarray,
                 att = L.window_attention_chunked(q, k, v, cfg.window, sc)
                 new = HC.window_append(state.primary, k, v)
                 return L.attn_out(p["attn"], att), state._replace(primary=new), None
-            att = L.causal_full_attention(q, k, v, sc)
             if ctx.policy == "paged":
-                raise NotImplementedError(
-                    "paged prefill goes through the dense batch-1 path + "
-                    "adopt_hier (see serving.engine.ContinuousEngine)")
+                # chunked paged prefill: this chunk's K/V join the fp
+                # scratch, attention runs over the causal band (history
+                # from the scratch — numerics match one-shot dense
+                # prefill), and the groups the chunk completes are
+                # quantized straight into pool blocks (no dense
+                # intermediate, no adopt copy)
+                step = ctx.prefill_chunk
+                if step is None:
+                    raise NotImplementedError(
+                        "paged prefill is chunked: pass a PrefillChunkStep "
+                        "via ctx_kw['prefill_chunk'] (see "
+                        "serving.engine.ContinuousEngine)")
+                scratch: PC.PrefillScratch = state.draft
+                zero = jnp.zeros((), jnp.int32)
+                sk = jax.lax.dynamic_update_slice(
+                    scratch.k, k.astype(scratch.k.dtype),
+                    (zero, step.pos, zero, zero))
+                sv = jax.lax.dynamic_update_slice(
+                    scratch.v, v.astype(scratch.v.dtype),
+                    (zero, step.pos, zero, zero))
+                scratch = PC.PrefillScratch(sk, sv)
+                att = L.prefill_band_attention(q, sk, sv, step.pos,
+                                               step.pos + step.valid, sc)
+                pool = PC.apply_prefill_chunk(state.primary, step, scratch)
+                return (L.attn_out(p["attn"], att),
+                        AttnState(pool, scratch), None)
+            if ctx.policy in ("quantspec", "fp"):
+                # serve-time prefill fast path: flash-prefill kernel on
+                # TPU, chunked jnp (the parity oracle) elsewhere; with
+                # prefill_len the prompt is bucket-padded + position-masked
+                att = L.serve_prefill_attention(q, k, v, ctx.prefill_len, sc)
+            else:
+                if ctx.prefill_len is not None:
+                    raise NotImplementedError(
+                        "bucket-padded prefill supports the quantspec/fp "
+                        f"policies, not {ctx.policy!r}")
+                att = L.causal_full_attention(q, k, v, sc)
             if ctx.policy == "quantspec":
-                new_primary = HC.prefill(state.primary, k, v)
+                new_primary = (HC.prefill(state.primary, k, v)
+                               if ctx.prefill_len is None else
+                               HC.prefill_dynamic(state.primary, k, v,
+                                                  ctx.prefill_len))
             elif ctx.policy == "streaming_only":
                 new_primary = HC.window_append(state.primary, k, v)
+            elif ctx.prefill_len is not None:
+                new_primary = HC.full_prefill(state.primary, k, v,
+                                              ctx.prefill_len)
             else:
                 new_primary = HC.full_append(state.primary, k, v)
             new_draft = state.draft
@@ -537,6 +591,18 @@ class StackModel:
                      **(ctx_kw or {}))
         x = self.embed(params, tokens)
         x, new_states, _, _ = self._run(params, x, state, ctx, 0)
+        if ctx.prefill_chunk is not None:
+            # chunked paged prefill: only the chunk's last *valid* position
+            # is ever sampled (by the final chunk), so unembed just that one
+            # — not C positions × vocab per chunk
+            idx = jnp.maximum(ctx.prefill_chunk.valid - 1, 0)
+            xl = jax.lax.dynamic_slice_in_dim(x, idx, 1, axis=1)
+            return self.unembed(params, xl), new_states
+        if ctx.prefill_len is not None:
+            # bucket-padded prompt: the last valid token, not the last slot
+            idx = jnp.maximum(jnp.asarray(ctx.prefill_len, jnp.int32) - 1, 0)
+            xl = jax.lax.dynamic_slice_in_dim(x, idx, 1, axis=1)
+            return self.unembed(params, xl), new_states
         return self.unembed(params, x[:, -1:]), new_states
 
     def decode(self, params, tokens, state, stream_pos, kv_mode: str,

@@ -3,15 +3,22 @@ with QuantSpec, autoregressive FP, and sparse-KV self-speculative baselines
 (StreamingLLM / SnapKV).
 
 `Engine` (static batch) jits one `spec_round` (draft γ → verify → commit)
-over a fixed ``[B, S]`` prompt batch and drives it in a Python loop;
-prefill is jitted separately per prompt length.
+over a fixed ``[B, S]`` prompt batch and drives it in a Python loop.  For
+pure full-attention stacks (quantspec/fp policies) prompts are padded to a
+chunk-bucket grid and prefilled through the length-masked fast path
+(`serve_prefill_attention` — the Pallas flash-prefill kernel on TPU), so
+prefill compiles once per bucket instead of once per prompt length.
 
 `ContinuousEngine` serves ragged multi-request traffic over the **paged**
 hierarchical cache (core/paged_kv_cache.py): requests are admitted into
 slots and retired between spec rounds, each slot progresses at its own
 stream position with per-sequence accept/rollback, and KV blocks come from
-a shared pool. Admission prefills through the existing dense batch-1 path
-and adopts the result into pool blocks (`adopt_hier`).
+a shared pool.  Admission is **chunked and decode-interleaved**: at most
+one fixed-size prompt chunk advances per engine iteration, each chunk
+attending the prompt-so-far (a transient fp scratch sized to the prompt's
+chunk bucket) and quantizing the groups it completes straight into pool
+blocks — no dense ``max_seq`` intermediate cache and no `adopt_hier` copy,
+and in-flight requests keep decoding while a 128k prompt trickles in.
 
 Policies (static engine)
 ------------------------
@@ -41,6 +48,7 @@ from repro.core import paged_kv_cache as PC
 from repro.core.spec_decode import (ar_step, paged_ar_step, paged_spec_round,
                                     spec_round)
 from repro.core.weight_quant import quantize_tree
+from repro.models.config import ATTN_FULL
 from repro.models.stack import AttnState, StackModel
 from repro.serving.sampling import sample_token
 from repro.serving.scheduler import Request, Scheduler
@@ -70,12 +78,17 @@ class GenerationResult:
     stats: GenStats
 
 
+def _round_up(n: int, step: int) -> int:
+    return -(-max(n, 1) // step) * step
+
+
 class Engine:
     def __init__(self, model: StackModel, params, *, policy: str = "quantspec",
                  gamma: int = 4, greedy: bool = False,
                  temperature: float = 1.0,
                  quantize_weights: Optional[bool] = None,
-                 max_seq: int = 4096, ctx_kw: Optional[dict] = None):
+                 max_seq: int = 4096, prefill_chunk: int = 512,
+                 ctx_kw: Optional[dict] = None):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -85,6 +98,7 @@ class Engine:
         self.temperature = temperature
         self.ctx_kw = ctx_kw or {}
         self.max_seq = max_seq
+        self.prefill_chunk = prefill_chunk
         if policy == "quantspec" and gamma + 1 > self.cfg.group_size:
             # one verify pass appends gamma+1 tokens; maybe_flush frees at
             # most G buffer slots, so the append must fit one group
@@ -95,6 +109,14 @@ class Engine:
         self.draft_params = (quantize_tree(
             params, group=self.cfg.weight_quant_group)
             if quantize_weights else params)
+        # bucketed (padded, length-masked) prefill: pure full-attention
+        # stacks under the quantspec/fp policies; other mixers keep scalar
+        # stream positions / select on the full prompt, so they take the
+        # legacy per-length path
+        self._bucketed = (policy in ("quantspec", "fp") and
+                          all(s.mixer == ATTN_FULL for s in self.cfg.layers))
+        G = self.cfg.group_size
+        self._prefill_cap = _round_up(max_seq, G) + 2 * G
 
         self._round = jax.jit(
             partial(spec_round, model, gamma=gamma, policy=policy,
@@ -110,14 +132,37 @@ class Engine:
                                     static_argnames=("batch",))
 
     # ------------------------------------------------------------------
-    def _prefill(self, prompt, memory, batch):
+    def _prefill(self, prompt, memory, batch, valid_len=None):
         state = self.model.init_serve_state(
             batch, max_seq=self.max_seq, policy=self.policy,
             ctx_kw=self.ctx_kw)
+        kw = dict(self.ctx_kw)
+        if valid_len is not None:
+            kw["prefill_len"] = valid_len
         logits, state = self.model.prefill(
             self.params, prompt, state, policy=self.policy, memory=memory,
-            ctx_kw=self.ctx_kw)
+            ctx_kw=kw)
         return logits, state
+
+    def prefill_compiles(self) -> int:
+        """Distinct prefill programs compiled so far (one per chunk bucket
+        on the padded path; one per prompt length on the legacy path)."""
+        return self._prefill_jit._cache_size()
+
+    def _run_prefill(self, prompt, memory, batch):
+        """Dispatch to the bucketed padded prefill when the stack/policy
+        support it; the prompt is padded to the chunk-bucket grid and the
+        true length is position-masked inside (a traced scalar, so ragged
+        sweeps reuse one compiled program per bucket)."""
+        L = prompt.shape[1]
+        bucket = _round_up(L, self.prefill_chunk)
+        if not self._bucketed or memory is not None \
+                or bucket > self._prefill_cap:
+            return self._prefill_jit(prompt, memory, batch=batch)
+        pad = [(0, 0), (0, bucket - L)] + [(0, 0)] * (prompt.ndim - 2)
+        padded = jnp.pad(jnp.asarray(prompt), pad)
+        return self._prefill_jit(padded, memory, batch=batch,
+                                 valid_len=jnp.asarray(L, jnp.int32))
 
     def generate(self, prompt: jnp.ndarray, max_new_tokens: int,
                  key=None, memory=None, speculative: Optional[bool] = None
@@ -132,7 +177,7 @@ class Engine:
 
         t0 = time.perf_counter()
         logits, state = jax.block_until_ready(
-            self._prefill_jit(prompt, memory, batch=B))
+            self._run_prefill(prompt, memory, B))
         stats.prefill_s = time.perf_counter() - t0
 
         key, k0 = jax.random.split(key)
@@ -172,6 +217,18 @@ class Engine:
         return GenerationResult(tokens=tokens, stats=stats)
 
 
+@dataclasses.dataclass
+class _PrefillJob:
+    """One in-flight chunked admission: per-layer fp scratch + progress."""
+
+    req: Request
+    slot: int
+    bucket: int                  # prompt length rounded up to the chunk grid
+    n_chunks: int
+    scratch: list                # per-attn-layer PrefillScratch (walk order)
+    chunk: int = 0               # chunks admitted so far
+
+
 class ContinuousEngine:
     """Continuous-batching engine over the paged hierarchical cache.
 
@@ -180,6 +237,14 @@ class ContinuousEngine:
     worst-case footprint. One jitted `paged_spec_round` serves every round
     regardless of which requests occupy which slots (shapes are static in
     [slots, pool]); admission/retirement mutate only the page table.
+
+    Admission is chunked: each engine iteration advances the in-flight
+    prefill by at most one ``prefill_chunk``-token chunk between spec
+    rounds, so admitting a long prompt never stalls active decodes.  A
+    chunk attends the prompt-so-far from a transient fp scratch (sized to
+    the prompt's chunk bucket — numerics match one-shot dense prefill) and
+    its completed groups are quantized straight into pool blocks; there is
+    no dense ``max_seq`` intermediate cache and no `adopt_hier` copy.
 
     Greedy decoding is schedule-invariant: each request's output tokens are
     identical to a batch-1 run of the static engine on the same prompt
@@ -190,7 +255,7 @@ class ContinuousEngine:
                  greedy: bool = False, temperature: float = 1.0,
                  quantize_weights: bool = True, max_slots: int = 4,
                  max_seq: int = 4096, pool_blocks: Optional[int] = None,
-                 ctx_kw: Optional[dict] = None):
+                 prefill_chunk: int = 256, ctx_kw: Optional[dict] = None):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -199,6 +264,7 @@ class ContinuousEngine:
         self.temperature = temperature
         self.max_slots = max_slots
         self.max_seq = max_seq
+        self.prefill_chunk = prefill_chunk
         G = self.cfg.group_size
         if gamma + 1 > G:
             # plan_step flushes at most one block per step, so a verify
@@ -219,6 +285,7 @@ class ContinuousEngine:
         self.last = jnp.zeros((max_slots, 1), jnp.int32)
         self.scheduler = Scheduler(max_slots, self.pool_blocks, G)
         self._retired: List[Request] = []   # finished, not yet run()-claimed
+        self._prefilling: Optional[_PrefillJob] = None
 
         self._round = jax.jit(partial(
             paged_spec_round, model, gamma=gamma, greedy=greedy,
@@ -226,63 +293,142 @@ class ContinuousEngine:
         self._ar = jax.jit(partial(
             paged_ar_step, model, greedy=greedy, temperature=temperature,
             ctx_kw=self.ctx_kw or None))
-        self._prefill_jit = jax.jit(self._dense_prefill)
+        self._chunk_jit = jax.jit(self._chunk_step)
+        self._finalize_jit = jax.jit(self._finalize_step)
 
-    # ------------------------------------------------------------------
-    def _dense_prefill(self, prompt):
-        """Batch-1 prefill through the existing dense quantspec path."""
-        state = self.model.init_serve_state(
-            1, max_seq=self.max_seq, policy="quantspec", ctx_kw=self.ctx_kw)
-        logits, state = self.model.prefill(
-            self.params, prompt, state, policy="quantspec",
-            ctx_kw=self.ctx_kw)
-        return logits, state
+    # ---- chunked prefill pipeline ------------------------------------
+    def _chunk_step(self, params, tokens, state, table, slot, valid):
+        """One jitted prompt chunk: plan block allocation once, run the
+        stack (band attention + fused quantize-to-pool per layer)."""
+        table, step = PC.plan_prefill_chunk(
+            table, slot, valid, self.prefill_chunk, self.cfg.group_size)
+        kw = dict(self.ctx_kw)
+        kw["prefill_chunk"] = step
+        logits, state = self.model.prefill(params, tokens, state,
+                                           policy="paged", ctx_kw=kw)
+        return logits, state, table
 
-    # ------------------------------------------------------------------
+    def _finalize_step(self, state, table, slot):
+        """After the last chunk: move each layer's trailing fp window from
+        the scratch into the slot's double buffer and activate the slot."""
+        blocks = table.blocks[slot]
+        buf_len = table.buf_len[slot]
+
+        def fin(mix, stacked):
+            scratch = mix.draft
+            if stacked:
+                pool = jax.vmap(
+                    lambda pl_, sk, sv: PC.write_prefill_buffer(
+                        pl_, slot, blocks, buf_len, PC.PrefillScratch(sk, sv))
+                )(mix.primary, scratch.k, scratch.v)
+            else:
+                pool = PC.write_prefill_buffer(mix.primary, slot, blocks,
+                                               buf_len, scratch)
+            return AttnState(pool, scratch)
+
+        return self._map_attn(state, fin), PC.activate_slot(table, slot)
+
     @staticmethod
-    def _walk_attn(pst, dst, fn):
-        """Apply ``fn(paged_mixer, dense_mixer, stacked)`` over every layer
-        of (paged state, dense prefill state) in parallel, returning the
-        updated paged state."""
+    def _map_attn(state, fn):
+        """Apply ``fn(attn_state, stacked)`` over every mixer state (the
+        paged engine requires a pure full-attention stack)."""
         new = {"head": [], "tail": [], "blocks": None}
         for k in ("head", "tail"):
-            for (pm, pl), (dm, _) in zip(pst[k], dst[k]):
-                new[k].append((fn(pm, dm, False), pl))
-        new["blocks"] = tuple(
-            (fn(pm, dm, True), pl)
-            for (pm, pl), (dm, _) in zip(pst["blocks"], dst["blocks"]))
+            for mix, ml in state[k]:
+                new[k].append((fn(mix, False), ml))
+        new["blocks"] = tuple((fn(mix, True), ml)
+                              for mix, ml in state["blocks"])
         return new
 
-    def _first_attn_cache(self, dense_state):
+    def _inject_scratch(self, state, scratch: list):
+        it = iter(scratch)
+        return self._map_attn(
+            state, lambda mix, _s: AttnState(mix.primary, next(it)))
+
+    def _extract_scratch(self, state):
+        out: list = []
+
+        def fn(mix, _stacked):
+            out.append(mix.draft)
+            return AttnState(mix.primary, None)
+
+        return self._map_attn(state, fn), out
+
+    def _start_prefill(self, req: Request) -> _PrefillJob:
+        C = self.prefill_chunk
+        G = self.cfg.group_size
+        H, hd = self.cfg.num_kv_heads, self.cfg.hd
+        bucket = _round_up(req.prompt_len, C)
+        dtype = self._buf_dtype()
+
+        def make(_mix, stacked):
+            scr = PC.init_prefill_scratch(bucket, G, H, hd, dtype)
+            if stacked:
+                scr = jax.tree.map(
+                    lambda x: jnp.broadcast_to(
+                        x, (self.cfg.n_repeats,) + x.shape), scr)
+            return scr
+
+        scratch = []
+        self._map_attn(self.state,
+                       lambda mix, st: scratch.append(make(mix, st)) or mix)
+        req.admit_t = time.perf_counter()
+        req.prefill_bucket = bucket
+        return _PrefillJob(req=req, slot=req.slot, bucket=bucket,
+                           n_chunks=bucket // C, scratch=scratch)
+
+    def _buf_dtype(self):
         for k in ("head", "tail"):
-            for mix, _ in dense_state[k]:
-                if isinstance(mix, AttnState):
-                    return mix.primary, False
-        for mix, _ in dense_state["blocks"]:
-            if isinstance(mix, AttnState):
-                return mix.primary, True
-        raise ValueError("no attention layer in state")
+            for mix, _ in self.state[k]:
+                return mix.primary.buf_k.dtype
+        return self.state["blocks"][0][0].primary.buf_k.dtype
 
-    def _adopt(self, slot: int, dense_state, prompt_len: int):
-        """Move a dense batch-1 prefill into pool blocks + slot buffers."""
-        hier, stacked = self._first_attn_cache(dense_state)
-        n = int(hier.blocks[0] if stacked else hier.blocks)
-        buf_len = int(hier.buf_len[0] if stacked else hier.buf_len)
-        self.table, ids = PC.alloc_blocks(self.table, slot, n)
+    def _advance_prefill(self, key):
+        """Advance the in-flight admission by at most ONE chunk (starting a
+        new job if none is in flight) — the decode-interleaving contract."""
+        if self._prefilling is None:
+            req = self.scheduler.next_admission()
+            if req is None:
+                return key
+            self._prefilling = self._start_prefill(req)
+        job = self._prefilling
+        req = job.req
+        t0 = time.perf_counter()
+        C = self.prefill_chunk
+        start = job.chunk * C
+        valid = min(req.prompt_len - start, C)
+        tok = np.zeros((1, C), np.int32)
+        tok[0, :valid] = req.prompt[start:start + valid]
+        state = self._inject_scratch(self.state, job.scratch)
+        logits, state, self.table = self._chunk_jit(
+            self.params, jnp.asarray(tok), state, self.table,
+            jnp.asarray(job.slot, jnp.int32), jnp.asarray(valid, jnp.int32))
+        self.state, job.scratch = self._extract_scratch(state)
+        job.chunk += 1
+        req.prefill_pos = min(start + C, req.prompt_len)
+        req.prefill_chunks = job.chunk
 
-        def adopt_mixer(pm, dm, layer_stacked):
-            if not isinstance(pm, AttnState):
-                return pm
-            if layer_stacked:
-                pool = jax.vmap(
-                    lambda p, h: PC.adopt_hier(p, slot, ids, h))(
-                        pm.primary, dm.primary)
-            else:
-                pool = PC.adopt_hier(pm.primary, slot, ids, dm.primary)
-            return AttnState(pool, None)
-
-        self.state = self._walk_attn(self.state, dense_state, adopt_mixer)
-        self.table = PC.admit_slot(self.table, slot, prompt_len, buf_len)
+        if job.chunk == job.n_chunks:
+            state = self._inject_scratch(self.state, job.scratch)
+            state, self.table = self._finalize_jit(
+                state, self.table, jnp.asarray(job.slot, jnp.int32))
+            self.state, _ = self._extract_scratch(state)   # scratch freed
+            key, k0 = jax.random.split(key)
+            # the chunk step already sliced the last valid position
+            first = sample_token(
+                jax.block_until_ready(logits)[:, 0]
+                / self.temperature, k0, self.greedy)
+            self.last = self.last.at[job.slot, 0].set(first[0])
+            if req.max_new_tokens > 0:   # match the static engine's [:, :0]
+                req.tokens.append(int(first[0]))
+            self._prefilling = None
+            req.prefill_s += time.perf_counter() - t0
+            if req.generated >= req.max_new_tokens:
+                self._retire(job.slot)
+        else:
+            jax.block_until_ready(self.table.pos)
+            req.prefill_s += time.perf_counter() - t0
+        return key
 
     # ------------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int) -> Request:
@@ -295,26 +441,6 @@ class ContinuousEngine:
                 f"{self.nbmax} blocks/request)")
         return self.scheduler.submit(prompt, max_new_tokens)
 
-    def _admit_ready(self, key):
-        while True:
-            req = self.scheduler.next_admission()
-            if req is None:
-                return key
-            t0 = time.perf_counter()
-            logits, dense = jax.block_until_ready(
-                self._prefill_jit(jnp.asarray(req.prompt)[None]))
-            key, k0 = jax.random.split(key)
-            first = sample_token(logits[:, -1] / self.temperature, k0,
-                                 self.greedy)
-            self._adopt(req.slot, dense, req.prompt_len)
-            self.last = self.last.at[req.slot, 0].set(first[0])
-            if req.max_new_tokens > 0:   # match the static engine's [:, :0]
-                req.tokens.append(int(first[0]))
-            req.prefill_s = time.perf_counter() - t0
-            req.admit_t = t0
-            if req.generated >= req.max_new_tokens:
-                self._retire(req.slot)
-
     def _retire(self, slot: int):
         self.table = PC.free_slot(self.table, slot)
         req = self.scheduler.retire(slot)
@@ -323,9 +449,13 @@ class ContinuousEngine:
 
     # ------------------------------------------------------------------
     def step(self, key):
-        """One engine iteration: admit, one spec round, harvest, retire."""
-        key = self._admit_ready(key)
-        if not self.scheduler.active:
+        """One engine iteration: ≤1 prefill chunk, one spec round over the
+        decoding slots, harvest, retire."""
+        key = self._advance_prefill(key)
+        busy = self._prefilling.slot if self._prefilling else None
+        decoding = {s: r for s, r in self.scheduler.active.items()
+                    if s != busy}
+        if not decoding:
             return key
         key, kr = jax.random.split(key)
         if self.gamma > 0:
@@ -341,7 +471,7 @@ class ContinuousEngine:
             n_new = np.ones((self.max_slots,), np.int64)
             toks = np.asarray(self.last)
 
-        for slot, req in list(self.scheduler.active.items()):
+        for slot, req in list(decoding.items()):
             take = min(int(n_new[slot]),
                        req.max_new_tokens - req.generated)
             req.tokens.extend(int(t) for t in toks[slot, :take])

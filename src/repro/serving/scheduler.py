@@ -34,6 +34,12 @@ class Request:
     accepted: int = 0
     rounds: int = 0
     prefill_s: float = 0.0
+    # chunked-admission progress (decode-interleaved prefill): prompt tokens
+    # admitted so far, chunks executed, and the chunk-bucket the transient
+    # fp scratch was sized to
+    prefill_pos: int = 0
+    prefill_chunks: int = 0
+    prefill_bucket: int = 0
     admit_t: float = 0.0
     finish_t: float = 0.0
     done: bool = False

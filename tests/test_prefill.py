@@ -1,0 +1,419 @@
+"""Chunked/padded serve-time prefill pipeline.
+
+Covers the flash-prefill kernel (interpret mode) against the jnp causal
+oracle; bucket-padded one-shot prefill against the unpadded path; the
+chunked paged prefill against the dense-prefill + adopt oracle (cache
+contents and greedy continuations); decode-interleaved admission (token
+identity + no admission freeze); compile-once-per-bucket across a ragged
+prompt sweep; and the backend dispatch helpers (`interpret_default`,
+`quant_pack_impl`)."""
+
+import inspect
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.serving.engine as engine_mod
+from repro.configs import get_config
+from repro.core import hier_kv_cache as HC
+from repro.core import paged_kv_cache as PC
+from repro.core.quantization import quantize_kv_block_pair
+from repro.kernels import interpret_default
+from repro.kernels import ref as kref
+from repro.kernels.prefill_attention import flash_prefill_attention
+from repro.models.stack import StackModel
+from repro.serving.engine import ContinuousEngine, Engine
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("tiny-lm", smoke=True)
+    model = StackModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def make_prompt(cfg, n, seed=1):
+    return np.asarray(jax.random.randint(
+        jax.random.PRNGKey(seed), (n,), 0, cfg.vocab_size))
+
+
+# ---------------------------------------------------------------------------
+# kernel parity
+# ---------------------------------------------------------------------------
+
+class TestFlashPrefillKernel:
+    """Interpret-mode parity of the causal flash-prefill kernel vs the jnp
+    oracle (kernels/ref.py) over the shared [BH, gT, D] GQA layout."""
+
+    @pytest.mark.parametrize("shape", [
+        # (BH, g, T, S, D, q_start, kv_len)
+        (2, 1, 16, 48, 32, 0, 48),    # one-shot, exact bucket
+        (2, 2, 12, 40, 64, 0, 29),    # GQA g>1, ragged final chunk
+        (3, 1, 8, 64, 32, 24, 32),    # mid-prompt band chunk
+        (1, 3, 7, 21, 32, 14, 21),    # odd T (block-size fallback)
+        (1, 1, 5, 5, 64, 0, 5),       # chunk == S edge
+        (2, 2, 4, 32, 32, 28, 30),    # band with padded chunk tail
+    ])
+    def test_vs_ref(self, shape):
+        BH, g, T, S, D, q0, kvl = shape
+        key = jax.random.PRNGKey(hash(shape) % 2**31)
+        q = jax.random.normal(key, (BH, g * T, D))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (BH, S, D))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (BH, S, D))
+        got = flash_prefill_attention(q, k, v, q0, kvl, T,
+                                      q_block=8, k_block=16)
+        want = kref.prefill_attention_ref(q, k, v, q0, kvl, T)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=3e-5, rtol=3e-5)
+
+    def test_block_sizes_invariant(self):
+        BH, g, T, S, D = 2, 2, 12, 48, 32
+        key = jax.random.PRNGKey(3)
+        q = jax.random.normal(key, (BH, g * T, D))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (BH, S, D))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (BH, S, D))
+        outs = [flash_prefill_attention(q, k, v, 20, 32, T,
+                                        q_block=qb, k_block=kb)
+                for qb, kb in ((1, 1), (4, 8), (12, 48), (128, 128))]
+        for o in outs[1:]:
+            np.testing.assert_allclose(np.asarray(o), np.asarray(outs[0]),
+                                       atol=3e-5, rtol=3e-5)
+
+    def test_bf16(self):
+        BH, T, S, D = 2, 8, 24, 64
+        key = jax.random.PRNGKey(5)
+        q = jax.random.normal(key, (BH, T, D)).astype(jnp.bfloat16)
+        k = jax.random.normal(jax.random.fold_in(key, 1), (BH, S, D))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (BH, S, D))
+        got = flash_prefill_attention(q, k, v, 16, 24, T)
+        assert got.dtype == jnp.bfloat16
+        want = kref.prefill_attention_ref(q.astype(jnp.float32), k, v,
+                                          16, 24, T)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want), atol=2e-2, rtol=2e-2)
+
+    def test_jit_traced_scalars_single_compile(self):
+        """q_start/kv_len are traced: every chunk reuses one program."""
+        BH, T, S, D = 1, 8, 32, 32
+        key = jax.random.PRNGKey(7)
+        q = jax.random.normal(key, (BH, T, D))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (BH, S, D))
+        f = jax.jit(lambda q, k, q0, kvl: flash_prefill_attention(
+            q, k, k, q0, kvl, T))
+        for q0, kvl in ((0, 8), (8, 16), (24, 32)):
+            out = f(q, k, jnp.asarray(q0), jnp.asarray(kvl))
+            assert np.isfinite(np.asarray(out)).all()
+        assert f._cache_size() == 1
+
+
+# ---------------------------------------------------------------------------
+# backend dispatch helpers
+# ---------------------------------------------------------------------------
+
+class TestDispatchHelpers:
+    def test_interpret_default_env(self, monkeypatch):
+        monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+        assert interpret_default() is True
+        monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+        assert interpret_default() is False
+        monkeypatch.delenv("REPRO_PALLAS_INTERPRET")
+        # auto: interpret anywhere but TPU
+        assert interpret_default() is (jax.default_backend() != "tpu")
+
+    def test_quant_pack_dispatch_parity(self, monkeypatch):
+        """The Pallas pack route (interpret mode here) must agree with the
+        jnp quantizer through the same [..., G, H, D] adapter — upper
+        planes and scales exactly, lower plane within the known ±1
+        rounding-tie tolerance."""
+        key = jax.random.PRNGKey(11)
+        k = jax.random.normal(key, (3, 16, 2, 32)) * 1.5
+        v = jax.random.normal(jax.random.fold_in(key, 1), (3, 16, 2, 32))
+        monkeypatch.setenv("REPRO_QUANT_PACK", "jnp")
+        kq_j, vq_j = quantize_kv_block_pair(k, v)
+        monkeypatch.setenv("REPRO_QUANT_PACK", "pallas")
+        kq_p, vq_p = quantize_kv_block_pair(k, v)
+        for a, b in ((kq_j, kq_p), (vq_j, vq_p)):
+            assert a.upper.shape == b.upper.shape
+            assert a.scale.shape == b.scale.shape
+            np.testing.assert_array_equal(np.asarray(a.upper),
+                                          np.asarray(b.upper))
+            np.testing.assert_allclose(np.asarray(a.scale),
+                                       np.asarray(b.scale), atol=1e-6)
+            np.testing.assert_allclose(np.asarray(a.zero),
+                                       np.asarray(b.zero), atol=1e-6)
+            lj = np.asarray(a.lower, np.int32)
+            lp = np.asarray(b.lower, np.int32)
+            dh = np.abs((lj >> 4) - (lp >> 4))
+            dl = np.abs((lj & 0xF) - (lp & 0xF))
+            assert max(dh.max(), dl.max()) <= 1
+
+
+# ---------------------------------------------------------------------------
+# bucket-padded one-shot prefill (static engine)
+# ---------------------------------------------------------------------------
+
+class TestPaddedStaticPrefill:
+    @pytest.mark.parametrize("policy", ["quantspec", "fp"])
+    @pytest.mark.parametrize("L", [7, 37, 97])
+    def test_model_level_equivalence(self, tiny, policy, L):
+        cfg, model, params = tiny
+        Sp = ((L + 31) // 32) * 32 + 32
+        tok = jnp.asarray(make_prompt(cfg, L, seed=L))[None]
+        padded = jnp.pad(tok, ((0, 0), (0, Sp - L)))
+        st = model.init_serve_state(1, max_seq=Sp + 64, policy=policy)
+        lo_u, st_u = model.prefill(params, tok, st, policy=policy)
+        st = model.init_serve_state(1, max_seq=Sp + 64, policy=policy)
+        lo_p, st_p = model.prefill(params, padded, st, policy=policy,
+                                   ctx_kw={"prefill_len": jnp.asarray(L)})
+        np.testing.assert_allclose(np.asarray(lo_p), np.asarray(lo_u),
+                                   atol=2e-5, rtol=2e-5)
+        # caches agree everywhere they are defined (valid prefix masks)
+        for a, b in zip(jax.tree.leaves(st_u), jax.tree.leaves(st_p)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       atol=2e-4, rtol=2e-4)
+
+    def test_engine_tokens_identical_to_legacy(self, tiny):
+        cfg, model, params = tiny
+        L, max_new = 41, 12
+        prompt = jnp.asarray(make_prompt(cfg, L, seed=2))[None]
+        legacy = Engine(model, params, policy="quantspec", gamma=3,
+                        greedy=True, max_seq=256)
+        legacy._bucketed = False          # force the per-length path
+        bucketed = Engine(model, params, policy="quantspec", gamma=3,
+                          greedy=True, max_seq=256, prefill_chunk=32)
+        r_l = legacy.generate(prompt, max_new, key=jax.random.PRNGKey(7))
+        r_b = bucketed.generate(prompt, max_new, key=jax.random.PRNGKey(7))
+        np.testing.assert_array_equal(r_l.tokens, r_b.tokens)
+
+    def test_compiles_once_per_bucket(self, tiny):
+        cfg, model, params = tiny
+        eng = Engine(model, params, policy="quantspec", gamma=2, greedy=True,
+                     max_seq=256, prefill_chunk=32)
+        lens = [5, 20, 30, 33, 50, 64]        # buckets {32, 64}
+        for i, L in enumerate(lens):
+            eng.generate(jnp.asarray(make_prompt(cfg, L, seed=i))[None], 2,
+                         key=jax.random.PRNGKey(i))
+        assert eng.prefill_compiles() == 2, \
+            f"expected 2 bucket programs, got {eng.prefill_compiles()}"
+
+
+    def test_pallas_dispatch_tokens_identical(self, tiny, monkeypatch):
+        """REPRO_PREFILL_ATTN=pallas routes serve prefill through the flash
+        kernel (interpret mode here) with unchanged greedy output."""
+        cfg, model, params = tiny
+        prompt = jnp.asarray(make_prompt(cfg, 41, seed=8))[None]
+        monkeypatch.setenv("REPRO_PREFILL_ATTN", "jnp")
+        eng = Engine(model, params, policy="quantspec", gamma=2, greedy=True,
+                     max_seq=256, prefill_chunk=32)
+        want = eng.generate(prompt, 6, key=jax.random.PRNGKey(7)).tokens
+        monkeypatch.setenv("REPRO_PREFILL_ATTN", "pallas")
+        eng = Engine(model, params, policy="quantspec", gamma=2, greedy=True,
+                     max_seq=256, prefill_chunk=32)
+        got = eng.generate(prompt, 6, key=jax.random.PRNGKey(7)).tokens
+        np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# chunked paged prefill vs the dense + adopt oracle
+# ---------------------------------------------------------------------------
+
+def _attn_states(state):
+    """Flatten the paged engine state into per-layer (AttnState, stacked)."""
+    out = []
+    for k in ("head", "tail"):
+        for mix, _ in state[k]:
+            out.append((mix, False))
+    for mix, _ in state["blocks"]:
+        out.append((mix, True))
+    return out
+
+
+class TestChunkedVsDense:
+    """Chunked admission writes pool blocks/buffers identical (up to fp
+    reassociation of the attention sums feeding the quantizer) to the
+    legacy dense-prefill + adopt_hier copy path, and one-shot (single
+    chunk) admission matches it exactly."""
+
+    @pytest.mark.parametrize("n_chunks_hint", [1, 4])
+    def test_cache_contents_match_dense_adopt(self, tiny, n_chunks_hint):
+        cfg, model, params = tiny
+        G = cfg.group_size
+        L = 3 * G + 5
+        C = L if n_chunks_hint == 1 else G // 2   # one-shot vs 7 chunks
+        prompt = make_prompt(cfg, L, seed=3)
+        max_seq = L + 2 * G + 16
+
+        # chunked engine admission (no decode yet)
+        ceng = ContinuousEngine(model, params, gamma=2, greedy=True,
+                                max_slots=1, max_seq=max_seq,
+                                prefill_chunk=C)
+        req = ceng.submit(prompt, 2)     # >1 so admission doesn't retire
+        key = jax.random.PRNGKey(0)
+        while ceng._prefilling is not None or req.prefill_chunks == 0:
+            key = ceng._advance_prefill(key)
+        assert req.prefill_pos == L
+
+        # dense oracle: batch-1 contiguous prefill + adopt into a pool
+        st = model.init_serve_state(1, max_seq=max_seq, policy="quantspec")
+        _, dense = model.prefill(params, jnp.asarray(prompt)[None], st,
+                                 policy="quantspec")
+        n_blocks = (L - G) // G
+        table = PC.init_table(1, ceng.nbmax, ceng.pool_blocks)
+        table, ids = PC.alloc_blocks(table, 0, n_blocks)
+
+        eng_layers = _attn_states(ceng.state)
+        dense_layers = _attn_states(dense)
+        assert len(eng_layers) == len(dense_layers)
+        bt_ids = np.asarray(ceng.table.block_table[0, :n_blocks])
+        assert int(ceng.table.blocks[0]) == n_blocks
+        assert int(ceng.table.buf_len[0]) == L - n_blocks * G
+
+        for (em, stacked), (dm, _) in zip(eng_layers, dense_layers):
+            pools = [jax.tree.map(lambda x: x[i], em.primary)
+                     for i in range(cfg.n_repeats)] if stacked else [em.primary]
+            hiers = [jax.tree.map(lambda x: x[i], dm.primary)
+                     for i in range(cfg.n_repeats)] if stacked else [dm.primary]
+            for pool, hier in zip(pools, hiers):
+                for name in ("k_upper", "k_lower", "v_upper", "v_lower"):
+                    got = np.asarray(getattr(pool, name)[bt_ids])
+                    want = np.asarray(getattr(hier, name)[0, :n_blocks])
+                    # identical fp inputs up to attention reassociation;
+                    # codes may differ only at rare rounding boundaries
+                    mismatch = (got != want).mean()
+                    assert mismatch < 5e-3, (name, mismatch)
+                for name in ("k_scale", "k_zero", "v_scale", "v_zero"):
+                    got = np.asarray(getattr(pool, name)[bt_ids])
+                    want = np.asarray(getattr(hier, name)[0, :n_blocks])
+                    np.testing.assert_allclose(got, want, atol=1e-5,
+                                               rtol=1e-5, err_msg=name)
+                buf_len = L - n_blocks * G
+                for b, hb in (("buf_k", "buf_k"), ("buf_v", "buf_v")):
+                    got = np.asarray(getattr(pool, b)[0, :buf_len])
+                    want = np.asarray(getattr(hier, hb)[0, :buf_len])
+                    np.testing.assert_allclose(got, want, atol=1e-5,
+                                               rtol=1e-5)
+
+    def test_greedy_continuation_identical(self, tiny):
+        cfg, model, params = tiny
+        G = cfg.group_size
+        L = 2 * G + 9
+        prompt = make_prompt(cfg, L, seed=4)
+        max_seq = L + 16 + 2 * G + 8
+        static = Engine(model, params, policy="quantspec", gamma=3,
+                        greedy=True, max_seq=max_seq)
+        want = static.generate(jnp.asarray(prompt)[None], 10,
+                               key=jax.random.PRNGKey(7)).tokens[0]
+        for C in (G // 2, L):                 # multi-chunk and one-shot
+            ceng = ContinuousEngine(model, params, gamma=3, greedy=True,
+                                    max_slots=1, max_seq=max_seq,
+                                    prefill_chunk=C)
+            (res,) = ceng.generate([prompt], 10, key=jax.random.PRNGKey(7))
+            np.testing.assert_array_equal(res.tokens[0], want,
+                                          err_msg=f"chunk={C}")
+
+
+# ---------------------------------------------------------------------------
+# decode-interleaved admission
+# ---------------------------------------------------------------------------
+
+class TestInterleavedAdmission:
+    def test_decode_advances_while_admitting(self, tiny):
+        """Admitting a long prompt must not freeze in-flight decodes: the
+        active request keeps generating between prefill chunks."""
+        cfg, model, params = tiny
+        G = cfg.group_size
+        long_len = 3 * G + 5
+        max_seq = long_len + 2 * G + 72
+        ceng = ContinuousEngine(model, params, gamma=2, greedy=True,
+                                max_slots=2, max_seq=max_seq,
+                                prefill_chunk=G // 2)
+        a = ceng.submit(make_prompt(cfg, 17, seed=5), 64)
+        key = ceng.step(jax.random.PRNGKey(0))     # admit + start decoding a
+        b = ceng.submit(make_prompt(cfg, long_len, seed=6), 4)
+        gen_before, chunks_seen = a.generated, []
+        while ceng._prefilling is not None or b.prefill_chunks == 0:
+            key = ceng.step(key)
+            chunks_seen.append(b.prefill_chunks)
+            assert len(chunks_seen) < 50
+        assert b.prefill_chunks >= 7               # long prompt, 7+ chunks
+        assert a.generated > gen_before            # a decoded throughout
+        # at most one chunk advanced per engine iteration
+        steps = np.diff([0] + chunks_seen)
+        assert steps.max() <= 1
+        ceng.run(key)
+
+    def test_token_identity_with_interleaving(self, tiny):
+        cfg, model, params = tiny
+        G = cfg.group_size
+        lens = [3 * G + 5, 2 * G + 3, 17]
+        max_new = 8
+        max_seq = max(lens) + max_new + 2 * G + 8
+        prompts = [make_prompt(cfg, n, seed=10 + i)
+                   for i, n in enumerate(lens)]
+        static = []
+        for p in prompts:
+            eng = Engine(model, params, policy="quantspec", gamma=3,
+                         greedy=True, max_seq=max_seq)
+            static.append(eng.generate(jnp.asarray(p)[None], max_new,
+                                       key=jax.random.PRNGKey(7)).tokens[0])
+        ceng = ContinuousEngine(model, params, gamma=3, greedy=True,
+                                max_slots=2, max_seq=max_seq,
+                                prefill_chunk=G // 2)
+        results = ceng.generate(prompts, max_new, key=jax.random.PRNGKey(7))
+        for i, r in enumerate(results):
+            np.testing.assert_array_equal(r.tokens[0], static[i],
+                                          err_msg=f"request {i}")
+        assert int(ceng.table.free_top) == ceng.pool_blocks
+
+    def test_chunk_step_compiles_once_per_bucket(self, tiny):
+        cfg, model, params = tiny
+        G = cfg.group_size
+        ceng = ContinuousEngine(model, params, gamma=2, greedy=True,
+                                max_slots=1, max_seq=8 * G,
+                                prefill_chunk=G)
+        # lens spanning buckets {G, 2G, 3G}: 5 prompts, 3 buckets
+        for i, L in enumerate([7, G - 1, G + 3, 2 * G, 3 * G - 5]):
+            ceng.generate([make_prompt(cfg, L, seed=20 + i)], 2,
+                          key=jax.random.PRNGKey(i))
+        assert ceng._chunk_jit._cache_size() == 3
+        assert ceng._finalize_jit._cache_size() == 3
+
+
+# ---------------------------------------------------------------------------
+# the dense intermediate is gone
+# ---------------------------------------------------------------------------
+
+class TestNoDenseIntermediate:
+    def test_engine_has_no_adopt_path(self):
+        src = inspect.getsource(engine_mod)
+        assert "adopt_hier(" not in src          # no call site (docs may
+        assert "_dense_prefill" not in src       # mention its removal)
+        assert not hasattr(ContinuousEngine, "_adopt")
+
+    def test_scratch_sized_to_bucket_not_max_seq(self, tiny):
+        """Admission allocates only the transient chunk-bucket fp scratch —
+        no max_seq-sized dense cache."""
+        cfg, model, params = tiny
+        G = cfg.group_size
+        max_seq = 64 * G                      # deliberately huge
+        L = 2 * G + 3
+        C = G // 2
+        ceng = ContinuousEngine(model, params, gamma=2, greedy=True,
+                                max_slots=1, max_seq=max_seq,
+                                prefill_chunk=C)
+        req = ceng.submit(make_prompt(cfg, L, seed=30), 1)
+        ceng._advance_prefill(jax.random.PRNGKey(0))   # one chunk in flight
+        job = ceng._prefilling
+        assert job is not None and job.chunk == 1
+        bucket = -(-L // C) * C
+        assert job.bucket == bucket
+        S_scratch = job.scratch[0].k.shape[-3]
+        assert S_scratch == bucket + 2 * G
+        assert S_scratch < max_seq // 4
+        ceng.run(jax.random.PRNGKey(0))
+        assert req.generated == 1
+        assert ceng._prefilling is None

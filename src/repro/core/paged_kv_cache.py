@@ -22,6 +22,15 @@ Two pytrees, split so that bookkeeping is computed once per step while the
     (``[P+1, G, H, D//2]`` — block ``P`` is a scratch block that absorbs
     masked-out writes) plus the per-slot FP buffers ``[R, 2G, H, D]``.
 
+Sharding contract (distributed/specs.py): the pool-block axis is shared by
+every request and stays replicated; the kv-head axis ``H`` of every plane
+(packed INT4 upper/lower, scales, zeros) shards over the tensor-parallel
+``model`` mesh axis and the FP-buffer slot axis over ``data``. The
+``PageTable`` is tiny shared bookkeeping and is replicated — every step
+primitive below (plan/apply/rollback/commit/prefill-chunk) is elementwise
+or gather/scatter along *unsharded* axes of the planes, so the whole step
+protocol partitions without collectives.
+
 Step protocol (all jittable):
   1. ``plan_step(table, T, group)`` → ``(new_table, PageStep)`` decides,
      per slot, whether C_F1 flushes to a freshly allocated pool block and
@@ -111,6 +120,10 @@ class PagedKVPool(NamedTuple):
     @property
     def group(self) -> int:
         return self.buf_k.shape[1] // 2
+
+    @property
+    def kv_heads(self) -> int:
+        return self.buf_k.shape[2]
 
 
 class PageStep(NamedTuple):

@@ -31,7 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import acceptance
-from repro.serving.sampling import sample_token
+from repro.serving.sampling import maybe_top_p, sample_token
 
 
 class RoundResult(NamedTuple):
@@ -45,9 +45,12 @@ class RoundResult(NamedTuple):
 def spec_round(model, target_params, draft_params, state, last_token,
                stream_pos, key, *, gamma: int, policy: str = "quantspec",
                greedy: bool = False, temperature: float = 1.0,
-               ctx_kw=None) -> RoundResult:
+               top_p=None, ctx_kw=None) -> RoundResult:
     """last_token [B, 1] (or [B, 1, K] for codebooks). stream_pos = number
-    of tokens already processed by the target (cache length)."""
+    of tokens already processed by the target (cache length).
+
+    ``top_p`` filters BOTH the draft proposal q and the target p, so
+    speculative sampling stays exact w.r.t. the filtered target."""
     multi = model.cfg.num_codebooks > 0
     keys = jax.random.split(key, gamma + 2)
 
@@ -61,7 +64,7 @@ def spec_round(model, target_params, draft_params, state, last_token,
         dl, d_state, _ = model.decode(
             draft_params, cur, d_state, stream_pos + i,
             kv_mode="draft", policy=policy, ctx_kw=ctx_kw)
-        logits = dl[:, -1] / temperature
+        logits = maybe_top_p(dl[:, -1] / temperature, top_p)
         nxt = sample_token(logits, k_i, greedy)           # [B] or [B, K]
         q = jax.nn.softmax(logits, axis=-1)
         return (d_state, nxt[:, None].astype(cur.dtype)), (nxt, q)
@@ -77,7 +80,8 @@ def spec_round(model, target_params, draft_params, state, last_token,
     tl, t_state, snaps = model.decode(
         target_params, tgt_in, state, stream_pos, kv_mode="target",
         policy=policy, collect=True, ctx_kw=ctx_kw)
-    target_probs = jax.nn.softmax(tl / temperature, axis=-1)  # [B, γ+1(,K), V]
+    target_probs = jax.nn.softmax(
+        maybe_top_p(tl / temperature, top_p), axis=-1)    # [B, γ+1(,K), V]
 
     # ---- 3. verify + commit -------------------------------------------------
     if multi:
@@ -103,7 +107,7 @@ class PagedRoundResult(NamedTuple):
 
 def paged_spec_round(model, target_params, draft_params, state, table,
                      last_token, key, *, gamma: int, greedy: bool = False,
-                     temperature: float = 1.0, ctx_kw=None
+                     temperature: float = 1.0, top_p=None, ctx_kw=None
                      ) -> PagedRoundResult:
     """One continuous-batching QuantSpec round over the paged cache.
 
@@ -136,7 +140,7 @@ def paged_spec_round(model, target_params, draft_params, state, table,
         i, k_i = inp
         dl, d_state, d_table = run(draft_params, cur, d_state, d_table,
                                    table.pos + i, "draft", 1)
-        logits = dl[:, -1] / temperature
+        logits = maybe_top_p(dl[:, -1] / temperature, top_p)
         nxt = sample_token(logits, k_i, greedy)                # [R]
         q = jax.nn.softmax(logits, axis=-1)
         return (d_state, d_table, nxt[:, None].astype(cur.dtype)), (nxt, q)
@@ -151,7 +155,8 @@ def paged_spec_round(model, target_params, draft_params, state, table,
     tgt_in = jnp.concatenate([last_token, draft_tokens], axis=1)
     tl, t_state, v_table = run(target_params, tgt_in, state, table,
                                table.pos, "target", gamma + 1)
-    target_probs = jax.nn.softmax(tl / temperature, axis=-1)
+    target_probs = jax.nn.softmax(
+        maybe_top_p(tl / temperature, top_p), axis=-1)
 
     # ---- 3. per-sequence verify + commit -----------------------------------
     res = acceptance.verify_per_seq(draft_tokens, draft_probs, target_probs,
@@ -166,7 +171,7 @@ def paged_spec_round(model, target_params, draft_params, state, table,
 
 def paged_ar_step(model, params, state, table, last_token, key, *,
                   greedy: bool = False, temperature: float = 1.0,
-                  ctx_kw=None):
+                  top_p=None, ctx_kw=None):
     """Plain autoregressive step on the paged cache (per-slot positions)."""
     from repro.core import paged_kv_cache as PC
 
@@ -177,17 +182,17 @@ def paged_ar_step(model, params, state, table, last_token, key, *,
     tl, new_state, _ = model.decode(params, last_token, state, table.pos,
                                     kv_mode="target", policy="paged",
                                     ctx_kw=kw)
-    nxt = sample_token(tl[:, -1] / temperature, key, greedy)
+    nxt = sample_token(tl[:, -1] / temperature, key, greedy, top_p=top_p)
     n_new = jnp.ones((table.pos.shape[0],), jnp.int32)
     return new_state, PC.commit(tbl2, n_new), nxt[:, None]
 
 
 def ar_step(model, params, state, last_token, stream_pos, key, *,
             policy: str = "fp", greedy: bool = False, temperature: float = 1.0,
-            kv_mode: str = "target", ctx_kw=None):
+            top_p=None, kv_mode: str = "target", ctx_kw=None):
     """Plain autoregressive step (the paper's AR baseline)."""
     tl, new_state, _ = model.decode(params, last_token, state, stream_pos,
                                     kv_mode=kv_mode, policy=policy,
                                     ctx_kw=ctx_kw)
-    nxt = sample_token(tl[:, -1] / temperature, key, greedy)
+    nxt = sample_token(tl[:, -1] / temperature, key, greedy, top_p=top_p)
     return new_state, nxt[:, None]

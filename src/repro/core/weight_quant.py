@@ -159,12 +159,22 @@ def matmul(x: jnp.ndarray, w) -> jnp.ndarray:
     Quantized 2-D weights route through the fused Pallas dequant×matmul
     kernel (kernels/quant_matmul.py) when enabled; everything else falls
     back to ``dequant() @ x`` (the jnp reference the kernel is tested
-    against)."""
+    against).
+
+    Under a tensor-parallel mesh (`model` axis > 1) the quantized planes
+    are sharded per `distributed.specs.param_specs` and the dequant+dot
+    path runs instead: GSPMD partitions the fused ``dequant → dot`` pattern
+    and inserts the post-`wo`/`w_down` all-reduce, which a monolithic
+    pallas_call would force XLA to all-gather around. (The head-sharded
+    attention kernels get explicit shard_map entries in kernels/ops.py; a
+    shard_map fused-matmul entry would need the weight's in/out role at the
+    call site and is left for a later PR.)"""
     if not isinstance(w, Int4Weight):
         return x @ w.astype(x.dtype)
     if matmul_impl() == "fused":
+        from repro.distributed.sharding import model_parallel_size
         from repro.kernels import quant_matmul as QM
-        if QM.supports(x, w):
+        if model_parallel_size() == 1 and QM.supports(x, w):
             # interpret resolution deferred to kernels.interpret_default()
             return QM.fused_matmul(x, w)
     return x @ w.dequant(x.dtype)

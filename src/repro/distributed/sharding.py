@@ -101,6 +101,23 @@ def current_mesh() -> Optional[Mesh]:
     return ctx[0] if ctx else None
 
 
+def model_parallel_size(mesh: Optional[Mesh] = None) -> int:
+    """Extent of the tensor-parallel `model` axis of the active (or given)
+    mesh; 1 when no mesh / no model axis — the single-device fast paths."""
+    mesh = mesh if mesh is not None else current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return 1
+    return mesh.shape["model"]
+
+
+def data_parallel_size(mesh: Optional[Mesh] = None) -> int:
+    """Extent of the batch/slot `data` axis of the active (or given) mesh."""
+    mesh = mesh if mesh is not None else current_mesh()
+    if mesh is None or "data" not in mesh.axis_names:
+        return 1
+    return mesh.shape["data"]
+
+
 def logical_to_spec(*logical: Optional[str], rules=None) -> P:
     ctx = getattr(_state, "ctx", None)
     if rules is None:

@@ -15,6 +15,20 @@ Serving state: structural walk over the cache containers (type dispatch,
 no name parsing): batch → `data`, kv-heads → `model`; in long-context mode
 (batch=1) the cache *sequence* axis shards over `data` instead — chip-level
 flash-decoding (DESIGN.md §2).
+
+Paged serving state (continuous batching): the shared `PagedKVPool` planes
+(packed INT4 upper/lower + scales/zeros) shard their kv-head axis over
+`model` and replicate the pool-block axis (the pool is shared by every
+slot); the per-slot FP buffers shard slots → `data`, heads → `model`.
+`PageTable` bookkeeping and transient `PrefillScratch` stay replicated
+except the scratch's kv-head axis (→ `model`, matching the K/V projections
+that write it).
+
+Quantized draft params: `Int4Weight` leaves spec their packed/scale/zero
+planes like the fp matrix they quantize — the in-dim role lands on the
+group axis (`d_in//group`, axis -3) and the out-dim role on `d_out`
+(axis -1), so e.g. `wo`/`w_down` stay contraction-sharded and the
+post-projection all-reduce is the only collective, exactly as in fp.
 """
 
 from __future__ import annotations
@@ -26,6 +40,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import hier_kv_cache as HC
+from repro.core import paged_kv_cache as PC
+from repro.core.weight_quant import Int4Weight
 from repro.models import mamba as M
 from repro.models import rwkv6 as R
 from repro.models.stack import AttnState, CrossKV, SnapKVCache
@@ -69,11 +85,44 @@ def _leaf_name(path) -> str:
     return ""
 
 
+def _int4_specs(leaf: Int4Weight, path, mesh: Mesh, mode: str) -> Int4Weight:
+    """Spec an :class:`Int4Weight` like the fp matrix it quantizes.
+
+    Packed layout is ``[*lead, d_in//group, group//2, d_out]`` (scales/zeros
+    ``[*lead, d_in//group, 1, d_out]``): the matrix in-dim role goes on the
+    group axis (-3) and the out-dim role on ``d_out`` (-1) for every plane,
+    so a sharded draft tree never replicates the packed planes and the
+    contraction stays aligned with the fp activations."""
+    pathstr = jax.tree_util.keystr(path)
+    name = _leaf_name(path)
+    lead = leaf.packed.ndim - 3
+    in_ax = out_ax = None
+    Lp = [None] * lead
+    if "experts" in pathstr and name in ("w_gate", "w_up", "w_down"):
+        if lead >= 1:
+            Lp[-1] = _role_axis("model", mode, mesh)
+        in_ax = _role_axis("fsdp", mode, mesh)
+    else:
+        roles = _MATRIX_ROLES.get(name)
+        if roles is not None:
+            in_ax = _role_axis(roles[0], mode, mesh)
+            out_ax = _role_axis(roles[1], mode, mesh)
+    plane = lambda x: _fit(mesh, x.shape, (*Lp, in_ax, None, out_ax))
+    return Int4Weight(plane(leaf.packed), plane(leaf.scale),
+                      plane(leaf.zero), leaf.group)
+
+
 def param_specs(params, mesh: Mesh, mode: str = "serve"):
-    """Pytree of NamedSharding mirroring `params`."""
-    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    """Pytree of NamedSharding mirroring `params` (including quantized
+    `Int4Weight` draft trees, whose packed/scale/zero planes are spec'd
+    like the fp matrix they quantize)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=lambda x: isinstance(x, Int4Weight))
     out = []
     for path, leaf in flat:
+        if isinstance(leaf, Int4Weight):
+            out.append(_int4_specs(leaf, path, mesh, mode))
+            continue
         pathstr = jax.tree_util.keystr(path)
         name = _leaf_name(path)
         ndim = np.ndim(leaf)
@@ -192,6 +241,28 @@ def _cache_spec(obj, mesh: Mesh, long_ctx: bool, lead: int):
             sel_k=kv(obj.sel_k), sel_v=kv(obj.sel_v),
             sel_pos=_fit(mesh, obj.sel_pos.shape, (*Lp, b)),
             recent=_cache_spec(obj.recent, mesh, long_ctx, lead))
+    if isinstance(obj, PC.PagedKVPool):
+        # Shared block pool: every slot's quantized groups live here, so the
+        # pool-block axis is replicated (and shared across `data` replicas);
+        # the kv-head axis shards over `model` — packed INT4 planes, scales
+        # and zeros alike (all keep heads at axis 2 past the lead). Per-slot
+        # FP buffers shard slots → `data`, heads → `model`.
+        plane = lambda leaf: _fit(mesh, leaf.shape,
+                                  (*Lp, None, None, "model", None))
+        buf = lambda leaf: _fit(mesh, leaf.shape,
+                                (*Lp, "data", None, "model", None))
+        return PC.PagedKVPool(
+            k_upper=plane(obj.k_upper), k_lower=plane(obj.k_lower),
+            k_scale=plane(obj.k_scale), k_zero=plane(obj.k_zero),
+            v_upper=plane(obj.v_upper), v_lower=plane(obj.v_lower),
+            v_scale=plane(obj.v_scale), v_zero=plane(obj.v_zero),
+            buf_k=buf(obj.buf_k), buf_v=buf(obj.buf_v))
+    if isinstance(obj, PC.PrefillScratch):
+        # transient batch-1 fp prompt history: kv-heads → `model` (matching
+        # the K/V projections that write it), everything else replicated
+        kv = lambda leaf: _fit(mesh, leaf.shape,
+                               (*Lp, None, None, "model", None))
+        return PC.PrefillScratch(k=kv(obj.k), v=kv(obj.v))
     if isinstance(obj, CrossKV):
         b, _, h = kv_like(-2, obj.k)
         kv = lambda leaf: _fit(mesh, leaf.shape, (*Lp, b, None, h, None))
@@ -234,6 +305,18 @@ def state_specs(state, mesh: Mesh, long_ctx: bool = False):
         "blocks": (tuple(entry(p, 1) for p in state["blocks"])
                    if state["blocks"] is not None else None),
     }
+
+
+def table_specs(table: "PC.PageTable", mesh: Mesh):
+    """`PageTable` bookkeeping (block tables, per-slot lengths/positions,
+    free stack) is tiny and read by every layer — replicated."""
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), table)
+
+
+def scratch_specs(scratch, mesh: Mesh, stacked: bool = False):
+    """Spec tree for one layer's transient :class:`PrefillScratch`
+    (``stacked`` = the scan-stacked super-block variant, one lead axis)."""
+    return _cache_spec(scratch, mesh, False, 1 if stacked else 0)
 
 
 def replicated(tree, mesh: Mesh):

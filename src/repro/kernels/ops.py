@@ -19,14 +19,52 @@ from __future__ import annotations
 from typing import Optional
 
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.core.hier_kv_cache import HierKVCache
 from repro.core.paged_kv_cache import PagedKVPool, PageTable
+from repro.distributed.sharding import (current_mesh, data_parallel_size,
+                                        model_parallel_size)
 from repro.kernels.prefill_attention import flash_prefill_attention
 from repro.kernels.quant_attention import (
     hier_flash_attention,
     paged_hier_flash_attention,
 )
+
+
+# ---------------------------------------------------------------------------
+# tensor-parallel entry: Pallas kernels under a `model`-sharded mesh
+# ---------------------------------------------------------------------------
+# A pallas_call inside a jitted SPMD program would force XLA to gather its
+# operands; instead each wrapper below has a shard_map entry over the mesh
+# that slices the kv-head axis across `model` (and, when divisible, the
+# batch/slot axis across `data`) and runs the unchanged kernel on each
+# shard's local heads. Heads stay local — attention needs no collective at
+# all; the reduction over heads happens later in the (sharded) `wo` matmul.
+
+def _shard_map(fn, mesh, in_specs, out_specs):
+    try:
+        from jax import shard_map  # jax >= 0.5
+    except ImportError:
+        from jax.experimental.shard_map import shard_map
+    kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    try:
+        return shard_map(fn, check_vma=False, **kw)
+    except TypeError:  # older jax: the kwarg is check_rep
+        return shard_map(fn, check_rep=False, **kw)
+
+
+def _head_shard_ctx(Hkv: int, Hq: int, batch: int):
+    """(mesh, batch_axis) when the active mesh can head-shard this call:
+    the `model` extent must divide both head counts; the `data` axis rides
+    along on the batch/slot dim only when it divides."""
+    mesh = current_mesh()
+    m = model_parallel_size(mesh)
+    if mesh is None or m <= 1 or Hkv % m or Hq % m:
+        return None, None
+    d = data_parallel_size(mesh)
+    b_ax = "data" if d > 1 and batch % d == 0 else None
+    return mesh, b_ax
 
 
 def _bh(x):
@@ -46,26 +84,40 @@ def hier_attention(q, cache: HierKVCache, stream_pos, mode: str,
         raise NotImplementedError("softcap not fused in the Pallas kernel")
     B, T, Hq, D = q.shape
     H = cache.buf_k.shape[2]
-    g = Hq // H
     G = cache.group
 
-    qr = q.reshape(B, T, H, g, D).transpose(0, 2, 3, 1, 4)  # [B,H,g,T,D]
-    qr = qr.reshape(B * H, g * T, D)
-    buf_k = cache.buf_k.transpose(0, 2, 1, 3).reshape(B * H, 2 * G, D)
-    buf_v = cache.buf_v.transpose(0, 2, 1, 3).reshape(B * H, 2 * G, D)
+    def run(q, cache, stream_pos):
+        Bl = q.shape[0]                    # batch rows local to this shard
+        Hl = cache.buf_k.shape[2]          # heads local to this shard
+        gl = q.shape[2] // Hl
+        qr = q.reshape(Bl, T, Hl, gl, D).transpose(0, 2, 3, 1, 4)
+        qr = qr.reshape(Bl * Hl, gl * T, D)
+        buf_k = cache.buf_k.transpose(0, 2, 1, 3).reshape(Bl * Hl, 2 * G, D)
+        buf_v = cache.buf_v.transpose(0, 2, 1, 3).reshape(Bl * Hl, 2 * G, D)
+        out = hier_flash_attention(
+            qr,
+            _bh(cache.k_upper), _bh(cache.k_lower),
+            _bh(cache.k_scale), _bh(cache.k_zero),
+            _bh(cache.v_upper), _bh(cache.v_lower),
+            _bh(cache.v_scale), _bh(cache.v_zero),
+            buf_k, buf_v,
+            cache.blocks, cache.buf_len, stream_pos, T, mode,
+            interpret=interpret)                              # [BHl, gT, D]
+        out = out.reshape(Bl, Hl, gl, T, D).transpose(0, 3, 1, 2, 4)
+        return out.reshape(Bl, T, Hl * gl, D)
 
-    out = hier_flash_attention(
-        qr,
-        _bh(cache.k_upper), _bh(cache.k_lower),
-        _bh(cache.k_scale), _bh(cache.k_zero),
-        _bh(cache.v_upper), _bh(cache.v_lower),
-        _bh(cache.v_scale), _bh(cache.v_zero),
-        buf_k, buf_v,
-        cache.blocks, cache.buf_len, stream_pos, T, mode,
-        interpret=interpret)                                  # [BH, gT, D]
-
-    out = out.reshape(B, H, g, T, D).transpose(0, 3, 1, 2, 4)
-    return out.reshape(B, T, Hq, D)
+    mesh, b = _head_shard_ctx(H, Hq, B)
+    if mesh is None:
+        return run(q, cache, stream_pos)
+    plane = P(b, None, None, "model", None)    # [B, NB, G|1, H, X]
+    cache_specs = HierKVCache(
+        k_upper=plane, k_lower=plane, k_scale=plane, k_zero=plane,
+        v_upper=plane, v_lower=plane, v_scale=plane, v_zero=plane,
+        blocks=P(), buf_k=P(b, None, "model", None),
+        buf_v=P(b, None, "model", None), buf_len=P())  # lockstep scalars
+    qspec = P(b, None, "model", None)
+    return _shard_map(run, mesh, (qspec, cache_specs, P()), qspec)(
+        q, cache, jnp.asarray(stream_pos, jnp.int32))
 
 
 def _pool_bh(x):
@@ -86,28 +138,42 @@ def paged_hier_attention(q, pool: PagedKVPool, table: PageTable, stream_pos,
     if softcap != 0.0:
         raise NotImplementedError("softcap not fused in the Pallas kernel")
     R, T, Hq, D = q.shape
-    H = pool.buf_k.shape[2]
-    g = Hq // H
+    H = pool.kv_heads
     G = pool.group
 
-    qr = q.reshape(R, T, H, g, D).transpose(0, 2, 3, 1, 4)   # [R,H,g,T,D]
-    qr = qr.reshape(R * H, g * T, D)
-    buf_k = pool.buf_k.transpose(0, 2, 1, 3).reshape(R * H, 2 * G, D)
-    buf_v = pool.buf_v.transpose(0, 2, 1, 3).reshape(R * H, 2 * G, D)
+    def run(q, pool, block_table, blocks, buf_len, stream_pos):
+        Rl = q.shape[0]                    # slots local to this shard
+        Hl = pool.buf_k.shape[2]           # heads local to this shard
+        gl = q.shape[2] // Hl
+        qr = q.reshape(Rl, T, Hl, gl, D).transpose(0, 2, 3, 1, 4)
+        qr = qr.reshape(Rl * Hl, gl * T, D)
+        buf_k = pool.buf_k.transpose(0, 2, 1, 3).reshape(Rl * Hl, 2 * G, D)
+        buf_v = pool.buf_v.transpose(0, 2, 1, 3).reshape(Rl * Hl, 2 * G, D)
+        out = paged_hier_flash_attention(
+            qr,
+            _pool_bh(pool.k_upper), _pool_bh(pool.k_lower),
+            _pool_bh(pool.k_scale), _pool_bh(pool.k_zero),
+            _pool_bh(pool.v_upper), _pool_bh(pool.v_lower),
+            _pool_bh(pool.v_scale), _pool_bh(pool.v_zero),
+            buf_k, buf_v,
+            block_table, blocks, buf_len, stream_pos, Hl, T, mode,
+            interpret=interpret)                              # [RHl, gT, D]
+        out = out.reshape(Rl, Hl, gl, T, D).transpose(0, 3, 1, 2, 4)
+        return out.reshape(Rl, T, Hl * gl, D)
 
-    out = paged_hier_flash_attention(
-        qr,
-        _pool_bh(pool.k_upper), _pool_bh(pool.k_lower),
-        _pool_bh(pool.k_scale), _pool_bh(pool.k_zero),
-        _pool_bh(pool.v_upper), _pool_bh(pool.v_lower),
-        _pool_bh(pool.v_scale), _pool_bh(pool.v_zero),
-        buf_k, buf_v,
-        table.block_table, table.blocks, table.buf_len,
-        jnp.asarray(stream_pos, jnp.int32), H, T, mode,
-        interpret=interpret)                                  # [RH, gT, D]
-
-    out = out.reshape(R, H, g, T, D).transpose(0, 3, 1, 2, 4)
-    return out.reshape(R, T, Hq, D)
+    args = (q, pool, table.block_table, table.blocks, table.buf_len,
+            jnp.asarray(stream_pos, jnp.int32))
+    mesh, d = _head_shard_ctx(H, Hq, R)
+    if mesh is None:
+        return run(*args)
+    plane = P(None, None, "model", None)       # [P+1, G|1, H, X] shared pool
+    pool_specs = PagedKVPool(
+        k_upper=plane, k_lower=plane, k_scale=plane, k_zero=plane,
+        v_upper=plane, v_lower=plane, v_scale=plane, v_zero=plane,
+        buf_k=P(d, None, "model", None), buf_v=P(d, None, "model", None))
+    qspec = P(d, None, "model", None)
+    in_specs = (qspec, pool_specs, P(d, None), P(d), P(d), P(d))
+    return _shard_map(run, mesh, in_specs, qspec)(*args)
 
 
 def prefill_attention(q, k, v, q_start, kv_len, softcap: float = 0.0,
@@ -126,14 +192,23 @@ def prefill_attention(q, k, v, q_start, kv_len, softcap: float = 0.0,
         raise NotImplementedError("softcap not fused in the Pallas kernel")
     B, T, Hq, D = q.shape
     Hkv = k.shape[2]
-    g = Hq // Hkv
 
-    qr = q.reshape(B, T, Hkv, g, D).transpose(0, 2, 3, 1, 4)  # [B,H,g,T,D]
-    qr = qr.reshape(B * Hkv, g * T, D)
-    kr = k.transpose(0, 2, 1, 3).reshape(B * Hkv, k.shape[1], D)
-    vr = v.transpose(0, 2, 1, 3).reshape(B * Hkv, v.shape[1], D)
+    def run(q, k, v, q_start, kv_len):
+        Bl, Hl = q.shape[0], k.shape[2]
+        gl = q.shape[2] // Hl
+        qr = q.reshape(Bl, T, Hl, gl, D).transpose(0, 2, 3, 1, 4)
+        qr = qr.reshape(Bl * Hl, gl * T, D)
+        kr = k.transpose(0, 2, 1, 3).reshape(Bl * Hl, k.shape[1], D)
+        vr = v.transpose(0, 2, 1, 3).reshape(Bl * Hl, v.shape[1], D)
+        out = flash_prefill_attention(qr, kr, vr, q_start, kv_len, T,
+                                      interpret=interpret)    # [BHl, gT, D]
+        out = out.reshape(Bl, Hl, gl, T, D).transpose(0, 3, 1, 2, 4)
+        return out.reshape(Bl, T, Hl * gl, D)
 
-    out = flash_prefill_attention(qr, kr, vr, q_start, kv_len, T,
-                                  interpret=interpret)        # [BH, gT, D]
-    out = out.reshape(B, Hkv, g, T, D).transpose(0, 3, 1, 2, 4)
-    return out.reshape(B, T, Hq, D)
+    args = (q, k, v, jnp.asarray(q_start, jnp.int32),
+            jnp.asarray(kv_len, jnp.int32))
+    mesh, b = _head_shard_ctx(Hkv, Hq, B)
+    if mesh is None:
+        return run(*args)
+    spec = P(b, None, "model", None)
+    return _shard_map(run, mesh, (spec, spec, spec, P(), P()), spec)(*args)

@@ -33,7 +33,18 @@ SHAPES = {
     "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
     "decode_32k": dict(kind="decode", seq=32768, batch=128),
     "long_500k": dict(kind="decode", seq=524288, batch=1, long=True),
+    # continuous-batching serving state: one paged_spec_round over
+    # `batch` slots sharing a block pool (pool kv-heads → model, FP-buffer
+    # slots → data, table replicated) — pure-full-attention archs only
+    "paged_32k": dict(kind="paged", seq=32768, batch=64),
 }
+
+
+def paged_eligible(cfg) -> bool:
+    """The paged engine needs a pure full-attention, single-codebook stack."""
+    from repro.models.config import ATTN_FULL
+    return (cfg.num_codebooks == 0 and
+            all(s.mixer == ATTN_FULL for s in cfg.layers))
 
 DRYRUN_ARCHS = [a for a in ARCHS if a not in ("tiny-lm", "llama2-7b-32k")]
 
@@ -156,6 +167,38 @@ def build_step(arch: str, shape_name: str, mesh, n_repeats=None,
         step = make_train_step(model, opt)
         fn = jax.jit(step)
         return fn, (params_in, opt_in, batch), cfg
+
+    if info["kind"] == "paged":
+        # continuous-engine state: paged pool + shared table + quantized
+        # draft params, compiled as one sharded paged_spec_round
+        from repro.core import paged_kv_cache as PCC
+        from repro.core.spec_decode import paged_spec_round
+        from repro.core.weight_quant import quantize_tree
+
+        G = cfg.group_size
+        slots = info["batch"]
+        nbmax = -(-info["seq"] // G)
+        pool_blocks = slots * nbmax
+        state_sh = jax.eval_shape(
+            partial(model.init_serve_state, slots, info["seq"],
+                    policy="paged", ctx_kw={"pool_blocks": pool_blocks},
+                    dtype=jnp.bfloat16))
+        state_in = SP.apply_sharding_to_shapes(
+            state_sh, SP.state_specs(state_sh, mesh))
+        table_sh = jax.eval_shape(
+            partial(PCC.init_table, slots, nbmax, pool_blocks))
+        table_in = SP.apply_sharding_to_shapes(
+            table_sh, SP.table_specs(table_sh, mesh))
+        draft_sh = jax.eval_shape(
+            partial(quantize_tree, group=cfg.weight_quant_group), params_sh)
+        draft_in = SP.apply_sharding_to_shapes(
+            draft_sh, SP.param_specs(draft_sh, mesh, "serve"))
+        repl = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+        last = jax.ShapeDtypeStruct((slots, 1), jnp.int32, sharding=repl)
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32, sharding=repl)
+
+        fn = jax.jit(partial(paged_spec_round, model, gamma=4, greedy=True))
+        return fn, (params_in, draft_in, state_in, table_in, last, key), cfg
 
     policy = "quantspec"
     ctx_kw = {}
@@ -314,6 +357,11 @@ def main():
     failures = []
     for arch in archs:
         for shape in shapes:
+            if SHAPES[shape]["kind"] == "paged" and \
+                    not paged_eligible(get_config(arch)):
+                print(f"[dryrun] skip {arch} × {shape}: paged engine needs "
+                      f"a pure full-attention stack", flush=True)
+                continue
             for mp in meshes:
                 try:
                     run_one(arch, shape, mp, args.out, args.skip_hlo,

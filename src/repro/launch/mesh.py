@@ -2,25 +2,48 @@
 
 Single pod : (16, 16)      axes ("data", "model")  — 256 × TPU v5e
 Multi-pod  : (2, 16, 16)   axes ("pod", "data", "model") — 512 chips
+Host       : (D, M)        axes ("data", "model") — forced host-platform
+             CPU devices (`--mesh host<N>` / `host<D>x<M>`), so sharded
+             serving runs end-to-end on a laptop or in CI.
 
 Defined as functions (never module-level constants) so importing this module
 never touches jax device state; the dry-run must set
-XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax init.
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax init,
+and `make_host_mesh` appends the same flag itself *before* its first device
+query.
 """
 
 from __future__ import annotations
 
+import os
+import re
+from typing import Optional
+
 import jax
+import numpy as np
 
 # TPU v5e hardware constants (roofline)
 PEAK_FLOPS_BF16 = 197e12        # FLOP/s per chip
 HBM_BW = 819e9                  # bytes/s per chip
 ICI_BW = 50e9                   # bytes/s per link
 
+_HOST_FLAG = "--xla_force_host_platform_device_count"
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    have = jax.device_count()
+    if have < need:
+        name = "multi" if multi_pod else "single"
+        raise ValueError(
+            f"--mesh {name} needs a {'×'.join(map(str, shape))} mesh = "
+            f"{need} devices, but only {have} "
+            f"{'is' if have == 1 else 'are'} visible. Launch with "
+            f"XLA_FLAGS={_HOST_FLAG}={need} to force host-platform devices "
+            f"(dry-run style), or use --mesh host<N> for a runnable "
+            f"CPU mesh sized to this machine.")
     return jax.make_mesh(shape, axes)
 
 
@@ -28,3 +51,65 @@ def make_local_mesh():
     """1-device mesh with the production axis names — lets the same sharded
     step functions run on a laptop/CI CPU."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_host_mesh(data: int, model: int):
+    """(data, model) mesh over forced host-platform CPU devices.
+
+    Appends ``--xla_force_host_platform_device_count`` to XLA_FLAGS and
+    pins ``JAX_PLATFORMS=cpu`` (the flag only grows the *host* platform, so
+    on an accelerator machine the default backend would still be the 1-GPU/
+    TPU one) before the first device query — it only works if jax has not
+    initialized its backends yet (call it before any other jax API that
+    touches devices; `resolve_mesh` runs first thing in the serve
+    launcher). If jax is already initialized with fewer devices, fails with
+    instructions instead of an opaque mesh-construction error."""
+    need = data * model
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    flags = os.environ.get("XLA_FLAGS", "")
+    cur = re.search(re.escape(_HOST_FLAG) + r"=(\d+)", flags)
+    if cur is None:
+        os.environ["XLA_FLAGS"] = f"{flags} {_HOST_FLAG}={need}".strip()
+    elif int(cur.group(1)) < need:
+        # raise a preexisting smaller count (only effective pre-init)
+        os.environ["XLA_FLAGS"] = flags.replace(
+            cur.group(0), f"{_HOST_FLAG}={need}")
+    devices = jax.devices()
+    if len(devices) < need:
+        raise ValueError(
+            f"--mesh host{data}x{model} needs {need} devices but jax sees "
+            f"{len(devices)} — jax initialized before the host-device flag "
+            f"could take effect. Set JAX_PLATFORMS=cpu and "
+            f"XLA_FLAGS={_HOST_FLAG}={need} in the environment before "
+            f"launching (or create the mesh before any other jax call).")
+    arr = np.asarray(devices[:need]).reshape(data, model)
+    return jax.sharding.Mesh(arr, ("data", "model"))
+
+
+def resolve_mesh(spec: str):
+    """``--mesh`` argument → mesh.
+
+    local       1×1 mesh with production axis names (no real sharding)
+    single      16×16 ("data", "model") — validates 256 devices up front
+    multi       2×16×16 ("pod", "data", "model") — validates 512 devices
+    host<N>     N forced host-platform CPU devices as (N/2, 2); N odd → (1, N)
+    host<D>x<M> explicit (data, model) host-platform mesh
+    """
+    if spec == "local":
+        return make_local_mesh()
+    if spec in ("single", "multi"):
+        return make_production_mesh(multi_pod=spec == "multi")
+    m = re.fullmatch(r"host(\d+)(?:x(\d+))?", spec)
+    if m:
+        if m.group(2):
+            data, model = int(m.group(1)), int(m.group(2))
+        else:
+            n = int(m.group(1))
+            if n % 2 == 0 and n > 1:
+                data, model = n // 2, 2
+            else:           # odd N: pure tensor parallelism, (1, N)
+                data, model = 1, n
+        return make_host_mesh(data, model)
+    raise ValueError(
+        f"unknown --mesh {spec!r}: expected local | single | multi | "
+        f"host<N> | host<D>x<M>")

@@ -8,26 +8,25 @@ engine (ragged prompt lengths, admission/retirement between spec rounds):
 
     PYTHONPATH=src python -m repro.launch.serve --arch tiny-lm \
         --engine continuous --slots 2 --batch 4 --max-new 32 --greedy
+
+`--mesh` places and runs the engine tensor/data-parallel: target + draft
+params are sharded per `param_specs("serve")`, the (paged) cache per
+`state_specs`, and the jitted rounds run SPMD over the mesh.  `host<N>`
+forces N host-platform CPU devices so the sharded path is runnable
+anywhere:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tiny-lm --smoke \
+        --engine continuous --mesh host8 --greedy
 """
 
 from __future__ import annotations
 
 import argparse
 
-import jax
-import numpy as np
-
-from repro.configs import ARCHS, get_config
-from repro.data.pipeline import SyntheticCorpus
-from repro.distributed.sharding import axis_rules
-from repro.launch.mesh import make_local_mesh, make_production_mesh
-from repro.models.stack import StackModel
-from repro.serving.engine import ContinuousEngine, Engine
-
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=list(ARCHS), default="llama2-7b-32k")
+    ap.add_argument("--arch", default="llama2-7b-32k")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--policy", default="quantspec",
                     choices=["quantspec", "fp", "streaming", "snapkv"])
@@ -36,6 +35,10 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=256)
     ap.add_argument("--max-new", type=int, default=64)
     ap.add_argument("--greedy", action="store_true")
+    ap.add_argument("--top-p", type=float, default=None,
+                    help="nucleus sampling: filter BOTH the draft q and "
+                         "target p distributions (speculative sampling "
+                         "stays exact w.r.t. the filtered target)")
     ap.add_argument("--engine", choices=["static", "continuous"],
                     default="static")
     ap.add_argument("--slots", type=int, default=2,
@@ -45,14 +48,34 @@ def main():
                          "engine pads prompts to this grid (one compile "
                          "per bucket); the continuous engine admits one "
                          "chunk per iteration between spec rounds")
-    ap.add_argument("--mesh", choices=["local", "single", "multi"],
-                    default="local")
+    ap.add_argument("--mesh", default="local",
+                    help="local | single | multi | host<N> | host<D>x<M> — "
+                         "host meshes force host-platform CPU devices so "
+                         "sharded serving runs on any machine")
     args = ap.parse_args()
 
+    # resolve the mesh FIRST: host<N> meshes must append the forced-device
+    # XLA flag before anything initializes the jax backends
+    from repro.launch.mesh import resolve_mesh
+    mesh = resolve_mesh(args.mesh)
+
+    import jax
+    import numpy as np
+
+    from repro.configs import ARCHS, get_config
+    from repro.data.pipeline import SyntheticCorpus
+    from repro.distributed.sharding import axis_rules
+    from repro.models.stack import StackModel
+    from repro.serving.engine import ContinuousEngine, Engine
+
+    if args.arch not in ARCHS:
+        raise SystemExit(f"unknown --arch {args.arch!r}; choose from "
+                         f"{', '.join(ARCHS)}")
     cfg = get_config(args.arch, smoke=args.smoke)
     model = StackModel(cfg)
-    mesh = (make_local_mesh() if args.mesh == "local" else
-            make_production_mesh(multi_pod=args.mesh == "multi"))
+    # a 1×1 "local" mesh keeps the legacy unsharded engine path; any real
+    # mesh is handed to the engine, which places params/cache onto it
+    engine_mesh = mesh if mesh.devices.size > 1 else None
 
     with mesh, axis_rules(mesh, "serve"):
         params = model.init(jax.random.PRNGKey(0))
@@ -71,10 +94,14 @@ def main():
         chunk_kw = {}
         if args.prefill_chunk:
             chunk_kw["prefill_chunk"] = args.prefill_chunk
+        if engine_mesh is not None:
+            print(f"mesh {dict(engine_mesh.shape)}: params/cache sharded "
+                  f"per serve specs")
         if args.engine == "continuous":
             eng = ContinuousEngine(model, params, gamma=args.gamma,
-                                   greedy=args.greedy, max_slots=args.slots,
-                                   max_seq=max_seq, **chunk_kw)
+                                   greedy=args.greedy, top_p=args.top_p,
+                                   max_slots=args.slots, max_seq=max_seq,
+                                   mesh=engine_mesh, **chunk_kw)
             # ragged prompts: vary lengths so requests join/retire mid-stream
             prompts = [np.asarray(prompt[i, : args.prompt_len - 7 * i])
                        for i in range(args.batch)]
@@ -88,7 +115,8 @@ def main():
             print("first request tokens:", results[0].tokens[0][:32].tolist())
             return
         eng = Engine(model, params, policy=args.policy, gamma=args.gamma,
-                     greedy=args.greedy, max_seq=max_seq, **chunk_kw)
+                     greedy=args.greedy, top_p=args.top_p, max_seq=max_seq,
+                     mesh=engine_mesh, **chunk_kw)
         res = eng.generate(prompt, args.max_new, key=jax.random.PRNGKey(7),
                            memory=memory)
         s = res.stats

@@ -255,6 +255,10 @@ def apply_mixer(spec: LayerSpec, p: dict, cfg: ModelConfig, h: jnp.ndarray,
             positions = jnp.arange(T)
         q, k, v = L.project_qkv(p["attn"], cfg, h, positions)
         q = constrain(q, "batch", "seq", "heads", "head_dim")
+        # anchor K/V on the kv-head axis so cache writes (dense appends,
+        # paged pool flushes, prefill-scratch updates) stay shard-local
+        k = constrain(k, "batch", "seq", "kv_heads", "head_dim")
+        v = constrain(v, "batch", "seq", "kv_heads", "head_dim")
 
         if ctx.mode == "train" and ctx.kv_sim is not None:
             from repro.core.quantization import simulate_cache_quant
@@ -505,7 +509,10 @@ class StackModel:
     def _run(self, params, x, states, ctx: RunCtx, stream_pos):
         cfg = self.cfg
         aux_total = jnp.zeros((), jnp.float32)
-        new_states = {"head": [], "blocks": None, "tail": []}
+        # "blocks" defaults to () (not None) so a 0-repeat stack's state
+        # keeps the init_serve_state structure — decode loops scan over the
+        # state and lax.scan requires an exactly matching carry pytree
+        new_states = {"head": [], "blocks": (), "tail": []}
         snaps_out = {"head": [], "blocks": None, "tail": []}
 
         def run_flat(x, layers, specs, lstates, aux_total):

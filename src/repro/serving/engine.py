@@ -35,6 +35,7 @@ paged quantspec cache; set ``gamma=0`` for its AR baseline.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from functools import partial
@@ -43,11 +44,15 @@ from typing import List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import paged_kv_cache as PC
-from repro.core.spec_decode import (ar_step, paged_ar_step, paged_spec_round,
+from repro.core.spec_decode import (RoundResult, PagedRoundResult, ar_step,
+                                    paged_ar_step, paged_spec_round,
                                     spec_round)
 from repro.core.weight_quant import quantize_tree
+from repro.distributed import specs as SP
+from repro.distributed.sharding import axis_rules
 from repro.models.config import ATTN_FULL
 from repro.models.stack import AttnState, StackModel
 from repro.serving.sampling import sample_token
@@ -82,23 +87,67 @@ def _round_up(n: int, step: int) -> int:
     return -(-max(n, 1) // step) * step
 
 
+def round_stats(gamma: int, n_new: int, budget: int):
+    """Per-request accounting of one spec round that may be cut short by
+    the request's remaining token budget.
+
+    Returns ``(take, proposed_inc, accepted_inc)``. ``take = min(n_new,
+    budget)`` tokens are actually kept. ``proposed`` counts only drafts
+    that could ever have been used: ``gamma`` clamped by the *pre-round*
+    budget — never by the round's outcome, which would shrink ordinary
+    rounds and inflate acceptance rates. ``accepted`` counts the kept
+    tokens that are accepted drafts: the round's tokens are the
+    ``n_new - 1`` accepted drafts followed by the bonus/correction token,
+    so an untruncated round keeps ``n_new - 1`` of them and a truncated
+    round keeps ``take`` (the bonus token lies beyond the cut) —
+    ``min(take, n_new - 1)``. A fully-accepting round therefore reports
+    rate 1.0 whether or not the budget cut it short."""
+    take = min(n_new, budget)
+    return take, min(gamma, budget), max(min(take, n_new - 1), 0)
+
+
+@contextlib.contextmanager
+def _mesh_scope(mesh: Optional[Mesh]):
+    """Activate `mesh` + the serve-mode logical-axis rules so that model
+    tracing (the `constrain` calls and the kernels' shard_map entries) sees
+    the mesh; a no-op for single-device engines."""
+    if mesh is None:
+        yield
+    else:
+        with mesh, axis_rules(mesh, "serve"):
+            yield
+
+
+def _place_params(params, draft_params, mesh: Mesh):
+    """device_put target + (possibly Int4-quantized) draft trees per the
+    serve-mode param specs; returns (params, drafts, param_sh, draft_sh)."""
+    p_sh = SP.param_specs(params, mesh, "serve")
+    placed = jax.device_put(params, p_sh)
+    if draft_params is params:
+        return placed, placed, p_sh, p_sh
+    d_sh = SP.param_specs(draft_params, mesh, "serve")
+    return placed, jax.device_put(draft_params, d_sh), p_sh, d_sh
+
+
 class Engine:
     def __init__(self, model: StackModel, params, *, policy: str = "quantspec",
                  gamma: int = 4, greedy: bool = False,
-                 temperature: float = 1.0,
+                 temperature: float = 1.0, top_p: Optional[float] = None,
                  quantize_weights: Optional[bool] = None,
                  max_seq: int = 4096, prefill_chunk: int = 512,
+                 mesh: Optional[Mesh] = None,
                  ctx_kw: Optional[dict] = None):
         self.model = model
         self.cfg = model.cfg
-        self.params = params
         self.policy = policy
         self.gamma = gamma
         self.greedy = greedy
         self.temperature = temperature
+        self.top_p = top_p
         self.ctx_kw = ctx_kw or {}
         self.max_seq = max_seq
         self.prefill_chunk = prefill_chunk
+        self.mesh = mesh
         if policy == "quantspec" and gamma + 1 > self.cfg.group_size:
             # one verify pass appends gamma+1 tokens; maybe_flush frees at
             # most G buffer slots, so the append must fit one group
@@ -106,9 +155,14 @@ class Engine:
                              f"group size {self.cfg.group_size}")
         if quantize_weights is None:
             quantize_weights = policy == "quantspec"
+        self.params = params
         self.draft_params = (quantize_tree(
             params, group=self.cfg.weight_quant_group)
             if quantize_weights else params)
+        self._param_sh = self._draft_sh = None
+        if mesh is not None:
+            (self.params, self.draft_params, self._param_sh,
+             self._draft_sh) = _place_params(params, self.draft_params, mesh)
         # bucketed (padded, length-masked) prefill: pure full-attention
         # stacks under the quantspec/fp policies; other mixers keep scalar
         # stream positions / select on the full prompt, so they take the
@@ -118,18 +172,46 @@ class Engine:
         G = self.cfg.group_size
         self._prefill_cap = _round_up(max_seq, G) + 2 * G
 
-        self._round = jax.jit(
-            partial(spec_round, model, gamma=gamma, policy=policy,
-                    greedy=greedy, temperature=temperature,
-                    ctx_kw=self.ctx_kw),
-            static_argnames=())
-        self._ar = jax.jit(
-            partial(ar_step, model, policy=policy, greedy=greedy,
-                    temperature=temperature,
-                    kv_mode="target" if policy == "quantspec" else "fp",
-                    ctx_kw=self.ctx_kw))
+        self._round_kw = dict(gamma=gamma, policy=policy, greedy=greedy,
+                              temperature=temperature, top_p=top_p,
+                              ctx_kw=self.ctx_kw)
+        self._ar_kw = dict(policy=policy, greedy=greedy,
+                           temperature=temperature, top_p=top_p,
+                           kv_mode="target" if policy == "quantspec" else "fp",
+                           ctx_kw=self.ctx_kw)
+        self._round = jax.jit(partial(spec_round, model, **self._round_kw))
+        self._ar = jax.jit(partial(ar_step, model, **self._ar_kw))
+        self._sharded_fns = {}      # batch -> (round, ar, state specs)
         self._prefill_jit = jax.jit(self._prefill,
                                     static_argnames=("batch",))
+
+    def _mesh_fns(self, state, batch: int):
+        """Per-batch jitted rounds with explicit in/out shardings and cache
+        donation: params/drafts per `param_specs("serve")`, cache state per
+        `state_specs`, scalars/tokens replicated — XLA then partitions the
+        round so heads stay local under `model` and the only collectives
+        are the post-`wo`/`w_down` all-reduces."""
+        fns = self._sharded_fns.get(batch)
+        if fns is not None:
+            return fns
+        mesh = self.mesh
+        repl = NamedSharding(mesh, P())
+        s_sh = SP.state_specs(state, mesh)
+        round_fn = jax.jit(
+            partial(spec_round, self.model, **self._round_kw),
+            in_shardings=(self._param_sh, self._draft_sh, s_sh, repl, repl,
+                          repl),
+            out_shardings=RoundResult(state=s_sh, tokens=repl, n_new=repl,
+                                      last_token=repl, accept_mask=repl),
+            donate_argnums=(2,))
+        ar_fn = jax.jit(
+            partial(ar_step, self.model, **self._ar_kw),
+            in_shardings=(self._param_sh, s_sh, repl, repl, repl),
+            out_shardings=(s_sh, repl),
+            donate_argnums=(1,))
+        fns = (round_fn, ar_fn, s_sh)
+        self._sharded_fns[batch] = fns
+        return fns
 
     # ------------------------------------------------------------------
     def _prefill(self, prompt, memory, batch, valid_len=None):
@@ -175,43 +257,55 @@ class Engine:
         B = prompt.shape[0]
         stats = GenStats()
 
-        t0 = time.perf_counter()
-        logits, state = jax.block_until_ready(
-            self._run_prefill(prompt, memory, B))
-        stats.prefill_s = time.perf_counter() - t0
+        with _mesh_scope(self.mesh):
+            t0 = time.perf_counter()
+            logits, state = jax.block_until_ready(
+                self._run_prefill(prompt, memory, B))
+            round_fn, ar_fn = self._round, self._ar
+            if self.mesh is not None:
+                round_fn, ar_fn, s_sh = self._mesh_fns(state, B)
+                # commit the freshly-prefilled cache onto its serve specs
+                # (heads → model, batch → data) before the first round
+                state = jax.device_put(state, s_sh)
+            stats.prefill_s = time.perf_counter() - t0
 
-        key, k0 = jax.random.split(key)
-        last = sample_token(logits[:, -1] / self.temperature, k0, self.greedy)
-        last = last[:, None]
-        out = [np.asarray(last)]
-        stream_pos = prompt.shape[1]
-        generated = 1
+            key, k0 = jax.random.split(key)
+            last = sample_token(logits[:, -1] / self.temperature, k0,
+                                self.greedy, top_p=self.top_p)
+            last = last[:, None]
+            out = [np.asarray(last)]
+            stream_pos = prompt.shape[1]
+            generated = 1
 
-        t1 = time.perf_counter()
-        while generated < max_new_tokens:
-            key, kr = jax.random.split(key)
-            if speculative:
-                res = self._round(self.params, self.draft_params, state,
-                                  last, stream_pos, kr)
-                state, last = res.state, res.last_token
-                n_new = int(res.n_new)
-                toks = np.asarray(res.tokens)[:, :n_new]
-                stats.rounds += 1
-                stats.proposed += self.gamma
-                stats.accepted += n_new - 1  # lockstep-committed drafts
-                stream_pos += n_new
-            else:
-                state, last = self._ar(self.params, state, last,
-                                       stream_pos, kr)
-                toks = np.asarray(last)
-                n_new = 1
-                stream_pos += 1
-                stats.rounds += 1
-            out.append(toks)
-            generated += n_new
-        jax.block_until_ready(last)
-        stats.decode_s = time.perf_counter() - t1
-        stats.generated = generated
+            t1 = time.perf_counter()
+            while generated < max_new_tokens:
+                key, kr = jax.random.split(key)
+                if speculative:
+                    res = round_fn(self.params, self.draft_params, state,
+                                   last, stream_pos, kr)
+                    state, last = res.state, res.last_token
+                    n_new = int(res.n_new)
+                    toks = np.asarray(res.tokens)[:, :n_new]
+                    stats.rounds += 1
+                    # lockstep-committed drafts, clamped by the remaining
+                    # budget so a final round's trimmed tail isn't counted
+                    _, proposed, accepted = round_stats(
+                        self.gamma, n_new, max_new_tokens - generated)
+                    stats.proposed += proposed
+                    stats.accepted += accepted
+                    stream_pos += n_new
+                else:
+                    state, last = ar_fn(self.params, state, last,
+                                        stream_pos, kr)
+                    toks = np.asarray(last)
+                    n_new = 1
+                    stream_pos += 1
+                    stats.rounds += 1
+                out.append(toks)
+                generated += n_new
+            jax.block_until_ready(last)
+            stats.decode_s = time.perf_counter() - t1
+            stats.generated = min(generated, max_new_tokens)
 
         tokens = np.concatenate(out, axis=1)[:, :max_new_tokens]
         return GenerationResult(tokens=tokens, stats=stats)
@@ -253,18 +347,22 @@ class ContinuousEngine:
 
     def __init__(self, model: StackModel, params, *, gamma: int = 4,
                  greedy: bool = False, temperature: float = 1.0,
+                 top_p: Optional[float] = None,
                  quantize_weights: bool = True, max_slots: int = 4,
                  max_seq: int = 4096, pool_blocks: Optional[int] = None,
-                 prefill_chunk: int = 256, ctx_kw: Optional[dict] = None):
+                 prefill_chunk: int = 256, mesh: Optional[Mesh] = None,
+                 ctx_kw: Optional[dict] = None):
         self.model = model
         self.cfg = model.cfg
         self.params = params
         self.gamma = gamma
         self.greedy = greedy
         self.temperature = temperature
+        self.top_p = top_p
         self.max_slots = max_slots
         self.max_seq = max_seq
         self.prefill_chunk = prefill_chunk
+        self.mesh = mesh
         G = self.cfg.group_size
         if gamma + 1 > G:
             # plan_step flushes at most one block per step, so a verify
@@ -277,6 +375,10 @@ class ContinuousEngine:
         self.draft_params = (quantize_tree(
             params, group=self.cfg.weight_quant_group)
             if quantize_weights else params)
+        self._param_sh = self._draft_sh = None
+        if mesh is not None:
+            (self.params, self.draft_params, self._param_sh,
+             self._draft_sh) = _place_params(params, self.draft_params, mesh)
 
         self.state = model.init_serve_state(
             max_slots, max_seq=max_seq, policy="paged",
@@ -287,12 +389,42 @@ class ContinuousEngine:
         self._retired: List[Request] = []   # finished, not yet run()-claimed
         self._prefilling: Optional[_PrefillJob] = None
 
-        self._round = jax.jit(partial(
-            paged_spec_round, model, gamma=gamma, greedy=greedy,
-            temperature=temperature, ctx_kw=self.ctx_kw or None))
-        self._ar = jax.jit(partial(
-            paged_ar_step, model, greedy=greedy, temperature=temperature,
-            ctx_kw=self.ctx_kw or None))
+        round_p = partial(paged_spec_round, model, gamma=gamma, greedy=greedy,
+                          temperature=temperature, top_p=top_p,
+                          ctx_kw=self.ctx_kw or None)
+        ar_p = partial(paged_ar_step, model, greedy=greedy,
+                       temperature=temperature, top_p=top_p,
+                       ctx_kw=self.ctx_kw or None)
+        if mesh is None:
+            self._state_sh = self._table_sh = None
+            self._round = jax.jit(round_p)
+            self._ar = jax.jit(ar_p)
+        else:
+            # build the cache state directly onto its serve shardings (pool
+            # kv-heads → model, buffer slots → data, table replicated) and
+            # pin the round's in/out shardings to them; the donated cache
+            # then stays in place and XLA's only collectives are the
+            # post-`wo`/`w_down` all-reduces.
+            repl = NamedSharding(mesh, P())
+            self._state_sh = SP.state_specs(self.state, mesh)
+            self._table_sh = SP.table_specs(self.table, mesh)
+            self.state = jax.device_put(self.state, self._state_sh)
+            self.table = jax.device_put(self.table, self._table_sh)
+            self.last = jax.device_put(self.last, repl)
+            self._round = jax.jit(
+                round_p,
+                in_shardings=(self._param_sh, self._draft_sh, self._state_sh,
+                              self._table_sh, repl, repl),
+                out_shardings=PagedRoundResult(
+                    state=self._state_sh, table=self._table_sh, tokens=repl,
+                    n_new=repl, last_token=repl, accept_mask=repl),
+                donate_argnums=(2, 3))
+            self._ar = jax.jit(
+                ar_p,
+                in_shardings=(self._param_sh, self._state_sh, self._table_sh,
+                              repl, repl),
+                out_shardings=(self._state_sh, self._table_sh, repl),
+                donate_argnums=(1, 2))
         self._chunk_jit = jax.jit(self._chunk_step)
         self._finalize_jit = jax.jit(self._finalize_step)
 
@@ -367,6 +499,11 @@ class ContinuousEngine:
                 scr = jax.tree.map(
                     lambda x: jnp.broadcast_to(
                         x, (self.cfg.n_repeats,) + x.shape), scr)
+            if self.mesh is not None:
+                # transient fp prompt history: kv-heads follow the K/V
+                # projections onto `model`, the rest replicated
+                scr = jax.device_put(
+                    scr, SP.scratch_specs(scr, self.mesh, stacked))
             return scr
 
         scratch = []
@@ -417,7 +554,7 @@ class ContinuousEngine:
             # the chunk step already sliced the last valid position
             first = sample_token(
                 jax.block_until_ready(logits)[:, 0]
-                / self.temperature, k0, self.greedy)
+                / self.temperature, k0, self.greedy, top_p=self.top_p)
             self.last = self.last.at[job.slot, 0].set(first[0])
             if req.max_new_tokens > 0:   # match the static engine's [:, :0]
                 req.tokens.append(int(first[0]))
@@ -451,6 +588,10 @@ class ContinuousEngine:
     def step(self, key):
         """One engine iteration: ≤1 prefill chunk, one spec round over the
         decoding slots, harvest, retire."""
+        with _mesh_scope(self.mesh):
+            return self._step(key)
+
+    def _step(self, key):
         key = self._advance_prefill(key)
         busy = self._prefilling.slot if self._prefilling else None
         decoding = {s: r for s, r in self.scheduler.active.items()
@@ -472,12 +613,17 @@ class ContinuousEngine:
             toks = np.asarray(self.last)
 
         for slot, req in list(decoding.items()):
-            take = min(int(n_new[slot]),
-                       req.max_new_tokens - req.generated)
+            # clamp the stats by the request's remaining budget: when it
+            # hits max_new_tokens mid-round the discarded tail beyond
+            # `take` neither proposed usefully nor counts as accepted
+            # (uncapped, per-request acceptance rates inflate)
+            take, proposed, accepted = round_stats(
+                self.gamma, int(n_new[slot]),
+                req.max_new_tokens - req.generated)
             req.tokens.extend(int(t) for t in toks[slot, :take])
             req.rounds += 1
-            req.proposed += self.gamma
-            req.accepted += int(n_new[slot]) - 1
+            req.proposed += proposed
+            req.accepted += accepted
             if req.generated >= req.max_new_tokens:
                 self._retire(slot)
         return key

@@ -1,23 +1,53 @@
-"""Token sampling."""
+"""Token sampling: greedy/categorical plus exact nucleus (top-p) filtering.
+
+Top-p filtering is applied to *logits* (post-temperature), and in the
+speculative rounds it is applied to **both** the draft proposal
+distribution q and the target verification distribution p — speculative
+sampling then remains exact with respect to the top-p-filtered target
+distribution (the accept/reject ratio p/q is computed on the same
+filtered, renormalized supports).
+"""
 
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 
-def sample_token(logits: jnp.ndarray, key, greedy: bool = False):
+def top_p_filter(logits: jnp.ndarray, top_p: float) -> jnp.ndarray:
+    """Nucleus filtering: mask logits outside the top-p mass.
+
+    The kept set is the smallest prefix of the probability-sorted vocab
+    whose cumulative mass reaches ``top_p`` (the top-1 entry is always
+    kept). Membership is decided by *sorted rank*, not by comparing against
+    the cutoff logit value — a value comparison (``logits < cutoff``) leaks
+    every vocab entry that *ties* the cutoff logit into the kept set.
+    """
+    order = jnp.argsort(logits, axis=-1)[..., ::-1]          # descending
+    sorted_logits = jnp.take_along_axis(logits, order, axis=-1)
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    # keep entry i iff the mass strictly before it is < top_p; ties at the
+    # cutoff value are kept only up to the nucleus rank
+    keep_sorted = (cum - probs) < top_p
+    inv = jnp.argsort(order, axis=-1)
+    keep = jnp.take_along_axis(keep_sorted, inv, axis=-1)
+    return jnp.where(keep, logits, -1e30)
+
+
+def maybe_top_p(logits: jnp.ndarray, top_p: Optional[float]) -> jnp.ndarray:
+    """Apply :func:`top_p_filter` when a restrictive top_p is set."""
+    if top_p is None or top_p >= 1.0:
+        return logits
+    return top_p_filter(logits, top_p)
+
+
+def sample_token(logits: jnp.ndarray, key, greedy: bool = False,
+                 top_p: Optional[float] = None):
     """logits [B, V] or [B, K, V] -> [B] or [B, K]."""
     if greedy:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
-
-
-def top_p_filter(logits: jnp.ndarray, top_p: float) -> jnp.ndarray:
-    """Nucleus filtering: mask logits outside the top-p mass."""
-    sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
-    probs = jax.nn.softmax(sorted_logits, axis=-1)
-    cum = jnp.cumsum(probs, axis=-1)
-    cutoff_idx = jnp.sum(cum < top_p, axis=-1, keepdims=True)
-    cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
-    return jnp.where(logits < cutoff, -1e30, logits)
+    return jax.random.categorical(key, maybe_top_p(logits, top_p),
+                                  axis=-1).astype(jnp.int32)

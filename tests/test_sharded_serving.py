@@ -1,0 +1,420 @@
+"""Mesh-sharded serving: tensor-parallel spec rounds must change the
+placement, not the math.
+
+The mesh classes need 8 forced host-platform devices:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m pytest tests/test_sharded_serving.py
+
+In a single-device session (the plain tier-1 run) they self-skip and only
+the sampling / stats-clamp / mesh-arg units execute.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import hier_kv_cache as HC
+from repro.core import paged_kv_cache as PC
+from repro.core.weight_quant import Int4Weight, quantize_tree
+from repro.distributed import specs as SP
+from repro.distributed.sharding import axis_rules
+from repro.kernels import ops as kops
+from repro.launch.mesh import (make_host_mesh, make_production_mesh,
+                               resolve_mesh)
+from repro.models.stack import StackModel
+from repro.serving.engine import ContinuousEngine, Engine
+from repro.serving.sampling import sample_token, top_p_filter
+
+NDEV = jax.device_count()
+needs_mesh = pytest.mark.skipif(
+    NDEV < 8, reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("tiny-lm", smoke=True)
+    model = StackModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    if NDEV < 8:
+        pytest.skip("needs 8 host devices")
+    return make_host_mesh(4, 2)
+
+
+def make_prompts(cfg, lens):
+    return [np.asarray(jax.random.randint(
+        jax.random.fold_in(jax.random.PRNGKey(1), i), (s,), 0,
+        cfg.vocab_size)) for i, s in enumerate(lens)]
+
+
+# ---------------------------------------------------------------------------
+# sampling (no mesh needed)
+# ---------------------------------------------------------------------------
+
+class TestTopPFilter:
+    def test_tie_at_cutoff_not_leaked(self):
+        """`logits < cutoff` kept every entry tying the cutoff logit; the
+        rank-based mask keeps exactly the nucleus."""
+        probs = jnp.asarray([[0.5, 0.2, 0.2, 0.1]])
+        out = top_p_filter(jnp.log(probs), 0.6)
+        kept = np.asarray(out > -1e29)[0]
+        # nucleus = top-1 (0.5) + one of the tied 0.2 entries, NOT both
+        assert kept.sum() == 2
+        assert kept[0]
+        assert not kept[3]
+
+    def test_top1_always_kept(self):
+        logits = jnp.asarray([[0.0, 10.0, -3.0]])
+        out = top_p_filter(logits, 1e-6)
+        kept = np.asarray(out > -1e29)[0]
+        assert kept.tolist() == [False, True, False]
+
+    def test_batched_ranks_independent(self):
+        logits = jnp.asarray([[3.0, 2.0, 1.0, 0.0],
+                              [0.0, 1.0, 2.0, 3.0]])
+        out = top_p_filter(logits, 0.85)
+        kept = np.asarray(out > -1e29)
+        np.testing.assert_array_equal(kept[0], kept[1][::-1])
+
+    def test_sampling_stays_in_nucleus(self):
+        probs = jnp.asarray([0.55, 0.25, 0.15, 0.05])
+        logits = jnp.broadcast_to(jnp.log(probs), (64, 4))
+        keys = jax.random.split(jax.random.PRNGKey(3), 64)
+        toks = jax.vmap(
+            lambda l, k: sample_token(l[None], k, top_p=0.7)[0]
+        )(logits, keys)
+        assert set(np.asarray(toks).tolist()) <= {0, 1}
+
+    def test_top_p_one_is_identity(self):
+        logits = jax.random.normal(jax.random.PRNGKey(0), (2, 16))
+        np.testing.assert_array_equal(np.asarray(top_p_filter(logits, 1.0)),
+                                      np.asarray(logits))
+
+
+class TestTopPEngines:
+    def test_static_engine_sampled_top_p(self, tiny):
+        cfg, model, params = tiny
+        G = cfg.group_size
+        eng = Engine(model, params, policy="quantspec", gamma=2,
+                     greedy=False, top_p=0.7, max_seq=G + 40)
+        prompt = jnp.asarray(make_prompts(cfg, [G + 3])[0])[None]
+        res = eng.generate(prompt, 6, key=jax.random.PRNGKey(11))
+        assert res.tokens.shape == (1, 6)
+        assert (res.tokens >= 0).all() and (res.tokens < cfg.vocab_size).all()
+
+    def test_continuous_engine_sampled_top_p(self, tiny):
+        cfg, model, params = tiny
+        G = cfg.group_size
+        eng = ContinuousEngine(model, params, gamma=2, greedy=False,
+                               top_p=0.8, max_slots=1, max_seq=2 * G)
+        (res,) = eng.generate(make_prompts(cfg, [9]), 4,
+                              key=jax.random.PRNGKey(5))
+        assert res.tokens.shape == (1, 4)
+
+
+# ---------------------------------------------------------------------------
+# continuous-engine stats clamp (no mesh needed)
+# ---------------------------------------------------------------------------
+
+class TestStatsClamp:
+    def test_round_stats_arithmetic(self):
+        from repro.serving.engine import round_stats
+        # ordinary round, ample budget: rejections must NOT shrink proposed
+        assert round_stats(3, 2, 10) == (2, 3, 1)
+        assert round_stats(3, 4, 10) == (4, 3, 3)   # full acceptance
+        assert round_stats(3, 1, 10) == (1, 3, 0)   # everything rejected
+        # budget-truncated rounds: proposed clamps to the pre-round budget
+        # and every kept token is an accepted draft (the bonus token lies
+        # beyond the cut), so fully-accepting rounds stay at rate 1.0
+        assert round_stats(3, 4, 2) == (2, 2, 2)
+        assert round_stats(3, 4, 1) == (1, 1, 1)    # last token
+        assert round_stats(3, 1, 2) == (1, 2, 0)    # budget caps proposed,
+        #                                             not the round's outcome
+        # AR mode (gamma=0)
+        assert round_stats(0, 1, 5) == (1, 0, 0)
+
+    def test_truncated_round_not_overcounted(self, tiny):
+        """A request hitting max_new_tokens mid-round must not count the
+        discarded tail: per round `take` tokens are kept, of which
+        `take - 1` (untruncated) or `take` (truncated final round) are
+        accepted drafts — so across a request accepted lands in
+        [generated - 1 - rounds, generated - rounds], never beyond."""
+        cfg, model, params = tiny
+        G = cfg.group_size
+        gamma = 3
+        eng = ContinuousEngine(model, params, gamma=gamma, greedy=True,
+                               max_slots=2, max_seq=4 * G)
+        prompts = make_prompts(cfg, [9, 17, G + 3])
+        reqs = [eng.submit(p, n) for p, n in zip(prompts, (2, 5, 9))]
+        eng.run(jax.random.PRNGKey(7))
+        for r in reqs:
+            assert r.generated == r.max_new_tokens
+            lo = r.generated - 1 - r.rounds
+            assert lo <= r.accepted <= lo + 1, (
+                r.accepted, r.generated, r.rounds)
+            assert r.proposed <= gamma * r.rounds
+            assert r.accepted <= r.proposed
+            assert r.accepted / max(r.proposed, 1) <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# mesh argument validation (no mesh needed)
+# ---------------------------------------------------------------------------
+
+class TestMeshValidation:
+    def test_production_mesh_validates_device_count(self):
+        if jax.device_count() >= 256:
+            pytest.skip("enough devices for a production mesh")
+        with pytest.raises(ValueError) as e:
+            make_production_mesh()
+        msg = str(e.value)
+        assert "256" in msg and "XLA_FLAGS" in msg
+
+    def test_unknown_spec_rejected(self):
+        with pytest.raises(ValueError):
+            resolve_mesh("bogus")
+
+    def test_local_always_works(self):
+        m = resolve_mesh("local")
+        assert dict(m.shape) == {"data": 1, "model": 1}
+
+    @needs_mesh
+    def test_host_n_splits_data_model(self):
+        m = resolve_mesh("host8")
+        assert dict(m.shape) == {"data": 4, "model": 2}
+        m = resolve_mesh("host2x4")
+        assert dict(m.shape) == {"data": 2, "model": 4}
+
+    @pytest.mark.skipif(NDEV >= 8, reason="clear-error path needs an "
+                        "already-initialized small jax")
+    def test_host_n_clear_error_when_jax_initialized(self):
+        with pytest.raises(ValueError) as e:
+            resolve_mesh("host8")
+        assert "XLA_FLAGS" in str(e.value)
+
+
+# ---------------------------------------------------------------------------
+# sharded engines: placement changes, tokens don't
+# ---------------------------------------------------------------------------
+
+@needs_mesh
+class TestShardedStatic:
+    def test_token_identical_and_params_sharded(self, tiny, mesh):
+        cfg, model, params = tiny
+        G = cfg.group_size
+        prompt = jnp.stack([jnp.asarray(p) for p in
+                            make_prompts(cfg, [2 * G + 5, 2 * G + 5])])
+        max_seq = prompt.shape[1] + 12 + 2 * G + 8
+        base = Engine(model, params, policy="quantspec", gamma=3,
+                      greedy=True, max_seq=max_seq)
+        want = base.generate(prompt, 12, key=jax.random.PRNGKey(7)).tokens
+        eng = Engine(model, params, policy="quantspec", gamma=3,
+                     greedy=True, max_seq=max_seq, mesh=mesh)
+        got = eng.generate(prompt, 12, key=jax.random.PRNGKey(7)).tokens
+        np.testing.assert_array_equal(got, want)
+
+        # live param placement per param_specs("serve"): stacked wq
+        # [n_rep, d, Hq·hd] out-dim → model; wo in-dim → model
+        wq = eng.params["blocks"][0]["attn"]["wq"]
+        assert tuple(wq.sharding.spec) == (None, None, "model")
+        wo = eng.params["blocks"][0]["attn"]["wo"]
+        assert "model" in tuple(wo.sharding.spec)
+        # Int4 draft: packed planes sharded, not replicated
+        dwq = eng.draft_params["blocks"][0]["attn"]["wq"]
+        assert isinstance(dwq, Int4Weight)
+        assert tuple(dwq.packed.sharding.spec)[-1] == "model"
+        assert not dwq.packed.sharding.is_fully_replicated
+
+
+@needs_mesh
+class TestShardedContinuous:
+    def test_ragged_token_identical(self, tiny, mesh):
+        cfg, model, params = tiny
+        G = cfg.group_size
+        lens = [2 * G + 5, G + 3, 17]
+        max_seq = max(lens) + 8 + 2 * G + 8
+        prompts = make_prompts(cfg, lens)
+        base = ContinuousEngine(model, params, gamma=3, greedy=True,
+                                max_slots=2, max_seq=max_seq)
+        want = base.generate(prompts, 8, key=jax.random.PRNGKey(7))
+        eng = ContinuousEngine(model, params, gamma=3, greedy=True,
+                               max_slots=2, max_seq=max_seq, mesh=mesh)
+        got = eng.generate(prompts, 8, key=jax.random.PRNGKey(7))
+        for i, (a, b) in enumerate(zip(want, got)):
+            np.testing.assert_array_equal(b.tokens, a.tokens,
+                                          err_msg=f"request {i}")
+
+    def test_live_pool_placement(self, tiny, mesh):
+        """Acceptance criterion: the paged pool is kv-head-sharded on LIVE
+        engine arrays (.sharding), not just in dry-run specs — and stays so
+        after rounds with donated state."""
+        cfg, model, params = tiny
+        G = cfg.group_size
+        eng = ContinuousEngine(model, params, gamma=3, greedy=True,
+                               max_slots=4, max_seq=3 * G, mesh=mesh)
+        eng.generate(make_prompts(cfg, [19, 9]), 4,
+                     key=jax.random.PRNGKey(3))
+        pool = eng.state["blocks"][0][0].primary
+        # stacked planes [n_rep, P+1, G, H, X]: heads → model
+        assert tuple(pool.k_upper.sharding.spec) == (
+            None, None, None, "model")
+        assert tuple(pool.v_scale.sharding.spec) == (
+            None, None, None, "model")
+        # per-slot fp buffers [n_rep, R, 2G, H, D]: slots → data, heads → model
+        spec = tuple(pool.buf_k.sharding.spec)
+        assert "data" in spec and "model" in spec
+        # shared table bookkeeping replicated
+        for leaf in jax.tree.leaves(eng.table):
+            assert leaf.sharding.is_fully_replicated
+
+    def test_ar_mode_token_identical(self, tiny, mesh):
+        cfg, model, params = tiny
+        G = cfg.group_size
+        prompts = make_prompts(cfg, [11, 7])
+        base = ContinuousEngine(model, params, gamma=0, greedy=True,
+                                max_slots=2, max_seq=2 * G)
+        want = base.generate(prompts, 4, key=jax.random.PRNGKey(7))
+        eng = ContinuousEngine(model, params, gamma=0, greedy=True,
+                               max_slots=2, max_seq=2 * G, mesh=mesh)
+        got = eng.generate(prompts, 4, key=jax.random.PRNGKey(7))
+        for a, b in zip(want, got):
+            np.testing.assert_array_equal(b.tokens, a.tokens)
+
+
+# ---------------------------------------------------------------------------
+# spec trees
+# ---------------------------------------------------------------------------
+
+@needs_mesh
+class TestStateSpecsPaged:
+    def test_round_trip(self, tiny, mesh):
+        """state_specs mirrors the paged state structure exactly and
+        device_put lands every leaf on its spec."""
+        cfg, model, params = tiny
+        state = model.init_serve_state(4, max_seq=4 * cfg.group_size,
+                                       policy="paged",
+                                       ctx_kw={"pool_blocks": 16})
+        specs = SP.state_specs(state, mesh)
+        jax.tree.map(lambda a, b: None, state, specs)   # structure match
+        placed = jax.device_put(state, specs)
+        ok = jax.tree.map(lambda x, s: x.sharding == s, placed, specs)
+        assert all(jax.tree.leaves(ok))
+
+    def test_prefill_scratch_specs(self, tiny, mesh):
+        cfg, _, _ = tiny
+        scr = PC.init_prefill_scratch(256, cfg.group_size,
+                                      cfg.num_kv_heads, cfg.hd)
+        sp = SP.scratch_specs(scr, mesh)
+        assert tuple(sp.k.spec) == (None, None, "model")
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (2,) + x.shape), scr)
+        sp2 = SP.scratch_specs(stacked, mesh, stacked=True)
+        assert tuple(sp2.k.spec) == (None, None, None, "model")
+
+    def test_table_specs_replicated(self, tiny, mesh):
+        table = PC.init_table(4, 8, 16)
+        for s in jax.tree.leaves(SP.table_specs(table, mesh)):
+            assert s.is_fully_replicated
+
+
+@needs_mesh
+class TestInt4ParamSpecs:
+    def test_packed_planes_not_replicated(self, tiny, mesh):
+        cfg, model, params = tiny
+        drafts = quantize_tree(params, group=cfg.weight_quant_group)
+        specs = SP.param_specs(drafts, mesh, "serve")
+        placed = jax.device_put(drafts, specs)
+        attn = placed["blocks"][0]["attn"]
+        mlp = placed["blocks"][0]["mlp"]
+        # out-dim-model matrices: packed [n_rep, ng, g/2, dout] → dout model
+        for w in (attn["wq"], attn["wk"], attn["wv"], mlp["w_gate"]):
+            assert tuple(w.packed.sharding.spec)[-1] == "model"
+            assert tuple(w.scale.sharding.spec)[-1] == "model"
+            assert not w.packed.sharding.is_fully_replicated
+        # in-dim-model matrix: the group axis (d_in//group) → model
+        # (w_down: 1024/128 = 8 groups, divisible by the 2-way model axis)
+        wd = mlp["w_down"]
+        assert tuple(wd.packed.sharding.spec)[1] == "model"
+        assert not wd.packed.sharding.is_fully_replicated
+        # wo has 384/128 = 3 groups — indivisible by 2, so the divisibility
+        # guard falls back to replicating rather than crashing placement
+        assert attn["wo"].packed.sharding.is_fully_replicated
+
+
+# ---------------------------------------------------------------------------
+# shard_map kernel entries: parity vs the unsharded wrappers
+# ---------------------------------------------------------------------------
+
+@needs_mesh
+class TestShardMapKernelParity:
+    B, H, Hq, D, G, NB = 4, 2, 4, 32, 8, 3
+
+    def test_hier_attention(self, mesh):
+        B, H, Hq, D, G, NB = self.B, self.H, self.Hq, self.D, self.G, self.NB
+        key = jax.random.PRNGKey(0)
+        cache = HC.init_cache(B, NB, G, H, D)
+        k = jax.random.normal(key, (B, 2 * G + 5, H, D))
+        v = jax.random.normal(jax.random.fold_in(key, 1), (B, 2 * G + 5, H, D))
+        cache = HC.prefill(cache, k, v)
+        q = jax.random.normal(jax.random.fold_in(key, 2), (B, 1, Hq, D))
+        want = kops.hier_attention(q, cache, 2 * G + 5, "target",
+                                   interpret=True)
+        with mesh, axis_rules(mesh, "serve"):
+            got = kops.hier_attention(q, cache, 2 * G + 5, "target",
+                                      interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_paged_hier_attention(self, mesh):
+        R, H, Hq, D, G, P = 4, 2, 4, 32, 8, 7
+        key = jax.random.PRNGKey(0)
+        pool = PC.init_pool(R, P, G, H, D)
+        table = PC.init_table(R, 1 + P // R, P)
+        table = table._replace(active=jnp.ones((R,), bool))
+        for t in range(2 * G - 1):
+            table, step = PC.plan_step(table, 1, G)
+            kk = jax.random.normal(jax.random.fold_in(key, 100 + t),
+                                   (R, 1, H, D))
+            vv = jax.random.normal(jax.random.fold_in(key, 200 + t),
+                                   (R, 1, H, D))
+            pool = PC.apply_step(pool, step, kk, vv)
+            table = PC.commit(table, jnp.ones((R,), jnp.int32))
+        q = jax.random.normal(jax.random.fold_in(key, 3), (R, 2, Hq, D))
+        spos = table.pos - 2
+        want = kops.paged_hier_attention(q, pool, table, spos, "draft",
+                                         interpret=True)
+        with mesh, axis_rules(mesh, "serve"):
+            got = kops.paged_hier_attention(q, pool, table, spos, "draft",
+                                            interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_prefill_attention(self, mesh):
+        B, H, Hq, D = self.B, self.H, self.Hq, self.D
+        key = jax.random.PRNGKey(0)
+        q = jax.random.normal(key, (B, 16, Hq, D))
+        kv = jax.random.normal(jax.random.fold_in(key, 5), (B, 32, H, D))
+        want = kops.prefill_attention(q, kv, kv, 8, 24, interpret=True)
+        with mesh, axis_rules(mesh, "serve"):
+            got = kops.prefill_attention(q, kv, kv, 8, 24, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_indivisible_heads_fall_back(self, mesh):
+        """3 kv heads don't divide the 2-way model axis → the plain (GSPMD)
+        path runs; results still match."""
+        key = jax.random.PRNGKey(0)
+        q = jax.random.normal(key, (2, 4, 3, 16))
+        kv = jax.random.normal(jax.random.fold_in(key, 1), (2, 8, 3, 16))
+        want = kops.prefill_attention(q, kv, kv, 4, 8, interpret=True)
+        with mesh, axis_rules(mesh, "serve"):
+            got = kops.prefill_attention(q, kv, kv, 4, 8, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)

@@ -1,0 +1,175 @@
+"""Serving-loop dispatch overhead: per-round loop vs the fused megastep.
+
+    PYTHONPATH=src python benchmarks/serving_bench.py [--smoke]
+        [--json BENCH_serving.json]
+
+With the INT4 hot path, chunked prefill, and mesh sharding in place, the
+per-round serving loop itself is the bottleneck at small batch: every spec
+round pays a device→host sync (tokens + accept counts) plus Python
+per-slot bookkeeping before the next round can even be dispatched.  The
+megastep driver (``rounds_per_step = K``) fuses K rounds into one jitted
+`lax.scan` with device-resident per-slot termination state and reads back
+one packed buffer per megastep, double-buffered against the next
+megastep's compute.
+
+This benchmark drives BOTH engines over the same requests through
+
+  * the legacy per-round loop  (``rounds_per_step = 0`` — the baseline), and
+  * megasteps with K ∈ {1, 2, 4, 8},
+
+and records wall-clock tokens/s plus the engines' own transfer telemetry
+(``host_syncs`` blocking device→host transfers, ``decode_steps`` jitted
+decode dispatches).  Megastep outputs are asserted token-identical to the
+baseline per request (greedy).  Results land in ``BENCH_serving.json``:
+the per-round loop pays ~2 syncs *per round*; every megastep row must
+report ``syncs_per_step <= 1`` — one transfer per K rounds (asserted in
+CI via ``--smoke``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import numpy as np
+
+sys.path.insert(0, ".")   # repo root (benchmarks.common) when run as a script
+sys.path.insert(0, "src")
+
+from benchmarks.common import bench_config, corpus  # noqa: E402
+from repro.models.stack import StackModel  # noqa: E402
+from repro.serving.engine import ContinuousEngine, Engine  # noqa: E402
+
+K_SWEEP = (1, 2, 4, 8)
+
+
+def _row(wall_s: float, n_tokens: int, eng) -> dict:
+    steps = max(eng.decode_steps, 1)
+    return {
+        "wall_s": round(wall_s, 4),
+        "tok_s": round(n_tokens / max(wall_s, 1e-9), 2),
+        "host_syncs": eng.host_syncs,
+        "decode_steps": eng.decode_steps,
+        "syncs_per_step": round(eng.host_syncs / steps, 4),
+    }
+
+
+def bench_continuous(model, params, prompts, max_new, gamma, max_seq):
+    """Legacy loop vs megastep sweep on the continuous engine; returns
+    (rows, mismatches)."""
+    rows, mismatches = {}, 0
+    baseline = None
+    for label, k in [("legacy", 0)] + [(f"K={k}", k) for k in K_SWEEP]:
+        eng = ContinuousEngine(model, params, gamma=gamma, greedy=True,
+                               max_slots=2, max_seq=max_seq,
+                               rounds_per_step=k)
+        eng.generate(prompts, max_new, key=jax.random.PRNGKey(7))  # warmup
+        eng.host_syncs = eng.decode_steps = 0
+        t0 = time.perf_counter()
+        results = eng.generate(prompts, max_new, key=jax.random.PRNGKey(7))
+        wall = time.perf_counter() - t0
+        toks = [np.asarray(r.tokens[0]) for r in results]
+        if baseline is None:
+            baseline = toks
+        else:
+            mismatches += sum(not np.array_equal(a, b)
+                              for a, b in zip(baseline, toks))
+        rows[label] = _row(wall, len(prompts) * max_new, eng)
+        print(f"  continuous {label:<7} {rows[label]['tok_s']:>8.1f} tok/s  "
+              f"{rows[label]['host_syncs']:>4} syncs / "
+              f"{rows[label]['decode_steps']} steps")
+    return rows, mismatches
+
+
+def bench_static(model, params, prompt, max_new, gamma, max_seq):
+    rows, mismatches = {}, 0
+    baseline = None
+    B = prompt.shape[0]
+    for label, k in [("legacy", 0)] + [(f"K={k}", k) for k in K_SWEEP]:
+        eng = Engine(model, params, policy="quantspec", gamma=gamma,
+                     greedy=True, max_seq=max_seq, rounds_per_step=k)
+        eng.generate(prompt, max_new, key=jax.random.PRNGKey(7))  # warmup
+        eng.host_syncs = eng.decode_steps = 0
+        t0 = time.perf_counter()
+        res = eng.generate(prompt, max_new, key=jax.random.PRNGKey(7))
+        wall = time.perf_counter() - t0
+        if baseline is None:
+            baseline = res.tokens
+        elif not np.array_equal(baseline, res.tokens):
+            mismatches += 1
+        rows[label] = _row(wall, B * max_new, eng)
+        print(f"  static     {label:<7} {rows[label]['tok_s']:>8.1f} tok/s  "
+              f"{rows[label]['host_syncs']:>4} syncs / "
+              f"{rows[label]['decode_steps']} steps")
+    return rows, mismatches
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload for CI: asserts megastep sync "
+                         "counts and token-identity, skips nothing")
+    ap.add_argument("--json", default="BENCH_serving.json")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--prompt-len", type=int, default=None)
+    ap.add_argument("--max-new", type=int, default=None)
+    ap.add_argument("--gamma", type=int, default=3)
+    args = ap.parse_args()
+
+    n_req = args.requests or (3 if args.smoke else 6)
+    prompt_len = args.prompt_len or (48 if args.smoke else 96)
+    max_new = args.max_new or (10 if args.smoke else 32)
+
+    cfg = bench_config()
+    model = StackModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))   # dispatch cost, not quality
+    G = cfg.group_size
+    data = corpus()
+    key = jax.random.PRNGKey(3)
+    lens = [max(8, prompt_len - 11 * i) for i in range(n_req)]
+    prompts = [np.asarray(data.sample(jax.random.fold_in(key, i), 1, s)[0])
+               for i, s in enumerate(lens)]
+    max_seq = max(lens) + max_new + 2 * G + 8
+
+    print(f"{n_req} requests, prompt lens {lens}, {max_new} new tokens, "
+          f"gamma {args.gamma}")
+    cont_rows, cont_mis = bench_continuous(model, params, prompts, max_new,
+                                           args.gamma, max_seq)
+    batch = np.stack([np.resize(p, (max(lens),)) for p in prompts[:2]])
+    stat_rows, stat_mis = bench_static(model, params, jax.numpy.asarray(batch),
+                                       max_new, args.gamma, max_seq)
+
+    out = {
+        "config": {"requests": n_req, "prompt_lens": lens,
+                   "max_new": max_new, "gamma": args.gamma,
+                   "k_sweep": list(K_SWEEP), "smoke": bool(args.smoke),
+                   "backend": jax.default_backend()},
+        "continuous": cont_rows,
+        "static": stat_rows,
+        "token_identical": cont_mis == 0 and stat_mis == 0,
+    }
+    with open(args.json, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.json}")
+
+    best = cont_rows[f"K={K_SWEEP[-1]}"]
+    legacy = cont_rows["legacy"]
+    print(f"continuous: legacy {legacy['syncs_per_step']:.1f} syncs/round → "
+          f"K={K_SWEEP[-1]} {best['syncs_per_step']:.2f} syncs/megastep "
+          f"({legacy['host_syncs']}→{best['host_syncs']} total), "
+          f"{best['tok_s'] / max(legacy['tok_s'], 1e-9):.2f}x tok/s")
+    if not out["token_identical"]:
+        raise SystemExit("megastep outputs diverged from the per-round loop")
+    for section in ("continuous", "static"):
+        for label, row in out[section].items():
+            if label.startswith("K=") and row["syncs_per_step"] > 1:
+                raise SystemExit(
+                    f"{section} {label}: {row['syncs_per_step']} syncs per "
+                    f"megastep (expected ≤ 1)")
+
+
+if __name__ == "__main__":
+    main()

@@ -487,6 +487,32 @@ def admit_slot(table: PageTable, slot: int, seq_len: int,
     )
 
 
+def release_slot(table: PageTable, slot) -> PageTable:
+    """Jittable :func:`free_slot` (traced slot id): push the retired slot's
+    blocks back onto the free stack and zero its row, entirely on device —
+    the megastep driver retires slots without ever syncing on the table
+    (``free_slot`` below reads ``int(table.blocks[slot])``, which would
+    block the host on the in-flight megastep)."""
+    P = table.free_stack.shape[0]
+    NBmax = table.max_blocks_per_seq
+    slot = jnp.asarray(slot, jnp.int32)
+    n = table.blocks[slot]
+    lanes = jnp.arange(NBmax, dtype=jnp.int32)
+    # lanes >= n scatter out of range and are dropped
+    idx = jnp.where(lanes < n, table.free_top + lanes, P)
+    free_stack = table.free_stack.at[idx].set(table.block_table[slot],
+                                              mode="drop")
+    return table._replace(
+        block_table=table.block_table.at[slot].set(0),
+        blocks=table.blocks.at[slot].set(0),
+        buf_len=table.buf_len.at[slot].set(0),
+        pos=table.pos.at[slot].set(0),
+        active=table.active.at[slot].set(False),
+        free_stack=free_stack,
+        free_top=table.free_top + n,
+    )
+
+
 def free_slot(table: PageTable, slot: int) -> PageTable:
     """Retire ``slot``: push its blocks back onto the free stack."""
     n = int(table.blocks[slot])

@@ -13,25 +13,39 @@ One round =
      rejected tail, recurrent (Mamba/RWKV) layers commit the per-token
      state snapshot at the acceptance point.
 
-The whole round is one jittable function; the engine drives it in a Python
-loop until `max_new_tokens`.
-
 `paged_spec_round` is the continuous-batching variant over the paged cache
 (core/paged_kv_cache.py): per-slot stream positions, per-sequence
 accept/rollback — requests of different lengths progress raggedly within
 one jitted program.
+
+Megasteps
+---------
+Driving one jitted round per Python-loop iteration pays a device→host sync
+(read back tokens/accept counts) plus per-slot host bookkeeping before the
+next round can even be dispatched — at small batch the serving loop is
+dispatch-bound, not HBM-bound. :func:`megastep` / :func:`paged_megastep`
+fuse ``rounds`` consecutive spec rounds into ONE jitted program: a
+`lax.scan` over the round whose carry holds the cache state, page table,
+last tokens, and the device-resident per-slot request state
+(:class:`~repro.serving.scheduler.SlotState`: generated counts, budgets,
+done mask). Budget clamping, EOS detection, and termination masking happen
+on device — a slot that finishes mid-megastep is *frozen* (its page-table
+row deactivated, its takes zeroed) rather than synced — and each round's
+tokens/stats are stacked into packed ``[rounds, ...]`` buffers the engine
+reads back with a **single** transfer per megastep.
 """
 
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import acceptance
 from repro.serving.sampling import maybe_top_p, sample_token
+from repro.serving.scheduler import SlotState
 
 
 class RoundResult(NamedTuple):
@@ -196,3 +210,187 @@ def ar_step(model, params, state, last_token, stream_pos, key, *,
                                     ctx_kw=ctx_kw)
     nxt = sample_token(tl[:, -1] / temperature, key, greedy, top_p=top_p)
     return new_state, nxt[:, None]
+
+
+# ---------------------------------------------------------------------------
+# megasteps: `rounds` fused spec rounds in one jitted program
+# ---------------------------------------------------------------------------
+
+def round_stats_dev(gamma: int, n_new, budget, tokens=None,
+                    eos_id: Optional[int] = None):
+    """Device-side :func:`repro.serving.engine.round_stats` — identical
+    arithmetic, vectorized over slots, plus optional EOS truncation.
+
+    ``n_new``/``budget`` are i32 ``[R]`` (or scalars). Returns
+    ``(take, proposed_inc, accepted_inc, eos_hit)``: ``take = min(n_new,
+    budget)`` tokens kept, further cut to end at the first EOS among them
+    (inclusive) when ``eos_id`` is set; ``proposed`` clamps γ by the
+    *pre-round* budget only; ``accepted = max(min(take, n_new - 1), 0)``
+    — exactly the host helper's accounting, so per-request acceptance
+    stats match the per-round loop bit for bit."""
+    n_new = jnp.asarray(n_new, jnp.int32)
+    budget = jnp.maximum(jnp.asarray(budget, jnp.int32), 0)
+    take = jnp.minimum(n_new, budget)
+    eos_hit = jnp.zeros(jnp.shape(take), bool)
+    if eos_id is not None and tokens is not None:
+        pos = jnp.arange(tokens.shape[-1])
+        is_eos = (tokens == eos_id) & (pos[None, :] < take[..., None])
+        eos_hit = jnp.any(is_eos, axis=-1)
+        take = jnp.where(eos_hit, jnp.argmax(is_eos, axis=-1) + 1, take)
+    proposed = jnp.minimum(gamma, budget)
+    accepted = jnp.maximum(jnp.minimum(take, n_new - 1), 0)
+    return take, proposed, accepted, eos_hit
+
+
+class MegaResult(NamedTuple):
+    """`rounds` fused static-engine spec rounds. The first four fields are
+    the carried decode state (stay on device, feed the next megastep); the
+    rest are the packed per-round buffers the engine reads back in one
+    `device_get`. Skipped rounds (budget already met) report ``n_new=0``."""
+
+    state: dict
+    last_token: jnp.ndarray   # [B, 1(, K)]
+    stream_pos: jnp.ndarray   # i32 scalar (post-megastep)
+    generated: jnp.ndarray    # i32 scalar — includes the prefill token
+    tokens: jnp.ndarray       # [rounds, B, gamma+1(, K)]
+    n_new: jnp.ndarray        # i32 [rounds]
+    proposed: jnp.ndarray     # i32 [rounds] (budget-clamped, per round_stats)
+    accepted: jnp.ndarray     # i32 [rounds]
+
+
+def megastep(model, target_params, draft_params, state, last_token,
+             stream_pos, generated, budget, key, *, rounds: int, gamma: int,
+             policy: str = "quantspec", greedy: bool = False,
+             temperature: float = 1.0, top_p=None, ctx_kw=None) -> MegaResult:
+    """``rounds`` consecutive :func:`spec_round`\\ s under one jit.
+
+    ``generated``/``budget`` are traced i32 scalars (tokens produced so
+    far incl. the prefill token / ``max_new_tokens``), so one compiled
+    program serves every request length. Rounds past the budget are
+    skipped via `lax.cond` — the carry passes through untouched and the
+    packed buffers record ``n_new = 0`` — which keeps a trailing
+    speculatively-dispatched megastep cheap and, crucially, stops cache
+    appends once the request is done (the cache is sized to ``max_seq``,
+    not ``max_seq + rounds·γ``)."""
+    multi = model.cfg.num_codebooks > 0
+    B = last_token.shape[0]
+    tok_shape = (B, gamma + 1, model.cfg.num_codebooks) if multi \
+        else (B, gamma + 1)
+
+    def body(carry, _):
+        state, last, pos, gen, key = carry
+        key, kr = jax.random.split(key)
+
+        def live(ops):
+            state, last, pos, gen = ops
+            res = spec_round(model, target_params, draft_params, state,
+                             last, pos, kr, gamma=gamma, policy=policy,
+                             greedy=greedy, temperature=temperature,
+                             top_p=top_p, ctx_kw=ctx_kw)
+            _, prop, acc, _ = round_stats_dev(gamma, res.n_new, budget - gen)
+            return ((res.state, res.last_token, pos + res.n_new,
+                     gen + res.n_new),
+                    (res.tokens.astype(jnp.int32), res.n_new, prop, acc))
+
+        def skip(ops):
+            zero = jnp.zeros((), jnp.int32)
+            return ops, (jnp.zeros(tok_shape, jnp.int32), zero, zero, zero)
+
+        new_carry, ys = jax.lax.cond(gen < budget, live, skip,
+                                     (state, last, pos, gen))
+        return (*new_carry, key), ys
+
+    pos0 = jnp.asarray(stream_pos, jnp.int32)
+    gen0 = jnp.asarray(generated, jnp.int32)
+    (state, last, pos, gen, _), (toks, n_new, prop, acc) = jax.lax.scan(
+        body, (state, last_token, pos0, gen0, key), length=rounds)
+    return MegaResult(state=state, last_token=last, stream_pos=pos,
+                      generated=gen, tokens=toks, n_new=n_new,
+                      proposed=prop, accepted=acc)
+
+
+class PagedMegaResult(NamedTuple):
+    """`rounds` fused continuous-engine spec rounds. ``state``/``table``/
+    ``last_token``/``slots`` are the carried decode state; the packed
+    per-round buffers (plus the tiny per-slot ``first``/``done`` vectors)
+    are what the engine reads back — one `device_get` per megastep."""
+
+    state: dict
+    table: object             # PageTable (finished slots deactivated)
+    last_token: jnp.ndarray   # [R, 1]
+    slots: SlotState          # device-resident per-slot request state
+    tokens: jnp.ndarray       # [rounds, R, gamma+1]
+    take: jnp.ndarray         # i32 [rounds, R] — tokens kept (0 = frozen)
+    proposed: jnp.ndarray     # i32 [rounds, R]
+    accepted: jnp.ndarray     # i32 [rounds, R]
+    first: jnp.ndarray        # i32 [R] — carried-in last token (the
+                              # prefill-sampled first token of slots whose
+                              # admission finalized since the last readback)
+    done: jnp.ndarray         # bool [R] — post-megastep done mask
+
+
+def paged_megastep(model, target_params, draft_params, state, table,
+                   last_token, slots: SlotState, key, *, rounds: int,
+                   gamma: int, greedy: bool = False, temperature: float = 1.0,
+                   top_p=None, eos_id: Optional[int] = None,
+                   ctx_kw=None) -> PagedMegaResult:
+    """``rounds`` consecutive :func:`paged_spec_round`\\ s under one jit,
+    with per-slot accept/rollback, budget clamping, EOS detection, and
+    termination masking all device-resident.
+
+    A slot that reaches its budget (or samples EOS) mid-megastep executes
+    its finishing round normally — exactly as the per-round loop, which
+    retires *after* the full round commit — and is then **frozen**: its
+    page-table row is deactivated, so later rounds neither flush nor
+    commit for it (`plan_step`/`commit`/`rollback` mask on ``active``) and
+    its buffer writes land past ``buf_len`` where attention masks them
+    out. Its pool blocks are returned to the free stack by the engine at
+    the next harvest (`release_slot`), off the hot path. Rounds where no
+    slot is live short-circuit via `lax.cond` (zeroed packed rows)."""
+    assert gamma > 0, "paged_megastep fuses spec rounds; use the AR loop " \
+                      "for gamma=0"
+    R = last_token.shape[0]
+
+    def body(carry, _):
+        state, table, last, slots, key = carry
+        key, kr = jax.random.split(key)
+        live = table.active & ~slots.done
+
+        def run(ops):
+            state, table, last, slots = ops
+            res = paged_spec_round(model, target_params, draft_params,
+                                   state, table, last, kr, gamma=gamma,
+                                   greedy=greedy, temperature=temperature,
+                                   top_p=top_p, ctx_kw=ctx_kw)
+            take, prop, acc, eos_hit = round_stats_dev(
+                gamma, res.n_new, slots.budget - slots.generated,
+                res.tokens, eos_id)
+            take = jnp.where(live, take, 0)
+            prop = jnp.where(live, prop, 0)
+            acc = jnp.where(live, acc, 0)
+            gen = slots.generated + take
+            done = slots.done | (live & ((gen >= slots.budget) | eos_hit))
+            new_slots = SlotState(generated=gen, budget=slots.budget,
+                                  done=done)
+            # freeze finished slots: inactive rows are ignored by
+            # plan/commit/rollback, so the remaining rounds leave them be
+            new_table = res.table._replace(active=res.table.active & ~done)
+            return ((res.state, new_table, res.last_token, new_slots),
+                    (res.tokens.astype(jnp.int32), take, prop, acc))
+
+        def skip(ops):
+            zeros = jnp.zeros((R,), jnp.int32)
+            return ops, (jnp.zeros((R, gamma + 1), jnp.int32),
+                         zeros, zeros, zeros)
+
+        new_carry, ys = jax.lax.cond(jnp.any(live), run, skip,
+                                     (state, table, last, slots))
+        return (*new_carry, key), ys
+
+    first = jnp.asarray(last_token[:, 0], jnp.int32)
+    (state, table, last, slots, _), (toks, take, prop, acc) = jax.lax.scan(
+        body, (state, table, last_token, slots, key), length=rounds)
+    return PagedMegaResult(state=state, table=table, last_token=last,
+                           slots=slots, tokens=toks, take=take,
+                           proposed=prop, accepted=acc, first=first,
+                           done=slots.done)

@@ -153,7 +153,7 @@ def matmul_impl() -> str:
     return resolve_impl("REPRO_QUANT_MATMUL", "fused", "dequant")
 
 
-def matmul(x: jnp.ndarray, w) -> jnp.ndarray:
+def matmul(x: jnp.ndarray, w, tp=None) -> jnp.ndarray:
     """``x [..., d_in] @ w`` where ``w`` may be an :class:`Int4Weight`.
 
     Quantized 2-D weights route through the fused Pallas dequant×matmul
@@ -162,19 +162,28 @@ def matmul(x: jnp.ndarray, w) -> jnp.ndarray:
     against).
 
     Under a tensor-parallel mesh (`model` axis > 1) the quantized planes
-    are sharded per `distributed.specs.param_specs` and the dequant+dot
-    path runs instead: GSPMD partitions the fused ``dequant → dot`` pattern
-    and inserts the post-`wo`/`w_down` all-reduce, which a monolithic
-    pallas_call would force XLA to all-gather around. (The head-sharded
-    attention kernels get explicit shard_map entries in kernels/ops.py; a
-    shard_map fused-matmul entry would need the weight's in/out role at the
-    call site and is left for a later PR.)"""
+    are sharded per `distributed.specs.param_specs`, and a monolithic
+    pallas_call inside the SPMD program would force XLA to all-gather
+    them. ``tp`` carries the weight's serve-mode matrix role from the call
+    site — ``"col"`` (out-dim → `model`: wq/wk/wv/up/gate/lm_head) or
+    ``"row"`` (in-dim → `model`: wo/w_down) — which selects the matching
+    `shard_map` entry (`kernels.ops.int4_matmul_tp`): the unchanged fused
+    kernel runs on each shard's local slice, with the row case paying the
+    same post-projection `psum` as fp. Call sites without a role (or with
+    planes the divisibility guard left replicated) fall back to the
+    sharded dequant+dot, which GSPMD partitions as before."""
     if not isinstance(w, Int4Weight):
         return x @ w.astype(x.dtype)
     if matmul_impl() == "fused":
         from repro.distributed.sharding import model_parallel_size
         from repro.kernels import quant_matmul as QM
-        if model_parallel_size() == 1 and QM.supports(x, w):
-            # interpret resolution deferred to kernels.interpret_default()
-            return QM.fused_matmul(x, w)
+        if QM.supports(x, w):
+            if model_parallel_size() == 1:
+                # interpret resolution deferred to interpret_default()
+                return QM.fused_matmul(x, w)
+            if tp is not None:
+                from repro.kernels.ops import int4_matmul_tp
+                out = int4_matmul_tp(x, w, tp)
+                if out is not None:
+                    return out
     return x @ w.dequant(x.dtype)

@@ -22,7 +22,8 @@ Paged serving state (continuous batching): the shared `PagedKVPool` planes
 slot); the per-slot FP buffers shard slots → `data`, heads → `model`.
 `PageTable` bookkeeping and transient `PrefillScratch` stay replicated
 except the scratch's kv-head axis (→ `model`, matching the K/V projections
-that write it).
+that write it); the megastep's device-resident per-slot request state
+(`SlotState`) is replicated like the table it rides next to.
 
 Quantized draft params: `Int4Weight` leaves spec their packed/scale/zero
 planes like the fp matrix they quantize — the in-dim role lands on the
@@ -311,6 +312,14 @@ def table_specs(table: "PC.PageTable", mesh: Mesh):
     """`PageTable` bookkeeping (block tables, per-slot lengths/positions,
     free stack) is tiny and read by every layer — replicated."""
     return jax.tree.map(lambda _: NamedSharding(mesh, P()), table)
+
+
+def slot_state_specs(slots, mesh: Mesh):
+    """Device-resident per-slot request state
+    (:class:`~repro.serving.scheduler.SlotState`: generated/budget/done,
+    ``[R]`` each) rides the megastep carry next to the page table — tiny
+    shared bookkeeping, replicated like it."""
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), slots)
 
 
 def scratch_specs(scratch, mesh: Mesh, stacked: bool = False):

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
@@ -174,6 +175,72 @@ def paged_hier_attention(q, pool: PagedKVPool, table: PageTable, stream_pos,
     qspec = P(d, None, "model", None)
     in_specs = (qspec, pool_specs, P(d, None), P(d), P(d), P(d))
     return _shard_map(run, mesh, in_specs, qspec)(*args)
+
+
+def int4_matmul_tp(x, w, role: str):
+    """Fused INT4 dequant×matmul under a tensor-parallel mesh: a shard_map
+    entry that runs the unchanged Pallas kernel (kernels/quant_matmul.py)
+    on each `model` shard's local slice of the packed planes, instead of
+    bypassing to the sharded dequant+dot.
+
+    ``role`` is the weight's serve-mode matrix role at this call site:
+
+    ``"col"``  column-parallel (wq/wk/wv/w_gate/w_up/lm_head) — the out
+               dim ``d_out`` is sharded over `model`, activations enter
+               replicated across `model`, each shard computes its output
+               columns, no collective (downstream constrains re-anchor).
+    ``"row"``  row-parallel (wo/w_down) — the in dim is sharded over
+               `model` (the ``d_in//group`` axis of the packed layout, per
+               `distributed.specs._int4_specs`), each shard contracts its
+               local groups and the partial products `psum` over `model` —
+               the same post-projection all-reduce the fp path pays.
+
+    The activation row axis additionally shards over `data` when it
+    divides.  Returns ``None`` when the active mesh has no model axis or
+    the weight's sharded axis doesn't divide it (non-divisible shapes were
+    placed replicated by the divisibility guard) — the caller then falls
+    back to dequant+dot."""
+    mesh = current_mesh()
+    m = model_parallel_size(mesh)
+    if mesh is None or m <= 1:
+        return None
+    from repro.kernels import quant_matmul as QM
+
+    ng, _, N = w.packed.shape
+    lead = x.shape[:-1]
+    rows = 1
+    for s in lead:
+        rows *= s
+    d = data_parallel_size(mesh)
+    b = "data" if d > 1 and rows % d == 0 else None
+    x2 = x.reshape(rows, x.shape[-1])
+    scale = w.scale.astype(jnp.float32)
+    zero = w.zero.astype(jnp.float32)
+
+    if role == "col":
+        if N % m:
+            return None
+        wspec = P(None, None, "model")
+
+        def run(x2, packed, scale, zero):
+            return QM.int4_matmul(x2, packed, scale, zero)
+
+        out = _shard_map(run, mesh, (P(b, None), wspec, wspec, wspec),
+                         P(b, "model"))(x2, w.packed, scale, zero)
+    elif role == "row":
+        if ng % m:
+            return None
+        wspec = P("model", None, None)
+
+        def run(x2, packed, scale, zero):
+            part = QM.int4_matmul(x2, packed, scale, zero)
+            return jax.lax.psum(part, "model")
+
+        out = _shard_map(run, mesh, (P(b, "model"), wspec, wspec, wspec),
+                         P(b, None))(x2, w.packed, scale, zero)
+    else:
+        raise ValueError(f"unknown tp role {role!r}: expected col|row")
+    return out.reshape(*lead, N)
 
 
 def prefill_attention(q, k, v, q_start, kv_len, softcap: float = 0.0,

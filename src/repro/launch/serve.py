@@ -48,6 +48,14 @@ def main():
                          "engine pads prompts to this grid (one compile "
                          "per bucket); the continuous engine admits one "
                          "chunk per iteration between spec rounds")
+    ap.add_argument("--rounds-per-step", type=int, default=4,
+                    help="spec rounds fused into one jitted decode "
+                         "megastep (device-resident budget/EOS masking, "
+                         "one device→host readback per megastep); 0 = "
+                         "legacy one-round-per-dispatch loop")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="stop a request at this token (device-side EOS "
+                         "detection; continuous engine megasteps only)")
     ap.add_argument("--mesh", default="local",
                     help="local | single | multi | host<N> | host<D>x<M> — "
                          "host meshes force host-platform CPU devices so "
@@ -98,9 +106,16 @@ def main():
             print(f"mesh {dict(engine_mesh.shape)}: params/cache sharded "
                   f"per serve specs")
         if args.engine == "continuous":
+            if args.eos_id is not None and \
+                    (args.rounds_per_step < 1 or args.gamma < 1):
+                raise SystemExit("--eos-id needs the megastep driver: "
+                                 "--rounds-per-step >= 1 and --gamma >= 1 "
+                                 "(EOS detection is device-resident)")
             eng = ContinuousEngine(model, params, gamma=args.gamma,
                                    greedy=args.greedy, top_p=args.top_p,
                                    max_slots=args.slots, max_seq=max_seq,
+                                   rounds_per_step=args.rounds_per_step,
+                                   eos_id=args.eos_id,
                                    mesh=engine_mesh, **chunk_kw)
             # ragged prompts: vary lengths so requests join/retire mid-stream
             prompts = [np.asarray(prompt[i, : args.prompt_len - 7 * i])
@@ -114,8 +129,13 @@ def main():
                       f"prefill {s.prefill_s:.2f}s decode {s.decode_s:.2f}s")
             print("first request tokens:", results[0].tokens[0][:32].tolist())
             return
+        if args.eos_id is not None:
+            raise SystemExit("--eos-id needs --engine continuous (EOS "
+                             "detection lives in the paged megastep's "
+                             "per-slot state)")
         eng = Engine(model, params, policy=args.policy, gamma=args.gamma,
                      greedy=args.greedy, top_p=args.top_p, max_seq=max_seq,
+                     rounds_per_step=args.rounds_per_step,
                      mesh=engine_mesh, **chunk_kw)
         res = eng.generate(prompt, args.max_new, key=jax.random.PRNGKey(7),
                            memory=memory)

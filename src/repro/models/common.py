@@ -31,10 +31,13 @@ def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
     return (y * scale.astype(jnp.float32)).astype(dt)
 
 
-def linear(x: jnp.ndarray, w, b=None) -> jnp.ndarray:
+def linear(x: jnp.ndarray, w, b=None, tp=None) -> jnp.ndarray:
     # Int4 draft weights dispatch through weight_quant.matmul — the fused
-    # Pallas dequant×matmul on TPU, dequant()+dot elsewhere.
-    y = quant_matmul(x, w)
+    # Pallas dequant×matmul on TPU, dequant()+dot elsewhere. `tp` is the
+    # weight's serve-mode tensor-parallel role ("col" | "row"), which lets
+    # the fused kernel run sharded via its shard_map entry instead of
+    # falling back to dequant+dot under a model-parallel mesh.
+    y = quant_matmul(x, w, tp=tp)
     if b is not None:
         y = y + b.astype(y.dtype)
     return y
@@ -249,9 +252,12 @@ def project_qkv(p: dict, cfg: ModelConfig, x: jnp.ndarray,
     """x [B, T, d] -> q [B,T,Hq,hd], k/v [B,T,Hkv,hd]; RoPE on q,k."""
     B, T, _ = x.shape
     hd = cfg.hd
-    q = linear(x, p["wq"], p.get("bq")).reshape(B, T, cfg.num_heads, hd)
-    k = linear(x, p["wk"], p.get("bk")).reshape(B, T, cfg.num_kv_heads, hd)
-    v = linear(x, p["wv"], p.get("bv")).reshape(B, T, cfg.num_kv_heads, hd)
+    q = linear(x, p["wq"], p.get("bq"), tp="col").reshape(
+        B, T, cfg.num_heads, hd)
+    k = linear(x, p["wk"], p.get("bk"), tp="col").reshape(
+        B, T, cfg.num_kv_heads, hd)
+    v = linear(x, p["wv"], p.get("bv"), tp="col").reshape(
+        B, T, cfg.num_kv_heads, hd)
     if use_rope and positions is not None:
         cos, sin = rope_cos_sin(positions, hd, cfg.rope_theta)
         q = apply_rope(q, cos, sin)
@@ -261,7 +267,7 @@ def project_qkv(p: dict, cfg: ModelConfig, x: jnp.ndarray,
 
 def attn_out(p: dict, x: jnp.ndarray) -> jnp.ndarray:
     B, T, H, D = x.shape
-    return linear(x.reshape(B, T, H * D), p["wo"])
+    return linear(x.reshape(B, T, H * D), p["wo"], tp="row")
 
 
 # ---------------------------------------------------------------------------
@@ -431,8 +437,8 @@ def init_mlp_params(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
 
 
 def apply_mlp(p: dict, x: jnp.ndarray) -> jnp.ndarray:
-    g = jax.nn.silu(linear(x, p["w_gate"]))
-    return linear(g * linear(x, p["w_up"]), p["w_down"])
+    g = jax.nn.silu(linear(x, p["w_gate"], tp="col"))
+    return linear(g * linear(x, p["w_up"], tp="col"), p["w_down"], tp="row")
 
 
 def init_norm(cfg: ModelConfig) -> dict:

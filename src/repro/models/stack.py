@@ -499,7 +499,7 @@ class StackModel:
     def unembed(self, params, x):
         cfg = self.cfg
         from repro.core.weight_quant import matmul
-        logits = matmul(x, params["lm_head"])
+        logits = matmul(x, params["lm_head"], tp="col")
         if cfg.num_codebooks:
             B, T, _ = logits.shape
             logits = logits.reshape(B, T, cfg.num_codebooks, cfg.vocab_size)

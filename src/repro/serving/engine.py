@@ -20,6 +20,23 @@ chunk bucket) and quantizing the groups it completes straight into pool
 blocks — no dense ``max_seq`` intermediate cache and no `adopt_hier` copy,
 and in-flight requests keep decoding while a 128k prompt trickles in.
 
+Device-resident decode megastep (``rounds_per_step``)
+-----------------------------------------------------
+Both engines default to driving decode in **megasteps**: ``rounds_per_step``
+consecutive spec rounds fused into one jitted `lax.scan`
+(core/spec_decode.py `megastep`/`paged_megastep`) that carries the cache
+state, page table, last tokens, and device-resident per-slot request state
+(`SlotState`: generated/budget/done + EOS detection), so budget clamping
+and termination masking never leave the accelerator.  The driver is
+double-buffered: megastep ``i+1`` is enqueued on the carried device state
+*before* megastep ``i``'s packed token/stat buffers are read back (one
+`jax.device_get` per megastep, no `block_until_ready` in the steady
+state); the scheduler re-enters only between megasteps for
+admission/retire, and retirement itself is a jitted `release_slot` — no
+host sync.  ``rounds_per_step=0`` keeps the legacy one-round-per-dispatch
+loop (the baseline `benchmarks/serving_bench.py` measures against); greedy
+outputs are token-identical for every ``rounds_per_step``.
+
 Policies (static engine)
 ------------------------
 quantspec : hierarchical INT4/INT8 shared cache, INT4 draft weights (paper)
@@ -47,16 +64,18 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import paged_kv_cache as PC
-from repro.core.spec_decode import (RoundResult, PagedRoundResult, ar_step,
-                                    paged_ar_step, paged_spec_round,
-                                    spec_round)
+from repro.core.spec_decode import (MegaResult, PagedMegaResult, RoundResult,
+                                    PagedRoundResult, ar_step, megastep,
+                                    paged_ar_step, paged_megastep,
+                                    paged_spec_round, spec_round)
 from repro.core.weight_quant import quantize_tree
 from repro.distributed import specs as SP
 from repro.distributed.sharding import axis_rules
 from repro.models.config import ATTN_FULL
 from repro.models.stack import AttnState, StackModel
 from repro.serving.sampling import sample_token
-from repro.serving.scheduler import Request, Scheduler
+from repro.serving.scheduler import (Request, Scheduler, SlotState,
+                                     init_slot_state)
 
 
 @dataclasses.dataclass
@@ -135,7 +154,7 @@ class Engine:
                  temperature: float = 1.0, top_p: Optional[float] = None,
                  quantize_weights: Optional[bool] = None,
                  max_seq: int = 4096, prefill_chunk: int = 512,
-                 mesh: Optional[Mesh] = None,
+                 rounds_per_step: int = 1, mesh: Optional[Mesh] = None,
                  ctx_kw: Optional[dict] = None):
         self.model = model
         self.cfg = model.cfg
@@ -147,6 +166,11 @@ class Engine:
         self.ctx_kw = ctx_kw or {}
         self.max_seq = max_seq
         self.prefill_chunk = prefill_chunk
+        self.rounds_per_step = rounds_per_step
+        # decode-loop telemetry: blocking device→host transfers and jitted
+        # decode dispatches (megasteps, or rounds on the legacy path)
+        self.host_syncs = 0
+        self.decode_steps = 0
         self.mesh = mesh
         if policy == "quantspec" and gamma + 1 > self.cfg.group_size:
             # one verify pass appends gamma+1 tokens; maybe_flush frees at
@@ -181,7 +205,13 @@ class Engine:
                            ctx_kw=self.ctx_kw)
         self._round = jax.jit(partial(spec_round, model, **self._round_kw))
         self._ar = jax.jit(partial(ar_step, model, **self._ar_kw))
-        self._sharded_fns = {}      # batch -> (round, ar, state specs)
+        self._mega = None
+        if rounds_per_step >= 1:
+            self._mega = jax.jit(partial(megastep, model,
+                                         rounds=rounds_per_step,
+                                         **self._round_kw),
+                                 donate_argnums=(2,))
+        self._sharded_fns = {}      # batch -> (round, ar, mega, state specs)
         self._prefill_jit = jax.jit(self._prefill,
                                     static_argnames=("batch",))
 
@@ -209,7 +239,19 @@ class Engine:
             in_shardings=(self._param_sh, s_sh, repl, repl, repl),
             out_shardings=(s_sh, repl),
             donate_argnums=(1,))
-        fns = (round_fn, ar_fn, s_sh)
+        mega_fn = None
+        if self.rounds_per_step >= 1:
+            mega_fn = jax.jit(
+                partial(megastep, self.model, rounds=self.rounds_per_step,
+                        **self._round_kw),
+                in_shardings=(self._param_sh, self._draft_sh, s_sh, repl,
+                              repl, repl, repl, repl),
+                out_shardings=MegaResult(
+                    state=s_sh, last_token=repl, stream_pos=repl,
+                    generated=repl, tokens=repl, n_new=repl, proposed=repl,
+                    accepted=repl),
+                donate_argnums=(2,))
+        fns = (round_fn, ar_fn, mega_fn, s_sh)
         self._sharded_fns[batch] = fns
         return fns
 
@@ -261,9 +303,9 @@ class Engine:
             t0 = time.perf_counter()
             logits, state = jax.block_until_ready(
                 self._run_prefill(prompt, memory, B))
-            round_fn, ar_fn = self._round, self._ar
+            round_fn, ar_fn, mega_fn = self._round, self._ar, self._mega
             if self.mesh is not None:
-                round_fn, ar_fn, s_sh = self._mesh_fns(state, B)
+                round_fn, ar_fn, mega_fn, s_sh = self._mesh_fns(state, B)
                 # commit the freshly-prefilled cache onto its serve specs
                 # (heads → model, batch → data) before the first round
                 state = jax.device_put(state, s_sh)
@@ -274,41 +316,104 @@ class Engine:
                                 self.greedy, top_p=self.top_p)
             last = last[:, None]
             out = [np.asarray(last)]
-            stream_pos = prompt.shape[1]
             generated = 1
 
             t1 = time.perf_counter()
-            while generated < max_new_tokens:
-                key, kr = jax.random.split(key)
-                if speculative:
-                    res = round_fn(self.params, self.draft_params, state,
-                                   last, stream_pos, kr)
-                    state, last = res.state, res.last_token
-                    n_new = int(res.n_new)
-                    toks = np.asarray(res.tokens)[:, :n_new]
-                    stats.rounds += 1
-                    # lockstep-committed drafts, clamped by the remaining
-                    # budget so a final round's trimmed tail isn't counted
-                    _, proposed, accepted = round_stats(
-                        self.gamma, n_new, max_new_tokens - generated)
-                    stats.proposed += proposed
-                    stats.accepted += accepted
-                    stream_pos += n_new
-                else:
-                    state, last = ar_fn(self.params, state, last,
-                                        stream_pos, kr)
-                    toks = np.asarray(last)
-                    n_new = 1
-                    stream_pos += 1
-                    stats.rounds += 1
-                out.append(toks)
-                generated += n_new
-            jax.block_until_ready(last)
+            if speculative and mega_fn is not None:
+                generated = self._drive_megasteps(
+                    mega_fn, state, last, prompt.shape[1], generated,
+                    max_new_tokens, key, out, stats)
+            else:
+                generated = self._drive_rounds(
+                    round_fn, ar_fn, state, last, prompt.shape[1], generated,
+                    max_new_tokens, key, out, stats, speculative)
             stats.decode_s = time.perf_counter() - t1
             stats.generated = min(generated, max_new_tokens)
 
         tokens = np.concatenate(out, axis=1)[:, :max_new_tokens]
         return GenerationResult(tokens=tokens, stats=stats)
+
+    def _drive_rounds(self, round_fn, ar_fn, state, last, stream_pos,
+                      generated, max_new_tokens, key, out, stats,
+                      speculative):
+        """Legacy per-round loop: one jitted dispatch — and two blocking
+        readbacks (`n_new`, tokens) — per spec round.  The benchmark
+        baseline, and the AR (non-speculative) path."""
+        while generated < max_new_tokens:
+            key, kr = jax.random.split(key)
+            if speculative:
+                res = round_fn(self.params, self.draft_params, state,
+                               last, stream_pos, kr)
+                state, last = res.state, res.last_token
+                n_new = int(res.n_new)
+                toks = np.asarray(res.tokens)[:, :n_new]
+                self.host_syncs += 2
+                stats.rounds += 1
+                # lockstep-committed drafts, clamped by the remaining
+                # budget so a final round's trimmed tail isn't counted
+                _, proposed, accepted = round_stats(
+                    self.gamma, n_new, max_new_tokens - generated)
+                stats.proposed += proposed
+                stats.accepted += accepted
+                stream_pos += n_new
+            else:
+                state, last = ar_fn(self.params, state, last,
+                                    stream_pos, kr)
+                toks = np.asarray(last)
+                self.host_syncs += 1
+                n_new = 1
+                stream_pos += 1
+                stats.rounds += 1
+            self.decode_steps += 1
+            out.append(toks)
+            generated += n_new
+        jax.block_until_ready(last)
+        return generated
+
+    def _drive_megasteps(self, mega_fn, state, last, stream_pos, generated,
+                         max_new_tokens, key, out, stats):
+        """Double-buffered megastep driver: dispatch megastep ``i+1`` on the
+        device-carried state *before* reading back megastep ``i``'s packed
+        buffers, so the single per-megastep `device_get` overlaps the next
+        megastep's compute.  Termination masking is on device (`lax.cond`
+        per round), so the one speculatively-dispatched trailing megastep
+        is all-skip and near-free."""
+        budget = jnp.asarray(max_new_tokens, jnp.int32)
+        gen_dev = jnp.asarray(generated, jnp.int32)
+        pos_dev = jnp.asarray(stream_pos, jnp.int32)
+        prev = None
+        while generated < max_new_tokens:
+            key, kmega = jax.random.split(key)
+            res = mega_fn(self.params, self.draft_params, state, last,
+                          pos_dev, gen_dev, budget, kmega)
+            state, last = res.state, res.last_token
+            pos_dev, gen_dev = res.stream_pos, res.generated
+            self.decode_steps += 1
+            if prev is not None:
+                generated = self._harvest_megastep(prev, out, stats,
+                                                   generated, max_new_tokens)
+            prev = (res.tokens, res.n_new, res.proposed, res.accepted)
+        if prev is not None:
+            generated = self._harvest_megastep(prev, out, stats, generated,
+                                               max_new_tokens)
+        return generated
+
+    def _harvest_megastep(self, packed, out, stats, generated,
+                          max_new_tokens):
+        """The single blocking transfer per megastep; per-round bookkeeping
+        happens on the packed host copies (skipped rounds have n_new=0)."""
+        toks, n_new, proposed, accepted = jax.device_get(packed)
+        self.host_syncs += 1
+        for k in range(n_new.shape[0]):
+            nn = int(n_new[k])
+            if nn == 0:
+                continue
+            out.append(toks[k][:, :nn])
+            stats.rounds += 1
+            stats.proposed += int(proposed[k])
+            stats.accepted += int(accepted[k])
+            generated += nn
+        return generated
 
 
 @dataclasses.dataclass
@@ -321,6 +426,20 @@ class _PrefillJob:
     n_chunks: int
     scratch: list                # per-attn-layer PrefillScratch (walk order)
     chunk: int = 0               # chunks admitted so far
+
+
+@dataclasses.dataclass
+class _InflightMega:
+    """One dispatched-but-unharvested megastep: the packed device buffers
+    plus the slot→request mapping captured at dispatch time (slots can be
+    retired and re-admitted between dispatch and harvest; the mapping pins
+    each packed row to the request that owned the slot when the megastep
+    launched)."""
+
+    packed: tuple                # (tokens, take, proposed, accepted,
+                                 #  first, done) device arrays
+    reqs: dict                   # slot -> Request decoding at dispatch
+    emit_first: list             # slots whose pending_first this harvests
 
 
 class ContinuousEngine:
@@ -350,7 +469,8 @@ class ContinuousEngine:
                  top_p: Optional[float] = None,
                  quantize_weights: bool = True, max_slots: int = 4,
                  max_seq: int = 4096, pool_blocks: Optional[int] = None,
-                 prefill_chunk: int = 256, mesh: Optional[Mesh] = None,
+                 prefill_chunk: int = 256, rounds_per_step: int = 1,
+                 eos_id: Optional[int] = None, mesh: Optional[Mesh] = None,
                  ctx_kw: Optional[dict] = None):
         self.model = model
         self.cfg = model.cfg
@@ -362,6 +482,18 @@ class ContinuousEngine:
         self.max_slots = max_slots
         self.max_seq = max_seq
         self.prefill_chunk = prefill_chunk
+        self.rounds_per_step = rounds_per_step
+        self.eos_id = eos_id
+        # the megastep driver needs device-side termination (gamma>0 spec
+        # rounds); gamma=0 serves AR baselines on the legacy loop
+        self._use_megastep = rounds_per_step >= 1 and gamma > 0
+        if eos_id is not None and not self._use_megastep:
+            raise ValueError("eos_id requires the megastep driver "
+                             "(rounds_per_step >= 1 and gamma > 0): EOS "
+                             "detection is device-resident")
+        # decode-loop telemetry (see benchmarks/serving_bench.py)
+        self.host_syncs = 0
+        self.decode_steps = 0
         self.mesh = mesh
         G = self.cfg.group_size
         if gamma + 1 > G:
@@ -385,9 +517,11 @@ class ContinuousEngine:
             ctx_kw={**self.ctx_kw, "pool_blocks": self.pool_blocks})
         self.table = PC.init_table(max_slots, self.nbmax, self.pool_blocks)
         self.last = jnp.zeros((max_slots, 1), jnp.int32)
+        self.slots_dev = init_slot_state(max_slots)
         self.scheduler = Scheduler(max_slots, self.pool_blocks, G)
         self._retired: List[Request] = []   # finished, not yet run()-claimed
         self._prefilling: Optional[_PrefillJob] = None
+        self._inflight: Optional[_InflightMega] = None
 
         round_p = partial(paged_spec_round, model, gamma=gamma, greedy=greedy,
                           temperature=temperature, top_p=top_p,
@@ -395,10 +529,17 @@ class ContinuousEngine:
         ar_p = partial(paged_ar_step, model, greedy=greedy,
                        temperature=temperature, top_p=top_p,
                        ctx_kw=self.ctx_kw or None)
+        mega_p = partial(paged_megastep, model, rounds=max(rounds_per_step, 1),
+                         gamma=max(gamma, 1), greedy=greedy,
+                         temperature=temperature, top_p=top_p, eos_id=eos_id,
+                         ctx_kw=self.ctx_kw or None)
+        self._release = jax.jit(PC.release_slot)
         if mesh is None:
             self._state_sh = self._table_sh = None
             self._round = jax.jit(round_p)
             self._ar = jax.jit(ar_p)
+            self._mega = (jax.jit(mega_p, donate_argnums=(2, 3, 4, 5))
+                          if self._use_megastep else None)
         else:
             # build the cache state directly onto its serve shardings (pool
             # kv-heads → model, buffer slots → data, table replicated) and
@@ -408,9 +549,11 @@ class ContinuousEngine:
             repl = NamedSharding(mesh, P())
             self._state_sh = SP.state_specs(self.state, mesh)
             self._table_sh = SP.table_specs(self.table, mesh)
+            slots_sh = SP.slot_state_specs(self.slots_dev, mesh)
             self.state = jax.device_put(self.state, self._state_sh)
             self.table = jax.device_put(self.table, self._table_sh)
             self.last = jax.device_put(self.last, repl)
+            self.slots_dev = jax.device_put(self.slots_dev, slots_sh)
             self._round = jax.jit(
                 round_p,
                 in_shardings=(self._param_sh, self._draft_sh, self._state_sh,
@@ -425,6 +568,23 @@ class ContinuousEngine:
                               repl, repl),
                 out_shardings=(self._state_sh, self._table_sh, repl),
                 donate_argnums=(1, 2))
+            self._mega = None
+            if self._use_megastep:
+                # the whole carried decode state is donated and pinned to
+                # its serve shardings, so K rounds run SPMD without the
+                # cache ever changing placement; the packed readback
+                # buffers are replicated (tiny)
+                self._mega = jax.jit(
+                    mega_p,
+                    in_shardings=(self._param_sh, self._draft_sh,
+                                  self._state_sh, self._table_sh, repl,
+                                  slots_sh, repl),
+                    out_shardings=PagedMegaResult(
+                        state=self._state_sh, table=self._table_sh,
+                        last_token=repl, slots=slots_sh, tokens=repl,
+                        take=repl, proposed=repl, accepted=repl, first=repl,
+                        done=repl),
+                    donate_argnums=(2, 3, 4, 5))
         self._chunk_jit = jax.jit(self._chunk_step)
         self._finalize_jit = jax.jit(self._finalize_step)
 
@@ -440,9 +600,14 @@ class ContinuousEngine:
                                            policy="paged", ctx_kw=kw)
         return logits, state, table
 
-    def _finalize_step(self, state, table, slot):
+    def _finalize_step(self, state, table, last, slots, slot, logits, k0,
+                       budget):
         """After the last chunk: move each layer's trailing fp window from
-        the scratch into the slot's double buffer and activate the slot."""
+        the scratch into the slot's double buffer, activate the slot, and
+        sample the request's first token **on device** — it lands in the
+        carried ``last`` and in ``SlotState`` (generated=1, done if the
+        budget is ≤1 or EOS), and reaches the host only with the next
+        megastep's packed readback. No blocking transfer at admission."""
         blocks = table.blocks[slot]
         buf_len = table.buf_len[slot]
 
@@ -458,7 +623,18 @@ class ContinuousEngine:
                                                buf_len, scratch)
             return AttnState(pool, scratch)
 
-        return self._map_attn(state, fin), PC.activate_slot(table, slot)
+        # the chunk step already sliced the last valid position's logits
+        first = sample_token(logits[:, 0] / self.temperature, k0,
+                             self.greedy, top_p=self.top_p)[0]
+        done = budget <= 1
+        if self.eos_id is not None:
+            done = done | (first == self.eos_id)
+        new_slots = SlotState(
+            generated=slots.generated.at[slot].set(jnp.minimum(budget, 1)),
+            budget=slots.budget.at[slot].set(budget),
+            done=slots.done.at[slot].set(done))
+        return (self._map_attn(state, fin), PC.activate_slot(table, slot),
+                last.at[slot, 0].set(first), new_slots)
 
     @staticmethod
     def _map_attn(state, fn):
@@ -522,7 +698,12 @@ class ContinuousEngine:
 
     def _advance_prefill(self, key):
         """Advance the in-flight admission by at most ONE chunk (starting a
-        new job if none is in flight) — the decode-interleaving contract."""
+        new job if none is in flight) — the decode-interleaving contract.
+
+        Chunk dispatches are fully asynchronous: no `block_until_ready`
+        between chunks, and under the megastep driver even the finalize's
+        first-token sample stays on device (``req.prefill_s`` therefore
+        measures dispatch time, not device occupancy)."""
         if self._prefilling is None:
             req = self.scheduler.next_admission()
             if req is None:
@@ -547,23 +728,30 @@ class ContinuousEngine:
 
         if job.chunk == job.n_chunks:
             state = self._inject_scratch(self.state, job.scratch)
-            state, self.table = self._finalize_jit(
-                state, self.table, jnp.asarray(job.slot, jnp.int32))
-            self.state, _ = self._extract_scratch(state)   # scratch freed
             key, k0 = jax.random.split(key)
-            # the chunk step already sliced the last valid position
-            first = sample_token(
-                jax.block_until_ready(logits)[:, 0]
-                / self.temperature, k0, self.greedy, top_p=self.top_p)
-            self.last = self.last.at[job.slot, 0].set(first[0])
-            if req.max_new_tokens > 0:   # match the static engine's [:, :0]
-                req.tokens.append(int(first[0]))
+            state, self.table, self.last, self.slots_dev = \
+                self._finalize_jit(state, self.table, self.last,
+                                   self.slots_dev,
+                                   jnp.asarray(job.slot, jnp.int32), logits,
+                                   k0, jnp.asarray(req.max_new_tokens,
+                                                   jnp.int32))
+            self.state, _ = self._extract_scratch(state)   # scratch freed
             self._prefilling = None
             req.prefill_s += time.perf_counter() - t0
-            if req.generated >= req.max_new_tokens:
+            if req.max_new_tokens <= 0:
+                # nothing to generate: match the static engine's [:, :0]
                 self._retire(job.slot)
+            elif self._use_megastep:
+                # the first token stays on device; it reaches the host (and
+                # req.tokens) with the next megastep's packed readback
+                req.pending_first = True
+            else:
+                first = int(np.asarray(self.last[job.slot, 0]))
+                self.host_syncs += 1
+                req.tokens.append(first)
+                if req.generated >= req.max_new_tokens:
+                    self._retire(job.slot)
         else:
-            jax.block_until_ready(self.table.pos)
             req.prefill_s += time.perf_counter() - t0
         return key
 
@@ -579,19 +767,37 @@ class ContinuousEngine:
         return self.scheduler.submit(prompt, max_new_tokens)
 
     def _retire(self, slot: int):
-        self.table = PC.free_slot(self.table, slot)
+        # jitted release: blocks return to the free stack on device, no
+        # host sync on the (possibly still in-flight) table
+        self.table = self._release(self.table, jnp.asarray(slot, jnp.int32))
         req = self.scheduler.retire(slot)
         req.finish_t = time.perf_counter()
         self._retired.append(req)
 
     # ------------------------------------------------------------------
     def step(self, key):
-        """One engine iteration: ≤1 prefill chunk, one spec round over the
-        decoding slots, harvest, retire."""
+        """One engine iteration: ≤1 prefill chunk, one megastep
+        (``rounds_per_step`` fused spec rounds) over the decoding slots,
+        harvest, retire.  `step` is the synchronous entry point — it drains
+        any pipelined megastep first and harvests its own before returning,
+        so request state is current when it hands back; `run` overlaps
+        readback with the next megastep instead."""
         with _mesh_scope(self.mesh):
-            return self._step(key)
+            if not self._use_megastep:
+                return self._step_legacy(key)
+            if self._inflight is not None:
+                self._harvest(self._inflight)
+                self._inflight = None
+            key = self._dispatch(key)
+            if self._inflight is not None:
+                self._harvest(self._inflight)
+                self._inflight = None
+            return key
 
-    def _step(self, key):
+    def _step_legacy(self, key):
+        """One spec round (or AR step) per dispatch, harvested immediately —
+        two blocking readbacks per round.  The gamma=0 AR path and the
+        ``rounds_per_step=0`` benchmark baseline."""
         key = self._advance_prefill(key)
         busy = self._prefilling.slot if self._prefilling else None
         decoding = {s: r for s, r in self.scheduler.active.items()
@@ -606,11 +812,14 @@ class ContinuousEngine:
                                                  res.last_token)
             n_new = np.asarray(res.n_new)
             toks = np.asarray(res.tokens)
+            self.host_syncs += 2
         else:
             self.state, self.table, self.last = self._ar(
                 self.params, self.state, self.table, self.last, kr)
             n_new = np.ones((self.max_slots,), np.int64)
             toks = np.asarray(self.last)
+            self.host_syncs += 1
+        self.decode_steps += 1
 
         for slot, req in list(decoding.items()):
             # clamp the stats by the request's remaining budget: when it
@@ -628,14 +837,79 @@ class ContinuousEngine:
                 self._retire(slot)
         return key
 
+    # ---- megastep driver ---------------------------------------------
+    def _dispatch(self, key):
+        """≤1 prefill chunk, then enqueue one megastep over the decoding
+        slots (recording the slot→request mapping for its later harvest).
+        Nothing here blocks: the megastep runs on carried device state, and
+        slots whose requests finished in the still-unharvested previous
+        megastep are already frozen by the device-side done mask."""
+        key = self._advance_prefill(key)
+        busy = self._prefilling.slot if self._prefilling else None
+        decoding = {s: r for s, r in self.scheduler.active.items()
+                    if s != busy}
+        if not decoding:
+            return key
+        key, kmega = jax.random.split(key)
+        res = self._mega(self.params, self.draft_params, self.state,
+                         self.table, self.last, self.slots_dev, kmega)
+        self.state, self.table = res.state, res.table
+        self.last, self.slots_dev = res.last_token, res.slots
+        self.decode_steps += 1
+        self._inflight = _InflightMega(
+            packed=(res.tokens, res.take, res.proposed, res.accepted,
+                    res.first, res.done),
+            reqs=decoding,
+            emit_first=[s for s, r in decoding.items() if r.pending_first])
+        return key
+
+    def _harvest(self, flight: _InflightMega):
+        """The single blocking device→host transfer per megastep: packed
+        per-round tokens/takes/stats plus the tiny first-token and done
+        vectors.  All request bookkeeping happens on the host copies."""
+        toks, take, proposed, accepted, first, done = \
+            jax.device_get(flight.packed)
+        self.host_syncs += 1
+        for slot in flight.emit_first:
+            req = flight.reqs[slot]
+            if req.pending_first:     # not already emitted by an earlier
+                req.tokens.append(int(first[slot]))   # overlapping harvest
+                req.pending_first = False
+        for k in range(take.shape[0]):
+            for slot, req in flight.reqs.items():
+                t = int(take[k, slot])
+                if t <= 0 or req.done:
+                    continue
+                req.tokens.extend(int(x) for x in toks[k, slot, :t])
+                req.rounds += 1
+                req.proposed += int(proposed[k, slot])
+                req.accepted += int(accepted[k, slot])
+        for slot, req in flight.reqs.items():
+            if not req.done and bool(done[slot]):
+                self._retire(slot)
+
     def run(self, key=None) -> List[Request]:
         """Drive until every submitted request has finished; returns, in
         submission order, every request retired since the last `run` (so
-        requests that finished in manual `step` calls are included)."""
+        requests that finished in manual `step` calls are included).
+
+        Under the megastep driver this is the double-buffered loop:
+        megastep ``i+1`` is dispatched on the carried device state *before*
+        megastep ``i`` is harvested, so the one `device_get` per megastep
+        overlaps the next megastep's compute and the scheduler re-enters
+        only between megasteps (admission chunks, retirement)."""
         if key is None:
             key = jax.random.PRNGKey(0)
-        while self.scheduler.has_work:
-            key = self.step(key)
+        if not self._use_megastep:
+            while self.scheduler.has_work:
+                key = self.step(key)
+        else:
+            with _mesh_scope(self.mesh):
+                while self.scheduler.has_work or self._inflight is not None:
+                    prev, self._inflight = self._inflight, None
+                    key = self._dispatch(key)
+                    if prev is not None:
+                        self._harvest(prev)
         done, self._retired = self._retired, []
         return sorted(done, key=lambda r: r.req_id)
 

@@ -1,9 +1,19 @@
 """Continuous-batching scheduler: request queue + slot/block accounting.
 
-The scheduler is pure host-side bookkeeping — it decides *which* request
-enters *which* slot and when a slot retires; all array work (prefill
-adoption, the jitted spec round) stays in the engine. Separating the two
-keeps admission policy swappable (FCFS here) without touching jitted code.
+Slot state is split host/device:
+
+* The :class:`Scheduler` is pure host-side bookkeeping — it decides *which*
+  request enters *which* slot and when a slot retires; all array work (the
+  chunked prefill, the jitted megastep) stays in the engine. Separating the
+  two keeps admission policy swappable (FCFS here) without touching jitted
+  code.
+* :class:`SlotState` is the **device-resident** half of a request's
+  lifecycle: per-slot generated counts, token budgets, and the done mask
+  (budget reached or EOS sampled). It rides through the fused decode
+  megastep (`core.spec_decode.paged_megastep`) so accept/rollback, budget
+  clamping, and termination masking all happen on the accelerator — the
+  host only learns about finished requests at the next packed readback,
+  and never has to sync mid-megastep.
 
 Admission is capacity-safe: a request is only admitted when the block pool
 can hold its **worst-case** footprint (every token of prompt + generation
@@ -15,9 +25,34 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List, NamedTuple, Optional
 
 import numpy as np
+
+
+class SlotState(NamedTuple):
+    """Device-resident per-slot request state carried through the megastep.
+
+    ``generated`` counts tokens the request has produced **including** the
+    first token sampled from the prefill logits (which the host may not
+    have seen yet — see ``Request.pending_first``); ``budget`` is the
+    request's ``max_new_tokens``; ``done`` marks slots whose budget is
+    exhausted or that sampled EOS — the megastep freezes them (page-table
+    deactivation, zeroed takes) instead of syncing to the host."""
+
+    generated: "np.ndarray"   # i32 [R]
+    budget: "np.ndarray"      # i32 [R]
+    done: "np.ndarray"        # bool [R]
+
+
+def init_slot_state(num_slots: int):
+    """All-idle :class:`SlotState` (jnp arrays; imported lazily so the
+    scheduler module itself stays importable without jax)."""
+    import jax.numpy as jnp
+
+    return SlotState(generated=jnp.zeros((num_slots,), jnp.int32),
+                     budget=jnp.zeros((num_slots,), jnp.int32),
+                     done=jnp.zeros((num_slots,), bool))
 
 
 @dataclasses.dataclass
@@ -40,6 +75,10 @@ class Request:
     prefill_pos: int = 0
     prefill_chunks: int = 0
     prefill_bucket: int = 0
+    # megastep driver: the first token was sampled *on device* at prefill
+    # finalize and has not reached the host yet — it arrives with the next
+    # megastep's packed readback (engine._harvest)
+    pending_first: bool = False
     admit_t: float = 0.0
     finish_t: float = 0.0
     done: bool = False

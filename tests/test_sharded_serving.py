@@ -418,3 +418,78 @@ class TestShardMapKernelParity:
             got = kops.prefill_attention(q, kv, kv, 4, 8, interpret=True)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    atol=2e-5, rtol=2e-5)
+
+
+@needs_mesh
+class TestInt4MatmulShardMap:
+    """The fused INT4 dequant×matmul now runs under a model-parallel mesh
+    through `kernels.ops.int4_matmul_tp` (instead of the PR 4 bypass to the
+    sharded dequant+dot): column-parallel for out-dim-sharded weights,
+    row-parallel + psum for in-dim-sharded ones, with the dequant fallback
+    kept for non-divisible shapes."""
+
+    def _w(self, din, dout, seed=0):
+        from repro.core.weight_quant import quantize_weight
+        return quantize_weight(
+            jax.random.normal(jax.random.PRNGKey(seed), (din, dout)),
+            group=128)
+
+    def test_col_parallel_parity(self, mesh):
+        w = self._w(128, 256)                 # d_out 256 % model 2 == 0
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 3, 128))
+        want = x @ w.dequant(x.dtype)
+        with mesh, axis_rules(mesh, "serve"):
+            got = kops.int4_matmul_tp(x, w, "col")
+        assert got is not None
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-4, rtol=2e-4)
+
+    def test_row_parallel_parity(self, mesh):
+        w = self._w(512, 128)                 # 4 groups % model 2 == 0
+        x = jax.random.normal(jax.random.PRNGKey(2), (4, 512))
+        want = x @ w.dequant(x.dtype)
+        with mesh, axis_rules(mesh, "serve"):
+            got = kops.int4_matmul_tp(x, w, "row")
+        assert got is not None
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-4, rtol=2e-4)
+
+    def test_non_divisible_falls_back(self, mesh):
+        w_col = self._w(128, 129)             # 129 % 2 != 0
+        w_row = self._w(128, 128)             # 1 group % 2 != 0
+        x = jax.random.normal(jax.random.PRNGKey(3), (2, 128))
+        with mesh, axis_rules(mesh, "serve"):
+            assert kops.int4_matmul_tp(x, w_col, "col") is None
+            assert kops.int4_matmul_tp(x, w_row, "row") is None
+
+    def test_matmul_routes_tp_under_mesh(self, mesh, monkeypatch):
+        """`weight_quant.matmul` with a role hint takes the shard_map entry
+        under fused impl + mesh, and stays exact vs dequant+dot."""
+        from repro.core import weight_quant as WQ
+        monkeypatch.setenv("REPRO_QUANT_MATMUL", "fused")
+        w = self._w(256, 256)
+        x = jax.random.normal(jax.random.PRNGKey(4), (2, 2, 256))
+        want = x @ w.dequant(x.dtype)
+        with mesh, axis_rules(mesh, "serve"):
+            for role in ("col", "row"):
+                got = WQ.matmul(x, w, tp=role)
+                np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                           atol=2e-4, rtol=2e-4)
+
+    def test_fused_engine_token_identical(self, tiny, mesh, monkeypatch):
+        """End to end: the continuous engine under a mesh with the fused
+        sharded matmul decodes greedily identical to the single-device
+        dequant path."""
+        cfg, model, params = tiny
+        G = cfg.group_size
+        prompts = make_prompts(cfg, [19, 9])
+        monkeypatch.setenv("REPRO_QUANT_MATMUL", "dequant")
+        base = ContinuousEngine(model, params, gamma=3, greedy=True,
+                                max_slots=2, max_seq=3 * G)
+        want = base.generate(prompts, 6, key=jax.random.PRNGKey(7))
+        monkeypatch.setenv("REPRO_QUANT_MATMUL", "fused")
+        eng = ContinuousEngine(model, params, gamma=3, greedy=True,
+                               max_slots=2, max_seq=3 * G, mesh=mesh)
+        got = eng.generate(prompts, 6, key=jax.random.PRNGKey(7))
+        for a, b in zip(want, got):
+            np.testing.assert_array_equal(b.tokens, a.tokens)

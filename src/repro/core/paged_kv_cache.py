@@ -74,6 +74,14 @@ class PageTable(NamedTuple):
     ``free_stack[:free_top]`` holds the ids of free pool blocks; allocation
     pops from the top, freeing pushes back. Block ids are in ``[0, P)``;
     id ``P`` is the layers' scratch block and never appears in the table.
+
+    ``refcount[b]`` counts live references to block ``b``: one per slot
+    whose table row lists it, plus one when the prefix index retains it
+    (cross-request prefix sharing — see core/prefix_index.py).  A block
+    returns to the free stack only when its count hits zero, so aliased
+    blocks survive the retirement of any one owner.  Every push site
+    (:func:`release_slot`, :func:`free_slot`, :func:`evict_blocks`) is a
+    masked decrement-then-push, keeping the whole protocol jit-clean.
     """
 
     block_table: jnp.ndarray  # i32 [R, NBmax] — pool ids, first blocks[r] valid
@@ -83,6 +91,7 @@ class PageTable(NamedTuple):
     active: jnp.ndarray       # bool [R]
     free_stack: jnp.ndarray   # i32 [P]
     free_top: jnp.ndarray     # i32 scalar — number of free pool blocks
+    refcount: jnp.ndarray     # i32 [P] — live references per pool block
 
     @property
     def seq_len(self) -> jnp.ndarray:
@@ -158,6 +167,7 @@ def init_table(num_slots: int, max_blocks_per_seq: int,
         active=jnp.zeros((R,), bool),
         free_stack=jnp.arange(P, dtype=jnp.int32),
         free_top=jnp.asarray(P, jnp.int32),
+        refcount=jnp.zeros((P,), jnp.int32),
     )
 
 
@@ -217,8 +227,12 @@ def plan_step(table: PageTable, T: int, group: int
     buf_after_flush = table.buf_len - G * need.astype(jnp.int32)
     buf_len = buf_after_flush + jnp.where(act, T, 0)
 
+    # freshly popped blocks are owned by exactly their flushing slot
+    # (non-flushing lanes carry dst = P and drop out of range)
+    refcount = table.refcount.at[dst].set(1, mode="drop")
     new_table = table._replace(block_table=bt, blocks=blocks,
-                               buf_len=buf_len, free_top=new_free_top)
+                               buf_len=buf_len, free_top=new_free_top,
+                               refcount=refcount)
     step = PageStep(do_flush=need, flush_dst=dst,
                     append_at=buf_after_flush, active=act)
     return new_table, step
@@ -360,6 +374,7 @@ def plan_prefill_chunk(table: PageTable, slot, valid, chunk: int, group: int
         buf_len=table.buf_len.at[slot].set(pos_new - blocks_new * G),
         pos=table.pos.at[slot].set(pos_new),
         free_top=table.free_top - n_flush,
+        refcount=table.refcount.at[dst].set(1, mode="drop"),
     )
     return new_table, PrefillChunkStep(slot=slot, pos=pos_prev, valid=valid,
                                        blocks_prev=blocks_prev,
@@ -446,6 +461,7 @@ def alloc_blocks(table: PageTable, slot: int, n: int
         block_table=bt,
         blocks=table.blocks.at[slot].set(n),
         free_top=jnp.asarray(top - n, jnp.int32),
+        refcount=table.refcount.at[ids].set(1) if n else table.refcount,
     ), ids
 
 
@@ -488,20 +504,29 @@ def admit_slot(table: PageTable, slot: int, seq_len: int,
 
 
 def release_slot(table: PageTable, slot) -> PageTable:
-    """Jittable :func:`free_slot` (traced slot id): push the retired slot's
-    blocks back onto the free stack and zero its row, entirely on device —
-    the megastep driver retires slots without ever syncing on the table
-    (``free_slot`` below reads ``int(table.blocks[slot])``, which would
-    block the host on the in-flight megastep)."""
+    """Jittable :func:`free_slot` (traced slot id): drop one reference from
+    each of the retired slot's blocks and push the ones that hit refcount
+    zero back onto the free stack, entirely on device — the megastep driver
+    retires slots without ever syncing on the table (``free_slot`` below
+    reads ``int(table.blocks[slot])``, which would block the host on the
+    in-flight megastep).  Blocks the prefix index (or another slot) still
+    references stay allocated — the masked cumulative-rank push only takes
+    lanes whose count reaches zero."""
     P = table.free_stack.shape[0]
     NBmax = table.max_blocks_per_seq
     slot = jnp.asarray(slot, jnp.int32)
     n = table.blocks[slot]
     lanes = jnp.arange(NBmax, dtype=jnp.int32)
-    # lanes >= n scatter out of range and are dropped
-    idx = jnp.where(lanes < n, table.free_top + lanes, P)
-    free_stack = table.free_stack.at[idx].set(table.block_table[slot],
-                                              mode="drop")
+    owned = lanes < n
+    ids = table.block_table[slot]
+    ref = table.refcount[jnp.clip(ids, 0, P - 1)]
+    push = owned & (ref <= 1)
+    rank = jnp.cumsum(push.astype(jnp.int32)) - push.astype(jnp.int32)
+    # non-pushed lanes scatter out of range and are dropped
+    idx = jnp.where(push, table.free_top + rank, P)
+    free_stack = table.free_stack.at[idx].set(ids, mode="drop")
+    safe_ids = jnp.where(owned, ids, P)
+    refcount = table.refcount.at[safe_ids].add(-1, mode="drop")
     return table._replace(
         block_table=table.block_table.at[slot].set(0),
         blocks=table.blocks.at[slot].set(0),
@@ -509,18 +534,27 @@ def release_slot(table: PageTable, slot) -> PageTable:
         pos=table.pos.at[slot].set(0),
         active=table.active.at[slot].set(False),
         free_stack=free_stack,
-        free_top=table.free_top + n,
+        free_top=table.free_top + jnp.sum(push.astype(jnp.int32)),
+        refcount=jnp.maximum(refcount, 0),
     )
 
 
 def free_slot(table: PageTable, slot: int) -> PageTable:
-    """Retire ``slot``: push its blocks back onto the free stack."""
+    """Retire ``slot``: drop one reference per owned block, pushing the
+    blocks that reach refcount zero back onto the free stack (host ints)."""
     n = int(table.blocks[slot])
     top = int(table.free_top)
     free_stack = table.free_stack
+    refcount = table.refcount
     if n:
         ids = table.block_table[slot, :n]
-        free_stack = free_stack.at[top:top + n].set(ids)
+        ref = refcount[ids]
+        push = ref <= 1
+        rank = jnp.cumsum(push.astype(jnp.int32)) - push.astype(jnp.int32)
+        idx = jnp.where(push, top + rank, free_stack.shape[0])
+        free_stack = free_stack.at[idx].set(ids, mode="drop")
+        refcount = jnp.maximum(refcount.at[ids].add(-1), 0)
+        top += int(jnp.sum(push.astype(jnp.int32)))
     return table._replace(
         block_table=table.block_table.at[slot].set(0),
         blocks=table.blocks.at[slot].set(0),
@@ -528,7 +562,70 @@ def free_slot(table: PageTable, slot: int) -> PageTable:
         pos=table.pos.at[slot].set(0),
         active=table.active.at[slot].set(False),
         free_stack=free_stack,
-        free_top=jnp.asarray(top + n, jnp.int32),
+        free_top=jnp.asarray(top, jnp.int32),
+        refcount=refcount,
+    )
+
+
+# ---------------------------------------------------------------------------
+# prefix sharing: block aliasing + index retention (core/prefix_index.py
+# decides *which* blocks to share/evict; these primitives execute it)
+# ---------------------------------------------------------------------------
+
+def share_blocks(table: PageTable, slot: int, ids, cut: int,
+                 group: int) -> PageTable:
+    """Alias ``ids`` (index-owned pool blocks covering the first
+    ``len(ids)`` quant groups of a cached prompt prefix) into ``slot``'s
+    table row and bump their refcounts — no free-stack pop, the blocks stay
+    where they are.
+
+    ``cut`` is the cached-prefix length in tokens (a multiple of ``group``).
+    Per the prefix rule (after S tokens, ``blocks = max(0, (S-G)//G)``) the
+    row resumes with ``cut//G - 1`` quantized blocks and a full ``G``-token
+    fp window — the *last* matched group is not aliased: chunked prefill
+    re-packs it privately from the seeded fp scratch (copy-on-write at the
+    ragged tail), so the slot's later decode flushes never touch a shared
+    block."""
+    G = group
+    n = int(len(ids))
+    assert cut == (n + 1) * G, "cut must cover the aliased blocks + fp window"
+    ids = jnp.asarray(ids, jnp.int32)
+    bt = table.block_table.at[slot, :n].set(ids) if n else table.block_table
+    return table._replace(
+        block_table=bt,
+        blocks=table.blocks.at[slot].set(n),
+        buf_len=table.buf_len.at[slot].set(cut - n * G),
+        pos=table.pos.at[slot].set(cut),
+        refcount=table.refcount.at[ids].add(1) if n else table.refcount,
+    )
+
+
+def retain_blocks(table: PageTable, ids) -> PageTable:
+    """The prefix index takes one reference on each of ``ids`` (newly
+    indexed blocks stay allocated after their producing slot retires)."""
+    if len(ids) == 0:
+        return table
+    return table._replace(
+        refcount=table.refcount.at[jnp.asarray(ids, jnp.int32)].add(1))
+
+
+def evict_blocks(table: PageTable, ids) -> PageTable:
+    """Drop the index's reference on ``ids`` (evicted from the prefix
+    index), pushing blocks that reach refcount zero back onto the free
+    stack.  Blocks still aliased by a live slot keep a positive count and
+    are *not* pushed — eviction can never free memory a request is reading."""
+    if len(ids) == 0:
+        return table
+    P = table.free_stack.shape[0]
+    ids = jnp.asarray(ids, jnp.int32)
+    ref = table.refcount[ids]
+    push = ref <= 1
+    rank = jnp.cumsum(push.astype(jnp.int32)) - push.astype(jnp.int32)
+    idx = jnp.where(push, table.free_top + rank, P)
+    return table._replace(
+        free_stack=table.free_stack.at[idx].set(ids, mode="drop"),
+        free_top=table.free_top + jnp.sum(push.astype(jnp.int32)),
+        refcount=jnp.maximum(table.refcount.at[ids].add(-1), 0),
     )
 
 

@@ -1,0 +1,169 @@
+"""Host-side radix tree over quantized-prefix blocks: cross-request prefix
+caching for the paged hierarchical KV cache.
+
+QuantSpec's quant groups are immutable once full, which makes a completed
+pool block a natural unit of cross-request reuse (shared system prompts,
+few-shot templates, multi-turn history).  The index is a radix tree whose
+edges are ``G``-token keys: a node at depth ``d`` represents the prompt
+prefix formed by the keys on its root path and records
+
+* ``block_id`` — the pool block holding that group's quantized planes
+  (``-1`` for the static engine's dense path, which has no pool), and
+* ``fp`` — the group's **full-precision** K/V per attention layer, host
+  resident (the ROADMAP's host tier: cheap DRAM, not HBM).
+
+The fp payload is what makes cached admission *bit-exact*: a hit seeds the
+new request's transient :class:`~repro.core.paged_kv_cache.PrefillScratch`
+with the prefix fp, so the uncached suffix attends exactly the history a
+cold prefill would have computed — greedy outputs are token-identical, not
+merely close (asserted in tests/test_prefix_cache.py).  Quantization is
+deterministic, so the one re-packed tail group (copy-on-write at the ragged
+fp window) reproduces the original block bit-for-bit.
+
+Only *prefill-computed* groups are inserted (``blocks(S) = max(0,
+(S-G)//G)`` groups of the prompt): decode-produced K/V attends quantized
+history and would poison the exactness contract.
+
+The tree is pure host bookkeeping — device refcounts
+(:func:`~repro.core.paged_kv_cache.retain_blocks` /
+:func:`~repro.core.paged_kv_cache.evict_blocks`) are the engine's job; the
+index only decides *what* to share and *what* to evict (LRU over leaves,
+never a shielded or interior node, so the tree stays prefix-closed).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class PrefixNode:
+    """One indexed quant group: the ``G``-token key extending the parent's
+    prefix, its pool block, and the group's host-resident fp K/V (one
+    ``(k, v)`` pair per attention layer in engine walk order, token axis at
+    ``-3``)."""
+
+    key: Tuple[int, ...]
+    block_id: int
+    fp: List[Tuple[np.ndarray, np.ndarray]]
+    children: Dict[Tuple[int, ...], "PrefixNode"] = dataclasses.field(
+        default_factory=dict)
+    parent: Optional["PrefixNode"] = None
+    last_used: int = 0
+
+    @property
+    def is_leaf(self) -> bool:
+        return not self.children
+
+
+class PrefixIndex:
+    """Radix tree over token-id block keys → (pool block, fp payload)."""
+
+    def __init__(self, group: int):
+        self.group = group
+        self.children: Dict[Tuple[int, ...], PrefixNode] = {}  # root edges
+        self._clock = 0
+        self.blocks = 0          # indexed pool blocks (block_id >= 0)
+        self.hits = 0            # match() calls that returned >= 1 node
+        self.misses = 0
+        self.hit_tokens = 0      # prompt tokens covered by matches
+
+    # ------------------------------------------------------------------
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    @staticmethod
+    def _keys(tokens: Sequence[int], group: int) -> List[Tuple[int, ...]]:
+        toks = [int(t) for t in tokens]
+        n = len(toks) // group
+        return [tuple(toks[g * group:(g + 1) * group]) for g in range(n)]
+
+    def match(self, tokens: Sequence[int]) -> List[PrefixNode]:
+        """Longest indexed prefix of ``tokens``: the chain of nodes whose
+        concatenated keys prefix the prompt (whole groups only).  Bumps LRU
+        clocks along the chain."""
+        now = self._tick()
+        chain: List[PrefixNode] = []
+        level = self.children
+        for key in self._keys(tokens, self.group):
+            node = level.get(key)
+            if node is None:
+                break
+            node.last_used = now
+            chain.append(node)
+            level = node.children
+        if chain:
+            self.hits += 1
+            self.hit_tokens += len(chain) * self.group
+        else:
+            self.misses += 1
+        return chain
+
+    def insert(self, tokens: Sequence[int], block_ids: Sequence[int],
+               fp_groups: Sequence[List[Tuple[np.ndarray, np.ndarray]]]
+               ) -> List[PrefixNode]:
+        """Index the first ``len(block_ids)`` groups of ``tokens``; existing
+        nodes are kept (first producer wins — its block already holds the
+        identical planes) and only genuinely new nodes are created.  Returns
+        the created nodes; the caller must ``retain_blocks`` their ids."""
+        now = self._tick()
+        created: List[PrefixNode] = []
+        level = self.children
+        parent: Optional[PrefixNode] = None
+        keys = self._keys(tokens, self.group)[:len(block_ids)]
+        for g, key in enumerate(keys):
+            node = level.get(key)
+            if node is None:
+                node = PrefixNode(key=key, block_id=int(block_ids[g]),
+                                  fp=list(fp_groups[g]), parent=parent)
+                level[key] = node
+                created.append(node)
+                if node.block_id >= 0:
+                    self.blocks += 1
+            node.last_used = now
+            parent = node
+            level = node.children
+        return created
+
+    # ------------------------------------------------------------------
+    def evict(self, n: int, shield: frozenset = frozenset()
+              ) -> List[int]:
+        """Evict up to ``n`` leaf nodes, least-recently-used first, skipping
+        blocks in ``shield`` (aliased by a live slot, or about to be).
+        Interior nodes only become candidates once their subtree is gone,
+        so the tree stays prefix-closed.  Returns the evicted pool block
+        ids; the caller must ``evict_blocks`` them to drop the device
+        refcounts."""
+        evicted: List[int] = []
+        while len(evicted) < n:
+            leaves = [nd for nd in self._iter_nodes()
+                      if nd.is_leaf and nd.block_id not in shield]
+            if not leaves:
+                break
+            victim = min(leaves, key=lambda nd: nd.last_used)
+            level = (victim.parent.children if victim.parent is not None
+                     else self.children)
+            del level[victim.key]
+            if victim.block_id >= 0:
+                self.blocks -= 1
+                evicted.append(victim.block_id)
+        return evicted
+
+    def _iter_nodes(self):
+        stack = list(self.children.values())
+        while stack:
+            nd = stack.pop()
+            yield nd
+            stack.extend(nd.children.values())
+
+    def __len__(self) -> int:
+        return sum(1 for _ in self._iter_nodes())
+
+    @property
+    def stats(self) -> dict:
+        return {"nodes": len(self), "blocks": self.blocks, "hits": self.hits,
+                "misses": self.misses, "hit_tokens": self.hit_tokens}

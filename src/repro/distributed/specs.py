@@ -310,7 +310,10 @@ def state_specs(state, mesh: Mesh, long_ctx: bool = False):
 
 def table_specs(table: "PC.PageTable", mesh: Mesh):
     """`PageTable` bookkeeping (block tables, per-slot lengths/positions,
-    free stack) is tiny and read by every layer — replicated."""
+    free stack, and the prefix-sharing ``refcount``) is tiny and read by
+    every layer — replicated.  The tree-map keeps this future-proof: new
+    bookkeeping arrays (``refcount`` arrived with prefix caching) pick up
+    the replicated spec without touching the sharded serving path."""
     return jax.tree.map(lambda _: NamedSharding(mesh, P()), table)
 
 

@@ -60,6 +60,12 @@ def main():
                     help="local | single | multi | host<N> | host<D>x<M> — "
                          "host meshes force host-platform CPU devices so "
                          "sharded serving runs on any machine")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="cache quantized prompt blocks across requests "
+                         "(radix prefix index): repeated system prompts / "
+                         "multi-turn resubmissions alias pool blocks and "
+                         "prefill only the uncached suffix; greedy outputs "
+                         "are unchanged (quantspec policy)")
     args = ap.parse_args()
 
     # resolve the mesh FIRST: host<N> meshes must append the forced-device
@@ -115,28 +121,41 @@ def main():
                                    greedy=args.greedy, top_p=args.top_p,
                                    max_slots=args.slots, max_seq=max_seq,
                                    rounds_per_step=args.rounds_per_step,
-                                   eos_id=args.eos_id,
-                                   mesh=engine_mesh, **chunk_kw)
+                                   eos_id=args.eos_id, mesh=engine_mesh,
+                                   prefix_cache=args.prefix_cache,
+                                   **chunk_kw)
             # ragged prompts: vary lengths so requests join/retire mid-stream
             prompts = [np.asarray(prompt[i, : args.prompt_len - 7 * i])
                        for i in range(args.batch)]
             results = eng.generate(prompts, args.max_new,
                                    key=jax.random.PRNGKey(7))
+            if args.prefix_cache:
+                # second wave of identical prompts: admissions now come out
+                # of the prefix index (chunks cover only the fp tail)
+                results = eng.generate(prompts, args.max_new,
+                                       key=jax.random.PRNGKey(7))
             for i, res in enumerate(results):
                 s = res.stats
                 print(f"req {i}: {s.generated} tokens in {s.rounds} rounds, "
                       f"acceptance {s.acceptance_rate:.1%}, "
                       f"prefill {s.prefill_s:.2f}s decode {s.decode_s:.2f}s")
+            if args.prefix_cache:
+                print("prefix cache:", eng.prefix.stats,
+                      f"harvest syncs {eng.cache_syncs}")
             print("first request tokens:", results[0].tokens[0][:32].tolist())
             return
         if args.eos_id is not None:
             raise SystemExit("--eos-id needs --engine continuous (EOS "
                              "detection lives in the paged megastep's "
                              "per-slot state)")
+        if args.prefix_cache and args.batch != 1:
+            raise SystemExit("--prefix-cache on the static engine is the "
+                             "batch-1 dense oracle path: use --batch 1 (or "
+                             "--engine continuous for batched serving)")
         eng = Engine(model, params, policy=args.policy, gamma=args.gamma,
                      greedy=args.greedy, top_p=args.top_p, max_seq=max_seq,
-                     rounds_per_step=args.rounds_per_step,
-                     mesh=engine_mesh, **chunk_kw)
+                     rounds_per_step=args.rounds_per_step, mesh=engine_mesh,
+                     prefix_cache=args.prefix_cache, **chunk_kw)
         res = eng.generate(prompt, args.max_new, key=jax.random.PRNGKey(7),
                            memory=memory)
         s = res.stats

@@ -90,8 +90,15 @@ class RunCtx:
     #  prefill_chunk — chunked paged prefill: this chunk's admission plan
     #                  (PrefillChunkStep), computed once by the engine and
     #                  executed by every attention layer
+    #  prefill_hist  — dense cached-prefix admission (static int, quantspec
+    #                  policy): the first `prefill_hist` tokens' fp K/V are
+    #                  pre-seeded in a PrefillScratch riding in state.draft;
+    #                  only the prompt suffix runs through the stack (band
+    #                  attention over seeded history), and the scratch comes
+    #                  back filled for prefix-index capture
     prefill_len: Optional[jnp.ndarray] = None
     prefill_chunk: Optional[PC.PrefillChunkStep] = None
+    prefill_hist: Optional[int] = None
     # KV-quantization simulation in full-sequence forward (quality benches):
     # (key_axis, value_axis, bits, residual) e.g. ('channel','token',4,256)
     kv_sim: Optional[tuple] = None
@@ -251,6 +258,9 @@ def apply_mixer(spec: LayerSpec, p: dict, cfg: ModelConfig, h: jnp.ndarray,
                 else sp + jnp.arange(T)
         elif ctx.mode == "prefill" and ctx.prefill_chunk is not None:
             positions = ctx.prefill_chunk.pos + jnp.arange(T)
+        elif ctx.mode == "prefill" and ctx.prefill_hist is not None:
+            # cached-prefix suffix: absolute stream positions past the hit
+            positions = ctx.prefill_hist + jnp.arange(T)
         else:
             positions = jnp.arange(T)
         q, k, v = L.project_qkv(p["attn"], cfg, h, positions)
@@ -307,6 +317,27 @@ def apply_mixer(spec: LayerSpec, p: dict, cfg: ModelConfig, h: jnp.ndarray,
                 pool = PC.apply_prefill_chunk(state.primary, step, scratch)
                 return (L.attn_out(p["attn"], att),
                         AttnState(pool, scratch), None)
+            if ctx.policy == "quantspec" and ctx.prefill_hist is not None:
+                # dense cached-prefix admission (static engine, prefix
+                # caching): the scratch in state.draft carries the cached
+                # prefix fp K/V in [0, hist); this call sees only the
+                # uncached suffix.  Suffix K/V join the scratch, attention
+                # runs over the causal band (history included — numerics
+                # match a cold full-prompt prefill exactly), and the cache
+                # is built from the full fp stream, so the quantized blocks
+                # are bit-identical to the cold path's.  The filled scratch
+                # rides back in .draft for prefix-index capture.
+                hist = ctx.prefill_hist
+                scratch: PC.PrefillScratch = state.draft
+                sk = scratch.k.at[:, hist:hist + T].set(
+                    k.astype(scratch.k.dtype))
+                sv = scratch.v.at[:, hist:hist + T].set(
+                    v.astype(scratch.v.dtype))
+                att = L.prefill_band_attention(q, sk, sv, hist, hist + T, sc)
+                new_primary = HC.prefill(state.primary, sk, sv)
+                return (L.attn_out(p["attn"], att),
+                        AttnState(new_primary, PC.PrefillScratch(sk, sv)),
+                        None)
             if ctx.policy in ("quantspec", "fp"):
                 # serve-time prefill fast path: flash-prefill kernel on
                 # TPU, chunked jnp (the parity oracle) elsewhere; with

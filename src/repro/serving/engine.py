@@ -64,6 +64,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import paged_kv_cache as PC
+from repro.core.prefix_index import PrefixIndex
 from repro.core.spec_decode import (MegaResult, PagedMegaResult, RoundResult,
                                     PagedRoundResult, ar_step, megastep,
                                     paged_ar_step, paged_megastep,
@@ -125,6 +126,43 @@ def round_stats(gamma: int, n_new: int, budget: int):
     return take, min(gamma, budget), max(min(take, n_new - 1), 0)
 
 
+def _map_attn_state(state, fn):
+    """Apply ``fn(attn_state, stacked)`` over every mixer state of a serve
+    state dict (requires a pure full-attention stack)."""
+    new = {"head": [], "tail": [], "blocks": None}
+    for k in ("head", "tail"):
+        for mix, ml in state[k]:
+            new[k].append((fn(mix, False), ml))
+    new["blocks"] = tuple((fn(mix, True), ml)
+                          for mix, ml in state["blocks"])
+    return new
+
+
+def _group_fp(scratches, n_groups: int, group: int):
+    """Host copies of the first ``n_groups`` quant groups of each layer's
+    prefill scratch, grouped for :meth:`PrefixIndex.insert`: a list over
+    groups of per-layer ``(k, v)`` pairs (token axis at -3)."""
+    cut = n_groups * group
+    fp = jax.device_get([(s.k[..., :cut, :, :], s.v[..., :cut, :, :])
+                         for s in scratches])
+    return [[(k[..., g * group:(g + 1) * group, :, :],
+              v[..., g * group:(g + 1) * group, :, :]) for k, v in fp]
+            for g in range(n_groups)]
+
+
+def _seed_scratch(scr: "PC.PrefillScratch", chain, layer: int, cut: int):
+    """Write a matched prefix chain's fp K/V (entry ``layer`` of each
+    node's payload) into ``scr[..., :cut, :, :]`` — the suffix then attends
+    bit-identical history to a cold prefill."""
+    sk = jnp.concatenate([jnp.asarray(nd.fp[layer][0]) for nd in chain],
+                         axis=-3)
+    sv = jnp.concatenate([jnp.asarray(nd.fp[layer][1]) for nd in chain],
+                         axis=-3)
+    return PC.PrefillScratch(
+        k=scr.k.at[..., :cut, :, :].set(sk.astype(scr.k.dtype)),
+        v=scr.v.at[..., :cut, :, :].set(sv.astype(scr.v.dtype)))
+
+
 @contextlib.contextmanager
 def _mesh_scope(mesh: Optional[Mesh]):
     """Activate `mesh` + the serve-mode logical-axis rules so that model
@@ -155,6 +193,7 @@ class Engine:
                  quantize_weights: Optional[bool] = None,
                  max_seq: int = 4096, prefill_chunk: int = 512,
                  rounds_per_step: int = 1, mesh: Optional[Mesh] = None,
+                 prefix_cache: bool = False,
                  ctx_kw: Optional[dict] = None):
         self.model = model
         self.cfg = model.cfg
@@ -214,6 +253,22 @@ class Engine:
         self._sharded_fns = {}      # batch -> (round, ar, mega, state specs)
         self._prefill_jit = jax.jit(self._prefill,
                                     static_argnames=("batch",))
+        # dense prefix caching (the paged engine's token-identity oracle):
+        # admissions run through the history-seeded prefill so the fp K/V
+        # of completed prompt groups can be captured into the index
+        self.prefix: Optional[PrefixIndex] = None
+        if prefix_cache:
+            if not self._bucketed or policy != "quantspec":
+                raise ValueError("prefix_cache requires the quantspec "
+                                 "policy on a pure full-attention stack")
+            if mesh is not None:
+                raise NotImplementedError("prefix_cache on the static "
+                                          "engine is single-device (use "
+                                          "ContinuousEngine for sharded "
+                                          "serving)")
+            self.prefix = PrefixIndex(G)
+            self._hist_jit = jax.jit(self._prefill_hist,
+                                     static_argnames=("hist",))
 
     def _mesh_fns(self, state, batch: int):
         """Per-batch jitted rounds with explicit in/out shardings and cache
@@ -288,6 +343,67 @@ class Engine:
         return self._prefill_jit(padded, memory, batch=batch,
                                  valid_len=jnp.asarray(L, jnp.int32))
 
+    # ---- dense prefix caching (batch-1 oracle path) -------------------
+    def _prefill_hist(self, suffix, scratches, hist: int):
+        """Jitted history-seeded prefill: the per-layer scratches carry the
+        cached prefix fp in ``[0, hist)``; only the suffix runs through the
+        stack (band attention over the seeded history), and each layer's
+        filled scratch comes back in ``state.draft`` for index capture."""
+        state = self.model.init_serve_state(
+            1, max_seq=self.max_seq, policy=self.policy, ctx_kw=self.ctx_kw)
+        it = iter(scratches)
+        state = _map_attn_state(
+            state, lambda mix, _s: AttnState(mix.primary, next(it)))
+        kw = dict(self.ctx_kw)
+        kw["prefill_hist"] = hist
+        return self.model.prefill(self.params, suffix, state,
+                                  policy=self.policy, ctx_kw=kw)
+
+    def _scratch_stacking(self):
+        """Stacked-ness of each attention layer in serve-state walk order
+        (head, tail, then the scan-stacked pattern blocks)."""
+        cfg = self.cfg
+        return ([False] * (len(cfg.head_layers) + len(cfg.tail_layers))
+                + [True] * (len(cfg.pattern) if cfg.n_repeats > 0 else 0))
+
+    def _prefill_prefix(self, prompt):
+        """Cached-prefix admission: match the prompt against the index,
+        seed per-layer scratches with the hit's fp K/V, prefill only the
+        uncached suffix, then capture the prompt's completed groups back
+        into the index.  Greedy outputs are token-identical to a cold
+        prefill (asserted in tests/test_prefix_cache.py)."""
+        cfg = self.cfg
+        G = cfg.group_size
+        toks = np.asarray(prompt)
+        S = int(toks.shape[1])
+        chain = self.prefix.match(toks[0])
+        m_use = min(len(chain), (S - 1) // G)
+        chain = chain[:m_use]
+        cut = m_use * G
+        dtype = jnp.dtype(cfg.dtype)
+        scratches = []
+        for i, stacked in enumerate(self._scratch_stacking()):
+            scr = PC.PrefillScratch(
+                k=jnp.zeros((1, S, cfg.num_kv_heads, cfg.hd), dtype),
+                v=jnp.zeros((1, S, cfg.num_kv_heads, cfg.hd), dtype))
+            if stacked:
+                scr = jax.tree.map(
+                    lambda x: jnp.broadcast_to(
+                        x, (cfg.n_repeats,) + x.shape), scr)
+            if cut:
+                scr = _seed_scratch(scr, chain, i, cut)
+            scratches.append(scr)
+        logits, state = self._hist_jit(jnp.asarray(toks[:, cut:]), scratches,
+                                       hist=cut)
+        caps = []
+        state = _map_attn_state(
+            state, lambda mix, _s: (caps.append(mix.draft),
+                                    AttnState(mix.primary, None))[1])
+        nb = max(0, (S - G) // G)
+        if nb:
+            self.prefix.insert(toks[0], [-1] * nb, _group_fp(caps, nb, G))
+        return logits, state
+
     def generate(self, prompt: jnp.ndarray, max_new_tokens: int,
                  key=None, memory=None, speculative: Optional[bool] = None
                  ) -> GenerationResult:
@@ -301,8 +417,14 @@ class Engine:
 
         with _mesh_scope(self.mesh):
             t0 = time.perf_counter()
-            logits, state = jax.block_until_ready(
-                self._run_prefill(prompt, memory, B))
+            prompt = jnp.asarray(prompt)
+            if (self.prefix is not None and B == 1 and memory is None
+                    and prompt.ndim == 2):
+                logits, state = jax.block_until_ready(
+                    self._prefill_prefix(prompt))
+            else:
+                logits, state = jax.block_until_ready(
+                    self._run_prefill(prompt, memory, B))
             round_fn, ar_fn, mega_fn = self._round, self._ar, self._mega
             if self.mesh is not None:
                 round_fn, ar_fn, mega_fn, s_sh = self._mesh_fns(state, B)
@@ -426,6 +548,8 @@ class _PrefillJob:
     n_chunks: int
     scratch: list                # per-attn-layer PrefillScratch (walk order)
     chunk: int = 0               # chunks admitted so far
+    cut: int = 0                 # cached-prefix tokens (prefix caching):
+                                 # chunks cover only [cut, prompt_len)
 
 
 @dataclasses.dataclass
@@ -471,6 +595,7 @@ class ContinuousEngine:
                  max_seq: int = 4096, pool_blocks: Optional[int] = None,
                  prefill_chunk: int = 256, rounds_per_step: int = 1,
                  eos_id: Optional[int] = None, mesh: Optional[Mesh] = None,
+                 prefix_cache: bool = False,
                  ctx_kw: Optional[dict] = None):
         self.model = model
         self.cfg = model.cfg
@@ -522,6 +647,22 @@ class ContinuousEngine:
         self._retired: List[Request] = []   # finished, not yet run()-claimed
         self._prefilling: Optional[_PrefillJob] = None
         self._inflight: Optional[_InflightMega] = None
+        # prefix caching: radix index over quantized prompt blocks; cached
+        # admissions alias index-owned blocks into the slot's table row and
+        # prefill only the uncached suffix (greedy outputs stay identical —
+        # tests/test_prefix_cache.py)
+        self.prefix: Optional[PrefixIndex] = (PrefixIndex(G) if prefix_cache
+                                              else None)
+        # blocking index-harvest transfers (block ids + fp capture at each
+        # finalize) — kept separate from `host_syncs` so the decode-loop
+        # sync budget (≤1/megastep) stays assertable
+        self.cache_syncs = 0
+        # slot -> pool block ids the slot's prompt prefix references (aliased
+        # or slot-produced-and-indexed); shields them from LRU eviction
+        self._slot_shared: dict = {}
+        # (req_id, matched chain) memo: match once per pending head, reused
+        # by _start_prefill so admission doesn't double-count hits/LRU bumps
+        self._head_chain: Optional[tuple] = None
 
         round_p = partial(paged_spec_round, model, gamma=gamma, greedy=greedy,
                           temperature=temperature, top_p=top_p,
@@ -640,13 +781,7 @@ class ContinuousEngine:
     def _map_attn(state, fn):
         """Apply ``fn(attn_state, stacked)`` over every mixer state (the
         paged engine requires a pure full-attention stack)."""
-        new = {"head": [], "tail": [], "blocks": None}
-        for k in ("head", "tail"):
-            for mix, ml in state[k]:
-                new[k].append((fn(mix, False), ml))
-        new["blocks"] = tuple((fn(mix, True), ml)
-                              for mix, ml in state["blocks"])
-        return new
+        return _map_attn_state(state, fn)
 
     def _inject_scratch(self, state, scratch: list):
         it = iter(scratch)
@@ -662,11 +797,30 @@ class ContinuousEngine:
 
         return self._map_attn(state, fn), out
 
+    def _match_prefix(self, req: Request) -> list:
+        """Matched (LRU-trimmed) index chain for ``req``, memoised per
+        request so the admission hint and `_start_prefill` share one
+        `match()` (stats and LRU clocks bump once per admission).  The
+        chain is capped at ``(S-1)//G`` groups: at least one suffix token
+        must run through the stack to produce the last-position logits."""
+        if self._head_chain is not None and self._head_chain[0] == req.req_id:
+            return self._head_chain[1]
+        G = self.cfg.group_size
+        chain = self.prefix.match(req.prompt)
+        chain = chain[:min(len(chain), (req.prompt_len - 1) // G)]
+        self._head_chain = (req.req_id, chain)
+        return chain
+
     def _start_prefill(self, req: Request) -> _PrefillJob:
         C = self.prefill_chunk
         G = self.cfg.group_size
         H, hd = self.cfg.num_kv_heads, self.cfg.hd
-        bucket = _round_up(req.prompt_len, C)
+        chain = self._match_prefix(req) if self.prefix is not None else []
+        self._head_chain = None
+        cut = len(chain) * G
+        # the suffix chunks land at [cut, cut + k*C); keep the grid anchored
+        # at `cut` so the last chunk's scratch write stays in bounds
+        bucket = cut + _round_up(req.prompt_len - cut, C)
         dtype = self._buf_dtype()
 
         def make(_mix, stacked):
@@ -675,6 +829,10 @@ class ContinuousEngine:
                 scr = jax.tree.map(
                     lambda x: jnp.broadcast_to(
                         x, (self.cfg.n_repeats,) + x.shape), scr)
+            if cut:
+                # seed the cached prefix fp — suffix chunks then attend
+                # bit-identical history to a cold full-prompt admission
+                scr = _seed_scratch(scr, chain, len(scratch), cut)
             if self.mesh is not None:
                 # transient fp prompt history: kv-heads follow the K/V
                 # projections onto `model`, the rest replicated
@@ -685,16 +843,69 @@ class ContinuousEngine:
         scratch = []
         self._map_attn(self.state,
                        lambda mix, st: scratch.append(make(mix, st)) or mix)
+        if chain:
+            # alias the index's blocks into the slot row (all but the last
+            # matched group — that one is re-packed privately from the
+            # seeded scratch, the copy-on-write at the ragged fp window)
+            ids = [nd.block_id for nd in chain[:-1]]
+            self.table = PC.share_blocks(self.table, req.slot, ids, cut, G)
+            self._slot_shared[req.slot] = list(ids)
+            req.prefill_pos = cut
         req.admit_t = time.perf_counter()
         req.prefill_bucket = bucket
         return _PrefillJob(req=req, slot=req.slot, bucket=bucket,
-                           n_chunks=bucket // C, scratch=scratch)
+                           n_chunks=(bucket - cut) // C, scratch=scratch,
+                           cut=cut)
 
     def _buf_dtype(self):
         for k in ("head", "tail"):
             for mix, _ in self.state[k]:
                 return mix.primary.buf_k.dtype
         return self.state["blocks"][0][0].primary.buf_k.dtype
+
+    def _prepare_admission(self, head: Request):
+        """Prefix-caching admission prep for the queue head: set the shared
+        hint (aliased blocks never pop the free stack, so the scheduler
+        discounts them from the reservation) and, if the pool still can't
+        fit the request, LRU-evict unreferenced indexed blocks.  Blocks
+        aliased by live slots — or about to be, via the head's own matched
+        chain — are shielded; eviction can never free memory in use."""
+        chain = self._match_prefix(head)
+        self.scheduler.set_shared_hint(head, max(len(chain) - 1, 0))
+        deficit = (self.scheduler.reserved_blocks
+                   + self.scheduler.block_bound(head)
+                   + self.scheduler.extra_reserved - self.pool_blocks)
+        if deficit <= 0:
+            return
+        shield = frozenset(nd.block_id for nd in chain) | frozenset(
+            b for ids in self._slot_shared.values() for b in ids)
+        evicted = self.prefix.evict(deficit, shield)
+        if evicted:
+            self.table = PC.evict_blocks(self.table, evicted)
+            self.scheduler.extra_reserved -= len(evicted)
+
+    def _index_insert(self, req: Request, job: _PrefillJob, caps: list):
+        """Harvest the finished admission into the prefix index: the slot's
+        completed prompt blocks (aliased prefix + freshly packed) keyed by
+        the prompt's tokens, with the fp K/V straight off the prefill
+        scratch.  Existing nodes win ties (their block already holds the
+        identical planes — quantization is deterministic), so only
+        genuinely new nodes take an index reference."""
+        G = self.cfg.group_size
+        nb = max(0, (req.prompt_len - G) // G)
+        if nb == 0:
+            return
+        ids = jax.device_get(self.table.block_table[job.slot, :nb])
+        fp = _group_fp(caps, nb, G)
+        self.cache_syncs += 1
+        created = self.prefix.insert(req.prompt, [int(b) for b in ids], fp)
+        new_ids = [nd.block_id for nd in created]
+        if new_ids:
+            self.table = PC.retain_blocks(self.table, new_ids)
+            self.scheduler.extra_reserved += len(new_ids)
+        # every indexed block of this prompt is now readable via the slot's
+        # table row — shield the lot until the request retires
+        self._slot_shared[job.slot] = [int(b) for b in ids]
 
     def _advance_prefill(self, key):
         """Advance the in-flight admission by at most ONE chunk (starting a
@@ -705,6 +916,9 @@ class ContinuousEngine:
         first-token sample stays on device (``req.prefill_s`` therefore
         measures dispatch time, not device occupancy)."""
         if self._prefilling is None:
+            if (self.prefix is not None and self.scheduler.pending
+                    and self.scheduler.free_slots):
+                self._prepare_admission(self.scheduler.pending[0])
             req = self.scheduler.next_admission()
             if req is None:
                 return key
@@ -713,7 +927,7 @@ class ContinuousEngine:
         req = job.req
         t0 = time.perf_counter()
         C = self.prefill_chunk
-        start = job.chunk * C
+        start = job.cut + job.chunk * C
         valid = min(req.prompt_len - start, C)
         tok = np.zeros((1, C), np.int32)
         tok[0, :valid] = req.prompt[start:start + valid]
@@ -735,7 +949,9 @@ class ContinuousEngine:
                                    jnp.asarray(job.slot, jnp.int32), logits,
                                    k0, jnp.asarray(req.max_new_tokens,
                                                    jnp.int32))
-            self.state, _ = self._extract_scratch(state)   # scratch freed
+            self.state, caps = self._extract_scratch(state)  # scratch freed
+            if self.prefix is not None:
+                self._index_insert(req, job, caps)
             self._prefilling = None
             req.prefill_s += time.perf_counter() - t0
             if req.max_new_tokens <= 0:
@@ -768,8 +984,10 @@ class ContinuousEngine:
 
     def _retire(self, slot: int):
         # jitted release: blocks return to the free stack on device, no
-        # host sync on the (possibly still in-flight) table
+        # host sync on the (possibly still in-flight) table; blocks the
+        # prefix index still references keep refcount >= 1 and stay put
         self.table = self._release(self.table, jnp.asarray(slot, jnp.int32))
+        self._slot_shared.pop(slot, None)
         req = self.scheduler.retire(slot)
         req.finish_t = time.perf_counter()
         self._retired.append(req)

@@ -79,6 +79,13 @@ class Request:
     # finalize and has not reached the host yet — it arrives with the next
     # megastep's packed readback (engine._harvest)
     pending_first: bool = False
+    # prefix caching: pool blocks the engine expects to *alias* from the
+    # prefix index instead of popping (set just before admission), and the
+    # reservation actually charged at admission (released verbatim at
+    # retirement, so a later hint change can never unbalance the pool
+    # accounting)
+    shared_hint: int = 0
+    reserved: Optional[int] = None
     admit_t: float = 0.0
     finish_t: float = 0.0
     done: bool = False
@@ -104,6 +111,14 @@ class Scheduler:
         self.active: Dict[int, Request] = {}
         self.free_slots = list(range(num_slots))
         self.reserved_blocks = 0
+        # pool blocks held by the prefix index (refcount-retained, off the
+        # free stack but owned by no request); the engine keeps this in sync
+        # with insertions/evictions so admission stays capacity-safe:
+        #   reserved_blocks + extra_reserved <= pool_blocks
+        # (a block both indexed and aliased is counted once here and
+        # *discounted* from its aliasing request via `shared_hint` —
+        # conservative double-count never admits past the pool)
+        self.extra_reserved = 0
         self._next_id = 0
 
     # ------------------------------------------------------------------
@@ -122,9 +137,20 @@ class Scheduler:
         return req
 
     def block_bound(self, req: Request) -> int:
-        """Worst-case pool blocks the request can ever own."""
+        """Worst-case pool blocks the request can ever *newly* allocate:
+        every token of prompt + generation quantized, minus the blocks the
+        prefix index will alias into its row (``shared_hint`` — those are
+        already charged under ``extra_reserved``, and aliasing never pops
+        the free stack)."""
         total = req.prompt_len + req.max_new_tokens
-        return -(-total // self.group)
+        return max(-(-total // self.group) - req.shared_hint, 0)
+
+    def set_shared_hint(self, req: Request, blocks: int) -> None:
+        """Expected aliased (index-owned) blocks for ``req`` — set by the
+        engine right before trying admission, from the current index match.
+        Only meaningful for pending requests (admitted requests already
+        froze their reservation in ``req.reserved``)."""
+        req.shared_hint = int(blocks)
 
     def next_admission(self) -> Optional[Request]:
         """Pop the next admissible request, assigning it a slot, or None if
@@ -133,11 +159,13 @@ class Scheduler:
             return None
         req = self.pending[0]
         bound = self.block_bound(req)
-        if self.reserved_blocks + bound > self.pool_blocks:
+        if self.reserved_blocks + bound + self.extra_reserved \
+                > self.pool_blocks:
             return None
         self.pending.popleft()
         req.slot = self.free_slots.pop(0)
         self.active[req.slot] = req
+        req.reserved = bound
         self.reserved_blocks += bound
         return req
 
@@ -146,7 +174,8 @@ class Scheduler:
         req.done = True
         self.free_slots.append(slot)
         self.free_slots.sort()
-        self.reserved_blocks -= self.block_bound(req)
+        self.reserved_blocks -= (req.reserved if req.reserved is not None
+                                 else self.block_bound(req))
         return req
 
     @property

@@ -1,0 +1,326 @@
+"""Cross-request prefix caching over the paged/hierarchical KV cache.
+
+The contract under test is **exactness**: admitting a request through the
+prefix cache (aliased pool blocks + fp-seeded suffix prefill) must produce
+greedy outputs token-identical to a cold prefill of the full prompt — in
+both engines.  The static `Engine`'s dense path is the oracle; the
+`ContinuousEngine` additionally aliases index-owned pool blocks into the
+new request's page-table row and re-packs only the ragged tail group
+(copy-on-write), which the pool-plane tests pin down directly.
+
+The mesh classes need 8 forced host-platform devices:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m pytest tests/test_prefix_cache.py
+
+In a single-device session they self-skip and the identity / COW /
+scheduler units still run.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import paged_kv_cache as PC
+from repro.core.prefix_index import PrefixIndex
+from repro.launch.mesh import make_host_mesh
+from repro.models.stack import StackModel
+from repro.serving.engine import ContinuousEngine, Engine
+from repro.serving.scheduler import Scheduler
+
+NDEV = jax.device_count()
+needs_mesh = pytest.mark.skipif(
+    NDEV < 8, reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("tiny-lm", smoke=True)
+    model = StackModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def toks(seed: int, n: int, vocab: int) -> np.ndarray:
+    return np.asarray(jax.random.randint(
+        jax.random.PRNGKey(seed), (n,), 0, vocab), np.int32)
+
+
+def shared_prompts(cfg, n_req: int = 3):
+    """`n_req` prompts sharing a system prefix of 2G+8 tokens (two full
+    quant groups plus a partial-block tail) with distinct ~G-token user
+    suffixes."""
+    G = cfg.group_size
+    sys_p = toks(0, 2 * G + 8, cfg.vocab_size)
+    return [np.concatenate([sys_p, toks(100 + i, G, cfg.vocab_size)])
+            for i in range(n_req)]
+
+
+def make_static(tiny, prefix: bool) -> Engine:
+    _, model, params = tiny
+    return Engine(model, params, policy="quantspec", gamma=2, greedy=True,
+                  max_seq=512, rounds_per_step=2, prefix_cache=prefix)
+
+
+def make_continuous(tiny, prefix: bool, **kw) -> ContinuousEngine:
+    cfg, model, params = tiny
+    kw.setdefault("prefill_chunk", cfg.group_size)
+    return ContinuousEngine(model, params, gamma=2, greedy=True, max_slots=2,
+                            max_seq=512, rounds_per_step=2,
+                            prefix_cache=prefix, **kw)
+
+
+# ---------------------------------------------------------------------------
+# index unit behaviour (no model)
+# ---------------------------------------------------------------------------
+
+class TestPrefixIndexUnit:
+    def _fp(self, g):
+        return [(np.full((1, 4, 1, 2), g, np.float32),
+                 np.full((1, 4, 1, 2), -g, np.float32))]
+
+    def _insert(self, idx, tokens, ids):
+        return idx.insert(tokens, ids, [self._fp(g) for g in ids])
+
+    def test_match_whole_groups_only(self):
+        idx = PrefixIndex(4)
+        self._insert(idx, list(range(12)), [7, 8])
+        chain = idx.match(list(range(12)))
+        assert [nd.block_id for nd in chain] == [7, 8]
+        # partial-block tail overlap: only whole matching groups count
+        assert [nd.block_id for nd in idx.match(list(range(6)))] == [7]
+        assert idx.match([99, 98, 97, 96]) == []
+        assert idx.stats["hits"] == 2 and idx.stats["misses"] == 1
+        assert idx.stats["hit_tokens"] == 12
+
+    def test_insert_first_producer_wins(self):
+        idx = PrefixIndex(4)
+        self._insert(idx, list(range(8)), [3, 4])
+        created = self._insert(idx, list(range(8)), [5, 6])
+        assert created == []                       # duplicates not indexed
+        assert [nd.block_id for nd in idx.match(list(range(8)))] == [3, 4]
+        assert idx.blocks == 2
+
+    def test_evict_lru_leaves_only_and_shield(self):
+        idx = PrefixIndex(4)
+        self._insert(idx, list(range(12)), [1, 2])     # chain 1 -> 2
+        self._insert(idx, [9, 9, 9, 9], [5])
+        idx.match(list(range(12)))                     # bump chain's clock
+        # the LRU leaf is 5; 2 is a leaf; 1 is interior (never first out)
+        assert idx.evict(1) == [5]
+        assert idx.evict(2, shield=frozenset({2})) == []
+        assert idx.evict(2) == [2, 1]                  # leaf-first order
+        assert len(idx) == 0 and idx.blocks == 0
+
+
+# ---------------------------------------------------------------------------
+# static engine: the dense token-identity oracle
+# ---------------------------------------------------------------------------
+
+class TestStaticEnginePrefix:
+    def test_shared_system_prompt_identity(self, tiny):
+        cfg = tiny[0]
+        cold = make_static(tiny, prefix=False)
+        warm = make_static(tiny, prefix=True)
+        for p in shared_prompts(cfg):
+            rc = cold.generate(p[None, :], 10).tokens
+            rw = warm.generate(p[None, :], 10).tokens
+            np.testing.assert_array_equal(rc, rw)
+        st = warm.prefix.stats
+        assert st["hits"] >= 2 and st["hit_tokens"] > 0
+
+    def test_partial_block_tail_overlap(self, tiny):
+        """Prompts diverging mid-group: the cache may only reuse whole
+        groups, and the divergent suffix must still be exact."""
+        cfg = tiny[0]
+        G = cfg.group_size
+        base = toks(7, 3 * G + G // 2, cfg.vocab_size)
+        p1 = np.concatenate([base, toks(8, G, cfg.vocab_size)])
+        p2 = base.copy()
+        p2[2 * G + G // 2] ^= 1          # diverge inside group 2
+        p2 = np.concatenate([p2, toks(9, G, cfg.vocab_size)])
+        cold = make_static(tiny, prefix=False)
+        warm = make_static(tiny, prefix=True)
+        np.testing.assert_array_equal(cold.generate(p1[None, :], 8).tokens,
+                                      warm.generate(p1[None, :], 8).tokens)
+        # p2 shares exactly groups 0..1 with p1's indexed prefix (the
+        # divergence point lies inside group 2)
+        assert len(warm.prefix.match(p2)) == 2
+        np.testing.assert_array_equal(cold.generate(p2[None, :], 8).tokens,
+                                      warm.generate(p2[None, :], 8).tokens)
+
+    def test_multi_turn_resubmission(self, tiny):
+        """Turn 2 resubmits turn 1's prompt + its own output + a new user
+        turn; the whole turn-1 conversation comes out of the cache."""
+        cfg = tiny[0]
+        cold = make_static(tiny, prefix=False)
+        warm = make_static(tiny, prefix=True)
+        p1 = toks(11, 3 * cfg.group_size, cfg.vocab_size)
+        out_c = cold.generate(p1[None, :], 10).tokens
+        out_w = warm.generate(p1[None, :], 10).tokens
+        np.testing.assert_array_equal(out_c, out_w)
+        p2 = np.concatenate([p1, out_w[0].astype(np.int32),
+                             toks(12, cfg.group_size, cfg.vocab_size)])
+        hit0 = warm.prefix.stats["hit_tokens"]
+        np.testing.assert_array_equal(cold.generate(p2[None, :], 10).tokens,
+                                      warm.generate(p2[None, :], 10).tokens)
+        assert warm.prefix.stats["hit_tokens"] > hit0
+
+
+# ---------------------------------------------------------------------------
+# continuous engine: aliased pool blocks + COW tail
+# ---------------------------------------------------------------------------
+
+def _plane_snapshot(engine: ContinuousEngine, ids) -> list:
+    """Host copies of every layer's quantized planes at pool blocks
+    ``ids`` (block axis is -4 on every plane)."""
+    ids = jnp.asarray(ids, jnp.int32)
+    snap = []
+
+    def fn(mix, _stacked):
+        for f in ("k_upper", "k_lower", "k_scale", "k_zero",
+                  "v_upper", "v_lower", "v_scale", "v_zero"):
+            snap.append(np.asarray(jnp.take(getattr(mix.primary, f), ids,
+                                            axis=-4)))
+        return mix
+
+    ContinuousEngine._map_attn(engine.state, fn)
+    return snap
+
+
+class TestContinuousEnginePrefix:
+    def test_shared_prompt_identity_and_fewer_chunks(self, tiny):
+        cfg = tiny[0]
+        prompts = shared_prompts(cfg)
+        cold = make_continuous(tiny, prefix=False)
+        warm = make_continuous(tiny, prefix=True)
+        res_c = cold.generate(prompts, 10)
+        reqs = [warm.submit(p, 10) for p in prompts]
+        warm.run(jax.random.PRNGKey(0))
+        for rc, rw in zip(res_c, reqs):
+            np.testing.assert_array_equal(rc.tokens[0], rw.tokens)
+        assert warm.prefix.stats["hits"] >= 2
+        # cached admissions prefill only the uncached suffix: strictly
+        # fewer chunks than the cold producer
+        assert reqs[1].prefill_chunks < reqs[0].prefill_chunks
+        assert reqs[2].prefill_chunks < reqs[0].prefill_chunks
+        assert warm.cache_syncs == len(prompts)
+
+    def test_multi_turn_resubmission(self, tiny):
+        cfg = tiny[0]
+        cold = make_continuous(tiny, prefix=False)
+        warm = make_continuous(tiny, prefix=True)
+        p1 = toks(21, 3 * cfg.group_size + 5, cfg.vocab_size)
+        t1_c = cold.generate([p1], 10)[0].tokens[0]
+        t1_w = warm.generate([p1], 10)[0].tokens[0]
+        np.testing.assert_array_equal(t1_c, t1_w)
+        p2 = np.concatenate([p1, np.asarray(t1_w, np.int32),
+                             toks(22, cfg.group_size, cfg.vocab_size)])
+        np.testing.assert_array_equal(cold.generate([p2], 10)[0].tokens[0],
+                                      warm.generate([p2], 10)[0].tokens[0])
+        assert warm.prefix.stats["hits"] >= 1
+
+    def test_cow_isolation_pool_planes(self, tiny):
+        """A request aliasing shared blocks must never write them: its
+        ragged-tail re-pack and decode flushes go to privately popped
+        blocks, so the indexed planes are bit-identical before/after."""
+        cfg = tiny[0]
+        warm = make_continuous(tiny, prefix=True)
+        p1 = toks(31, 3 * cfg.group_size + 8, cfg.vocab_size)
+        warm.generate([p1], 8)
+        shared = sorted(nd.block_id for nd in warm.prefix._iter_nodes())
+        assert len(shared) == 2
+        before = _plane_snapshot(warm, shared)
+        # aliases both indexed groups, then decodes well past a flush
+        p2 = np.concatenate([p1, toks(32, cfg.group_size, cfg.vocab_size)])
+        warm.generate([p2], 2 * cfg.group_size + 8)
+        after = _plane_snapshot(warm, shared)
+        for b, a in zip(before, after):
+            np.testing.assert_array_equal(b, a)
+
+    def test_block_accounting_and_drain(self, tiny):
+        """Retired requests return everything except the index's blocks;
+        evicting the whole index restores the full free stack."""
+        cfg = tiny[0]
+        warm = make_continuous(tiny, prefix=True)
+        warm.generate(shared_prompts(cfg), 8)
+        held = warm.prefix.blocks
+        assert held > 0
+        assert warm.scheduler.extra_reserved == held
+        assert int(warm.table.free_top) == warm.pool_blocks - held
+        evicted = warm.prefix.evict(held)
+        warm.table = PC.evict_blocks(warm.table, evicted)
+        assert int(warm.table.free_top) == warm.pool_blocks
+        ref = np.asarray(warm.table.refcount)
+        assert (ref == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# scheduler capacity with shared blocks (regression)
+# ---------------------------------------------------------------------------
+
+class TestSchedulerPrefixCapacity:
+    def test_full_pool_admits_fully_cached_request(self):
+        """With the pool nearly full of index-held blocks, a request whose
+        prefix is cached must still admit: aliased blocks never pop the
+        free stack, so the hint discounts them from the reservation.
+        (Regression — the unhinted bound used to livelock the queue.)"""
+        sch = Scheduler(num_slots=1, pool_blocks=5, group=4)
+        sch.extra_reserved = 3                      # index holds 3 blocks
+        req = sch.submit(np.zeros(14, np.int32), max_new_tokens=2)
+        assert sch.block_bound(req) == 4            # ceil(16/4), no hint
+        assert sch.next_admission() is None         # 0 + 4 + 3 > 5
+        sch.set_shared_hint(req, 2)                 # 2 of them aliased
+        assert sch.block_bound(req) == 2
+        admitted = sch.next_admission()             # 0 + 2 + 3 <= 5
+        assert admitted is req and req.reserved == 2
+        assert sch.reserved_blocks == 2
+
+    def test_retire_releases_frozen_reservation(self):
+        """The admission-time reservation is released verbatim even if the
+        hint is mutated afterwards — accounting can never drift."""
+        sch = Scheduler(num_slots=1, pool_blocks=8, group=4)
+        req = sch.submit(np.zeros(8, np.int32), max_new_tokens=4)
+        sch.set_shared_hint(req, 1)
+        sch.next_admission()
+        assert sch.reserved_blocks == req.reserved == 2
+        req.shared_hint = 0                         # stale hint mutation
+        sch.retire(req.slot)
+        assert sch.reserved_blocks == 0
+
+    def test_hint_never_negative_bound(self):
+        sch = Scheduler(num_slots=1, pool_blocks=8, group=4)
+        req = sch.submit(np.zeros(4, np.int32), max_new_tokens=1)
+        sch.set_shared_hint(req, 99)
+        assert sch.block_bound(req) == 0
+
+
+# ---------------------------------------------------------------------------
+# sharded serving (host8 mesh)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mesh():
+    if NDEV < 8:
+        pytest.skip("needs 8 host devices")
+    return make_host_mesh(4, 2)
+
+
+class TestShardedPrefix:
+    @needs_mesh
+    def test_host8_identity_with_prefix_cache(self, tiny, mesh):
+        """Prefix caching composes with tensor-parallel serving: aliasing
+        and eviction act on the replicated page table, scratch seeding
+        happens before placement — outputs stay token-identical to the
+        single-device cold engine."""
+        cfg = tiny[0]
+        prompts = shared_prompts(cfg)
+        cold = make_continuous(tiny, prefix=False)
+        warm = make_continuous(tiny, prefix=True, mesh=mesh)
+        res_c = cold.generate(prompts, 10)
+        res_w = warm.generate(prompts, 10)
+        for rc, rw in zip(res_c, res_w):
+            np.testing.assert_array_equal(rc.tokens, rw.tokens)
+        assert warm.prefix.stats["hits"] >= 2

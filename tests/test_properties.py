@@ -97,3 +97,126 @@ class TestCacheInvariants:
         else:
             err = float(jnp.abs(out - x).max())
             assert err < (0.6 if bits == 4 else 0.05)
+
+
+class TestPrefixShareLifecycle:
+    """Refcounted block lifecycle under random interleavings of the engine's
+    primitives: admission pops (`alloc_blocks` / `plan_prefill_chunk`),
+    prefix aliasing (`share_blocks`), index retention (`retain_blocks`),
+    retirement (`free_slot` and the jitted `release_slot`), and index
+    eviction (`evict_blocks`).
+
+    Invariants checked after every op against a pure-python ownership model:
+
+    * ``refcount[b]`` equals the number of live references (owning/aliasing
+      slots + the index) for every block;
+    * no block is simultaneously on the free stack and referenced, and the
+      stack never holds duplicates;
+    * conservation: every block is exactly-one-of free or referenced;
+    * eviction never frees a block a slot still references (it only drops
+      the index's count — the push is masked to blocks reaching zero).
+    """
+
+    R, NBmax, P, G, C = 3, 5, 12, 4, 8
+
+    def _check(self, table, owners):
+        from repro.core import paged_kv_cache as PC  # noqa: F401
+        ref = np.asarray(table.refcount)
+        top = int(table.free_top)
+        stack = [int(b) for b in np.asarray(table.free_stack)[:top]]
+        live = {b for b, o in owners.items() if o}
+        for b in range(self.P):
+            assert ref[b] == len(owners[b]), (b, ref[b], owners[b])
+        assert len(set(stack)) == len(stack)
+        assert live.isdisjoint(stack)
+        assert len(stack) + len(live) == self.P
+
+    @settings(max_examples=30, deadline=None)
+    @given(data=st.data())
+    def test_random_interleavings(self, data):
+        from repro.core import paged_kv_cache as PC
+        R, NBmax, P, G, C = self.R, self.NBmax, self.P, self.G, self.C
+        release = jax.jit(PC.release_slot)
+        table = PC.init_table(R, NBmax, P)
+        owners = {b: set() for b in range(P)}
+        slots = {}            # slot -> dict(pos=<host tokens>, chunked=bool)
+        indexed = []          # block ids the index references (insert order)
+
+        for _ in range(data.draw(st.integers(1, 25), label="n_ops")):
+            op = data.draw(st.sampled_from(
+                ["alloc", "share", "chunk", "index", "retire", "evict"]),
+                label="op")
+            idle = [s for s in range(R) if s not in slots]
+            free = int(table.free_top)
+
+            if op == "alloc" and idle:
+                n = data.draw(st.integers(0, min(NBmax, free)), label="n")
+                slot = idle[0]
+                table, ids = PC.alloc_blocks(table, slot, n)
+                for b in np.asarray(ids):
+                    owners[int(b)].add(("slot", slot))
+                slots[slot] = dict(pos=None, chunked=False)
+            elif op == "share" and idle:
+                k = data.draw(st.integers(0, min(len(indexed), NBmax - 1)),
+                              label="k")
+                slot, ids = idle[0], indexed[:k]
+                table = PC.share_blocks(table, slot, ids, (k + 1) * G, G)
+                for b in ids:
+                    owners[b].add(("slot", slot))
+                slots[slot] = dict(pos=(k + 1) * G, chunked=True)
+            elif op == "chunk":
+                grow = [s for s, st_ in slots.items() if st_["chunked"]
+                        and st_["pos"] + C <= NBmax * G]
+                if not grow:
+                    continue
+                slot = grow[0]
+                pos, new_pos = slots[slot]["pos"], slots[slot]["pos"] + C
+                n_flush = max(0, (new_pos - G) // G) - max(0, (pos - G) // G)
+                if n_flush > free:
+                    continue
+                prev = int(table.blocks[slot])
+                table, _step = PC.plan_prefill_chunk(table, slot, C, C, G)
+                row = np.asarray(table.block_table[slot])
+                for b in row[prev:prev + n_flush]:
+                    owners[int(b)].add(("slot", slot))
+                slots[slot]["pos"] = new_pos
+            elif op == "index":
+                cands = [b for b, o in owners.items()
+                         if o and "index" not in o]
+                if not cands:
+                    continue
+                k = data.draw(st.integers(1, len(cands)), label="k_idx")
+                table = PC.retain_blocks(table, cands[:k])
+                for b in cands[:k]:
+                    owners[b].add("index")
+                    indexed.append(b)
+            elif op == "retire" and slots:
+                slot = sorted(slots)[0]
+                if data.draw(st.booleans(), label="jitted"):
+                    table = release(table, jnp.asarray(slot, jnp.int32))
+                else:
+                    table = PC.free_slot(table, slot)
+                for o in owners.values():
+                    o.discard(("slot", slot))
+                del slots[slot]
+            elif op == "evict" and indexed:
+                k = data.draw(st.integers(1, len(indexed)), label="k_ev")
+                victims = indexed[-k:]
+                table = PC.evict_blocks(table, victims)
+                for b in victims:
+                    owners[b].discard("index")
+                indexed = indexed[:-k]
+            self._check(table, owners)
+
+        # full drain: retire every slot, evict the whole index
+        for slot in sorted(slots):
+            table = PC.free_slot(table, slot)
+            for o in owners.values():
+                o.discard(("slot", slot))
+            self._check(table, owners)
+        if indexed:
+            table = PC.evict_blocks(table, indexed)
+            for b in indexed:
+                owners[b].discard("index")
+        self._check(table, owners)
+        assert int(table.free_top) == P

@@ -1,0 +1,150 @@
+"""Overload benchmark: graceful degradation under pool oversubscription.
+
+    PYTHONPATH=src python benchmarks/overload_bench.py [--smoke]
+        [--json BENCH_overload.json]
+
+A request wave whose worst-case KV footprint is ~2x the block pool is
+driven through three engines over identical prompts:
+
+* **unconstrained** — pool sized for the whole wave (reference outputs);
+* **preempt** — 2x-oversubscribed pool, ``overflow="preempt"``: when the
+  queue head cannot be admitted, a running slot's quantized blocks swap
+  to the host tier (core/host_tier.py) and swap back in later — every
+  request completes, and greedy outputs must stay token-identical to the
+  unconstrained run (the swap is bit-exact);
+* **reject** — same pool, ``overflow="reject"``: the admission-time
+  rejection baseline sheds whatever doesn't fit.
+
+Recorded per engine: wall-clock, tok/s, terminal-status counts, p50/p99
+completion latency (``finish_t - submit_t``) over completed requests, and
+the preempt engine's swap telemetry (preempts, resumes, bytes offloaded).
+``--smoke`` (CI) asserts the preempt engine completes the whole wave
+``ok`` and token-identical while the reject baseline sheds at least one
+request.  Results land in ``BENCH_overload.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import numpy as np
+
+sys.path.insert(0, ".")   # repo root (benchmarks.common) when run as a script
+sys.path.insert(0, "src")
+
+from benchmarks.common import bench_config, corpus  # noqa: E402
+from repro.models.stack import StackModel  # noqa: E402
+from repro.serving.engine import ContinuousEngine  # noqa: E402
+
+
+def _run(model, params, prompts, max_new, max_seq, gamma, *, pool, overflow):
+    eng = ContinuousEngine(
+        model, params, gamma=gamma, greedy=True, max_slots=2,
+        max_seq=max_seq, pool_blocks=pool, overflow=overflow,
+        preempt_patience=2)
+    reqs = [eng.submit(p, max_new) for p in prompts]
+    t0 = time.perf_counter()
+    eng.run(jax.random.PRNGKey(7))
+    wall = time.perf_counter() - t0
+    ok = [r for r in reqs if r.status == "ok"]
+    lat = sorted(r.finish_t - r.submit_t for r in ok) or [0.0]
+    statuses = {}
+    for r in reqs:
+        statuses[r.status] = statuses.get(r.status, 0) + 1
+    n_tok = sum(len(r.tokens) for r in ok)
+    row = {
+        "wall_s": round(wall, 4),
+        "tok_s": round(n_tok / max(wall, 1e-9), 2),
+        "completed_ok": len(ok),
+        "statuses": statuses,
+        "p50_latency_s": round(float(np.percentile(lat, 50)), 4),
+        "p99_latency_s": round(float(np.percentile(lat, 99)), 4),
+    }
+    if overflow == "preempt":
+        row.update(preempts=eng.preempts, resumes=eng.resumes,
+                   bytes_offloaded=(eng.host_tier.bytes_offloaded
+                                    if eng.host_tier else 0))
+    assert int(eng.table.free_top) == eng.pool_blocks, "leaked pool blocks"
+    return row, {r.req_id: list(r.tokens) for r in ok}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload for CI; asserts preempt completes "
+                         "the wave ok + token-identical, reject sheds load")
+    ap.add_argument("--json", default="BENCH_overload.json")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--max-new", type=int, default=None)
+    ap.add_argument("--gamma", type=int, default=3)
+    ap.add_argument("--oversub", type=float, default=2.0,
+                    help="worst-case footprint / pool blocks")
+    args = ap.parse_args()
+
+    cfg = bench_config()
+    model = StackModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))  # scheduling cost, not quality
+    G = cfg.group_size
+    data = corpus()
+    key = jax.random.PRNGKey(5)
+
+    # generations must outlast the preemption patience window, or natural
+    # retirements keep unblocking the head and no swap is ever needed
+    n_req = args.requests or (6 if args.smoke else 12)
+    max_new = args.max_new or (24 if args.smoke else 48)
+    lens = [(2 + i % 3) * G + 5 + 3 * i for i in range(n_req)]
+    prompts = [np.asarray(data.sample(jax.random.fold_in(key, i), 1, s)[0])
+               for i, s in enumerate(lens)]
+    max_seq = max(lens) + max_new + 2 * G + 8
+    bounds = [-(-(s + max_new) // G) for s in lens]
+    pool = max(int(round(sum(bounds) / args.oversub)), max(bounds) + 1)
+
+    print(f"{n_req} requests, {max_new} new each; worst-case "
+          f"{sum(bounds)} blocks vs pool {pool} "
+          f"({sum(bounds) / pool:.2f}x oversubscribed)")
+    rows = {}
+    ref_row, ref_toks = _run(model, params, prompts, max_new, max_seq,
+                             args.gamma, pool=None, overflow="wait")
+    rows["unconstrained"] = ref_row
+    for mode in ("preempt", "reject"):
+        rows[mode], toks = _run(model, params, prompts, max_new, max_seq,
+                                args.gamma, pool=pool, overflow=mode)
+        rows[mode]["token_identical"] = all(
+            toks[i] == ref_toks[i] for i in toks)
+        print(f"  {mode:<9} {rows[mode]['completed_ok']}/{n_req} ok  "
+              f"{rows[mode]['tok_s']:>8.1f} tok/s  "
+              f"p99 {rows[mode]['p99_latency_s']:.3f}s  "
+              f"{rows[mode]['statuses']}")
+
+    out = {
+        "config": {"requests": n_req, "max_new": max_new,
+                   "gamma": args.gamma, "group": G, "pool_blocks": pool,
+                   "oversubscription": round(sum(bounds) / pool, 3),
+                   "smoke": bool(args.smoke),
+                   "backend": jax.default_backend()},
+        **rows,
+    }
+    with open(args.json, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.json}")
+
+    assert rows["preempt"]["token_identical"], \
+        "preempt/resume changed greedy outputs"
+    if args.smoke:
+        assert rows["preempt"]["completed_ok"] == n_req, \
+            "preempt mode must complete the whole oversubscribed wave"
+        assert rows["preempt"]["preempts"] >= 1, "no preemption exercised"
+        assert rows["reject"]["completed_ok"] < n_req, \
+            "reject baseline unexpectedly completed everything"
+        print("smoke assertions passed: preempt-resume completed "
+              f"{rows['preempt']['completed_ok']}/{n_req} token-identical; "
+              f"reject baseline completed only "
+              f"{rows['reject']['completed_ok']}")
+
+
+if __name__ == "__main__":
+    main()

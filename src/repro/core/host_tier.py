@@ -1,0 +1,217 @@
+"""Host-memory KV tier: preempt-to-host offload + resume for the paged pool.
+
+When the device pool (or the slot table) is full and the queue head cannot
+be admitted, the engine preempts a running slot: the slot's quantized pool
+blocks — packed INT4 upper/lower planes, scales, zeros, gathered by its
+block-table row — plus its fp double buffer are swapped to host memory,
+the blocks are released back to the free stack, and the request re-enters
+the queue as *resumable*.  On re-admission the snapshot restores into
+freshly popped blocks (`paged_kv_cache.adopt_blocks`) and decode continues
+exactly where it left off: the transfer is bit-exact (raw plane bytes, no
+re-quantization), so greedy outputs are token-identical across any number
+of preempt/resume cycles.
+
+INT4 planes make this cheap: a block's quantized payload is ~4× smaller
+than its fp16 equivalent (the premise of Lynx-style progressive KV
+transfer), and the offload is **asynchronous** — `copy_to_host_async` is
+issued at preemption time and the host copy is only materialized (one
+`device_get` that by then is a cheap host-side wait) when the snapshot is
+next needed, so swaps overlap the running megastep instead of stalling it.
+
+Robustness contract (used by tests/fault_injection.py):
+
+* every materialized snapshot carries a CRC32 checksum; `restore` verifies
+  it and raises :class:`SnapshotCorruptionError` on mismatch — a corrupted
+  swap-in fails *that request*, never poisons the pool;
+* transfers retry with exponential backoff (:class:`TransferError` from
+  the fault-injection hook or the runtime is retried up to
+  ``max_retries``), and a permanently failing transfer surfaces as a
+  :class:`HostTierError` the engine converts into a ``failed`` request
+  status — no exception ever escapes ``run()``.
+
+Refcount awareness lives in the *caller's* protocol, not here: the engine
+snapshots the plane bytes first (aliased prefix blocks included — a byte
+copy is alias-agnostic) and then runs the refcount-aware `release_slot`,
+so index-retained blocks survive the preemption and the resumed slot gets
+private copies (copy-on-preempt, the swap analogue of the prefix cache's
+copy-on-write tail).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+import zlib
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+class HostTierError(RuntimeError):
+    """Base class for host-tier failures the engine maps to request
+    ``failed`` statuses."""
+
+
+class TransferError(HostTierError):
+    """A device↔host transfer failed (possibly injected); retried with
+    backoff up to ``max_retries`` before escaping."""
+
+
+class SnapshotCorruptionError(HostTierError):
+    """A restored snapshot failed its checksum — the swap-in is refused."""
+
+
+@dataclasses.dataclass
+class SlotSnapshot:
+    """One preempted slot's KV state, slot-agnostic (restorable anywhere).
+
+    ``planes`` is a list over attention layers (serve-state walk order) of
+    dicts holding the gathered pool planes ``[NBmax, G|1, H, ...]`` (with a
+    leading repeat axis for scan-stacked blocks) plus the fp double-buffer
+    rows ``buf_k``/``buf_v`` — device arrays until :meth:`materialized
+    <HostTier._materialize>`, numpy afterwards."""
+
+    req_id: int
+    n_blocks: int        # valid block-table lanes (the rest are padding)
+    buf_len: int         # tokens in the fp double buffer
+    pos: int             # committed stream position
+    last_token: int      # token feeding the next spec round
+    planes: list
+    checksum: Optional[int] = None
+    nbytes: int = 0
+
+    @property
+    def materialized(self) -> bool:
+        return self.checksum is not None
+
+
+def _leaves(planes) -> list:
+    return jax.tree.leaves(planes)
+
+
+def _crc(planes) -> int:
+    crc = 0
+    for leaf in _leaves(planes):
+        arr = np.ascontiguousarray(leaf)
+        crc = zlib.crc32(arr.view(np.uint8).reshape(-1), crc)
+    return crc
+
+
+class HostTier:
+    """Host-memory block store for preempted slots.
+
+    ``fault`` is an optional injection hook (tests/fault_injection.py):
+    ``fault.transfer(op, req_id)`` may raise :class:`TransferError` to
+    simulate a failed copy, and ``fault.mangle(req_id, planes)`` may
+    corrupt a materialized snapshot to exercise the checksum path.
+    """
+
+    def __init__(self, *, fault: Any = None, max_retries: int = 3,
+                 backoff_s: float = 0.01, verify: bool = True):
+        self.fault = fault
+        self.max_retries = max_retries
+        self.backoff_s = backoff_s
+        self.verify = verify
+        self._store: Dict[int, SlotSnapshot] = {}
+        # telemetry
+        self.offloads = 0
+        self.restores = 0
+        self.retries = 0
+        self.bytes_offloaded = 0
+
+    # ------------------------------------------------------------------
+    def __contains__(self, req_id: int) -> bool:
+        return req_id in self._store
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def offload(self, req_id: int, planes: list, *, n_blocks: int,
+                buf_len: int, pos: int, last_token: int) -> SlotSnapshot:
+        """Start swapping a preempted slot's gathered planes to host.
+
+        Asynchronous: ``copy_to_host_async`` is issued on every leaf and
+        the method returns immediately — the device keeps decoding the
+        other slots while the DMA drains.  Materialization (and the
+        checksum) happens lazily at :meth:`restore` (or eagerly via
+        :meth:`materialize`)."""
+        self._transfer("offload", req_id)
+        for leaf in _leaves(planes):
+            if hasattr(leaf, "copy_to_host_async"):
+                leaf.copy_to_host_async()
+        snap = SlotSnapshot(req_id=req_id, n_blocks=n_blocks,
+                            buf_len=buf_len, pos=pos, last_token=last_token,
+                            planes=planes)
+        self._store[req_id] = snap
+        self.offloads += 1
+        return snap
+
+    def materialize(self, req_id: int) -> SlotSnapshot:
+        """Finish the host copy: device_get the planes (a cheap wait once
+        the async copy has drained), checksum them, and drop the device
+        references so the snapshot survives pool donation."""
+        snap = self._store[req_id]
+        if snap.materialized:
+            return snap
+        snap.planes = self._retrying_get("offload", req_id, snap.planes)
+        snap.checksum = _crc(snap.planes)
+        snap.nbytes = sum(leaf.nbytes for leaf in _leaves(snap.planes))
+        self.bytes_offloaded += snap.nbytes
+        if self.fault is not None and hasattr(self.fault, "mangle"):
+            # post-checksum corruption hook: simulates bitrot between
+            # offload and restore so the verify path is testable
+            snap.planes = self.fault.mangle(req_id, snap.planes)
+        return snap
+
+    def restore(self, req_id: int) -> SlotSnapshot:
+        """Hand back a snapshot for swap-in, verifying integrity.
+
+        The snapshot is *popped* from the store (a resumed slot owns fresh
+        private blocks; keeping a stale copy would only mask bugs)."""
+        snap = self.materialize(req_id)
+        self._transfer("restore", req_id)
+        if self.verify and _crc(snap.planes) != snap.checksum:
+            self._store.pop(req_id, None)
+            raise SnapshotCorruptionError(
+                f"snapshot for request {req_id} failed checksum "
+                f"verification — refusing swap-in")
+        self._store.pop(req_id, None)
+        self.restores += 1
+        return snap
+
+    def discard(self, req_id: int) -> None:
+        """Drop a snapshot (its request was cancelled/failed in the
+        queue)."""
+        self._store.pop(req_id, None)
+
+    # ------------------------------------------------------------------
+    def _transfer(self, op: str, req_id: int) -> None:
+        """Fault-injection gate for one transfer, retried with backoff."""
+        if self.fault is None or not hasattr(self.fault, "transfer"):
+            return
+        delay = self.backoff_s
+        for attempt in range(self.max_retries + 1):
+            try:
+                self.fault.transfer(op, req_id)
+                return
+            except TransferError:
+                if attempt == self.max_retries:
+                    raise
+                self.retries += 1
+                time.sleep(delay)
+                delay *= 2
+
+    def _retrying_get(self, op: str, req_id: int, planes):
+        delay = self.backoff_s
+        for attempt in range(self.max_retries + 1):
+            try:
+                return jax.device_get(planes)
+            except Exception as e:         # pragma: no cover - runtime path
+                if attempt == self.max_retries:
+                    raise TransferError(
+                        f"{op} transfer for request {req_id} failed after "
+                        f"{self.max_retries} retries: {e}") from e
+                self.retries += 1
+                time.sleep(delay)
+                delay *= 2

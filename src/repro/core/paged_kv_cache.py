@@ -539,6 +539,42 @@ def release_slot(table: PageTable, slot) -> PageTable:
     )
 
 
+def adopt_blocks(table: PageTable, slot, n, buf_len, pos
+                 ) -> Tuple[PageTable, jnp.ndarray]:
+    """Jittable resume allocation (traced slot/n): pop ``n`` fresh pool
+    blocks into ``slot``'s table row and re-activate the row at stream
+    position ``pos`` with ``buf_len`` fp-buffer tokens — the allocation
+    half of a host-tier swap-in (core/host_tier.py scatters the saved
+    plane bytes into the popped blocks).  A masked multi-lane pop over all
+    ``NBmax`` lanes, so one compiled program serves any resume size.
+    Capacity must be guaranteed by the caller (``free_top >= n``), exactly
+    like the scheduler's reservation before a prefill-chunk plan.
+
+    Returns ``(table, ids)`` where ``ids`` is i32 ``[NBmax]`` — the popped
+    block id per lane, with the scratch id ``P`` on lanes ``>= n`` so a
+    plane scatter through ``ids`` lands masked lanes in the write-scratch
+    block."""
+    P = table.free_stack.shape[0]
+    NBmax = table.max_blocks_per_seq
+    slot = jnp.asarray(slot, jnp.int32)
+    n = jnp.asarray(n, jnp.int32)
+    lanes = jnp.arange(NBmax, dtype=jnp.int32)
+    take = lanes < n
+    pop_idx = table.free_top - 1 - lanes
+    ids = jnp.where(take, table.free_stack[jnp.clip(pop_idx, 0, P - 1)],
+                    jnp.asarray(P, jnp.int32))
+    new_table = table._replace(
+        block_table=table.block_table.at[slot].set(jnp.where(take, ids, 0)),
+        blocks=table.blocks.at[slot].set(n),
+        buf_len=table.buf_len.at[slot].set(jnp.asarray(buf_len, jnp.int32)),
+        pos=table.pos.at[slot].set(jnp.asarray(pos, jnp.int32)),
+        active=table.active.at[slot].set(True),
+        free_top=table.free_top - n,
+        refcount=table.refcount.at[ids].set(1, mode="drop"),
+    )
+    return new_table, ids
+
+
 def free_slot(table: PageTable, slot: int) -> PageTable:
     """Retire ``slot``: drop one reference per owned block, pushing the
     blocks that reach refcount zero back onto the free stack (host ints)."""

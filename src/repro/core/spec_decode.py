@@ -48,12 +48,22 @@ from repro.serving.sampling import maybe_top_p, sample_token
 from repro.serving.scheduler import SlotState
 
 
+def _nonfinite_rows(logits: jnp.ndarray) -> jnp.ndarray:
+    """Per-sequence count of verify positions whose logit rows carry any
+    non-finite entry — the device half of the request-level
+    ``numerics_flags`` counter (sampling already falls back to
+    greedy-over-finite; this only *counts* the incidents)."""
+    bad = ~jnp.all(jnp.isfinite(logits), axis=-1)     # [B, T(, K)]
+    return jnp.sum(bad.reshape(bad.shape[0], -1), axis=-1).astype(jnp.int32)
+
+
 class RoundResult(NamedTuple):
     state: dict
     tokens: jnp.ndarray       # [B, gamma+1] new tokens (n_new valid)
     n_new: jnp.ndarray        # scalar
     last_token: jnp.ndarray   # [B, 1(, K)] token to feed next round
     accept_mask: jnp.ndarray  # [B, gamma]
+    nonfinite: jnp.ndarray    # i32 [B] — non-finite target logit rows
 
 
 def spec_round(model, target_params, draft_params, state, last_token,
@@ -107,7 +117,8 @@ def spec_round(model, target_params, draft_params, state, last_token,
 
     last = jax.lax.dynamic_slice_in_dim(res.tokens, res.n_accepted, 1, axis=1)
     return RoundResult(state=new_state, tokens=res.tokens, n_new=res.n_new,
-                       last_token=last, accept_mask=res.accept_mask_b)
+                       last_token=last, accept_mask=res.accept_mask_b,
+                       nonfinite=_nonfinite_rows(tl))
 
 
 class PagedRoundResult(NamedTuple):
@@ -117,6 +128,7 @@ class PagedRoundResult(NamedTuple):
     n_new: jnp.ndarray        # [R]
     last_token: jnp.ndarray   # [R, 1] token to feed next round
     accept_mask: jnp.ndarray  # [R, gamma]
+    nonfinite: jnp.ndarray    # i32 [R] — non-finite target logit rows
 
 
 def paged_spec_round(model, target_params, draft_params, state, table,
@@ -180,7 +192,8 @@ def paged_spec_round(model, target_params, draft_params, state, table,
     last = jnp.take_along_axis(res.tokens, res.n_accepted[:, None], axis=1)
     return PagedRoundResult(state=t_state, table=new_table, tokens=res.tokens,
                             n_new=res.n_new, last_token=last,
-                            accept_mask=res.accept_mask_b)
+                            accept_mask=res.accept_mask_b,
+                            nonfinite=_nonfinite_rows(tl))
 
 
 def paged_ar_step(model, params, state, table, last_token, key, *,
@@ -256,6 +269,7 @@ class MegaResult(NamedTuple):
     n_new: jnp.ndarray        # i32 [rounds]
     proposed: jnp.ndarray     # i32 [rounds] (budget-clamped, per round_stats)
     accepted: jnp.ndarray     # i32 [rounds]
+    nonfinite: jnp.ndarray    # i32 [rounds] — batch-summed numerics flags
 
 
 def megastep(model, target_params, draft_params, state, last_token,
@@ -290,11 +304,13 @@ def megastep(model, target_params, draft_params, state, last_token,
             _, prop, acc, _ = round_stats_dev(gamma, res.n_new, budget - gen)
             return ((res.state, res.last_token, pos + res.n_new,
                      gen + res.n_new),
-                    (res.tokens.astype(jnp.int32), res.n_new, prop, acc))
+                    (res.tokens.astype(jnp.int32), res.n_new, prop, acc,
+                     jnp.sum(res.nonfinite)))
 
         def skip(ops):
             zero = jnp.zeros((), jnp.int32)
-            return ops, (jnp.zeros(tok_shape, jnp.int32), zero, zero, zero)
+            return ops, (jnp.zeros(tok_shape, jnp.int32), zero, zero, zero,
+                         zero)
 
         new_carry, ys = jax.lax.cond(gen < budget, live, skip,
                                      (state, last, pos, gen))
@@ -302,11 +318,11 @@ def megastep(model, target_params, draft_params, state, last_token,
 
     pos0 = jnp.asarray(stream_pos, jnp.int32)
     gen0 = jnp.asarray(generated, jnp.int32)
-    (state, last, pos, gen, _), (toks, n_new, prop, acc) = jax.lax.scan(
+    (state, last, pos, gen, _), (toks, n_new, prop, acc, nf) = jax.lax.scan(
         body, (state, last_token, pos0, gen0, key), length=rounds)
     return MegaResult(state=state, last_token=last, stream_pos=pos,
                       generated=gen, tokens=toks, n_new=n_new,
-                      proposed=prop, accepted=acc)
+                      proposed=prop, accepted=acc, nonfinite=nf)
 
 
 class PagedMegaResult(NamedTuple):
@@ -323,6 +339,7 @@ class PagedMegaResult(NamedTuple):
     take: jnp.ndarray         # i32 [rounds, R] — tokens kept (0 = frozen)
     proposed: jnp.ndarray     # i32 [rounds, R]
     accepted: jnp.ndarray     # i32 [rounds, R]
+    nonfinite: jnp.ndarray    # i32 [rounds, R] — live-masked numerics flags
     first: jnp.ndarray        # i32 [R] — carried-in last token (the
                               # prefill-sampled first token of slots whose
                               # admission finalized since the last readback)
@@ -368,6 +385,7 @@ def paged_megastep(model, target_params, draft_params, state, table,
             take = jnp.where(live, take, 0)
             prop = jnp.where(live, prop, 0)
             acc = jnp.where(live, acc, 0)
+            nf = jnp.where(live, res.nonfinite, 0)
             gen = slots.generated + take
             done = slots.done | (live & ((gen >= slots.budget) | eos_hit))
             new_slots = SlotState(generated=gen, budget=slots.budget,
@@ -376,21 +394,22 @@ def paged_megastep(model, target_params, draft_params, state, table,
             # plan/commit/rollback, so the remaining rounds leave them be
             new_table = res.table._replace(active=res.table.active & ~done)
             return ((res.state, new_table, res.last_token, new_slots),
-                    (res.tokens.astype(jnp.int32), take, prop, acc))
+                    (res.tokens.astype(jnp.int32), take, prop, acc, nf))
 
         def skip(ops):
             zeros = jnp.zeros((R,), jnp.int32)
             return ops, (jnp.zeros((R, gamma + 1), jnp.int32),
-                         zeros, zeros, zeros)
+                         zeros, zeros, zeros, zeros)
 
         new_carry, ys = jax.lax.cond(jnp.any(live), run, skip,
                                      (state, table, last, slots))
         return (*new_carry, key), ys
 
     first = jnp.asarray(last_token[:, 0], jnp.int32)
-    (state, table, last, slots, _), (toks, take, prop, acc) = jax.lax.scan(
-        body, (state, table, last_token, slots, key), length=rounds)
+    (state, table, last, slots, _), (toks, take, prop, acc, nf) = \
+        jax.lax.scan(body, (state, table, last_token, slots, key),
+                     length=rounds)
     return PagedMegaResult(state=state, table=table, last_token=last,
                            slots=slots, tokens=toks, take=take,
-                           proposed=prop, accepted=acc, first=first,
-                           done=slots.done)
+                           proposed=prop, accepted=acc, nonfinite=nf,
+                           first=first, done=slots.done)

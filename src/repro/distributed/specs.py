@@ -331,6 +331,24 @@ def scratch_specs(scratch, mesh: Mesh, stacked: bool = False):
     return _cache_spec(scratch, mesh, False, 1 if stacked else 0)
 
 
+def snapshot_specs(planes, mesh: Mesh):
+    """Spec tree for a host-tier slot snapshot (core/host_tier.py) being
+    swapped back onto the mesh.
+
+    Every gathered leaf — pool planes ``[NBmax, G|1, H, D*]`` and fp
+    double-buffer rows ``[2G, H, D]``, each with an optional leading
+    scan-repeat axis — keeps its kv-head axis at position ``-2``, so the
+    swap-in lands already head-sharded over ``model`` (matching the pool
+    placement the resume scatter writes into) with everything else
+    replicated.  `_fit` drops the spec where heads don't divide the mesh,
+    mirroring the pool's own fallback."""
+    def leaf_spec(leaf):
+        parts = [None] * (np.ndim(leaf) - 2) + ["model", None]
+        return _fit(mesh, np.shape(leaf), parts)
+
+    return jax.tree.map(leaf_spec, planes)
+
+
 def replicated(tree, mesh: Mesh):
     return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
 

@@ -66,6 +66,28 @@ def main():
                          "multi-turn resubmissions alias pool blocks and "
                          "prefill only the uncached suffix; greedy outputs "
                          "are unchanged (quantspec policy)")
+    ap.add_argument("--overflow", choices=["preempt", "wait", "reject"],
+                    default="preempt",
+                    help="what to do when the queue head cannot be "
+                         "admitted: preempt a running slot to the host KV "
+                         "tier and resume it later (graceful degradation, "
+                         "bit-exact), wait FCFS (legacy), or reject the "
+                         "head (continuous engine)")
+    ap.add_argument("--preempt-patience", type=int, default=16,
+                    help="blocked-head iterations tolerated before a "
+                         "preemption is considered (overflow=preempt)")
+    ap.add_argument("--max-pending", type=int, default=None,
+                    help="bound the request queue: submissions past this "
+                         "come back status=rejected (queue full) instead "
+                         "of growing host memory")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request wall-clock deadline; overrunning "
+                         "requests end status=timed_out at the next "
+                         "megastep harvest boundary")
+    ap.add_argument("--pool-blocks", type=int, default=None,
+                    help="KV pool size in blocks (default: slots * "
+                         "ceil(max_seq/group) — never oversubscribed); "
+                         "set lower to exercise the overflow policy")
     args = ap.parse_args()
 
     # resolve the mesh FIRST: host<N> meshes must append the forced-device
@@ -80,7 +102,8 @@ def main():
     from repro.data.pipeline import SyntheticCorpus
     from repro.distributed.sharding import axis_rules
     from repro.models.stack import StackModel
-    from repro.serving.engine import ContinuousEngine, Engine
+    from repro.serving.engine import (ContinuousEngine, Engine, GenStats,
+                                      GenerationResult)
 
     if args.arch not in ARCHS:
         raise SystemExit(f"unknown --arch {args.arch!r}; choose from "
@@ -123,12 +146,34 @@ def main():
                                    rounds_per_step=args.rounds_per_step,
                                    eos_id=args.eos_id, mesh=engine_mesh,
                                    prefix_cache=args.prefix_cache,
+                                   overflow=args.overflow,
+                                   preempt_patience=args.preempt_patience,
+                                   max_pending=args.max_pending,
+                                   pool_blocks=args.pool_blocks,
                                    **chunk_kw)
             # ragged prompts: vary lengths so requests join/retire mid-stream
             prompts = [np.asarray(prompt[i, : args.prompt_len - 7 * i])
                        for i in range(args.batch)]
-            results = eng.generate(prompts, args.max_new,
-                                   key=jax.random.PRNGKey(7))
+            reqs = [eng.submit(p, args.max_new, deadline_s=args.deadline_s)
+                    for p in prompts]
+            eng.run(jax.random.PRNGKey(7))
+            if any(r.status != "ok" for r in reqs):
+                for r in reqs:
+                    if r.status != "ok":
+                        print(f"req {r.req_id}: {r.status} ({r.reason})")
+            if eng.preempts:
+                print(f"overload: {eng.preempts} preemptions, "
+                      f"{eng.resumes} resumes, "
+                      f"{eng.host_tier.bytes_offloaded} bytes via host tier")
+            results = [GenerationResult(
+                tokens=np.asarray(r.tokens, np.int64)[None, :],
+                stats=GenStats(proposed=r.proposed, accepted=r.accepted,
+                               rounds=r.rounds, generated=r.generated,
+                               prefill_s=r.prefill_s,
+                               decode_s=max(r.finish_t - r.admit_t
+                                            - r.prefill_s, 0.0),
+                               numerics_flags=r.numerics_flags))
+                for r in reqs if r.status == "ok"]
             if args.prefix_cache:
                 # second wave of identical prompts: admissions now come out
                 # of the prefix index (chunks cover only the fp tail)

@@ -64,6 +64,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import paged_kv_cache as PC
+from repro.core.host_tier import HostTier, HostTierError
 from repro.core.prefix_index import PrefixIndex
 from repro.core.spec_decode import (MegaResult, PagedMegaResult, RoundResult,
                                     PagedRoundResult, ar_step, megastep,
@@ -87,6 +88,9 @@ class GenStats:
     generated: int = 0
     prefill_s: float = 0.0
     decode_s: float = 0.0
+    # verify positions whose target logits carried non-finite entries —
+    # sampling fell back to greedy-over-finite for them (serving/sampling.py)
+    numerics_flags: int = 0
 
     @property
     def acceptance_rate(self) -> float:
@@ -287,7 +291,8 @@ class Engine:
             in_shardings=(self._param_sh, self._draft_sh, s_sh, repl, repl,
                           repl),
             out_shardings=RoundResult(state=s_sh, tokens=repl, n_new=repl,
-                                      last_token=repl, accept_mask=repl),
+                                      last_token=repl, accept_mask=repl,
+                                      nonfinite=repl),
             donate_argnums=(2,))
         ar_fn = jax.jit(
             partial(ar_step, self.model, **self._ar_kw),
@@ -304,7 +309,7 @@ class Engine:
                 out_shardings=MegaResult(
                     state=s_sh, last_token=repl, stream_pos=repl,
                     generated=repl, tokens=repl, n_new=repl, proposed=repl,
-                    accepted=repl),
+                    accepted=repl, nonfinite=repl),
                 donate_argnums=(2,))
         fns = (round_fn, ar_fn, mega_fn, s_sh)
         self._sharded_fns[batch] = fns
@@ -477,6 +482,7 @@ class Engine:
                     self.gamma, n_new, max_new_tokens - generated)
                 stats.proposed += proposed
                 stats.accepted += accepted
+                stats.numerics_flags += int(np.sum(np.asarray(res.nonfinite)))
                 stream_pos += n_new
             else:
                 state, last = ar_fn(self.params, state, last,
@@ -514,7 +520,8 @@ class Engine:
             if prev is not None:
                 generated = self._harvest_megastep(prev, out, stats,
                                                    generated, max_new_tokens)
-            prev = (res.tokens, res.n_new, res.proposed, res.accepted)
+            prev = (res.tokens, res.n_new, res.proposed, res.accepted,
+                    res.nonfinite)
         if prev is not None:
             generated = self._harvest_megastep(prev, out, stats, generated,
                                                max_new_tokens)
@@ -524,7 +531,7 @@ class Engine:
                           max_new_tokens):
         """The single blocking transfer per megastep; per-round bookkeeping
         happens on the packed host copies (skipped rounds have n_new=0)."""
-        toks, n_new, proposed, accepted = jax.device_get(packed)
+        toks, n_new, proposed, accepted, nonfinite = jax.device_get(packed)
         self.host_syncs += 1
         for k in range(n_new.shape[0]):
             nn = int(n_new[k])
@@ -534,6 +541,7 @@ class Engine:
             stats.rounds += 1
             stats.proposed += int(proposed[k])
             stats.accepted += int(accepted[k])
+            stats.numerics_flags += int(nonfinite[k])
             generated += nn
         return generated
 
@@ -596,6 +604,9 @@ class ContinuousEngine:
                  prefill_chunk: int = 256, rounds_per_step: int = 1,
                  eos_id: Optional[int] = None, mesh: Optional[Mesh] = None,
                  prefix_cache: bool = False,
+                 overflow: str = "preempt", preempt_patience: int = 16,
+                 max_pending: Optional[int] = None, strict: bool = False,
+                 host_tier: Optional[HostTier] = None, fault=None,
                  ctx_kw: Optional[dict] = None):
         self.model = model
         self.cfg = model.cfg
@@ -609,6 +620,22 @@ class ContinuousEngine:
         self.prefill_chunk = prefill_chunk
         self.rounds_per_step = rounds_per_step
         self.eos_id = eos_id
+        if overflow not in ("preempt", "wait", "reject"):
+            raise ValueError(f"unknown overflow mode {overflow!r}")
+        # what happens when the queue head cannot be admitted even after
+        # LRU prefix eviction: "preempt" swaps the youngest/lowest-priority
+        # running slot to the host tier and resumes it later (graceful
+        # degradation), "wait" blocks FCFS until capacity frees (legacy),
+        # "reject" fails the head immediately (the overload-bench baseline)
+        self.overflow = overflow
+        self.preempt_patience = max(int(preempt_patience), 1)
+        self.strict = strict
+        self.fault = fault
+        self.host_tier = host_tier or (HostTier(fault=fault)
+                                       if overflow == "preempt" else None)
+        self.preempts = 0
+        self.resumes = 0
+        self._stall = 0             # lifecycle sweeps with a blocked head
         # the megastep driver needs device-side termination (gamma>0 spec
         # rounds); gamma=0 serves AR baselines on the legacy loop
         self._use_megastep = rounds_per_step >= 1 and gamma > 0
@@ -643,7 +670,8 @@ class ContinuousEngine:
         self.table = PC.init_table(max_slots, self.nbmax, self.pool_blocks)
         self.last = jnp.zeros((max_slots, 1), jnp.int32)
         self.slots_dev = init_slot_state(max_slots)
-        self.scheduler = Scheduler(max_slots, self.pool_blocks, G)
+        self.scheduler = Scheduler(max_slots, self.pool_blocks, G,
+                                   max_pending=max_pending, strict=strict)
         self._retired: List[Request] = []   # finished, not yet run()-claimed
         self._prefilling: Optional[_PrefillJob] = None
         self._inflight: Optional[_InflightMega] = None
@@ -701,7 +729,8 @@ class ContinuousEngine:
                               self._table_sh, repl, repl),
                 out_shardings=PagedRoundResult(
                     state=self._state_sh, table=self._table_sh, tokens=repl,
-                    n_new=repl, last_token=repl, accept_mask=repl),
+                    n_new=repl, last_token=repl, accept_mask=repl,
+                    nonfinite=repl),
                 donate_argnums=(2, 3))
             self._ar = jax.jit(
                 ar_p,
@@ -723,11 +752,17 @@ class ContinuousEngine:
                     out_shardings=PagedMegaResult(
                         state=self._state_sh, table=self._table_sh,
                         last_token=repl, slots=slots_sh, tokens=repl,
-                        take=repl, proposed=repl, accepted=repl, first=repl,
-                        done=repl),
+                        take=repl, proposed=repl, accepted=repl,
+                        nonfinite=repl, first=repl, done=repl),
                     donate_argnums=(2, 3, 4, 5))
         self._chunk_jit = jax.jit(self._chunk_step)
         self._finalize_jit = jax.jit(self._finalize_step)
+        # preempt-to-host tier: snapshot gathers a slot's plane bytes by
+        # block-table row (no donation — the carried state lives on), the
+        # resume jit pops fresh blocks and scatters the bytes back
+        self._snapshot_jit = jax.jit(self._snapshot_step)
+        self._resume_jit = jax.jit(self._resume_step,
+                                   donate_argnums=(0, 1, 2, 3))
 
     # ---- chunked prefill pipeline ------------------------------------
     def _chunk_step(self, params, tokens, state, table, slot, valid):
@@ -796,6 +831,139 @@ class ContinuousEngine:
             return AttnState(mix.primary, None)
 
         return self._map_attn(state, fn), out
+
+    # ---- preempt-to-host tier ----------------------------------------
+    _POOL_PLANES = ("k_upper", "k_lower", "k_scale", "k_zero",
+                    "v_upper", "v_lower", "v_scale", "v_zero")
+
+    def _snapshot_step(self, state, table, last, slot):
+        """Gather one slot's KV bytes for offload: every layer's pool
+        planes indexed by the slot's block-table row (masked lanes gather
+        block 0 — harmless padding, the restore scatters them into the
+        write-scratch block) plus its fp double-buffer rows.  All gathers
+        run along unsharded axes, so the step partitions under a mesh
+        without collectives; the tiny meta tuple is what the host reads
+        back synchronously at preemption time."""
+        row = table.block_table[slot]
+        planes = []
+
+        def fn(mix, _stacked):
+            p = mix.primary
+            d = {f: jnp.take(getattr(p, f), row, axis=-4)
+                 for f in self._POOL_PLANES}
+            d["buf_k"] = jnp.take(p.buf_k, slot, axis=-4)
+            d["buf_v"] = jnp.take(p.buf_v, slot, axis=-4)
+            planes.append(d)
+            return mix
+
+        self._map_attn(state, fn)
+        meta = (table.blocks[slot], table.buf_len[slot], table.pos[slot],
+                last[slot, 0])
+        return planes, meta
+
+    def _resume_step(self, state, table, last, slots, planes, slot, n,
+                     buf_len, pos, last_tok, gen, budget):
+        """Swap a snapshot back in: pop ``n`` fresh blocks into ``slot``'s
+        (re-activated) table row and scatter the saved plane bytes into
+        them — bit-exact, no re-quantization — then restore the carried
+        last token and the device-resident SlotState row."""
+        table, ids = PC.adopt_blocks(table, slot, n, buf_len, pos)
+        it = iter(planes)
+
+        def fn(mix, stacked):
+            d = next(it)
+            p = mix.primary
+
+            def scat(arr, v, idx):
+                v = v.astype(arr.dtype)
+                return (arr.at[:, idx].set(v) if stacked
+                        else arr.at[idx].set(v))
+
+            repl = {f: scat(getattr(p, f), d[f], ids)
+                    for f in self._POOL_PLANES}
+            repl["buf_k"] = scat(p.buf_k, d["buf_k"], slot)
+            repl["buf_v"] = scat(p.buf_v, d["buf_v"], slot)
+            return AttnState(p._replace(**repl), mix.draft)
+
+        state = self._map_attn(state, fn)
+        last = last.at[slot, 0].set(jnp.asarray(last_tok, jnp.int32))
+        slots = SlotState(
+            generated=slots.generated.at[slot].set(
+                jnp.asarray(gen, jnp.int32)),
+            budget=slots.budget.at[slot].set(jnp.asarray(budget, jnp.int32)),
+            done=slots.done.at[slot].set(False))
+        return state, table, last, slots
+
+    def _do_preempt(self, slot: int) -> bool:
+        """Preempt one running slot to the host tier.  Called only with an
+        empty megastep pipeline (request bookkeeping current): gather the
+        slot's plane bytes (dispatched on the carried device state), start
+        the async host copy, release the blocks (refcount-aware — blocks
+        the prefix index retains survive for other requests to alias), and
+        re-enqueue the request at the queue front as resumable."""
+        req = self.scheduler.active[slot]
+        planes, meta = self._snapshot_jit(self.state, self.table, self.last,
+                                          jnp.asarray(slot, jnp.int32))
+        n, buf_len, pos, last_tok = (int(x) for x in jax.device_get(meta))
+        self.host_syncs += 1
+        if req.pending_first:
+            # the prefill-sampled first token never reached the host; it is
+            # the slot's carried last token, which we just read back
+            req.tokens.append(last_tok)
+            req.pending_first = False
+        try:
+            self.host_tier.offload(req.req_id, planes, n_blocks=n,
+                                   buf_len=buf_len, pos=pos,
+                                   last_token=last_tok)
+        except HostTierError as e:
+            # can't preserve the slot's KV — fail this request, keep serving
+            self._retire(slot, "failed", f"offload failed: {e}")
+            self.preempts += 1
+            return True
+        self.table = self._release(self.table, jnp.asarray(slot, jnp.int32))
+        self._slot_shared.pop(slot, None)
+        self.scheduler.preempt(slot)
+        self.preempts += 1
+        return True
+
+    def _do_resume(self, req: Request) -> bool:
+        """Swap a resumable request back in (it already holds its slot and
+        reservation from `next_admission`).  The restore work — host
+        device_put plus the resume jit — is dispatched on the carried
+        device state, so under the double-buffered driver it overlaps the
+        still-running previous megastep; the resumed slot joins the very
+        next dispatch, skipping prefill entirely."""
+        slot = req.slot
+        try:
+            snap = self.host_tier.restore(req.req_id)
+        except HostTierError as e:
+            self.scheduler.retire(slot, "failed", f"swap-in failed: {e}")
+            self._retired.append(req)
+            return False
+        planes = snap.planes
+        if self.mesh is not None:
+            planes = jax.device_put(
+                planes, SP.snapshot_specs(planes, self.mesh))
+        gen = len(req.tokens)
+        self.state, self.table, self.last, self.slots_dev = self._resume_jit(
+            self.state, self.table, self.last, self.slots_dev, planes,
+            jnp.asarray(slot, jnp.int32),
+            jnp.asarray(snap.n_blocks, jnp.int32),
+            jnp.asarray(snap.buf_len, jnp.int32),
+            jnp.asarray(snap.pos, jnp.int32),
+            jnp.asarray(snap.last_token, jnp.int32),
+            jnp.asarray(gen, jnp.int32),
+            jnp.asarray(req.max_new_tokens, jnp.int32))
+        req.resume = False
+        req.admit_t = time.perf_counter()
+        self.resumes += 1
+        return True
+
+    def cancel(self, req: Request) -> None:
+        """Request cancellation; honored at the next megastep harvest
+        boundary (the device may decode a few more speculative tokens that
+        are simply discarded)."""
+        req.cancel_requested = True
 
     def _match_prefix(self, req: Request) -> list:
         """Matched (LRU-trimmed) index chain for ``req``, memoised per
@@ -869,9 +1037,14 @@ class ContinuousEngine:
         discounts them from the reservation) and, if the pool still can't
         fit the request, LRU-evict unreferenced indexed blocks.  Blocks
         aliased by live slots — or about to be, via the head's own matched
-        chain — are shielded; eviction can never free memory in use."""
-        chain = self._match_prefix(head)
-        self.scheduler.set_shared_hint(head, max(len(chain) - 1, 0))
+        chain — are shielded; eviction can never free memory in use.
+
+        A resumable head never aliases (its snapshot restores into fresh
+        private blocks), so it skips the match and keeps shared_hint=0 —
+        only the eviction half applies."""
+        chain = [] if head.resume else self._match_prefix(head)
+        if not head.resume:
+            self.scheduler.set_shared_hint(head, max(len(chain) - 1, 0))
         deficit = (self.scheduler.reserved_blocks
                    + self.scheduler.block_bound(head)
                    + self.scheduler.extra_reserved - self.pool_blocks)
@@ -921,6 +1094,12 @@ class ContinuousEngine:
                 self._prepare_admission(self.scheduler.pending[0])
             req = self.scheduler.next_admission()
             if req is None:
+                return key
+            if req.resume:
+                # host-tier swap-in: no prefill — the restore dispatches on
+                # the carried state (overlapping any in-flight megastep)
+                # and the slot joins the next megastep where it left off
+                self._do_resume(req)
                 return key
             self._prefilling = self._start_prefill(req)
         job = self._prefilling
@@ -972,25 +1151,135 @@ class ContinuousEngine:
         return key
 
     # ------------------------------------------------------------------
-    def submit(self, prompt, max_new_tokens: int) -> Request:
+    def submit(self, prompt, max_new_tokens: int, priority: int = 0,
+               deadline_s: Optional[float] = None) -> Request:
+        """Submit a request; never raises mid-service (unless
+        ``strict=True``) — impossible requests come back with
+        ``status="rejected"`` and a reason so one bad request can't crash
+        a serve loop."""
         prompt = np.asarray(prompt, np.int32)
         total = prompt.shape[0] + max_new_tokens
         if total > self.max_seq:
-            raise ValueError(
+            reason = (
                 f"prompt+generation = {total} tokens exceeds the engine's "
                 f"max_seq {self.max_seq} (block tables hold "
                 f"{self.nbmax} blocks/request)")
-        return self.scheduler.submit(prompt, max_new_tokens)
+            if self.strict:
+                raise ValueError(reason)
+            req = Request(req_id=-1, prompt=prompt,
+                          max_new_tokens=max_new_tokens, priority=priority,
+                          deadline_s=deadline_s,
+                          submit_t=time.perf_counter())
+            return req.finish("rejected", reason)
+        return self.scheduler.submit(prompt, max_new_tokens,
+                                     priority=priority, deadline_s=deadline_s)
 
-    def _retire(self, slot: int):
+    def _retire(self, slot: int, status: str = "ok", reason: str = ""):
         # jitted release: blocks return to the free stack on device, no
         # host sync on the (possibly still in-flight) table; blocks the
         # prefix index still references keep refcount >= 1 and stay put
         self.table = self._release(self.table, jnp.asarray(slot, jnp.int32))
         self._slot_shared.pop(slot, None)
-        req = self.scheduler.retire(slot)
-        req.finish_t = time.perf_counter()
+        req = self.scheduler.retire(slot, status, reason)
         self._retired.append(req)
+
+    # ---- request lifecycle -------------------------------------------
+    def _head_blocked(self) -> bool:
+        """Queue head exists but can't be admitted, even after LRU prefix
+        eviction (the overflow policies' trigger)."""
+        if not self.scheduler.head_blocked():
+            return False
+        if self.prefix is not None and self.scheduler.free_slots \
+                and not self._prefilling:
+            self._prepare_admission(self.scheduler.pending[0])
+        return self.scheduler.head_blocked()
+
+    def _needs_lifecycle(self, blocked: bool) -> bool:
+        """Cheap host-only probe deciding whether to drain the megastep
+        pipeline for a lifecycle sweep this iteration — draining costs the
+        readback overlap, so the steady state (no faults, no cancels, head
+        admissible or merely waiting) never pays it."""
+        if self.fault is not None:
+            return True
+        now = time.perf_counter()
+        if any(r.cancel_requested or r.deadline_exceeded(now)
+               for r in self.scheduler.pending) or \
+           any(r.cancel_requested or r.deadline_exceeded(now)
+               for r in self.scheduler.active.values()):
+            return True
+        if blocked:
+            if self.overflow == "reject":
+                return True
+            if self.overflow == "preempt" \
+                    and self._stall >= self.preempt_patience:
+                return True
+            # watchdog (any mode): nothing running or prefilling can ever
+            # free capacity for the blocked head
+            if not self.scheduler.active and self._prefilling is None:
+                return True
+        return False
+
+    def _drop_pending(self, req: Request, status: str, reason: str = ""):
+        self.scheduler.drop_pending(req, status, reason)
+        if self.host_tier is not None:
+            self.host_tier.discard(req.req_id)
+        self._retired.append(req)
+
+    def _lifecycle(self):
+        """Request-lifecycle sweep, run only at a megastep harvest boundary
+        with an empty pipeline (bookkeeping current, state mutable):
+        fault-injection tick, cancellations, wall-clock deadlines, the
+        overflow policy (preempt to host tier / reject), and the
+        permanently-unadmittable-head watchdog."""
+        if self.fault is not None and hasattr(self.fault, "tick"):
+            self.fault.tick(self)
+        now = time.perf_counter()
+        for req in [r for r in self.scheduler.pending
+                    if r.cancel_requested or r.deadline_exceeded(now)]:
+            if req.cancel_requested:
+                self._drop_pending(req, "cancelled",
+                                   "cancelled before completion")
+            else:
+                self._drop_pending(req, "timed_out", "deadline exceeded")
+        busy = self._prefilling.slot if self._prefilling else None
+        for slot, req in list(self.scheduler.active.items()):
+            if not (req.cancel_requested or req.deadline_exceeded(now)):
+                continue
+            if slot == busy:
+                self._prefilling = None   # abandon the half-done admission
+                busy = None
+            if req.cancel_requested:
+                self._retire(slot, "cancelled", "cancelled before completion")
+            else:
+                self._retire(slot, "timed_out", "deadline exceeded")
+        if not self._head_blocked():
+            self._stall = 0
+            return
+        if self.overflow == "reject":
+            # admission-time rejection baseline: no queueing past capacity
+            self._drop_pending(self.scheduler.pending[0], "rejected",
+                               "pool full")
+            self._stall = 0
+            return
+        if self.overflow == "preempt" and self._stall >= self.preempt_patience:
+            victim = self.scheduler.preemption_victim(
+                exclude=() if busy is None else (busy,))
+            if victim is not None:
+                self._do_preempt(victim)
+                self._stall = 0
+                return
+        if not self.scheduler.active and self._prefilling is None \
+                and self._head_blocked():
+            # watchdog: the head's reservation can never fit (pool fully
+            # drained, prefix eviction exhausted) — fail it, keep serving
+            self._drop_pending(self.scheduler.pending[0], "failed",
+                               "reservation exceeds pool")
+            self._stall = 0
+
+    def _tick_stall(self) -> bool:
+        blocked = self.scheduler.head_blocked()
+        self._stall = self._stall + 1 if blocked else 0
+        return blocked
 
     # ------------------------------------------------------------------
     def step(self, key):
@@ -1002,10 +1291,14 @@ class ContinuousEngine:
         readback with the next megastep instead."""
         with _mesh_scope(self.mesh):
             if not self._use_megastep:
+                if self._needs_lifecycle(self._tick_stall()):
+                    self._lifecycle()
                 return self._step_legacy(key)
             if self._inflight is not None:
                 self._harvest(self._inflight)
                 self._inflight = None
+            if self._needs_lifecycle(self._tick_stall()):
+                self._lifecycle()
             key = self._dispatch(key)
             if self._inflight is not None:
                 self._harvest(self._inflight)
@@ -1030,12 +1323,14 @@ class ContinuousEngine:
                                                  res.last_token)
             n_new = np.asarray(res.n_new)
             toks = np.asarray(res.tokens)
+            nonfinite = np.asarray(res.nonfinite)
             self.host_syncs += 2
         else:
             self.state, self.table, self.last = self._ar(
                 self.params, self.state, self.table, self.last, kr)
             n_new = np.ones((self.max_slots,), np.int64)
             toks = np.asarray(self.last)
+            nonfinite = None
             self.host_syncs += 1
         self.decode_steps += 1
 
@@ -1049,8 +1344,11 @@ class ContinuousEngine:
                 req.max_new_tokens - req.generated)
             req.tokens.extend(int(t) for t in toks[slot, :take])
             req.rounds += 1
+            req.megasteps += 1
             req.proposed += proposed
             req.accepted += accepted
+            if nonfinite is not None:
+                req.numerics_flags += int(nonfinite[slot])
             if req.generated >= req.max_new_tokens:
                 self._retire(slot)
         return key
@@ -1076,7 +1374,7 @@ class ContinuousEngine:
         self.decode_steps += 1
         self._inflight = _InflightMega(
             packed=(res.tokens, res.take, res.proposed, res.accepted,
-                    res.first, res.done),
+                    res.nonfinite, res.first, res.done),
             reqs=decoding,
             emit_first=[s for s, r in decoding.items() if r.pending_first])
         return key
@@ -1084,8 +1382,11 @@ class ContinuousEngine:
     def _harvest(self, flight: _InflightMega):
         """The single blocking device→host transfer per megastep: packed
         per-round tokens/takes/stats plus the tiny first-token and done
-        vectors.  All request bookkeeping happens on the host copies."""
-        toks, take, proposed, accepted, first, done = \
+        vectors.  All request bookkeeping happens on the host copies.
+        Requests that went terminal between dispatch and harvest
+        (cancelled, timed out, preempted away) are guarded by ``req.done``
+        / a stale slot mapping — their speculative tokens are discarded."""
+        toks, take, proposed, accepted, nonfinite, first, done = \
             jax.device_get(flight.packed)
         self.host_syncs += 1
         for slot in flight.emit_first:
@@ -1102,7 +1403,10 @@ class ContinuousEngine:
                 req.rounds += 1
                 req.proposed += int(proposed[k, slot])
                 req.accepted += int(accepted[k, slot])
+                req.numerics_flags += int(nonfinite[k, slot])
         for slot, req in flight.reqs.items():
+            if not req.done:
+                req.megasteps += 1
             if not req.done and bool(done[slot]):
                 self._retire(slot)
 
@@ -1125,6 +1429,15 @@ class ContinuousEngine:
             with _mesh_scope(self.mesh):
                 while self.scheduler.has_work or self._inflight is not None:
                     prev, self._inflight = self._inflight, None
+                    if self._needs_lifecycle(self._tick_stall()):
+                        # drain the pipeline so request bookkeeping is
+                        # current, then sweep cancels/deadlines/overflow —
+                        # the steady state never takes this branch and
+                        # keeps the dispatch-before-harvest overlap
+                        if prev is not None:
+                            self._harvest(prev)
+                            prev = None
+                        self._lifecycle()
                     key = self._dispatch(key)
                     if prev is not None:
                         self._harvest(prev)
@@ -1142,7 +1455,8 @@ class ContinuousEngine:
                              rounds=r.rounds, generated=r.generated,
                              prefill_s=r.prefill_s,
                              decode_s=max(r.finish_t - r.admit_t
-                                          - r.prefill_s, 0.0))
+                                          - r.prefill_s, 0.0),
+                             numerics_flags=r.numerics_flags)
             out.append(GenerationResult(
                 tokens=np.asarray(r.tokens, np.int64)[None, :], stats=stats))
         return out

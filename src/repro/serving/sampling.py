@@ -6,6 +6,14 @@ distribution q and the target verification distribution p — speculative
 sampling then remains exact with respect to the top-p-filtered target
 distribution (the accept/reject ratio p/q is computed on the same
 filtered, renormalized supports).
+
+Numerics guard: every sampling entry point tolerates non-finite logits
+(NaN/Inf from an overflowed matmul or a corrupted cache block).  Poisoned
+rows never reach ``jax.random.categorical`` — non-finite entries are masked
+to ``-1e30`` and a flagged row falls back to greedy-over-finite — so one
+bad request degrades to deterministic output instead of sampling garbage
+token ids (or NaN-propagating into every slot's trajectory).  The per-row
+flags feed the request-level ``numerics_flags`` counters in ``GenStats``.
 """
 
 from __future__ import annotations
@@ -14,6 +22,22 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def sanitize_logits(logits: jnp.ndarray):
+    """Mask non-finite logits; returns ``(safe_logits, bad_row)``.
+
+    ``bad_row`` flags rows (leading dims of the vocab axis) containing any
+    non-finite entry.  Finite entries keep their values; non-finite ones
+    become ``-1e30``.  A row with *no* finite entry becomes uniform zeros
+    so downstream softmax/argmax stay well-defined (argmax → token 0)."""
+    finite = jnp.isfinite(logits)
+    bad_row = ~jnp.all(finite, axis=-1)
+    safe = jnp.where(finite, logits, _NEG_INF)
+    all_bad = ~jnp.any(finite, axis=-1)
+    return jnp.where(all_bad[..., None], jnp.zeros_like(logits), safe), bad_row
 
 
 def top_p_filter(logits: jnp.ndarray, top_p: float) -> jnp.ndarray:
@@ -24,7 +48,11 @@ def top_p_filter(logits: jnp.ndarray, top_p: float) -> jnp.ndarray:
     kept). Membership is decided by *sorted rank*, not by comparing against
     the cutoff logit value — a value comparison (``logits < cutoff``) leaks
     every vocab entry that *ties* the cutoff logit into the kept set.
+
+    Non-finite logits are sanitized first (NaN sorts unpredictably and a
+    single NaN poisons the whole cumulative mass).
     """
+    logits, _ = sanitize_logits(logits)
     order = jnp.argsort(logits, axis=-1)[..., ::-1]          # descending
     sorted_logits = jnp.take_along_axis(logits, order, axis=-1)
     probs = jax.nn.softmax(sorted_logits, axis=-1)
@@ -45,9 +73,19 @@ def maybe_top_p(logits: jnp.ndarray, top_p: Optional[float]) -> jnp.ndarray:
 
 
 def sample_token(logits: jnp.ndarray, key, greedy: bool = False,
-                 top_p: Optional[float] = None):
-    """logits [B, V] or [B, K, V] -> [B] or [B, K]."""
+                 top_p: Optional[float] = None, return_flags: bool = False):
+    """logits [B, V] or [B, K, V] -> [B] or [B, K].
+
+    Rows carrying non-finite logits fall back to greedy-over-finite (the
+    sanitized argmax) instead of sampling from a poisoned distribution;
+    ``return_flags=True`` additionally returns the per-row flag mask so the
+    engines can count numerics incidents per request."""
+    safe, bad = sanitize_logits(logits)
+    fallback = jnp.argmax(safe, axis=-1).astype(jnp.int32)
     if greedy:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    return jax.random.categorical(key, maybe_top_p(logits, top_p),
-                                  axis=-1).astype(jnp.int32)
+        tok = fallback
+    else:
+        sampled = jax.random.categorical(key, maybe_top_p(safe, top_p),
+                                         axis=-1).astype(jnp.int32)
+        tok = jnp.where(bad, fallback, sampled)
+    return (tok, bad) if return_flags else tok

@@ -19,15 +19,33 @@ Admission is capacity-safe: a request is only admitted when the block pool
 can hold its **worst-case** footprint (every token of prompt + generation
 quantized), so the free stack can never underflow mid-decode, no matter
 how the ragged flush schedules interleave.
+
+Request lifecycle (PR 7): every request ends in exactly one terminal
+status — ``ok | rejected | cancelled | failed | timed_out`` — instead of
+exceptions escaping the serve loop.  ``submit`` rejects (bounded queue,
+impossible reservations, oversized prompts) by *returning* the request
+with ``status="rejected"`` and a reason; the legacy raise survives behind
+``strict=True`` for tests.  Preemption support: when the engine runs in
+``overflow="preempt"`` mode, :meth:`Scheduler.preempt` evicts a running
+slot back to the queue *front* as a resumable request (its KV snapshot
+lives in the host tier — core/host_tier.py) and
+:meth:`preemption_victim` picks who goes: lowest priority first, then the
+youngest admission, never a slot that hasn't decoded a megastep since it
+was (re)admitted — that guarantee is what bounds preemption ping-pong to
+round-robin time-slicing with forward progress.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Deque, Dict, List, NamedTuple, Optional
 
 import numpy as np
+
+#: terminal request statuses (``Request.done`` is True iff one of these)
+TERMINAL = ("ok", "rejected", "cancelled", "failed", "timed_out")
 
 
 class SlotState(NamedTuple):
@@ -62,6 +80,24 @@ class Request:
     req_id: int
     prompt: np.ndarray                  # [S] i32
     max_new_tokens: int
+    # -- lifecycle ----------------------------------------------------------
+    # "queued" → "running" → a terminal status from TERMINAL; ``reason``
+    # explains non-ok endings ("queue full", "reservation exceeds pool",
+    # "deadline exceeded", transfer/corruption details, ...)
+    status: str = "queued"
+    reason: str = ""
+    priority: int = 0                   # higher = preempted later
+    deadline_s: Optional[float] = None  # wall-clock budget from submit()
+    submit_t: float = 0.0
+    cancel_requested: bool = False
+    # preempt/resume: a resumable request re-enters the queue front with its
+    # KV snapshot in the host tier; on admission it skips prefill entirely
+    resume: bool = False
+    preemptions: int = 0
+    admit_seq: int = -1                 # monotonic admission counter
+    megasteps: int = 0                  # harvests since (re)admission
+    numerics_flags: int = 0             # non-finite logit rows (sampling
+                                        # fell back to greedy-over-finite)
     # -- runtime ------------------------------------------------------------
     slot: Optional[int] = None
     tokens: List[int] = dataclasses.field(default_factory=list)
@@ -98,15 +134,40 @@ class Request:
     def generated(self) -> int:
         return len(self.tokens)
 
+    def deadline_exceeded(self, now: Optional[float] = None) -> bool:
+        if self.deadline_s is None:
+            return False
+        return (time.perf_counter() if now is None else now) \
+            - self.submit_t > self.deadline_s
+
+    def finish(self, status: str, reason: str = "") -> "Request":
+        """Mark terminal (idempotent: the first terminal status wins)."""
+        assert status in TERMINAL, status
+        if not self.done:
+            self.status = status
+            self.reason = reason
+            self.done = True
+            self.finish_t = time.perf_counter()
+        return self
+
 
 class Scheduler:
     """FCFS continuous-batching scheduler over ``num_slots`` request slots
-    and a pool of ``pool_blocks`` KV blocks (block size ``group``)."""
+    and a pool of ``pool_blocks`` KV blocks (block size ``group``).
 
-    def __init__(self, num_slots: int, pool_blocks: int, group: int):
+    ``max_pending`` bounds the queue (admission backpressure: submissions
+    past it come back ``rejected: queue full`` instead of growing host
+    memory without bound).  ``strict=True`` restores the legacy behavior of
+    raising ``ValueError`` on impossible submissions — useful in tests; a
+    serve loop wants the non-raising default."""
+
+    def __init__(self, num_slots: int, pool_blocks: int, group: int,
+                 max_pending: Optional[int] = None, strict: bool = False):
         self.num_slots = num_slots
         self.pool_blocks = pool_blocks
         self.group = group
+        self.max_pending = max_pending
+        self.strict = strict
         self.pending: Deque[Request] = deque()
         self.active: Dict[int, Request] = {}
         self.free_slots = list(range(num_slots))
@@ -120,19 +181,33 @@ class Scheduler:
         # conservative double-count never admits past the pool)
         self.extra_reserved = 0
         self._next_id = 0
+        self._admit_seq = 0
 
     # ------------------------------------------------------------------
-    def submit(self, prompt: np.ndarray, max_new_tokens: int) -> Request:
+    def _reject(self, req: Request, reason: str) -> Request:
+        if self.strict:
+            raise ValueError(reason)
+        return req.finish("rejected", reason)
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int,
+               priority: int = 0,
+               deadline_s: Optional[float] = None) -> Request:
         req = Request(req_id=self._next_id, prompt=np.asarray(prompt),
-                      max_new_tokens=max_new_tokens)
+                      max_new_tokens=max_new_tokens, priority=priority,
+                      deadline_s=deadline_s, submit_t=time.perf_counter())
+        self._next_id += 1
         bound = self.block_bound(req)
         if bound > self.pool_blocks:
             # would never be admissible — with FCFS it would livelock the
             # queue, so reject at submission time
-            raise ValueError(
+            return self._reject(
+                req,
                 f"request needs up to {bound} KV blocks but the pool has "
                 f"{self.pool_blocks}; shorten the request or grow the pool")
-        self._next_id += 1
+        if self.max_pending is not None \
+                and len(self.pending) >= self.max_pending:
+            return self._reject(
+                req, f"queue full ({self.max_pending} pending)")
         self.pending.append(req)
         return req
 
@@ -167,16 +242,76 @@ class Scheduler:
         self.active[req.slot] = req
         req.reserved = bound
         self.reserved_blocks += bound
+        req.status = "running"
+        req.admit_seq = self._admit_seq
+        self._admit_seq += 1
+        req.megasteps = 0
         return req
 
-    def retire(self, slot: int) -> Request:
+    def head_blocked(self) -> bool:
+        """True when a queue head exists but cannot be admitted right now
+        (no free slot, or the worst-case reservation doesn't fit)."""
+        if not self.pending:
+            return False
+        if not self.free_slots:
+            return True
+        head = self.pending[0]
+        return self.reserved_blocks + self.block_bound(head) \
+            + self.extra_reserved > self.pool_blocks
+
+    def retire(self, slot: int, status: str = "ok",
+               reason: str = "") -> Request:
         req = self.active.pop(slot)
-        req.done = True
+        req.finish(status, reason)
+        req.slot = None
         self.free_slots.append(slot)
         self.free_slots.sort()
         self.reserved_blocks -= (req.reserved if req.reserved is not None
                                  else self.block_bound(req))
+        req.reserved = None
         return req
+
+    # ---- preemption ---------------------------------------------------
+    def preemption_victim(self, exclude=()) -> Optional[int]:
+        """Slot to preempt for the blocked queue head, or None.
+
+        Lowest priority first, youngest admission among ties — and only
+        slots that have decoded at least one megastep since (re)admission,
+        so every preemption cycle nets forward progress (bounded
+        round-robin time-slicing instead of livelock)."""
+        cands = [(req.priority, -req.admit_seq, slot)
+                 for slot, req in self.active.items()
+                 if slot not in exclude and req.megasteps >= 1]
+        return min(cands)[2] if cands else None
+
+    def preempt(self, slot: int) -> Request:
+        """Evict a running slot back to the queue *front* as resumable:
+        its reservation is released (the engine returns the actual blocks
+        via `release_slot` after snapshotting them to the host tier) and it
+        re-reserves the full un-discounted bound at resume — the snapshot
+        restores into freshly popped private blocks, never aliases."""
+        req = self.active.pop(slot)
+        self.free_slots.append(slot)
+        self.free_slots.sort()
+        self.reserved_blocks -= (req.reserved if req.reserved is not None
+                                 else self.block_bound(req))
+        req.reserved = None
+        req.slot = None
+        req.resume = True
+        req.shared_hint = 0
+        req.preemptions += 1
+        req.status = "queued"
+        self.pending.appendleft(req)
+        return req
+
+    def drop_pending(self, req: Request, status: str,
+                     reason: str = "") -> Request:
+        """Remove a queued request (cancel / deadline / watchdog)."""
+        try:
+            self.pending.remove(req)
+        except ValueError:
+            pass
+        return req.finish(status, reason)
 
     @property
     def has_work(self) -> bool:

@@ -1,0 +1,128 @@
+"""Deterministic fault-injection harness for the serving engine.
+
+The engine exposes three hook points, all driven by a single
+:class:`FaultInjector` instance passed as ``ContinuousEngine(fault=...)``:
+
+* ``tick(engine)`` — called at every lifecycle sweep, which (because a
+  non-None ``fault`` forces ``_needs_lifecycle`` True) means every driver
+  iteration, always at a harvest boundary with the megastep pipeline
+  drained.  The injector can mutate engine state safely here: schedule
+  cancellations, force preemption storms, flip counters.
+* ``transfer(op, req_id)`` — called by :class:`~repro.core.host_tier
+  .HostTier` before every offload/restore transfer; raising
+  :class:`~repro.core.host_tier.TransferError` simulates a failed DMA.
+  The tier retries with exponential backoff, so an injector that fails
+  fewer than ``max_retries`` times exercises the retry path and one that
+  always fails exercises the permanent-failure → ``failed`` status path.
+* ``mangle(req_id, planes)`` — called on the materialized (host, numpy)
+  snapshot *after* its checksum is recorded; corrupting bytes here
+  simulates bitrot between offload and restore and must be caught by the
+  restore-time checksum verification.
+
+Everything is deterministic: failures are scheduled by count/req-id, not
+sampled, and the event log records exactly what fired in what order so
+tests can assert on the sequence.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.host_tier import TransferError
+
+#: wildcard request id for schedule keys
+ANY = None
+
+
+class FaultInjector:
+    """Scriptable failure schedule + event log (see module docstring)."""
+
+    def __init__(self):
+        self.events: List[tuple] = []
+        self.ticks = 0
+        # (op, req_id|ANY) -> remaining injected failures for that key
+        self._transfer_failures: Dict[Tuple[str, Optional[int]], int] = {}
+        self._corrupt: set = set()          # req ids (or ANY) to mangle
+        self._cancel_at: List[Tuple[int, object]] = []   # (tick, request)
+        self._storm = 0                     # forced preemptions remaining
+
+    # ---- schedule builders (chainable) --------------------------------
+    def fail_transfers(self, op: str = "offload", req_id: Optional[int] = ANY,
+                       count: int = 1) -> "FaultInjector":
+        """Fail the next ``count`` ``op`` transfers (for ``req_id``, or any
+        request).  ``count`` <= HostTier.max_retries → transient (the retry
+        loop absorbs it); larger → permanent failure for that transfer."""
+        key = (op, req_id)
+        self._transfer_failures[key] = \
+            self._transfer_failures.get(key, 0) + count
+        return self
+
+    def corrupt_snapshot(self, req_id: Optional[int] = ANY) -> "FaultInjector":
+        """Mangle ``req_id``'s (or every) materialized snapshot so its
+        restore-time checksum verification must refuse the swap-in."""
+        self._corrupt.add(req_id)
+        return self
+
+    def cancel_after(self, req, ticks: int) -> "FaultInjector":
+        """Request mid-stream cancellation ``ticks`` lifecycle sweeps from
+        now (tick 0 = the next sweep)."""
+        self._cancel_at.append((self.ticks + ticks, req))
+        return self
+
+    def preemption_storm(self, count: int) -> "FaultInjector":
+        """Force the next ``count`` sweeps to each preempt one running slot
+        (if any is eligible), regardless of pool pressure."""
+        self._storm += count
+        return self
+
+    # ---- engine hooks --------------------------------------------------
+    def tick(self, engine) -> None:
+        self.ticks += 1
+        due = [(t, r) for t, r in self._cancel_at if self.ticks >= t]
+        for item in due:
+            self._cancel_at.remove(item)
+            engine.cancel(item[1])
+            self.events.append(("cancel", item[1].req_id, self.ticks))
+        if self._storm > 0:
+            busy = engine._prefilling.slot if engine._prefilling else None
+            victim = engine.scheduler.preemption_victim(
+                exclude=() if busy is None else (busy,))
+            if victim is not None:
+                self._storm -= 1
+                req_id = engine.scheduler.active[victim].req_id
+                engine._do_preempt(victim)
+                self.events.append(("preempt", req_id, self.ticks))
+
+    def transfer(self, op: str, req_id: int) -> None:
+        for key in ((op, req_id), (op, ANY)):
+            if self._transfer_failures.get(key, 0) > 0:
+                self._transfer_failures[key] -= 1
+                self.events.append(("transfer_fail", op, req_id))
+                raise TransferError(
+                    f"injected {op} failure for request {req_id}")
+
+    def mangle(self, req_id: int, planes):
+        if req_id not in self._corrupt and ANY not in self._corrupt:
+            return planes
+        # device_get hands back read-only (zero-copy) arrays: rebuild the
+        # tree with the first leaf's first byte flipped in a writable copy
+        done = [False]
+
+        def rec(x):
+            if isinstance(x, dict):
+                return {k: rec(v) for k, v in x.items()}
+            if isinstance(x, (list, tuple)):
+                out = [rec(v) for v in x]
+                return out if isinstance(x, list) else tuple(out)
+            if not done[0]:
+                done[0] = True
+                arr = np.array(x)
+                arr.reshape(-1).view(np.uint8)[0] ^= 0xFF
+                return arr
+            return x
+
+        out = rec(planes)
+        self.events.append(("mangle", req_id))
+        return out

@@ -1,0 +1,222 @@
+"""Fault-injection suite: no failure mode may crash the serve loop.
+
+Every scenario drives ``ContinuousEngine.run()`` to completion under an
+injected fault schedule (tests/fault_injection.py) and asserts (a) the
+affected request lands in exactly the right terminal status, (b) every
+*other* request still completes ``ok`` with greedy outputs token-identical
+to an unconstrained reference, and (c) the pool is fully drained — no
+leaked blocks, no exception escaping ``run()``.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from fault_injection import ANY, FaultInjector
+from repro.configs import get_config
+from repro.core.host_tier import HostTier, SnapshotCorruptionError
+from repro.models.stack import StackModel
+from repro.serving.engine import ContinuousEngine
+
+MAX_NEW = 8
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("tiny-lm", smoke=True)
+    model = StackModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def make_prompts(cfg, lens):
+    return [np.asarray(jax.random.randint(
+        jax.random.fold_in(jax.random.PRNGKey(1), i), (s,), 0,
+        cfg.vocab_size)) for i, s in enumerate(lens)]
+
+
+def setup(tiny, *, oversub=True, fault=None, max_new=MAX_NEW,
+          max_slots=2, **kw):
+    """Engine + prompts; ``oversub=True`` sizes the pool to ~1.5 requests'
+    worth of blocks so the 4-request workload must preempt to finish."""
+    cfg, model, params = tiny
+    G = cfg.group_size
+    lens = [2 * G + 5, G + 3, 17, 9]
+    max_seq = max(lens) + max_new + 2 * G + 8
+    nb = -(-(max(lens) + max_new) // G)
+    eng = ContinuousEngine(
+        model, params, gamma=3, greedy=True, max_slots=max_slots,
+        max_seq=max_seq, pool_blocks=(nb + nb // 2) if oversub else None,
+        overflow="preempt", preempt_patience=2, fault=fault, **kw)
+    return eng, make_prompts(cfg, lens)
+
+
+@pytest.fixture(scope="module")
+def reference(tiny):
+    """Unconstrained-pool greedy outputs for the shared 4-prompt workload."""
+    eng, prompts = setup(tiny, oversub=False)
+    reqs = [eng.submit(p, MAX_NEW) for p in prompts]
+    eng.run(jax.random.PRNGKey(7))
+    assert all(r.status == "ok" for r in reqs)
+    return [list(r.tokens) for r in reqs]
+
+
+def check_drained(eng):
+    assert int(eng.table.free_top) == eng.pool_blocks
+    assert not bool(np.asarray(eng.table.active).any())
+    assert eng.scheduler.reserved_blocks == 0
+    assert not eng.scheduler.has_work
+    if eng.host_tier is not None:
+        assert len(eng.host_tier) == 0
+
+
+class TestTransferFaults:
+    def test_transient_failure_retried_to_success(self, tiny, reference):
+        """Failures below the retry budget are absorbed: every request
+        still completes ``ok``, token-identical, with retries logged."""
+        fault = FaultInjector().fail_transfers("offload", count=2)
+        eng, prompts = setup(tiny, fault=fault)
+        reqs = [eng.submit(p, MAX_NEW) for p in prompts]
+        eng.run(jax.random.PRNGKey(7))
+        assert [r.status for r in reqs] == ["ok"] * 4
+        assert eng.host_tier.retries >= 2
+        assert any(e[0] == "transfer_fail" for e in fault.events)
+        for r, ref in zip(reqs, reference):
+            assert list(r.tokens) == ref
+        check_drained(eng)
+
+    def test_permanent_offload_failure_fails_victim_only(self, tiny):
+        """A transfer that outlives the retry budget fails *that* request
+        (status ``failed``, reason recorded); the rest still finish."""
+        fault = FaultInjector().fail_transfers("offload", count=10_000)
+        eng, prompts = setup(tiny, fault=fault)
+        reqs = [eng.submit(p, MAX_NEW) for p in prompts]
+        eng.run(jax.random.PRNGKey(7))
+        failed = [r for r in reqs if r.status == "failed"]
+        assert failed and all("offload failed" in r.reason for r in failed)
+        assert all(r.status == "ok" for r in reqs if r not in failed)
+        check_drained(eng)
+
+    def test_swapin_corruption_refused(self, tiny):
+        """Post-offload bitrot is caught by the restore checksum: the
+        corrupted request fails with a swap-in reason, nothing else."""
+        fault = FaultInjector().corrupt_snapshot(ANY)
+        eng, prompts = setup(tiny, fault=fault)
+        reqs = [eng.submit(p, MAX_NEW) for p in prompts]
+        eng.run(jax.random.PRNGKey(7))
+        failed = [r for r in reqs if r.status == "failed"]
+        assert failed and all(r.reason.startswith("swap-in failed")
+                              for r in failed)
+        assert all(r.status == "ok" for r in reqs if r not in failed)
+        assert any(e[0] == "mangle" for e in fault.events)
+        check_drained(eng)
+
+
+class TestLifecycle:
+    def test_midstream_cancel(self, tiny):
+        fault = FaultInjector()
+        eng, prompts = setup(tiny, oversub=False, fault=fault, max_new=64)
+        reqs = [eng.submit(p, 64) for p in prompts[:2]]
+        fault.cancel_after(reqs[0], 6)
+        eng.run(jax.random.PRNGKey(7))
+        assert reqs[0].status == "cancelled"
+        assert len(reqs[0].tokens) < 64       # stopped mid-stream
+        assert reqs[1].status == "ok" and len(reqs[1].tokens) == 64
+        check_drained(eng)
+
+    def test_cancel_queued_request(self, tiny):
+        fault = FaultInjector()
+        eng, prompts = setup(tiny, oversub=False, fault=fault,
+                             max_slots=1)
+        reqs = [eng.submit(p, MAX_NEW) for p in prompts[:3]]
+        fault.cancel_after(reqs[2], 1)   # still queued behind 1 slot
+        eng.run(jax.random.PRNGKey(7))
+        assert reqs[2].status == "cancelled" and reqs[2].tokens == []
+        assert all(r.status == "ok" for r in reqs[:2])
+        check_drained(eng)
+
+    def test_deadline_timeout(self, tiny):
+        eng, prompts = setup(tiny, oversub=False, max_new=256)
+        slow = eng.submit(prompts[0], 256, deadline_s=1e-4)
+        ok = eng.submit(prompts[1], MAX_NEW)
+        eng.run(jax.random.PRNGKey(7))
+        assert slow.status == "timed_out" and "deadline" in slow.reason
+        assert ok.status == "ok" and len(ok.tokens) == MAX_NEW
+        check_drained(eng)
+
+    def test_preemption_storm_token_identity(self, tiny, reference):
+        """Forced preemptions with no pool pressure: pure scheduling noise
+        that must not change a single greedy token."""
+        fault = FaultInjector().preemption_storm(3)
+        eng, prompts = setup(tiny, oversub=False, fault=fault)
+        reqs = [eng.submit(p, MAX_NEW) for p in prompts]
+        eng.run(jax.random.PRNGKey(7))
+        assert eng.preempts >= 3 and eng.resumes >= 3
+        assert [r.status for r in reqs] == ["ok"] * 4
+        for r, ref in zip(reqs, reference):
+            assert list(r.tokens) == ref
+        check_drained(eng)
+
+
+class TestAdmissionHardening:
+    def test_submit_rejects_without_raising(self, tiny):
+        eng, prompts = setup(tiny, oversub=False)
+        huge = eng.submit(np.zeros(eng.max_seq, np.int32), 8)
+        assert huge.status == "rejected" and "max_seq" in huge.reason
+        assert not eng.scheduler.has_work   # never queued
+
+    def test_submit_strict_raises(self, tiny):
+        eng, prompts = setup(tiny, oversub=False, strict=True)
+        with pytest.raises(ValueError):
+            eng.submit(np.zeros(eng.max_seq, np.int32), 8)
+
+    def test_queue_backpressure(self, tiny):
+        eng, prompts = setup(tiny, oversub=False, max_pending=1)
+        a = eng.submit(prompts[0], MAX_NEW)
+        b = eng.submit(prompts[1], MAX_NEW)   # queue is bounded at 1
+        assert a.status == "queued"
+        assert b.status == "rejected" and "queue full" in b.reason
+        eng.run(jax.random.PRNGKey(7))
+        assert a.status == "ok"
+        check_drained(eng)
+
+    def test_watchdog_fails_unadmittable_head(self, tiny):
+        """Regression: a queued request whose reservation can never fit
+        (here: the pool is held by phantom index retains) used to spin
+        ``run()`` forever — it must fail fast and terminate instead."""
+        eng, prompts = setup(tiny, oversub=False)
+        req = eng.submit(prompts[0], MAX_NEW)
+        eng.scheduler.extra_reserved = eng.pool_blocks   # nothing can fit
+        done = eng.run(jax.random.PRNGKey(7))
+        assert req in done
+        assert req.status == "failed"
+        assert "reservation exceeds pool" in req.reason
+        assert not eng.scheduler.has_work
+
+
+class TestHostTierUnit:
+    def test_bit_exact_roundtrip(self):
+        import jax.numpy as jnp
+        planes = [{"k_upper": np.arange(24, dtype=np.uint8).reshape(2, 3, 4),
+                   "buf_k": np.linspace(0, 1, 12, dtype=np.float32)}]
+        tier = HostTier()
+        tier.offload(7, [{k: jnp.asarray(v) for k, v in d.items()}
+                         for d in planes], n_blocks=2, buf_len=3,
+                     pos=16, last_token=5)
+        snap = tier.restore(7)
+        assert snap.n_blocks == 2 and snap.pos == 16 and snap.last_token == 5
+        np.testing.assert_array_equal(snap.planes[0]["k_upper"],
+                                      planes[0]["k_upper"])
+        np.testing.assert_array_equal(snap.planes[0]["buf_k"],
+                                      planes[0]["buf_k"])
+        assert 7 not in tier and tier.bytes_offloaded == snap.nbytes > 0
+
+    def test_corruption_detected(self):
+        tier = HostTier()
+        tier.offload(3, [{"p": np.zeros(8, np.uint8)}], n_blocks=1,
+                     buf_len=0, pos=8, last_token=0)
+        snap = tier.materialize(3)
+        snap.planes[0]["p"][0] = 1          # bitrot after checksum
+        with pytest.raises(SnapshotCorruptionError):
+            tier.restore(3)
+        assert 3 not in tier                # refused snapshots are dropped

@@ -127,6 +127,12 @@ class TestScheduler:
 
     def test_impossible_request_rejected_at_submit(self):
         sched = Scheduler(num_slots=2, pool_blocks=3, group=8)
+        req = sched.submit(np.zeros(24, np.int32), 8)    # bound 4 > pool 3
+        assert req.status == "rejected" and req.done
+        assert "pool" in req.reason and not sched.pending
+
+    def test_impossible_request_raises_when_strict(self):
+        sched = Scheduler(num_slots=2, pool_blocks=3, group=8, strict=True)
         with pytest.raises(ValueError):                  # bound 4 > pool 3
             sched.submit(np.zeros(24, np.int32), 8)
 
@@ -143,5 +149,10 @@ class TestScheduler:
         G = cfg.group_size
         eng = ContinuousEngine(model, params, gamma=2, greedy=True,
                                max_slots=1, max_seq=2 * G)
+        req = eng.submit(np.zeros(2 * G, np.int32), 8)
+        assert req.status == "rejected" and "max_seq" in req.reason
+        assert not eng.scheduler.has_work
+        strict = ContinuousEngine(model, params, gamma=2, greedy=True,
+                                  max_slots=1, max_seq=2 * G, strict=True)
         with pytest.raises(ValueError):
-            eng.submit(np.zeros(2 * G, np.int32), 8)
+            strict.submit(np.zeros(2 * G, np.int32), 8)

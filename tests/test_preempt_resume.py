@@ -1,0 +1,134 @@
+"""Preempt-to-host-tier + resume: graceful degradation must be invisible.
+
+Under ``overflow="preempt"`` a pool sized for ~1.5 requests still has to
+complete a 4-request workload: the engine swaps a victim's quantized
+blocks to host memory (core/host_tier.py), serves the queue head, and
+swaps the victim back into freshly popped blocks.  The swap is bit-exact,
+so greedy outputs must be **token-identical** to an unconstrained-pool
+run — on one device and on the host8 mesh, with and without the prefix
+cache — and a resumed request must skip prefill entirely.
+
+The mesh classes need 8 forced host-platform devices:
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.mesh import make_host_mesh
+from repro.models.stack import StackModel
+from repro.serving.engine import ContinuousEngine
+
+NDEV = jax.device_count()
+needs_mesh = pytest.mark.skipif(
+    NDEV < 8, reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+MAX_NEW = 8
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("tiny-lm", smoke=True)
+    model = StackModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    if NDEV < 8:
+        pytest.skip("needs 8 host devices")
+    return make_host_mesh(4, 2)
+
+
+def workload(cfg):
+    G = cfg.group_size
+    lens = [2 * G + 5, G + 3, 17, 9]
+    prompts = [np.asarray(jax.random.randint(
+        jax.random.fold_in(jax.random.PRNGKey(1), i), (s,), 0,
+        cfg.vocab_size)) for i, s in enumerate(lens)]
+    return prompts, max(lens) + MAX_NEW + 2 * G + 8
+
+
+def make_engine(tiny, *, oversub, **kw):
+    cfg, model, params = tiny
+    prompts, max_seq = workload(cfg)
+    nb = -(-(max(len(p) for p in prompts) + MAX_NEW) // cfg.group_size)
+    eng = ContinuousEngine(
+        model, params, gamma=3, greedy=True, max_slots=2, max_seq=max_seq,
+        pool_blocks=(nb + nb // 2) if oversub else None,
+        overflow="preempt", preempt_patience=2, **kw)
+    return eng, prompts
+
+
+@pytest.fixture(scope="module")
+def reference(tiny):
+    eng, prompts = make_engine(tiny, oversub=False)
+    reqs = [eng.submit(p, MAX_NEW) for p in prompts]
+    eng.run(jax.random.PRNGKey(7))
+    assert all(r.status == "ok" for r in reqs)
+    return reqs
+
+
+def run_oversubscribed(tiny, reference, **kw):
+    eng, prompts = make_engine(tiny, oversub=True, **kw)
+    reqs = [eng.submit(p, MAX_NEW) for p in prompts]
+    eng.run(jax.random.PRNGKey(7))
+    assert eng.preempts >= 1 and eng.resumes >= 1
+    assert all(r.status == "ok" for r in reqs)
+    for i, (r, ref) in enumerate(zip(reqs, reference)):
+        np.testing.assert_array_equal(r.tokens, ref.tokens,
+                                      err_msg=f"request {i}")
+    # drained: every block back on the free stack, host tier empty
+    assert int(eng.table.free_top) == eng.pool_blocks
+    assert not bool(np.asarray(eng.table.active).any())
+    assert len(eng.host_tier) == 0
+    return eng, reqs
+
+
+class TestSingleDevice:
+    def test_token_identity_under_oversubscription(self, tiny, reference):
+        run_oversubscribed(tiny, reference)
+
+    def test_token_identity_with_prefix_cache(self, tiny, reference):
+        eng, _ = run_oversubscribed(tiny, reference, prefix_cache=True)
+        assert eng.prefix is not None
+
+    def test_resume_skips_prefill(self, tiny, reference):
+        """A resumed request re-enters decode directly: its chunked-prefill
+        counter never moves past the original admission."""
+        eng, reqs = run_oversubscribed(tiny, reference)
+        preempted = [r for r in reqs if r.preemptions > 0]
+        assert preempted
+        for r, ref in zip(reqs, reference):
+            assert r.prefill_chunks == ref.prefill_chunks, \
+                f"request {r.req_id} re-ran prefill after resume"
+
+    def test_wait_mode_is_legacy_fcfs(self, tiny, reference):
+        """overflow='wait' must still finish (head waits for retirements)
+        without ever preempting."""
+        cfg, model, params = tiny
+        prompts, max_seq = workload(cfg)
+        nb = -(-(max(len(p) for p in prompts) + MAX_NEW) // cfg.group_size)
+        eng = ContinuousEngine(
+            model, params, gamma=3, greedy=True, max_slots=2,
+            max_seq=max_seq, pool_blocks=nb + nb // 2, overflow="wait")
+        reqs = [eng.submit(p, MAX_NEW) for p in prompts]
+        eng.run(jax.random.PRNGKey(7))
+        assert eng.preempts == 0 and eng.host_tier is None
+        assert all(r.status == "ok" for r in reqs)
+        for r, ref in zip(reqs, reference):
+            np.testing.assert_array_equal(r.tokens, ref.tokens)
+
+
+class TestHost8Mesh:
+    @needs_mesh
+    def test_token_identity_under_oversubscription(self, tiny, reference,
+                                                   mesh):
+        run_oversubscribed(tiny, reference, mesh=mesh)
+
+    @needs_mesh
+    def test_token_identity_with_prefix_cache(self, tiny, reference, mesh):
+        run_oversubscribed(tiny, reference, mesh=mesh, prefix_cache=True)

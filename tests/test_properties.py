@@ -103,8 +103,10 @@ class TestPrefixShareLifecycle:
     """Refcounted block lifecycle under random interleavings of the engine's
     primitives: admission pops (`alloc_blocks` / `plan_prefill_chunk`),
     prefix aliasing (`share_blocks`), index retention (`retain_blocks`),
-    retirement (`free_slot` and the jitted `release_slot`), and index
-    eviction (`evict_blocks`).
+    retirement (`free_slot` and the jitted `release_slot`), index
+    eviction (`evict_blocks`), and preempt-to-host-tier offload/resume
+    (the refcount-aware release at preemption followed by
+    `adopt_blocks` popping fresh private blocks at swap-in).
 
     Invariants checked after every op against a pure-python ownership model:
 
@@ -141,10 +143,12 @@ class TestPrefixShareLifecycle:
         owners = {b: set() for b in range(P)}
         slots = {}            # slot -> dict(pos=<host tokens>, chunked=bool)
         indexed = []          # block ids the index references (insert order)
+        suspended = []        # host-tier snapshots: block counts to re-adopt
 
         for _ in range(data.draw(st.integers(1, 25), label="n_ops")):
             op = data.draw(st.sampled_from(
-                ["alloc", "share", "chunk", "index", "retire", "evict"]),
+                ["alloc", "share", "chunk", "index", "retire", "evict",
+                 "preempt", "resume"]),
                 label="op")
             idle = [s for s in range(R) if s not in slots]
             free = int(table.free_top)
@@ -206,6 +210,26 @@ class TestPrefixShareLifecycle:
                 for b in victims:
                     owners[b].discard("index")
                 indexed = indexed[:-k]
+            elif op == "preempt" and slots:
+                # engine preemption: snapshot the byte planes (no table
+                # effect), then the refcount-aware release — blocks the
+                # index retains survive, the rest return to the stack
+                slot = sorted(slots)[0]
+                suspended.append(int(table.blocks[slot]))
+                table = release(table, jnp.asarray(slot, jnp.int32))
+                for o in owners.values():
+                    o.discard(("slot", slot))
+                del slots[slot]
+            elif op == "resume" and suspended and idle:
+                n = suspended[0]
+                if n > free:
+                    continue        # head stays blocked; snapshot kept
+                suspended.pop(0)
+                slot = idle[0]
+                table, ids = PC.adopt_blocks(table, slot, n, n * G, n * G)
+                for b in np.asarray(ids)[:n]:
+                    owners[int(b)].add(("slot", slot))
+                slots[slot] = dict(pos=None, chunked=False)
             self._check(table, owners)
 
         # full drain: retire every slot, evict the whole index

@@ -3,6 +3,17 @@
     PYTHONPATH=src python benchmarks/overload_bench.py [--smoke]
         [--json BENCH_overload.json]
 
+``--tiers`` switches to the three-tier hierarchy benchmark
+(``BENCH_recovery.json``): a 2x-oversubscribed wave is forced through
+device → host → disk with burst preemption storms and a 1-byte host
+capacity, then measured twice on the *same warmed engine* — speculative
+prefetch off vs on — comparing the per-resume swap-in blocking time (the
+acceptance bar: prefetch-on must block strictly less than
+dispatch-at-admission).  A final wave is crashed mid-flight after a
+checkpoint and timed through ``recover()`` + replay to completion, with
+greedy outputs verified token-identical to an unconstrained reference in
+every wave.
+
 A request wave whose worst-case KV footprint is ~2x the block pool is
 driven through three engines over identical prompts:
 
@@ -72,18 +83,214 @@ def _run(model, params, prompts, max_new, max_seq, gamma, *, pool, overflow):
     return row, {r.req_id: list(r.tokens) for r in ok}
 
 
+def _workload(args):
+    cfg = bench_config()
+    model = StackModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))  # scheduling cost, not quality
+    G = cfg.group_size
+    data = corpus()
+    key = jax.random.PRNGKey(5)
+    n_req = args.requests or (6 if args.smoke else 12)
+    max_new = args.max_new or (24 if args.smoke else 48)
+    lens = [(2 + i % 3) * G + 5 + 3 * i for i in range(n_req)]
+    prompts = [np.asarray(data.sample(jax.random.fold_in(key, i), 1, s)[0])
+               for i, s in enumerate(lens)]
+    max_seq = max(lens) + max_new + 2 * G + 8
+    bounds = [-(-(s + max_new) // G) for s in lens]
+    pool = max(int(round(sum(bounds) / args.oversub)), max(bounds) + 1)
+    return cfg, model, params, prompts, max_new, max_seq, bounds, pool
+
+
+def run_tiers(args):
+    """Three-tier spill/prefetch/recovery benchmark (see module docstring);
+    writes ``BENCH_recovery.json``-style output to ``args.json``."""
+    import os
+    import tempfile
+
+    sys.path.insert(0, "tests")   # the deterministic fault harness lives here
+    from fault_injection import FaultInjector  # noqa: E402
+    from repro.serving import journal as J  # noqa: E402
+
+    class _Crash(RuntimeError):
+        pass
+
+    class CrashInjector(FaultInjector):
+        """Preempt + checkpoint one victim, then die like a SIGKILL."""
+
+        def __init__(self, after):
+            super().__init__()
+            self.after = after
+            self.fired = False
+
+        def tick(self, engine):
+            super().tick(engine)
+            if self.fired or self.ticks < self.after:
+                return
+            busy = engine._prefilling.slot if engine._prefilling else None
+            victim = engine.scheduler.preemption_victim(
+                exclude=() if busy is None else (busy,))
+            if victim is None:
+                return
+            engine._do_preempt(victim)
+            engine._checkpoint()
+            self.fired = True
+            raise _Crash("injected kill")
+
+    (cfg, model, params, prompts, max_new, max_seq, bounds,
+     pool) = _workload(args)
+    n_req = len(prompts)
+    print(f"{n_req} requests, {max_new} new each; worst-case "
+          f"{sum(bounds)} blocks vs pool {pool} "
+          f"({sum(bounds) / pool:.2f}x), host capacity 1 byte "
+          f"(every concurrent snapshot spills to disk)")
+
+    ref_eng = ContinuousEngine(model, params, gamma=args.gamma, greedy=True,
+                               max_slots=2, max_seq=max_seq,
+                               overflow="wait")
+    refs = [ref_eng.submit(p, max_new) for p in prompts]
+    ref_eng.run(jax.random.PRNGKey(7))
+    assert all(r.status == "ok" for r in refs)
+    ref_toks = [list(r.tokens) for r in refs]
+
+    root = tempfile.mkdtemp(prefix="tiers_bench_")
+    eng = ContinuousEngine(
+        model, params, gamma=args.gamma, greedy=True, max_slots=2,
+        max_seq=max_seq, pool_blocks=pool, overflow="preempt",
+        preempt_patience=2, fault=FaultInjector(),
+        host_capacity_bytes=1, disk_dir=os.path.join(root, "kv"))
+
+    def wave(prefetch, record=True):
+        eng.prefetch = prefetch
+        eng.fault = FaultInjector().preemption_storm(2, burst=2)
+        reqs = [eng.submit(p, max_new) for p in prompts]
+        base = (eng.resumes, eng.resume_block_s, eng.host_tier.spills,
+                eng.host_tier.disk_restores, eng.prefetch_hits,
+                eng.prefetch_misses)
+        t0 = time.perf_counter()
+        eng.run(jax.random.PRNGKey(7))
+        wall = time.perf_counter() - t0
+        assert all(r.status == "ok" for r in reqs), \
+            [(r.req_id, r.status, r.reason) for r in reqs]
+        for r, ref in zip(reqs, ref_toks):
+            assert list(r.tokens) == ref, "tier traffic changed outputs"
+        assert int(eng.table.free_top) == eng.pool_blocks, "leaked blocks"
+        if not record:
+            return None
+        resumes = eng.resumes - base[0]
+        block_s = eng.resume_block_s - base[1]
+        return {
+            "wall_s": round(wall, 4),
+            "resumes": resumes,
+            "resume_block_s": round(block_s, 6),
+            "resume_block_ms_avg": round(1e3 * block_s / max(resumes, 1), 3),
+            "spills": eng.host_tier.spills - base[2],
+            "disk_restores": eng.host_tier.disk_restores - base[3],
+            "prefetch_hits": eng.prefetch_hits - base[4],
+            "prefetch_misses": eng.prefetch_misses - base[5],
+        }
+
+    wave(prefetch=True, record=False)   # warm compile + first-resume jit
+    rows = {}
+    for label, on in (("prefetch_off", False), ("prefetch_on", True)):
+        rows[label] = wave(on)
+        print(f"  {label:<13} {rows[label]['resumes']} resumes  "
+              f"avg swap-in block {rows[label]['resume_block_ms_avg']:.2f}ms"
+              f"  spills {rows[label]['spills']}  "
+              f"disk restores {rows[label]['disk_restores']}")
+
+    # crash mid-wave (post-checkpoint), then recover + replay to completion
+    jdir = os.path.join(root, "journal")
+    crash_eng = ContinuousEngine(
+        model, params, gamma=args.gamma, greedy=True, max_slots=2,
+        max_seq=max_seq, pool_blocks=pool, overflow="preempt",
+        preempt_patience=2, fault=CrashInjector(after=4),
+        journal_dir=jdir, checkpoint_every=2)
+    for p in prompts:
+        crash_eng.submit(p, max_new)
+    try:
+        crash_eng.run(jax.random.PRNGKey(7))
+        raise SystemExit("crash injector never fired")
+    except _Crash:
+        pass
+    del crash_eng
+    fresh = ContinuousEngine(
+        model, params, gamma=args.gamma, greedy=True, max_slots=2,
+        max_seq=max_seq, pool_blocks=pool, overflow="preempt",
+        preempt_patience=2, journal_dir=jdir, checkpoint_every=2)
+    t0 = time.perf_counter()
+    recovered = fresh.recover()
+    fresh.run(jax.random.PRNGKey(7))
+    recovery_wall = time.perf_counter() - t0
+    events, _ = J.read_events(jdir)
+    recs = J.replay(events)
+    assert sorted(recs) == list(range(n_req))
+    for rid, rec in recs.items():
+        assert rec.status == "ok" and rec.tokens == ref_toks[rid], \
+            f"request {rid} diverged across the crash"
+    rows["recovery"] = {
+        "requests": n_req,
+        "completed_ok": sum(1 for r in recs.values() if r.status == "ok"),
+        "token_identical": all(rec.tokens == ref_toks[rid]
+                               for rid, rec in recs.items()),
+        "recovered": len(recovered),
+        "resume_mode": sum(1 for e in events if e["ev"] == "recover"
+                           and e["mode"] == "resume"),
+        "replay_mode": sum(1 for e in events if e["ev"] == "recover"
+                           and e["mode"] == "replay"),
+        "recovery_wall_s": round(recovery_wall, 4),
+        "journal_events": len(events),
+    }
+    print(f"  recovery      {rows['recovery']['recovered']} requests "
+          f"({rows['recovery']['resume_mode']} resume / "
+          f"{rows['recovery']['replay_mode']} replay) in "
+          f"{recovery_wall:.2f}s, token-identical")
+
+    out = {
+        "config": {"requests": n_req, "max_new": max_new,
+                   "gamma": args.gamma, "group": cfg.group_size,
+                   "pool_blocks": pool,
+                   "oversubscription": round(sum(bounds) / pool, 3),
+                   "smoke": bool(args.smoke),
+                   "backend": jax.default_backend()},
+        **rows,
+    }
+    with open(args.json, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.json}")
+
+    assert rows["prefetch_on"]["resumes"] >= 1, "no resume exercised"
+    assert rows["prefetch_off"]["spills"] >= 1, "no host→disk spill"
+    assert rows["prefetch_on"]["prefetch_hits"] >= 1, "prefetch never hit"
+    # the acceptance bar: speculative prefetch must strictly beat
+    # dispatch-at-admission swap-ins on the same warmed engine
+    assert (rows["prefetch_on"]["resume_block_ms_avg"]
+            < rows["prefetch_off"]["resume_block_ms_avg"]), \
+        "prefetch-on swap-in blocking did not beat the blocking baseline"
+    print("tiers assertions passed: prefetch-on blocks "
+          f"{rows['prefetch_on']['resume_block_ms_avg']:.2f}ms/resume vs "
+          f"{rows['prefetch_off']['resume_block_ms_avg']:.2f}ms baseline")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny workload for CI; asserts preempt completes "
                          "the wave ok + token-identical, reject sheds load")
-    ap.add_argument("--json", default="BENCH_overload.json")
+    ap.add_argument("--tiers", action="store_true",
+                    help="three-tier spill/prefetch/crash-recovery benchmark")
+    ap.add_argument("--json", default=None)
     ap.add_argument("--requests", type=int, default=None)
     ap.add_argument("--max-new", type=int, default=None)
     ap.add_argument("--gamma", type=int, default=3)
     ap.add_argument("--oversub", type=float, default=2.0,
                     help="worst-case footprint / pool blocks")
     args = ap.parse_args()
+    if args.json is None:
+        args.json = "BENCH_recovery.json" if args.tiers \
+            else "BENCH_overload.json"
+    if args.tiers:
+        run_tiers(args)
+        return
 
     cfg = bench_config()
     model = StackModel(cfg)

@@ -1,0 +1,296 @@
+"""Disk KV tier: durable spill target behind the host tier.
+
+The host tier (core/host_tier.py) holds preempted slots' quantized KV
+snapshots in RAM.  That caps the hierarchy at host memory and loses every
+snapshot when the process dies.  The :class:`DiskTier` extends the
+hierarchy to ``device → host → disk``: least-recently-used host snapshots
+spill to **per-request files** and stream back on demand (Lynx-style
+progressive quantized KV transfer — the INT4 planes are ~4x smaller than
+their fp16 equivalent, which is what makes a slow link viable), and the
+same files double as the durable half of crash recovery
+(serving/journal.py): a snapshot persisted at a checkpoint survives a
+SIGKILL and restores **bit-exact** after ``ContinuousEngine.recover``.
+
+File record (``req_<id>.kvsnap``, full layout in docs/kv_cache_format.md):
+
+    magic "KVS1" | u32 header_len | header JSON | raw plane payload
+
+The header carries the slot metadata (``n_blocks``/``buf_len``/``pos``/
+``last_token``) and, per plane, its key, dtype, shape, byte offset and a
+**CRC32 over its raw bytes**.  Reads verify every plane CRC and the total
+payload length, so bit-flips and torn/partial writes surface as
+:class:`~repro.core.host_tier.SnapshotCorruptionError` — a corrupt file
+fails *that request*, never the engine.  Writes are **atomic**: the record
+is written to a temp file in the same directory, flushed (+ optional
+fsync), then ``os.replace``d into place — a crash mid-write leaves either
+the old record or none, never a half-record under the live name.
+
+Capacity is watermarked: when ``used_bytes`` exceeds ``high_watermark *
+capacity_bytes`` after a put, LRU records are evicted until usage falls
+below ``low_watermark * capacity_bytes`` (the record being written is
+exempt).  An evicted snapshot is *not* a dead request — the engine replays
+the request from its prompt (greedy decoding is deterministic, so the
+regenerated tokens are identical); eviction trades recompute for disk,
+the graceful end of the hierarchy.  A put that cannot fit even after
+eviction (or hits a real ``ENOSPC``) raises :class:`DiskTierError`.
+
+Fault injection (tests/fault_injection.py): ``fault.disk(op, req_id)``
+may raise before a put/load (ENOSPC and friends), and
+``fault.disk_mangle(req_id, path)`` may truncate or bit-flip the record
+after a successful put (torn write / bitrot on read-back) — both must be
+absorbed per the contract above.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import zlib
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.host_tier import (HostTierError, SlotSnapshot,
+                                  SnapshotCorruptionError, _crc)
+
+_MAGIC = b"KVS1"
+
+
+class DiskTierError(HostTierError):
+    """A disk-tier put/load failed (ENOSPC, IO error, capacity overflow)."""
+
+
+@dataclasses.dataclass
+class _Record:
+    """Host-side bookkeeping for one on-disk snapshot file."""
+
+    req_id: int
+    path: str
+    nbytes: int          # full file size
+    seq: int             # LRU clock at last touch
+
+
+def _plane_items(planes) -> List[tuple]:
+    """Flatten the per-layer plane dicts into ``(layer, key, array)``
+    triples in a deterministic order (layer-major, key-sorted)."""
+    out = []
+    for li, layer in enumerate(planes):
+        for key in sorted(layer):
+            out.append((li, key, np.ascontiguousarray(layer[key])))
+    return out
+
+
+class DiskTier:
+    """Per-request snapshot files under ``root`` with LRU capacity
+    eviction (see module docstring)."""
+
+    def __init__(self, root: str, *, capacity_bytes: Optional[int] = None,
+                 high_watermark: float = 1.0, low_watermark: float = 0.8,
+                 fsync: bool = False, fault: Any = None):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self.capacity_bytes = capacity_bytes
+        self.high_watermark = high_watermark
+        self.low_watermark = low_watermark
+        self.fsync = fsync
+        self.fault = fault
+        self._records: Dict[int, _Record] = {}
+        self._clock = 0
+        # telemetry (plumbed into GenStats / the serve summary)
+        self.puts = 0
+        self.loads = 0
+        self.evictions = 0
+        self.bytes_written = 0
+        self.bytes_read = 0
+        self._scan_existing()
+
+    # ------------------------------------------------------------------
+    def _path(self, req_id: int) -> str:
+        return os.path.join(self.root, f"req_{req_id}.kvsnap")
+
+    def _scan_existing(self) -> None:
+        """Adopt records already on disk (crash recovery: snapshots
+        persisted by a previous process).  Unreadable names are ignored;
+        integrity is only verified at load time."""
+        for name in sorted(os.listdir(self.root)):
+            if not (name.startswith("req_") and name.endswith(".kvsnap")):
+                continue
+            try:
+                req_id = int(name[len("req_"):-len(".kvsnap")])
+                nbytes = os.path.getsize(os.path.join(self.root, name))
+            except (ValueError, OSError):
+                continue
+            self._clock += 1
+            self._records[req_id] = _Record(
+                req_id=req_id, path=os.path.join(self.root, name),
+                nbytes=nbytes, seq=self._clock)
+
+    def __contains__(self, req_id: int) -> bool:
+        return req_id in self._records
+
+    def __len__(self) -> int:
+        return len(self._records)
+
+    @property
+    def used_bytes(self) -> int:
+        return sum(r.nbytes for r in self._records.values())
+
+    # ------------------------------------------------------------------
+    def put(self, snap: SlotSnapshot) -> int:
+        """Persist a **materialized** snapshot atomically; returns the
+        record size in bytes.  Idempotent per request id (a re-put
+        replaces the record)."""
+        assert snap.materialized, "spill requires a materialized snapshot"
+        if self.fault is not None and hasattr(self.fault, "disk"):
+            try:
+                self.fault.disk("put", snap.req_id)
+            except OSError as e:
+                raise DiskTierError(
+                    f"disk put for request {snap.req_id} failed: {e}") from e
+        items = _plane_items(snap.planes)
+        index, offset = [], 0
+        for li, key, arr in items:
+            raw = arr.view(np.uint8).reshape(-1)
+            index.append({"layer": li, "key": key, "dtype": str(arr.dtype),
+                          "shape": list(arr.shape), "offset": offset,
+                          "nbytes": int(arr.nbytes),
+                          "crc": zlib.crc32(raw) & 0xFFFFFFFF})
+            offset += int(arr.nbytes)
+        header = json.dumps({
+            "req_id": snap.req_id, "n_blocks": snap.n_blocks,
+            "buf_len": snap.buf_len, "pos": snap.pos,
+            "last_token": snap.last_token, "payload_bytes": offset,
+            "planes": index,
+        }).encode()
+        path = self._path(snap.req_id)
+        tmp = path + ".tmp"
+        try:
+            with open(tmp, "wb") as f:
+                f.write(_MAGIC)
+                f.write(len(header).to_bytes(4, "little"))
+                f.write(header)
+                for _, _, arr in items:
+                    f.write(arr.view(np.uint8).reshape(-1).tobytes())
+                f.flush()
+                if self.fsync:
+                    os.fsync(f.fileno())
+            os.replace(tmp, path)
+        except OSError as e:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise DiskTierError(
+                f"disk put for request {snap.req_id} failed: {e}") from e
+        nbytes = len(_MAGIC) + 4 + len(header) + offset
+        self._clock += 1
+        self._records[snap.req_id] = _Record(
+            req_id=snap.req_id, path=path, nbytes=nbytes, seq=self._clock)
+        self.puts += 1
+        self.bytes_written += nbytes
+        if self.fault is not None and hasattr(self.fault, "disk_mangle"):
+            # post-write corruption hook: torn writes / bitrot on read-back
+            self.fault.disk_mangle(snap.req_id, path)
+        self._enforce_capacity(exclude=snap.req_id)
+        return nbytes
+
+    def load(self, req_id: int, *, pop: bool = True) -> SlotSnapshot:
+        """Read a record back, verifying the per-plane CRCs.  ``pop``
+        removes the record (the default: a restored slot owns fresh
+        blocks; the stale file would only mask bugs in recovery)."""
+        rec = self._records.get(req_id)
+        if rec is None:
+            raise KeyError(req_id)
+        if self.fault is not None and hasattr(self.fault, "disk"):
+            try:
+                self.fault.disk("load", req_id)
+            except OSError as e:
+                raise DiskTierError(
+                    f"disk load for request {req_id} failed: {e}") from e
+        try:
+            with open(rec.path, "rb") as f:
+                data = f.read()
+        except OSError as e:
+            raise DiskTierError(
+                f"disk load for request {req_id} failed: {e}") from e
+        snap = self._parse(req_id, data)
+        self._clock += 1
+        rec.seq = self._clock
+        self.loads += 1
+        self.bytes_read += len(data)
+        if pop:
+            self.discard(req_id)
+        return snap
+
+    def _parse(self, req_id: int, data: bytes) -> SlotSnapshot:
+        def corrupt(why: str) -> SnapshotCorruptionError:
+            self.discard(req_id)   # refused records are dropped
+            return SnapshotCorruptionError(
+                f"disk snapshot for request {req_id} is corrupt ({why}) — "
+                f"refusing swap-in")
+
+        if data[:4] != _MAGIC or len(data) < 8:
+            raise corrupt("bad magic")
+        hlen = int.from_bytes(data[4:8], "little")
+        if len(data) < 8 + hlen:
+            raise corrupt("truncated header")
+        try:
+            header = json.loads(data[8:8 + hlen])
+        except (UnicodeDecodeError, json.JSONDecodeError):
+            raise corrupt("unparseable header")
+        payload = data[8 + hlen:]
+        if len(payload) != header["payload_bytes"]:
+            raise corrupt(f"payload is {len(payload)} bytes, header says "
+                          f"{header['payload_bytes']} (torn write)")
+        n_layers = 1 + max((p["layer"] for p in header["planes"]), default=-1)
+        planes: List[dict] = [{} for _ in range(n_layers)]
+        for p in header["planes"]:
+            raw = payload[p["offset"]:p["offset"] + p["nbytes"]]
+            if (zlib.crc32(raw) & 0xFFFFFFFF) != p["crc"]:
+                raise corrupt(f"plane {p['layer']}/{p['key']} failed CRC")
+            arr = np.frombuffer(raw, dtype=np.dtype(p["dtype"]))
+            planes[p["layer"]][p["key"]] = arr.reshape(p["shape"])
+        snap = SlotSnapshot(
+            req_id=header["req_id"], n_blocks=header["n_blocks"],
+            buf_len=header["buf_len"], pos=header["pos"],
+            last_token=header["last_token"], planes=planes)
+        # re-stamp the in-memory checksum so HostTier.restore's verify pass
+        # (which covers the host-RAM window after this load) has a baseline
+        snap.checksum = _crc(snap.planes)
+        snap.nbytes = sum(p["nbytes"] for p in header["planes"])
+        return snap
+
+    def discard(self, req_id: int) -> None:
+        rec = self._records.pop(req_id, None)
+        if rec is not None:
+            try:
+                os.unlink(rec.path)
+            except OSError:
+                pass
+
+    # ------------------------------------------------------------------
+    def _enforce_capacity(self, exclude: Optional[int] = None) -> None:
+        """LRU-evict records past the high watermark down to the low one.
+        The just-written record is exempt — evicting what we came to
+        store would make the put a silent no-op."""
+        if self.capacity_bytes is None:
+            return
+        if self.used_bytes <= self.high_watermark * self.capacity_bytes:
+            return
+        floor = self.low_watermark * self.capacity_bytes
+        victims = sorted((r for r in self._records.values()
+                          if r.req_id != exclude), key=lambda r: r.seq)
+        for rec in victims:
+            if self.used_bytes <= floor:
+                break
+            self.discard(rec.req_id)
+            self.evictions += 1
+
+    @property
+    def stats(self) -> dict:
+        return {"puts": self.puts, "loads": self.loads,
+                "evictions": self.evictions, "resident": len(self),
+                "used_bytes": self.used_bytes,
+                "bytes_written": self.bytes_written,
+                "bytes_read": self.bytes_read}

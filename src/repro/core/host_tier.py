@@ -35,6 +35,19 @@ copy is alias-agnostic) and then runs the refcount-aware `release_slot`,
 so index-retained blocks survive the preemption and the resumed slot gets
 private copies (copy-on-preempt, the swap analogue of the prefix cache's
 copy-on-write tail).
+
+Three-tier hierarchy (device → host → disk): with a
+:class:`~repro.core.disk_tier.DiskTier` attached and ``capacity_bytes``
+set, the host store is a bounded LRU cache — offloads past the capacity
+spill the least-recently-touched snapshots to per-request disk files, and
+``restore``/``fetch`` fall back to the disk record transparently (the
+load re-verifies every plane CRC).  A snapshot the disk tier evicted
+under its own capacity watermarks surfaces as
+:class:`SnapshotMissError`, which the engine treats as "recompute from
+the prompt" (greedy decoding is deterministic), not a failure.  Backoff
+sleeps route through the fault harness when one is attached
+(``fault.sleep``), so retry-storm tests assert the schedule
+deterministically instead of paying wall-clock time.
 """
 
 from __future__ import annotations
@@ -60,6 +73,12 @@ class TransferError(HostTierError):
 
 class SnapshotCorruptionError(HostTierError):
     """A restored snapshot failed its checksum — the swap-in is refused."""
+
+
+class SnapshotMissError(HostTierError):
+    """No tier holds the snapshot (evicted under capacity pressure, or a
+    recovery found no persisted record) — the request must be replayed
+    from its prompt instead of swapped in."""
 
 
 @dataclasses.dataclass
@@ -103,22 +122,36 @@ class HostTier:
 
     ``fault`` is an optional injection hook (tests/fault_injection.py):
     ``fault.transfer(op, req_id)`` may raise :class:`TransferError` to
-    simulate a failed copy, and ``fault.mangle(req_id, planes)`` may
-    corrupt a materialized snapshot to exercise the checksum path.
+    simulate a failed copy, ``fault.mangle(req_id, planes)`` may corrupt a
+    materialized snapshot to exercise the checksum path, and
+    ``fault.sleep(seconds)`` replaces the real backoff sleep so retry
+    schedules are asserted, not waited out.
+
+    ``disk`` attaches a :class:`~repro.core.disk_tier.DiskTier` behind the
+    host store; ``capacity_bytes`` bounds host RAM use — offloads past it
+    spill LRU snapshots to disk (no-op without a disk tier).
     """
 
     def __init__(self, *, fault: Any = None, max_retries: int = 3,
-                 backoff_s: float = 0.01, verify: bool = True):
+                 backoff_s: float = 0.01, verify: bool = True,
+                 capacity_bytes: Optional[int] = None, disk: Any = None):
         self.fault = fault
         self.max_retries = max_retries
         self.backoff_s = backoff_s
         self.verify = verify
+        self.capacity_bytes = capacity_bytes
+        self.disk = disk
+        self._sleep = getattr(fault, "sleep", None) or time.sleep
+        # insertion order doubles as the LRU order (touches re-insert)
         self._store: Dict[int, SlotSnapshot] = {}
         # telemetry
         self.offloads = 0
         self.restores = 0
         self.retries = 0
         self.bytes_offloaded = 0
+        self.spills = 0            # host → disk
+        self.spill_bytes = 0
+        self.disk_restores = 0     # disk → host on a host-store miss
 
     # ------------------------------------------------------------------
     def __contains__(self, req_id: int) -> bool:
@@ -126,6 +159,16 @@ class HostTier:
 
     def __len__(self) -> int:
         return len(self._store)
+
+    def holds(self, req_id: int) -> bool:
+        """True when *any* tier (host store or disk) can restore
+        ``req_id`` — what the prefetcher and recovery probe."""
+        return req_id in self._store or (
+            self.disk is not None and req_id in self.disk)
+
+    @property
+    def host_bytes(self) -> int:
+        return sum(s.nbytes for s in self._store.values())
 
     def offload(self, req_id: int, planes: list, *, n_blocks: int,
                 buf_len: int, pos: int, last_token: int) -> SlotSnapshot:
@@ -143,9 +186,39 @@ class HostTier:
         snap = SlotSnapshot(req_id=req_id, n_blocks=n_blocks,
                             buf_len=buf_len, pos=pos, last_token=last_token,
                             planes=planes)
+        # size is known from the leaf shapes before the DMA drains, so
+        # capacity accounting never forces an early materialize
+        snap.nbytes = sum(leaf.nbytes for leaf in _leaves(planes))
         self._store[req_id] = snap
         self.offloads += 1
+        self.bytes_offloaded += snap.nbytes
+        try:
+            self._enforce_capacity(exclude=req_id)
+        except HostTierError as e:
+            # the hierarchy is full end to end (disk spill failed): drop
+            # the new snapshot and surface the failure so the engine fails
+            # *this* preemption victim — older snapshots stay intact
+            self._store.pop(req_id, None)
+            raise HostTierError(
+                f"host tier over capacity and spill failed: {e}") from e
         return snap
+
+    def _enforce_capacity(self, exclude: Optional[int] = None) -> None:
+        """Spill LRU host snapshots to the disk tier until the host store
+        fits ``capacity_bytes``.  Without a disk tier the capacity is
+        advisory (legacy unbounded behavior)."""
+        if self.capacity_bytes is None or self.disk is None:
+            return
+        while self.host_bytes > self.capacity_bytes:
+            victim = next((rid for rid in self._store if rid != exclude),
+                          None)
+            if victim is None:
+                return
+            snap = self.materialize(victim)
+            self.disk.put(snap)
+            self._store.pop(victim, None)
+            self.spills += 1
+            self.spill_bytes += snap.nbytes
 
     def materialize(self, req_id: int) -> SlotSnapshot:
         """Finish the host copy: device_get the planes (a cheap wait once
@@ -157,7 +230,6 @@ class HostTier:
         snap.planes = self._retrying_get("offload", req_id, snap.planes)
         snap.checksum = _crc(snap.planes)
         snap.nbytes = sum(leaf.nbytes for leaf in _leaves(snap.planes))
-        self.bytes_offloaded += snap.nbytes
         if self.fault is not None and hasattr(self.fault, "mangle"):
             # post-checksum corruption hook: simulates bitrot between
             # offload and restore so the verify path is testable
@@ -165,10 +237,25 @@ class HostTier:
         return snap
 
     def restore(self, req_id: int) -> SlotSnapshot:
-        """Hand back a snapshot for swap-in, verifying integrity.
+        """Hand back a snapshot for swap-in, verifying integrity.  Falls
+        back to the disk tier when the host store spilled (or never held)
+        the snapshot; raises :class:`SnapshotMissError` when no tier has
+        it (capacity-evicted — the caller replays from the prompt).
 
-        The snapshot is *popped* from the store (a resumed slot owns fresh
-        private blocks; keeping a stale copy would only mask bugs)."""
+        The snapshot is *popped* from every tier (a resumed slot owns
+        fresh private blocks; keeping a stale copy would only mask bugs —
+        and a stale *disk* copy would poison a later crash recovery with
+        an out-of-date stream position)."""
+        if req_id not in self._store:
+            if self.disk is None or req_id not in self.disk:
+                raise SnapshotMissError(
+                    f"no tier holds a snapshot for request {req_id} "
+                    f"(evicted under capacity pressure?)")
+            self._transfer("restore", req_id)
+            snap = self.disk.load(req_id)   # CRC-verified, popped
+            self.disk_restores += 1
+            self.restores += 1
+            return snap
         snap = self.materialize(req_id)
         self._transfer("restore", req_id)
         if self.verify and _crc(snap.planes) != snap.checksum:
@@ -177,13 +264,31 @@ class HostTier:
                 f"snapshot for request {req_id} failed checksum "
                 f"verification — refusing swap-in")
         self._store.pop(req_id, None)
+        if self.disk is not None:
+            # drop any checkpoint-persisted copy: it is stale the moment
+            # the request decodes again
+            self.disk.discard(req_id)
         self.restores += 1
         return snap
 
+    def persist(self, req_id: int) -> bool:
+        """Copy one host snapshot to the disk tier *without* evicting the
+        host copy — the checkpoint path (serving/journal.py): a later
+        crash can then restore the preempted request bit-exact.  Returns
+        False when the snapshot isn't host-resident (already spilled, or
+        unknown)."""
+        snap = self._store.get(req_id)
+        if snap is None or self.disk is None:
+            return False
+        self.disk.put(self.materialize(req_id))
+        return True
+
     def discard(self, req_id: int) -> None:
-        """Drop a snapshot (its request was cancelled/failed in the
-        queue)."""
+        """Drop a snapshot from every tier (its request was
+        cancelled/failed in the queue)."""
         self._store.pop(req_id, None)
+        if self.disk is not None:
+            self.disk.discard(req_id)
 
     # ------------------------------------------------------------------
     def _transfer(self, op: str, req_id: int) -> None:
@@ -199,7 +304,7 @@ class HostTier:
                 if attempt == self.max_retries:
                     raise
                 self.retries += 1
-                time.sleep(delay)
+                self._sleep(delay)
                 delay *= 2
 
     def _retrying_get(self, op: str, req_id: int, planes):
@@ -213,5 +318,5 @@ class HostTier:
                         f"{op} transfer for request {req_id} failed after "
                         f"{self.max_retries} retries: {e}") from e
                 self.retries += 1
-                time.sleep(delay)
+                self._sleep(delay)
                 delay *= 2

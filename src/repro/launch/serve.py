@@ -88,7 +88,38 @@ def main():
                     help="KV pool size in blocks (default: slots * "
                          "ceil(max_seq/group) — never oversubscribed); "
                          "set lower to exercise the overflow policy")
+    ap.add_argument("--journal", default=None, metavar="DIR",
+                    help="write-ahead journal + checkpoint directory "
+                         "(crash-safe serving; also roots the disk KV "
+                         "tier at DIR/kv unless --disk-dir is given)")
+    ap.add_argument("--recover", action="store_true",
+                    help="replay the --journal directory of a crashed run "
+                         "instead of submitting a fresh wave: non-terminal "
+                         "requests are re-queued (bit-exact resume from "
+                         "checkpointed snapshots where possible, replay "
+                         "from the prompt otherwise) and driven to "
+                         "completion")
+    ap.add_argument("--disk-dir", default=None,
+                    help="disk KV tier root: LRU host-tier snapshots past "
+                         "--host-capacity-bytes spill to per-request files "
+                         "here (device → host → disk hierarchy)")
+    ap.add_argument("--host-capacity-bytes", type=int, default=None,
+                    help="bound host-tier RAM; offloads past it spill LRU "
+                         "snapshots to the disk tier")
+    ap.add_argument("--disk-capacity-bytes", type=int, default=None,
+                    help="bound the disk tier; past its high watermark LRU "
+                         "records are evicted (the engine then replays "
+                         "those requests from their prompts)")
+    ap.add_argument("--no-prefetch", action="store_true",
+                    help="disable speculative swap-in prefetch (restore "
+                         "dispatches at admission time, the PR 7 baseline)")
+    ap.add_argument("--checkpoint-every", type=int, default=8,
+                    help="megastep harvests between engine checkpoints "
+                         "(journaled runs: host-tier snapshots persist to "
+                         "the disk tier at each checkpoint)")
     args = ap.parse_args()
+    if args.recover and not args.journal:
+        raise SystemExit("--recover requires --journal DIR")
 
     # resolve the mesh FIRST: host<N> meshes must append the forced-device
     # XLA flag before anything initializes the jax backends
@@ -150,21 +181,54 @@ def main():
                                    preempt_patience=args.preempt_patience,
                                    max_pending=args.max_pending,
                                    pool_blocks=args.pool_blocks,
+                                   journal_dir=args.journal,
+                                   disk_dir=args.disk_dir,
+                                   host_capacity_bytes=args.host_capacity_bytes,
+                                   disk_capacity_bytes=args.disk_capacity_bytes,
+                                   prefetch=not args.no_prefetch,
+                                   checkpoint_every=args.checkpoint_every,
                                    **chunk_kw)
-            # ragged prompts: vary lengths so requests join/retire mid-stream
-            prompts = [np.asarray(prompt[i, : args.prompt_len - 7 * i])
-                       for i in range(args.batch)]
-            reqs = [eng.submit(p, args.max_new, deadline_s=args.deadline_s)
-                    for p in prompts]
+            if args.recover:
+                reqs = eng.recover()
+                print(f"recover: {len(reqs)} non-terminal request(s) "
+                      f"re-queued from {args.journal} "
+                      f"({sum(1 for r in reqs if r.resume)} resumable)")
+            else:
+                # ragged prompts: vary lengths so requests join/retire
+                # mid-stream
+                prompts = [np.asarray(prompt[i, : args.prompt_len - 7 * i])
+                           for i in range(args.batch)]
+                reqs = [eng.submit(p, args.max_new,
+                                   deadline_s=args.deadline_s)
+                        for p in prompts]
             eng.run(jax.random.PRNGKey(7))
             if any(r.status != "ok" for r in reqs):
                 for r in reqs:
                     if r.status != "ok":
                         print(f"req {r.req_id}: {r.status} ({r.reason})")
-            if eng.preempts:
+            if eng.preempts or eng.resumes or eng.restarts:
+                tier = eng.host_tier
                 print(f"overload: {eng.preempts} preemptions, "
-                      f"{eng.resumes} resumes, "
-                      f"{eng.host_tier.bytes_offloaded} bytes via host tier")
+                      f"{eng.resumes} resumes ({eng.prefetch_hits} "
+                      f"prefetched, {eng.prefetch_misses} blocking, "
+                      f"{eng.resume_block_s * 1e3:.1f}ms blocked), "
+                      f"{eng.restarts} replays, "
+                      f"{tier.bytes_offloaded} bytes via host tier "
+                      f"({tier.retries} transfer retries)")
+                if tier.spills or tier.disk_restores:
+                    print(f"disk tier: {tier.spills} spills "
+                          f"({tier.spill_bytes} bytes), "
+                          f"{tier.disk_restores} disk restores, "
+                          f"{eng.disk_tier.stats}")
+            if eng.journal is not None:
+                print(f"journal: {eng.journal.seq} events, "
+                      f"{eng.checkpoints} checkpoints -> {args.journal}")
+                if args.recover:
+                    for r in reqs:
+                        print(f"recovered req {r.req_id}: {r.status}, "
+                              f"{r.generated} tokens "
+                              f"{np.asarray(r.tokens)[:16].tolist()}")
+                    return
             results = [GenerationResult(
                 tokens=np.asarray(r.tokens, np.int64)[None, :],
                 stats=GenStats(proposed=r.proposed, accepted=r.accepted,
@@ -172,7 +236,13 @@ def main():
                                prefill_s=r.prefill_s,
                                decode_s=max(r.finish_t - r.admit_t
                                             - r.prefill_s, 0.0),
-                               numerics_flags=r.numerics_flags))
+                               numerics_flags=r.numerics_flags,
+                               offloads=r.offloads, restores=r.restores,
+                               swap_bytes=r.swap_bytes,
+                               prefetch_hits=r.prefetch_hits,
+                               prefetch_misses=r.prefetch_misses,
+                               resume_block_s=r.resume_block_s,
+                               restarts=r.restarts))
                 for r in reqs if r.status == "ok"]
             if args.prefix_cache:
                 # second wave of identical prompts: admissions now come out
@@ -181,9 +251,16 @@ def main():
                                        key=jax.random.PRNGKey(7))
             for i, res in enumerate(results):
                 s = res.stats
+                swap = ""
+                if s.offloads or s.restores or s.restarts:
+                    swap = (f", swaps {s.offloads}/{s.restores} "
+                            f"({s.swap_bytes}B, {s.prefetch_hits} "
+                            f"prefetched, {s.resume_block_s * 1e3:.1f}ms "
+                            f"blocked)")
                 print(f"req {i}: {s.generated} tokens in {s.rounds} rounds, "
                       f"acceptance {s.acceptance_rate:.1%}, "
-                      f"prefill {s.prefill_s:.2f}s decode {s.decode_s:.2f}s")
+                      f"prefill {s.prefill_s:.2f}s decode "
+                      f"{s.decode_s:.2f}s{swap}")
             if args.prefix_cache:
                 print("prefix cache:", eng.prefix.stats,
                       f"harvest syncs {eng.cache_syncs}")

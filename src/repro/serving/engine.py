@@ -54,9 +54,10 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import os
 import time
 from functools import partial
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -64,7 +65,9 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import paged_kv_cache as PC
-from repro.core.host_tier import HostTier, HostTierError
+from repro.core.disk_tier import DiskTier
+from repro.core.host_tier import HostTier, HostTierError, SnapshotMissError
+from repro.serving import journal as J
 from repro.core.prefix_index import PrefixIndex
 from repro.core.spec_decode import (MegaResult, PagedMegaResult, RoundResult,
                                     PagedRoundResult, ar_step, megastep,
@@ -91,6 +94,16 @@ class GenStats:
     # verify positions whose target logits carried non-finite entries —
     # sampling fell back to greedy-over-finite for them (serving/sampling.py)
     numerics_flags: int = 0
+    # swap telemetry (host/disk tier): offload/restore counts, bytes moved,
+    # prefetch hit/miss at each resume, seconds the engine hot path blocked
+    # in resume, and replays-from-prompt after a snapshot was lost
+    offloads: int = 0
+    restores: int = 0
+    swap_bytes: int = 0
+    prefetch_hits: int = 0
+    prefetch_misses: int = 0
+    resume_block_s: float = 0.0
+    restarts: int = 0
 
     @property
     def acceptance_rate(self) -> float:
@@ -574,6 +587,17 @@ class _InflightMega:
     emit_first: list             # slots whose pending_first this harvests
 
 
+@dataclasses.dataclass
+class _Prefetch:
+    """One speculatively restored snapshot: device-placed planes (the
+    device_put was dispatched while a megastep was in flight) or the error
+    the restore hit (surfaced when the request is actually admitted)."""
+
+    snap: object = None          # SlotSnapshot with device-resident planes
+    error: Optional[Exception] = None
+    fetch_s: float = 0.0         # host time the off-path dispatch took
+
+
 class ContinuousEngine:
     """Continuous-batching engine over the paged hierarchical cache.
 
@@ -607,6 +631,12 @@ class ContinuousEngine:
                  overflow: str = "preempt", preempt_patience: int = 16,
                  max_pending: Optional[int] = None, strict: bool = False,
                  host_tier: Optional[HostTier] = None, fault=None,
+                 host_capacity_bytes: Optional[int] = None,
+                 disk_dir: Optional[str] = None,
+                 disk_capacity_bytes: Optional[int] = None,
+                 prefetch: bool = True,
+                 journal_dir: Optional[str] = None,
+                 checkpoint_every: int = 8, journal_fsync: bool = False,
                  ctx_kw: Optional[dict] = None):
         self.model = model
         self.cfg = model.cfg
@@ -631,10 +661,45 @@ class ContinuousEngine:
         self.preempt_patience = max(int(preempt_patience), 1)
         self.strict = strict
         self.fault = fault
-        self.host_tier = host_tier or (HostTier(fault=fault)
-                                       if overflow == "preempt" else None)
+        # crash-safe serving (serving/journal.py): a write-ahead log of
+        # lifecycle events plus periodic checkpoints that persist host-tier
+        # snapshots to the disk tier; `recover()` replays the log.  The
+        # journal dir also hosts the default disk-tier root (kv/), so a
+        # bare --journal flag gets durable snapshots too.
+        self.journal: Optional[J.Journal] = None
+        if journal_dir is not None:
+            self.journal = J.Journal(journal_dir, fsync=journal_fsync)
+            if disk_dir is None:
+                disk_dir = os.path.join(journal_dir, "kv")
+        self.checkpoint_every = checkpoint_every
+        self.checkpoints = 0
+        self._harvests = 0
+        # three-tier hierarchy: device → host (HostTier) → disk (DiskTier);
+        # the host tier spills LRU snapshots past host_capacity_bytes
+        self.disk_tier: Optional[DiskTier] = (
+            DiskTier(disk_dir, capacity_bytes=disk_capacity_bytes,
+                     fault=fault) if disk_dir is not None else None)
+        if host_tier is not None:
+            self.host_tier = host_tier
+            if host_tier.disk is None and self.disk_tier is not None:
+                host_tier.disk = self.disk_tier
+        else:
+            self.host_tier = (
+                HostTier(fault=fault, capacity_bytes=host_capacity_bytes,
+                         disk=self.disk_tier)
+                if overflow == "preempt" else None)
         self.preempts = 0
         self.resumes = 0
+        # speculative prefetch: while a megastep is in flight, the restore
+        # (disk→host read + host→device device_put) of the resumable queue
+        # front is dispatched ahead of admission, so `_do_resume` finds the
+        # planes already on device and blocks ~0 on the hot path
+        self.prefetch = prefetch
+        self._prefetched: Dict[int, "_Prefetch"] = {}
+        self.prefetch_hits = 0
+        self.prefetch_misses = 0
+        self.resume_block_s = 0.0
+        self.restarts = 0
         self._stall = 0             # lifecycle sweeps with a blocked head
         # the megastep driver needs device-side termination (gamma>0 spec
         # rounds); gamma=0 serves AR baselines on the legacy loop
@@ -912,38 +977,75 @@ class ContinuousEngine:
             req.tokens.append(last_tok)
             req.pending_first = False
         try:
-            self.host_tier.offload(req.req_id, planes, n_blocks=n,
-                                   buf_len=buf_len, pos=pos,
-                                   last_token=last_tok)
+            snap = self.host_tier.offload(req.req_id, planes, n_blocks=n,
+                                          buf_len=buf_len, pos=pos,
+                                          last_token=last_tok)
         except HostTierError as e:
             # can't preserve the slot's KV — fail this request, keep serving
             self._retire(slot, "failed", f"offload failed: {e}")
             self.preempts += 1
             return True
+        req.offloads += 1
+        req.swap_bytes += snap.nbytes
         self.table = self._release(self.table, jnp.asarray(slot, jnp.int32))
         self._slot_shared.pop(slot, None)
         self.scheduler.preempt(slot)
         self.preempts += 1
+        self._log("preempt", req=req.req_id,
+                  tokens=[int(t) for t in req.tokens])
         return True
 
-    def _do_resume(self, req: Request) -> bool:
+    def _do_resume(self, req: Request) -> str:
         """Swap a resumable request back in (it already holds its slot and
-        reservation from `next_admission`).  The restore work — host
-        device_put plus the resume jit — is dispatched on the carried
-        device state, so under the double-buffered driver it overlaps the
-        still-running previous megastep; the resumed slot joins the very
-        next dispatch, skipping prefill entirely."""
+        reservation from `next_admission`).  The prefetcher usually did the
+        expensive half already — disk→host read plus host→device
+        device_put, dispatched while the previous megastep was in flight —
+        so the hot path only runs the resume jit on device-resident planes
+        (a prefetch *hit*; misses fall back to the PR 7 dispatch-at-
+        admission restore).  Returns ``"resumed"``, ``"failed"``, or
+        ``"restart"`` (snapshot capacity-evicted from every tier → the
+        caller replays the request from its prompt; greedy decoding makes
+        the replayed tokens identical)."""
         slot = req.slot
-        try:
-            snap = self.host_tier.restore(req.req_id)
-        except HostTierError as e:
-            self.scheduler.retire(slot, "failed", f"swap-in failed: {e}")
-            self._retired.append(req)
-            return False
-        planes = snap.planes
-        if self.mesh is not None:
-            planes = jax.device_put(
-                planes, SP.snapshot_specs(planes, self.mesh))
+        t0 = time.perf_counter()
+        pf = self._prefetched.pop(req.req_id, None)
+        if pf is not None and pf.error is not None:
+            if isinstance(pf.error, SnapshotMissError):
+                pf = None                   # fall through to the live probe
+            else:
+                self.scheduler.retire(slot, "failed",
+                                      f"swap-in failed: {pf.error}")
+                # a corrupt/unreadable record must not leak in any tier
+                self.host_tier.discard(req.req_id)
+                self._log("finish", req=req.req_id, status="failed",
+                          reason=f"swap-in failed: {pf.error}")
+                self._retired.append(req)
+                return "failed"
+        if pf is not None:
+            snap = pf.snap
+            self.prefetch_hits += 1
+            req.prefetch_hits += 1
+            planes = snap.planes            # already device-resident
+        else:
+            try:
+                snap = self.host_tier.restore(req.req_id)
+            except SnapshotMissError:
+                self._restart_from_scratch(req)
+                return "restart"
+            except HostTierError as e:
+                self.scheduler.retire(slot, "failed", f"swap-in failed: {e}")
+                # a corrupt/unreadable record must not leak in any tier
+                self.host_tier.discard(req.req_id)
+                self._log("finish", req=req.req_id, status="failed",
+                          reason=f"swap-in failed: {e}")
+                self._retired.append(req)
+                return "failed"
+            self.prefetch_misses += 1
+            req.prefetch_misses += 1
+            planes = snap.planes
+            if self.mesh is not None:
+                planes = jax.device_put(
+                    planes, SP.snapshot_specs(planes, self.mesh))
         gen = len(req.tokens)
         self.state, self.table, self.last, self.slots_dev = self._resume_jit(
             self.state, self.table, self.last, self.slots_dev, planes,
@@ -956,8 +1058,87 @@ class ContinuousEngine:
             jnp.asarray(req.max_new_tokens, jnp.int32))
         req.resume = False
         req.admit_t = time.perf_counter()
+        req.restores += 1
+        req.swap_bytes += snap.nbytes
+        dt = time.perf_counter() - t0
+        req.resume_block_s += dt
+        self.resume_block_s += dt
         self.resumes += 1
-        return True
+        self._log("resume", req=req.req_id)
+        return "resumed"
+
+    def _restart_from_scratch(self, req: Request) -> None:
+        """The snapshot was lost (capacity-evicted from host *and* disk,
+        or never persisted before a crash): replay the request from its
+        prompt.  It keeps its slot and reservation; the harvested tokens
+        are discarded and regenerated — greedy decoding is deterministic,
+        so the final stream is token-identical (asserted in
+        tests/test_disk_tier.py / test_recovery.py)."""
+        req.resume = False
+        req.tokens = []
+        req.pending_first = False
+        req.prefill_pos = 0
+        req.prefill_chunks = 0
+        req.restarts += 1
+        self.restarts += 1
+        self._log("restart", req=req.req_id)
+        self._prefilling = self._start_prefill(req)
+
+    def _maybe_prefetch(self) -> None:
+        """Speculatively restore the resumable queue front: dispatch its
+        disk→host read and host→device `device_put` now, while the just-
+        enqueued megastep still occupies the device, so the eventual
+        `_do_resume` blocks ~0 on the hot path.  At most one fetch per
+        call bounds the off-path work; resumables sit at the queue front
+        (re-enqueued there by preemption), so scanning stops at the first
+        non-resumable request.  Restore errors are *recorded*, not raised —
+        they surface at admission, on the request they belong to."""
+        if not self.prefetch or self.host_tier is None:
+            return
+        for r in self.scheduler.pending:
+            if not r.resume:
+                break
+            if r.req_id in self._prefetched:
+                continue
+            t0 = time.perf_counter()
+            try:
+                snap = self.host_tier.restore(r.req_id)
+            except SnapshotMissError:
+                # nothing to fetch — admission will replay from the prompt
+                continue
+            except HostTierError as e:
+                self._prefetched[r.req_id] = _Prefetch(error=e)
+                return
+            planes = snap.planes
+            if self.mesh is not None:
+                planes = jax.device_put(
+                    planes, SP.snapshot_specs(planes, self.mesh))
+            else:
+                planes = jax.device_put(planes)
+            snap.planes = planes
+            self._prefetched[r.req_id] = _Prefetch(
+                snap=snap, fetch_s=time.perf_counter() - t0)
+            return
+
+    def _log(self, ev: str, **fields) -> None:
+        if self.journal is not None:
+            self.journal.append(ev, **fields)
+
+    def _checkpoint(self) -> None:
+        """Persist every host-resident snapshot to the disk tier (copy,
+        not evict) and mark the journal position — the durable half of
+        crash recovery.  A failing persist degrades that one request to
+        replay-from-prompt after a crash; it never stops the engine."""
+        persisted = []
+        if self.host_tier is not None and self.host_tier.disk is not None:
+            for rid in list(self.host_tier._store):
+                try:
+                    if self.host_tier.persist(rid):
+                        persisted.append(rid)
+                except HostTierError as e:
+                    self._log("checkpoint_skip", req=rid, reason=str(e))
+        self.journal.checkpoint({"persisted": persisted})
+        self.checkpoints += 1
 
     def cancel(self, req: Request) -> None:
         """Request cancellation; honored at the next megastep harvest
@@ -1089,6 +1270,20 @@ class ContinuousEngine:
         first-token sample stays on device (``req.prefill_s`` therefore
         measures dispatch time, not device occupancy)."""
         if self._prefilling is None:
+            # admission-time lifecycle guard: a queued head whose deadline
+            # lapsed (or that was cancelled) since the last sweep must
+            # never consume a slot — retire it `timed_out` un-admitted
+            now = time.perf_counter()
+            while self.scheduler.pending:
+                head = self.scheduler.pending[0]
+                if head.cancel_requested:
+                    self._drop_pending(head, "cancelled",
+                                       "cancelled before completion")
+                elif head.deadline_exceeded(now):
+                    self._drop_pending(head, "timed_out",
+                                       "deadline exceeded while queued")
+                else:
+                    break
             if (self.prefix is not None and self.scheduler.pending
                     and self.scheduler.free_slots):
                 self._prepare_admission(self.scheduler.pending[0])
@@ -1096,12 +1291,17 @@ class ContinuousEngine:
             if req is None:
                 return key
             if req.resume:
-                # host-tier swap-in: no prefill — the restore dispatches on
-                # the carried state (overlapping any in-flight megastep)
-                # and the slot joins the next megastep where it left off
-                self._do_resume(req)
-                return key
-            self._prefilling = self._start_prefill(req)
+                # host-tier swap-in: no prefill — with a prefetch hit the
+                # planes are already on device and the resume jit simply
+                # joins the carried state; the slot decodes in the very
+                # next megastep where it left off
+                if self._do_resume(req) != "restart":
+                    return key
+                # snapshot lost: _restart_from_scratch queued a prefill
+                # job for this slot — fall through and advance its chunk
+            else:
+                self._log("admit", req=req.req_id)
+                self._prefilling = self._start_prefill(req)
         job = self._prefilling
         req = job.req
         t0 = time.perf_counter()
@@ -1144,6 +1344,7 @@ class ContinuousEngine:
                 first = int(np.asarray(self.last[job.slot, 0]))
                 self.host_syncs += 1
                 req.tokens.append(first)
+                self._log("tokens", req=req.req_id, toks=[first])
                 if req.generated >= req.max_new_tokens:
                     self._retire(job.slot)
         else:
@@ -1171,8 +1372,16 @@ class ContinuousEngine:
                           deadline_s=deadline_s,
                           submit_t=time.perf_counter())
             return req.finish("rejected", reason)
-        return self.scheduler.submit(prompt, max_new_tokens,
-                                     priority=priority, deadline_s=deadline_s)
+        req = self.scheduler.submit(prompt, max_new_tokens,
+                                    priority=priority, deadline_s=deadline_s)
+        if req.status == "queued":
+            # the WAL submit record carries the full prompt: the journal
+            # alone must suffice to replay the request after a crash
+            self._log("submit", req=req.req_id,
+                      prompt=[int(t) for t in prompt],
+                      max_new=max_new_tokens, priority=priority,
+                      deadline_s=deadline_s)
+        return req
 
     def _retire(self, slot: int, status: str = "ok", reason: str = ""):
         # jitted release: blocks return to the free stack on device, no
@@ -1181,6 +1390,7 @@ class ContinuousEngine:
         self.table = self._release(self.table, jnp.asarray(slot, jnp.int32))
         self._slot_shared.pop(slot, None)
         req = self.scheduler.retire(slot, status, reason)
+        self._log("finish", req=req.req_id, status=status, reason=reason)
         self._retired.append(req)
 
     # ---- request lifecycle -------------------------------------------
@@ -1223,6 +1433,8 @@ class ContinuousEngine:
         self.scheduler.drop_pending(req, status, reason)
         if self.host_tier is not None:
             self.host_tier.discard(req.req_id)
+        self._prefetched.pop(req.req_id, None)
+        self._log("finish", req=req.req_id, status=status, reason=reason)
         self._retired.append(req)
 
     def _lifecycle(self):
@@ -1267,6 +1479,12 @@ class ContinuousEngine:
             if victim is not None:
                 self._do_preempt(victim)
                 self._stall = 0
+                # dispatch the victim's restore immediately: its async host
+                # copy is still draining, and when the scheduler re-admits
+                # it (often the very next iteration) the planes are already
+                # device-resident — the resume jit is all that's left on
+                # the admission hot path
+                self._maybe_prefetch()
                 return
         if not self.scheduler.active and self._prefilling is None \
                 and self._head_blocked():
@@ -1342,7 +1560,10 @@ class ContinuousEngine:
             take, proposed, accepted = round_stats(
                 self.gamma, int(n_new[slot]),
                 req.max_new_tokens - req.generated)
-            req.tokens.extend(int(t) for t in toks[slot, :take])
+            delta = [int(t) for t in toks[slot, :take]]
+            req.tokens.extend(delta)
+            if delta:
+                self._log("tokens", req=req.req_id, toks=delta)
             req.rounds += 1
             req.megasteps += 1
             req.proposed += proposed
@@ -1351,6 +1572,11 @@ class ContinuousEngine:
                 req.numerics_flags += int(nonfinite[slot])
             if req.generated >= req.max_new_tokens:
                 self._retire(slot)
+        self._harvests += 1
+        if self.journal is not None and self.checkpoint_every \
+                and self._harvests % self.checkpoint_every == 0:
+            self._checkpoint()
+        self._maybe_prefetch()
         return key
 
     # ---- megastep driver ---------------------------------------------
@@ -1365,6 +1591,7 @@ class ContinuousEngine:
         decoding = {s: r for s, r in self.scheduler.active.items()
                     if s != busy}
         if not decoding:
+            self._maybe_prefetch()
             return key
         key, kmega = jax.random.split(key)
         res = self._mega(self.params, self.draft_params, self.state,
@@ -1377,6 +1604,9 @@ class ContinuousEngine:
                     res.nonfinite, res.first, res.done),
             reqs=decoding,
             emit_first=[s for s, r in decoding.items() if r.pending_first])
+        # with the megastep enqueued, the device is busy for a while —
+        # speculatively restore the resumable queue front behind it
+        self._maybe_prefetch()
         return key
 
     def _harvest(self, flight: _InflightMega):
@@ -1389,6 +1619,8 @@ class ContinuousEngine:
         toks, take, proposed, accepted, nonfinite, first, done = \
             jax.device_get(flight.packed)
         self.host_syncs += 1
+        pre = ({r.req_id: len(r.tokens) for r in flight.reqs.values()}
+               if self.journal is not None else None)
         for slot in flight.emit_first:
             req = flight.reqs[slot]
             if req.pending_first:     # not already emitted by an earlier
@@ -1404,11 +1636,22 @@ class ContinuousEngine:
                 req.proposed += int(proposed[k, slot])
                 req.accepted += int(accepted[k, slot])
                 req.numerics_flags += int(nonfinite[k, slot])
+        if pre is not None:
+            # WAL the harvested token deltas *before* any retire below
+            # writes its finish record — replay folds them in order
+            for req in flight.reqs.values():
+                delta = req.tokens[pre[req.req_id]:]
+                if delta:
+                    self._log("tokens", req=req.req_id, toks=delta)
         for slot, req in flight.reqs.items():
             if not req.done:
                 req.megasteps += 1
             if not req.done and bool(done[slot]):
                 self._retire(slot)
+        self._harvests += 1
+        if self.journal is not None and self.checkpoint_every \
+                and self._harvests % self.checkpoint_every == 0:
+            self._checkpoint()
 
     def run(self, key=None) -> List[Request]:
         """Drive until every submitted request has finished; returns, in
@@ -1444,6 +1687,73 @@ class ContinuousEngine:
         done, self._retired = self._retired, []
         return sorted(done, key=lambda r: r.req_id)
 
+    # ---- crash recovery ----------------------------------------------
+    def recover(self) -> List[Request]:
+        """Rebuild the queue after a crash from the write-ahead journal
+        (serving/journal.py): every non-terminal request is re-queued
+        under its original id — bit-exact *resumable* when a checkpoint
+        persisted its snapshot to the disk tier and the record verifies
+        against the journaled stream, *replayed from its prompt* otherwise
+        (greedy decoding is deterministic, so the replayed tokens are
+        identical either way).  Call on a fresh engine constructed with
+        the crashed run's ``journal_dir``, then `run()` to completion."""
+        if self.journal is None:
+            raise ValueError("recover() requires an engine constructed "
+                             "with journal_dir")
+        events, truncated = J.read_events(self.journal.root)
+        # a torn tail is detected (and excised) when the Journal reopens
+        # the log, before this read — surface it from there too
+        truncated = truncated or self.journal.dropped_tail
+        if truncated:
+            self._log("torn_tail", dropped=truncated)
+        recs = J.replay(events)
+        recovered: List[Request] = []
+        for rec in recs.values():          # dict order == submit order
+            if rec.done:
+                continue
+            req = Request(req_id=rec.req_id,
+                          prompt=np.asarray(rec.prompt, np.int32),
+                          max_new_tokens=rec.max_new_tokens,
+                          priority=rec.priority, deadline_s=rec.deadline_s,
+                          submit_t=time.perf_counter())
+            mode = "replay"
+            if rec.swapped_out and self._recoverable(rec):
+                req.resume = True
+                req.tokens = [int(t) for t in rec.tokens]
+                req.preemptions = 1
+                mode = "resume"
+            elif self.host_tier is not None:
+                # a stale/failed snapshot must not shadow the replay
+                self.host_tier.discard(rec.req_id)
+            self.scheduler.pending.append(req)
+            self._log("recover", req=req.req_id, mode=mode)
+            recovered.append(req)
+        if recs:
+            self.scheduler._next_id = max(self.scheduler._next_id,
+                                          max(recs) + 1)
+        return recovered
+
+    def _recoverable(self, rec: "J.RequestRecord") -> bool:
+        """Adopt a persisted disk snapshot only when it fully verifies
+        (every plane CRC — a full read, recovery is off the hot path) AND
+        its stream position matches the journaled token count; anything
+        less falls back to replay-from-prompt, which always completes."""
+        if self.host_tier is None or self.host_tier.disk is None:
+            return False
+        disk = self.host_tier.disk
+        if rec.req_id not in disk:
+            return False
+        try:
+            snap = disk.load(rec.req_id, pop=False)
+        except HostTierError:
+            return False       # corrupt record; the load discarded it
+        # invariant: pos counts committed KV positions = prompt + generated
+        # minus the carried last token (its KV lands with the next round)
+        if snap.pos != len(rec.prompt) + len(rec.tokens) - 1:
+            disk.discard(rec.req_id)
+            return False
+        return True
+
     def generate(self, prompts: Sequence[np.ndarray], max_new_tokens: int,
                  key=None) -> List[GenerationResult]:
         """Convenience API mirroring `Engine.generate` for ragged prompts."""
@@ -1456,7 +1766,13 @@ class ContinuousEngine:
                              prefill_s=r.prefill_s,
                              decode_s=max(r.finish_t - r.admit_t
                                           - r.prefill_s, 0.0),
-                             numerics_flags=r.numerics_flags)
+                             numerics_flags=r.numerics_flags,
+                             offloads=r.offloads, restores=r.restores,
+                             swap_bytes=r.swap_bytes,
+                             prefetch_hits=r.prefetch_hits,
+                             prefetch_misses=r.prefetch_misses,
+                             resume_block_s=r.resume_block_s,
+                             restarts=r.restarts)
             out.append(GenerationResult(
                 tokens=np.asarray(r.tokens, np.int64)[None, :], stats=stats))
         return out

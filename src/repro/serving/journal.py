@@ -1,0 +1,227 @@
+"""Write-ahead journal + checkpoints for crash-safe serving.
+
+The continuous engine (serving/engine.py) keeps all request lifecycle
+state in process memory; a SIGKILL mid-wave loses the queue, the token
+streams harvested so far, and every host-tier snapshot.  This module
+makes that state durable enough to *replay*:
+
+* :class:`Journal` — an append-only JSONL write-ahead log.  The engine
+  appends one record per lifecycle event **before** acting on it:
+  ``submit`` (with the full prompt, so recovery needs no other input),
+  ``admit``, ``preempt`` (with the complete token list at preemption —
+  the ground truth a bit-exact resume continues from), ``tokens``
+  (per-harvest deltas), ``restart`` (snapshot lost → replay from the
+  prompt), ``resume``, ``recover`` and ``finish`` (terminal status +
+  reason).  Each line is ``crc32(payload) payload`` — on read, the
+  first line whose CRC or JSON fails marks a torn tail from the crash
+  and everything after it is ignored (`truncated` counts them).
+
+* :meth:`Journal.checkpoint` — atomically (temp file + ``os.replace``)
+  writes ``checkpoint.json`` next to the log.  The engine checkpoints
+  every N harvests: it copies live host-tier snapshots to the disk tier
+  (``HostTier.persist`` — copy, not evict) and records the journal
+  sequence number + persisted ids.  The checkpoint is an *optimization
+  marker*, not a correctness requirement: the journal alone suffices to
+  rebuild the queue, so a kill between a journal append and the next
+  checkpoint loses nothing — at worst a request whose snapshot never
+  reached disk replays from its prompt (greedy decoding is
+  deterministic, so the replayed tokens are identical).
+
+* :func:`replay` — folds an event list into per-request
+  :class:`RequestRecord`\\ s: the pure bookkeeping half of
+  ``ContinuousEngine.recover`` (unit-testable without JAX).
+
+Directory layout (``journal_dir`` passed to the engine / ``--journal``)::
+
+    journal_dir/
+      journal.jsonl      append-only WAL (this module)
+      checkpoint.json    latest checkpoint marker (atomic replace)
+      kv/                disk-tier snapshot files (core/disk_tier.py)
+
+See docs/serving.md §Crash recovery for the operator runbook.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
+
+_JOURNAL = "journal.jsonl"
+_CHECKPOINT = "checkpoint.json"
+
+#: statuses that end a request's lifecycle (mirrors serving/scheduler.py)
+TERMINAL = ("ok", "rejected", "cancelled", "failed", "timed_out")
+
+
+def _enc(obj: dict) -> bytes:
+    payload = json.dumps(obj, separators=(",", ":")).encode()
+    crc = zlib.crc32(payload) & 0xFFFFFFFF
+    return b"%08x %s\n" % (crc, payload)
+
+
+class Journal:
+    """Append-only, CRC-framed JSONL log under ``root`` (see module
+    docstring).  Opening is append-mode: recovery continues the same
+    log, so a second crash replays the union of both runs' events."""
+
+    def __init__(self, root: str, *, fsync: bool = False):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self.path = os.path.join(root, _JOURNAL)
+        self.fsync = fsync
+        events, self.dropped_tail = read_events(root)
+        self.seq = len(events)
+        if self.dropped_tail:
+            # rewrite the log without the torn tail before appending: new
+            # events written after a garbage line would be unreachable
+            # (read_events stops at the first bad line), so a second crash
+            # would silently lose this whole run's journal
+            tmp = self.path + ".tmp"
+            with open(tmp, "wb") as f:
+                for e in events:
+                    f.write(_enc(e))
+                f.flush()
+                if fsync:
+                    os.fsync(f.fileno())
+            os.replace(tmp, self.path)
+        self._f = open(self.path, "ab")
+
+    def append(self, ev: str, **fields: Any) -> int:
+        """Durably append one event; returns its sequence number."""
+        rec = {"seq": self.seq, "ev": ev}
+        rec.update(fields)
+        self._f.write(_enc(rec))
+        self._f.flush()
+        if self.fsync:
+            os.fsync(self._f.fileno())
+        self.seq += 1
+        return self.seq - 1
+
+    def checkpoint(self, meta: dict) -> None:
+        """Atomically replace ``checkpoint.json`` with ``meta`` (+ the
+        current journal sequence number)."""
+        meta = dict(meta)
+        meta.setdefault("seq", self.seq)
+        tmp = os.path.join(self.root, _CHECKPOINT + ".tmp")
+        with open(tmp, "w") as f:
+            json.dump(meta, f)
+            f.flush()
+            if self.fsync:
+                os.fsync(f.fileno())
+        os.replace(tmp, os.path.join(self.root, _CHECKPOINT))
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.close()
+
+    def __enter__(self) -> "Journal":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def read_events(root: str) -> Tuple[List[dict], int]:
+    """Read the journal under ``root``.  Returns ``(events, truncated)``
+    where ``truncated`` is the number of trailing lines dropped at the
+    first CRC/JSON failure (the torn tail left by a crash mid-append)."""
+    path = os.path.join(root, _JOURNAL)
+    if not os.path.exists(path):
+        return [], 0
+    with open(path, "rb") as f:
+        lines = f.read().split(b"\n")
+    events: List[dict] = []
+    for i, line in enumerate(lines):
+        if not line:
+            continue
+        ok = False
+        if len(line) > 9 and line[8:9] == b" ":
+            payload = line[9:]
+            try:
+                if int(line[:8], 16) == (zlib.crc32(payload) & 0xFFFFFFFF):
+                    events.append(json.loads(payload))
+                    ok = True
+            except (ValueError, json.JSONDecodeError):
+                ok = False
+        if not ok:
+            # torn tail: drop this and everything after it — later lines
+            # may depend on the lost event, so replay stops here
+            return events, sum(1 for l in lines[i:] if l)
+    return events, 0
+
+
+def read_checkpoint(root: str) -> Optional[dict]:
+    path = os.path.join(root, _CHECKPOINT)
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """Folded lifecycle state of one journaled request."""
+
+    req_id: int
+    prompt: List[int]
+    max_new_tokens: int = 64
+    priority: int = 0
+    deadline_s: Optional[float] = None
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    status: str = "queued"         # last known status; TERMINAL ⇒ done
+    reason: str = ""
+    swapped_out: bool = False      # last event left it preempted-to-tier
+
+    @property
+    def done(self) -> bool:
+        return self.status in TERMINAL
+
+
+def replay(events: List[dict]) -> Dict[int, RequestRecord]:
+    """Fold journal events into per-request records, in submit order.
+
+    ``preempt`` events carry the authoritative token list at preemption
+    (they overwrite any ``tokens`` deltas, which is also what makes the
+    fold idempotent across recover-of-a-recover); ``restart`` clears the
+    stream because the engine replays from the prompt."""
+    recs: Dict[int, RequestRecord] = {}
+    for e in events:
+        ev = e.get("ev")
+        rid = e.get("req")
+        if ev == "submit":
+            recs[rid] = RequestRecord(
+                req_id=rid, prompt=list(e.get("prompt", [])),
+                max_new_tokens=e.get("max_new", 64),
+                priority=e.get("priority", 0),
+                deadline_s=e.get("deadline_s"))
+            continue
+        rec = recs.get(rid)
+        if rec is None:
+            continue               # event for a request whose submit was torn
+        if ev == "tokens":
+            rec.tokens.extend(e.get("toks", []))
+        elif ev == "preempt":
+            rec.tokens = list(e.get("tokens", []))
+            rec.swapped_out = True
+            rec.status = "queued"
+        elif ev in ("admit", "resume"):
+            rec.swapped_out = False
+            rec.status = "running"
+        elif ev == "restart":
+            rec.tokens = []
+            rec.swapped_out = False
+        elif ev == "recover":
+            # a previous recovery re-queued it; mode "replay" restarts
+            if e.get("mode") == "replay":
+                rec.tokens = []
+                rec.swapped_out = False
+            rec.status = "queued"
+        elif ev == "finish":
+            rec.status = e.get("status", "ok")
+            rec.reason = e.get("reason", "")
+            rec.swapped_out = False
+    return recs

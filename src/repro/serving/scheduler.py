@@ -96,6 +96,18 @@ class Request:
     preemptions: int = 0
     admit_seq: int = -1                 # monotonic admission counter
     megasteps: int = 0                  # harvests since (re)admission
+    # swap telemetry (host/disk tier — core/host_tier.py, core/disk_tier.py):
+    # offload/restore counts, bytes moved through the tiers, whether each
+    # resume found its snapshot prefetched (hit) or had to block on the
+    # restore (miss), blocking seconds spent in resume on the engine hot
+    # path, and restarts (snapshot capacity-evicted → replayed from prompt)
+    offloads: int = 0
+    restores: int = 0
+    swap_bytes: int = 0
+    prefetch_hits: int = 0
+    prefetch_misses: int = 0
+    resume_block_s: float = 0.0
+    restarts: int = 0
     numerics_flags: int = 0             # non-finite logit rows (sampling
                                         # fell back to greedy-over-finite)
     # -- runtime ------------------------------------------------------------

@@ -18,6 +18,16 @@ The engine exposes three hook points, all driven by a single
   snapshot *after* its checksum is recorded; corrupting bytes here
   simulates bitrot between offload and restore and must be caught by the
   restore-time checksum verification.
+* ``sleep(seconds)`` — replaces the host tier's real backoff sleep:
+  retry-storm tests assert the exponential schedule from ``.sleeps``
+  instead of paying wall-clock time.
+* ``disk(op, req_id)`` — called by :class:`~repro.core.disk_tier
+  .DiskTier` before every put/load; raising :class:`OSError` (ENOSPC and
+  friends) simulates a full or failing disk, surfaced as ``DiskTierError``.
+* ``disk_mangle(req_id, path)`` — called after a successful disk put;
+  truncating the file simulates a torn write, flipping payload bytes
+  simulates bitrot — both must be caught by the load-time length/CRC
+  checks and degrade to that one request.
 
 Everything is deterministic: failures are scheduled by count/req-id, not
 sampled, and the event log records exactly what fired in what order so
@@ -26,6 +36,8 @@ tests can assert on the sequence.
 
 from __future__ import annotations
 
+import errno
+import os
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -47,6 +59,13 @@ class FaultInjector:
         self._corrupt: set = set()          # req ids (or ANY) to mangle
         self._cancel_at: List[Tuple[int, object]] = []   # (tick, request)
         self._storm = 0                     # forced preemptions remaining
+        self._burst = 1                     # max preemptions per sweep
+        self.sleeps: List[float] = []       # absorbed backoff sleeps
+        # (op, req_id|ANY) -> (remaining disk failures, errno)
+        self._disk_failures: Dict[Tuple[str, Optional[int]],
+                                  Tuple[int, int]] = {}
+        self._truncate: set = set()         # req ids (or ANY): torn writes
+        self._disk_corrupt: set = set()     # req ids (or ANY): bitrot
 
     # ---- schedule builders (chainable) --------------------------------
     def fail_transfers(self, op: str = "offload", req_id: Optional[int] = ANY,
@@ -71,10 +90,40 @@ class FaultInjector:
         self._cancel_at.append((self.ticks + ticks, req))
         return self
 
-    def preemption_storm(self, count: int) -> "FaultInjector":
-        """Force the next ``count`` sweeps to each preempt one running slot
-        (if any is eligible), regardless of pool pressure."""
+    def preemption_storm(self, count: int, burst: int = 1) -> "FaultInjector":
+        """Force the next ``count`` preemptions, up to ``burst`` eligible
+        slots per sweep, regardless of pool pressure.  ``burst > 1`` piles
+        snapshots up in the host tier *concurrently* — the only way to
+        drive the host-capacity spill (and disk read-back) paths, since a
+        lone preempted victim sits at the queue front and is readmitted
+        before a second snapshot ever joins it."""
         self._storm += count
+        self._burst = max(self._burst, burst)
+        return self
+
+    def fail_disk(self, op: str = "put", req_id: Optional[int] = ANY,
+                  count: int = 1,
+                  err: int = errno.ENOSPC) -> "FaultInjector":
+        """Fail the next ``count`` disk ``op``\\ s ("put"/"load") with
+        ``OSError(err)`` — ENOSPC by default.  A failed *put* during a
+        spill or checkpoint degrades gracefully (the snapshot stays in the
+        host store, or the over-capacity offload fails that one request);
+        a failed *load* fails the swap-in."""
+        key = (op, req_id)
+        have = self._disk_failures.get(key, (0, err))[0]
+        self._disk_failures[key] = (have + count, err)
+        return self
+
+    def truncate_disk(self, req_id: Optional[int] = ANY) -> "FaultInjector":
+        """Truncate ``req_id``'s (or every) record after its put — a torn
+        write the load-time payload-length check must refuse."""
+        self._truncate.add(req_id)
+        return self
+
+    def corrupt_disk(self, req_id: Optional[int] = ANY) -> "FaultInjector":
+        """Flip a payload byte of ``req_id``'s (or every) record after its
+        put — bitrot the load-time plane CRCs must refuse."""
+        self._disk_corrupt.add(req_id)
         return self
 
     # ---- engine hooks --------------------------------------------------
@@ -87,13 +136,26 @@ class FaultInjector:
             self.events.append(("cancel", item[1].req_id, self.ticks))
         if self._storm > 0:
             busy = engine._prefilling.slot if engine._prefilling else None
-            victim = engine.scheduler.preemption_victim(
-                exclude=() if busy is None else (busy,))
-            if victim is not None:
-                self._storm -= 1
-                req_id = engine.scheduler.active[victim].req_id
-                engine._do_preempt(victim)
-                self.events.append(("preempt", req_id, self.ticks))
+            want = min(self._storm, self._burst)
+            # Select the whole burst up front and only fire once *all* of
+            # it is eligible: preempting one victim early would see it
+            # readmitted (and its snapshot drained) before a second victim
+            # ever joins it in the host tier.
+            excl = set() if busy is None else {busy}
+            victims = []
+            while len(victims) < want:
+                victim = engine.scheduler.preemption_victim(
+                    exclude=tuple(excl))
+                if victim is None:
+                    break
+                victims.append(victim)
+                excl.add(victim)
+            if len(victims) == want:
+                for victim in victims:
+                    self._storm -= 1
+                    req_id = engine.scheduler.active[victim].req_id
+                    engine._do_preempt(victim)
+                    self.events.append(("preempt", req_id, self.ticks))
 
     def transfer(self, op: str, req_id: int) -> None:
         for key in ((op, req_id), (op, ANY)):
@@ -102,6 +164,34 @@ class FaultInjector:
                 self.events.append(("transfer_fail", op, req_id))
                 raise TransferError(
                     f"injected {op} failure for request {req_id}")
+
+    def sleep(self, seconds: float) -> None:
+        """Injected in place of ``time.sleep`` for retry backoff — record
+        the schedule, don't wait it out."""
+        self.sleeps.append(seconds)
+        self.events.append(("sleep", seconds))
+
+    def disk(self, op: str, req_id: int) -> None:
+        for key in ((op, req_id), (op, ANY)):
+            left, err = self._disk_failures.get(key, (0, 0))
+            if left > 0:
+                self._disk_failures[key] = (left - 1, err)
+                self.events.append(("disk_fail", op, req_id))
+                raise OSError(err, os.strerror(err))
+
+    def disk_mangle(self, req_id: int, path: str) -> None:
+        if req_id in self._truncate or ANY in self._truncate:
+            size = os.path.getsize(path)
+            with open(path, "r+b") as f:
+                f.truncate(max(size // 2, 8))   # keep magic+len: torn tail
+            self.events.append(("disk_torn", req_id))
+        if req_id in self._disk_corrupt or ANY in self._disk_corrupt:
+            with open(path, "r+b") as f:
+                f.seek(-1, os.SEEK_END)
+                byte = f.read(1)
+                f.seek(-1, os.SEEK_END)
+                f.write(bytes([byte[0] ^ 0xFF]))
+            self.events.append(("disk_corrupt", req_id))
 
     def mangle(self, req_id: int, planes):
         if req_id not in self._corrupt and ANY not in self._corrupt:

@@ -1,0 +1,251 @@
+"""Unit tests for the disk KV tier (core/disk_tier.py) and the host-tier
+spill integration (core/host_tier.py) — pure numpy, no engine, no jax
+compilation: the snapshot plane trees are synthetic.
+
+Engine-level three-tier behavior (spill under real preemption pressure,
+disk faults degrading to single-request failures) lives in
+tests/test_fault_injection.py; crash recovery in tests/test_recovery.py.
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+import pytest
+
+from fault_injection import ANY, FaultInjector
+from repro.core.disk_tier import DiskTier, DiskTierError
+from repro.core.host_tier import (HostTier, HostTierError, SlotSnapshot,
+                                  SnapshotCorruptionError, SnapshotMissError,
+                                  _crc)
+
+
+def make_snap(req_id: int, *, scale: int = 4, seed: int | None = None,
+              ) -> SlotSnapshot:
+    """A materialized snapshot with the production plane layout in
+    miniature: two layers of packed-INT4 planes + fp32 scales + the fp
+    double buffer.  ``scale`` multiplies every plane's size."""
+    rng = np.random.default_rng(seed if seed is not None else req_id)
+    planes = []
+    for _ in range(2):
+        planes.append({
+            "k_upper": rng.integers(0, 256, (2, scale, 4), dtype=np.uint8),
+            "k_scale": rng.standard_normal((2, scale)).astype(np.float32),
+            "v_upper": rng.integers(0, 256, (2, scale, 4), dtype=np.uint8),
+            "buf_k": rng.standard_normal((scale, 4)).astype(np.float32),
+        })
+    snap = SlotSnapshot(req_id=req_id, n_blocks=2, buf_len=3,
+                        pos=17 + req_id, last_token=42, planes=planes)
+    snap.checksum = _crc(planes)
+    snap.nbytes = sum(leaf.nbytes for layer in planes
+                      for leaf in layer.values())
+    return snap
+
+
+def assert_snap_equal(a: SlotSnapshot, b: SlotSnapshot) -> None:
+    assert (a.req_id, a.n_blocks, a.buf_len, a.pos, a.last_token) == \
+           (b.req_id, b.n_blocks, b.buf_len, b.pos, b.last_token)
+    assert len(a.planes) == len(b.planes)
+    for la, lb in zip(a.planes, b.planes):
+        assert sorted(la) == sorted(lb)
+        for key in la:
+            assert la[key].dtype == lb[key].dtype
+            np.testing.assert_array_equal(la[key], lb[key])
+
+
+class TestDiskTierUnit:
+    def test_roundtrip_bit_exact(self, tmp_path):
+        tier = DiskTier(str(tmp_path))
+        snap = make_snap(3)
+        nbytes = tier.put(snap)
+        assert nbytes > snap.nbytes          # payload + header + magic
+        assert 3 in tier and len(tier) == 1
+        assert tier.used_bytes == nbytes
+
+        back = tier.load(3, pop=False)
+        assert_snap_equal(back, snap)
+        assert back.materialized and back.checksum == snap.checksum
+        assert 3 in tier                     # pop=False keeps the record
+
+        back2 = tier.load(3)                 # default pop=True
+        assert_snap_equal(back2, snap)
+        assert 3 not in tier and len(tier) == 0
+        assert not os.path.exists(os.path.join(str(tmp_path), "req_3.kvsnap"))
+        assert tier.stats["puts"] == 1 and tier.stats["loads"] == 2
+
+    def test_put_is_idempotent_per_request(self, tmp_path):
+        tier = DiskTier(str(tmp_path))
+        tier.put(make_snap(1, seed=0))
+        newer = make_snap(1, seed=99)
+        tier.put(newer)
+        assert len(tier) == 1
+        assert_snap_equal(tier.load(1), newer)
+
+    def test_no_tmp_files_survive(self, tmp_path, monkeypatch):
+        tier = DiskTier(str(tmp_path))
+        tier.put(make_snap(1))
+        assert not [n for n in os.listdir(str(tmp_path))
+                    if n.endswith(".tmp")]
+        # a write that dies at the rename must clean up its temp file and
+        # leave the live name untouched (atomicity: old record or none)
+        real_replace = os.replace
+
+        def boom(src, dst):
+            raise OSError("injected rename failure")
+
+        monkeypatch.setattr(os, "replace", boom)
+        with pytest.raises(DiskTierError):
+            tier.put(make_snap(2))
+        monkeypatch.setattr(os, "replace", real_replace)
+        assert 2 not in tier
+        names = sorted(os.listdir(str(tmp_path)))
+        assert names == ["req_1.kvsnap"], names
+
+    def test_load_missing_raises_keyerror(self, tmp_path):
+        tier = DiskTier(str(tmp_path))
+        with pytest.raises(KeyError):
+            tier.load(7)
+
+    def test_unmaterialized_put_refused(self, tmp_path):
+        snap = make_snap(1)
+        snap.checksum = None                 # still device-resident
+        with pytest.raises(AssertionError):
+            DiskTier(str(tmp_path)).put(snap)
+
+    def test_torn_write_refused_and_discarded(self, tmp_path):
+        fault = FaultInjector().truncate_disk(ANY)
+        tier = DiskTier(str(tmp_path), fault=fault)
+        tier.put(make_snap(1))
+        with pytest.raises(SnapshotCorruptionError, match="torn|magic|header"):
+            tier.load(1)
+        assert 1 not in tier                 # refused records are dropped
+        assert not os.listdir(str(tmp_path))
+
+    def test_bitrot_refused_by_plane_crc(self, tmp_path):
+        fault = FaultInjector().corrupt_disk(ANY)
+        tier = DiskTier(str(tmp_path), fault=fault)
+        tier.put(make_snap(1))
+        with pytest.raises(SnapshotCorruptionError, match="CRC"):
+            tier.load(1)
+        assert 1 not in tier
+
+    def test_enospc_put_raises_and_registers_nothing(self, tmp_path):
+        fault = FaultInjector().fail_disk("put", count=1)
+        tier = DiskTier(str(tmp_path), fault=fault)
+        with pytest.raises(DiskTierError, match="No space left"):
+            tier.put(make_snap(1))
+        assert len(tier) == 0 and not os.listdir(str(tmp_path))
+        tier.put(make_snap(1))               # fault consumed: next put lands
+        assert 1 in tier
+
+    def test_lru_watermark_eviction_exempts_new_record(self, tmp_path):
+        tier = DiskTier(str(tmp_path), capacity_bytes=1,
+                        high_watermark=1.0, low_watermark=0.8)
+        tier.put(make_snap(1))
+        tier.put(make_snap(2))               # over watermark: evicts 1
+        assert 2 in tier and 1 not in tier, \
+            "eviction must spare the record being written"
+        assert tier.evictions == 1
+
+    def test_lru_order_is_touch_order(self, tmp_path):
+        snaps = {i: make_snap(i) for i in (1, 2, 3)}
+        tier = DiskTier(str(tmp_path), low_watermark=1.0)
+        one = tier.put(snaps[1])             # actual record size on disk
+        tier.put(snaps[2])
+        # room for ~2.5 equal-size records: the third put must evict one
+        tier.capacity_bytes = int(2.5 * one)
+        tier.load(1, pop=False)              # touch 1: now 2 is the LRU
+        tier.put(snaps[3])                   # must evict 2, not 1
+        assert 2 not in tier
+        assert 1 in tier and 3 in tier
+
+    def test_scan_existing_adopts_prior_records(self, tmp_path):
+        first = DiskTier(str(tmp_path))
+        snaps = [make_snap(5), make_snap(9)]
+        for s in snaps:
+            first.put(s)
+        (tmp_path / "not_a_snapshot.txt").write_text("junk")
+        (tmp_path / "req_zz.kvsnap").write_text("unparseable id")
+
+        adopted = DiskTier(str(tmp_path))    # fresh process, same root
+        assert sorted([5, 9]) == sorted(
+            rid for rid in (5, 9) if rid in adopted)
+        assert len(adopted) == 2             # junk names ignored
+        for s in snaps:
+            assert_snap_equal(adopted.load(s.req_id), s)
+
+
+class TestHostTierSpill:
+    """HostTier + DiskTier integration on synthetic numpy planes."""
+
+    def tiers(self, tmp_path, *, host_cap=1, disk_cap=None, fault=None):
+        disk = DiskTier(str(tmp_path), capacity_bytes=disk_cap, fault=fault)
+        host = HostTier(fault=fault, capacity_bytes=host_cap, disk=disk)
+        return host, disk
+
+    def offload(self, host, snap):
+        return host.offload(snap.req_id, snap.planes,
+                            n_blocks=snap.n_blocks, buf_len=snap.buf_len,
+                            pos=snap.pos, last_token=snap.last_token)
+
+    def test_spill_then_disk_fallback_restore(self, tmp_path):
+        host, disk = self.tiers(tmp_path)
+        a, b = make_snap(1), make_snap(2)
+        self.offload(host, a)
+        assert host.spills == 0              # lone snapshot is exempt
+        self.offload(host, b)                # over capacity: spills a
+        assert host.spills == 1 and 1 not in host and 1 in disk
+        assert host.holds(1) and host.holds(2)
+
+        back_a = host.restore(1)             # host miss → disk fallback
+        assert host.disk_restores == 1
+        assert_snap_equal(back_a, a)
+        assert 1 not in disk                 # popped on restore
+
+        back_b = host.restore(2)             # host hit
+        assert host.disk_restores == 1
+        assert_snap_equal(back_b, b)
+        assert len(host) == 0 and len(disk) == 0
+
+    def test_disk_eviction_surfaces_as_miss(self, tmp_path):
+        host, disk = self.tiers(tmp_path, disk_cap=1)
+        for rid in (1, 2, 3):
+            self.offload(host, make_snap(rid))
+        # spills: 1 (at 2's offload), then 2 (at 3's) which evicts 1's
+        # record under the 1-byte disk watermark
+        assert host.spills == 2 and disk.evictions >= 1
+        assert not host.holds(1)
+        with pytest.raises(SnapshotMissError):
+            host.restore(1)                  # caller replays from prompt
+
+    def test_spill_failure_fails_only_new_offload(self, tmp_path):
+        fault = FaultInjector().fail_disk("put", count=10_000)
+        host, disk = self.tiers(tmp_path, fault=fault)
+        a = make_snap(1)
+        self.offload(host, a)
+        with pytest.raises(HostTierError, match="spill failed"):
+            self.offload(host, make_snap(2))
+        assert 2 not in host and not host.holds(2)
+        assert 1 in host                     # older snapshot stays intact
+        assert_snap_equal(host.restore(1), a)
+
+    def test_persist_keeps_host_copy_and_restore_drops_it(self, tmp_path):
+        host, disk = self.tiers(tmp_path, host_cap=None)
+        a = make_snap(1)
+        self.offload(host, a)
+        assert host.persist(1) is True       # checkpoint path
+        assert 1 in host and 1 in disk
+        assert host.persist(99) is False     # unknown request
+
+        back = host.restore(1)               # host hit…
+        assert_snap_equal(back, a)
+        assert 1 not in disk, "restore must drop the stale persisted copy"
+
+    def test_corrupted_host_snapshot_refused(self, tmp_path):
+        fault = FaultInjector().corrupt_snapshot(1)
+        host, _ = self.tiers(tmp_path, host_cap=None, fault=fault)
+        self.offload(host, make_snap(1))
+        with pytest.raises(SnapshotCorruptionError):
+            host.restore(1)
+        assert 1 not in host

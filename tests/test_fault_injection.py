@@ -16,6 +16,7 @@ from fault_injection import ANY, FaultInjector
 from repro.configs import get_config
 from repro.core.host_tier import HostTier, SnapshotCorruptionError
 from repro.models.stack import StackModel
+from repro.serving import journal as J
 from repro.serving.engine import ContinuousEngine
 
 MAX_NEW = 8
@@ -144,6 +145,21 @@ class TestLifecycle:
         assert ok.status == "ok" and len(ok.tokens) == MAX_NEW
         check_drained(eng)
 
+    def test_queued_deadline_times_out_unadmitted(self, tiny):
+        """Regression: a request whose deadline lapses while it waits
+        behind a long wave must retire ``timed_out`` from the *queue* —
+        the lifecycle sweep covers pending requests, not only running
+        slots, so it never consumes a slot or a prefill chunk."""
+        eng, prompts = setup(tiny, oversub=False, max_slots=1, max_new=64)
+        long_req = eng.submit(prompts[0], 64)
+        waiting = eng.submit(prompts[1], MAX_NEW, deadline_s=1e-4)
+        eng.run(jax.random.PRNGKey(7))
+        assert waiting.status == "timed_out" and "deadline" in waiting.reason
+        assert waiting.admit_seq == -1, "timed-out request was admitted"
+        assert waiting.prefill_chunks == 0 and waiting.tokens == []
+        assert long_req.status == "ok" and len(long_req.tokens) == 64
+        check_drained(eng)
+
     def test_preemption_storm_token_identity(self, tiny, reference):
         """Forced preemptions with no pool pressure: pure scheduling noise
         that must not change a single greedy token."""
@@ -194,6 +210,125 @@ class TestAdmissionHardening:
         assert not eng.scheduler.has_work
 
 
+class TestDiskFaults:
+    """Three-tier (device → host → disk) failure modes: every disk fault
+    must degrade to a single request's ``failed`` status — never an engine
+    wedge, never a leaked pool block.
+
+    ``host_capacity_bytes=1`` forces any *second* concurrent host snapshot
+    to spill its LRU sibling to disk, and ``preemption_storm(burst=2)``
+    creates exactly that concurrency (a lone victim is readmitted before a
+    second snapshot joins it)."""
+
+    def three_tier(self, tiny, tmp_path, fault, **kw):
+        return setup(tiny, oversub=False, fault=fault,
+                     disk_dir=str(tmp_path / "kv"),
+                     host_capacity_bytes=1, **kw)
+
+    def test_spill_and_disk_restore_token_identity(self, tiny, tmp_path,
+                                                   reference):
+        """No faults, just pressure: snapshots spill host → disk and
+        stream back bit-exact — greedy outputs are token-identical and
+        both tiers drain."""
+        fault = FaultInjector().preemption_storm(2, burst=2)
+        eng, prompts = self.three_tier(tiny, tmp_path, fault)
+        reqs = [eng.submit(p, MAX_NEW) for p in prompts]
+        eng.run(jax.random.PRNGKey(7))
+        assert [r.status for r in reqs] == ["ok"] * 4
+        assert eng.host_tier.spills >= 1, "host capacity never spilled"
+        assert eng.host_tier.disk_restores >= 1, "disk never restored"
+        for r, ref in zip(reqs, reference):
+            assert list(r.tokens) == ref
+        check_drained(eng)
+        assert len(eng.disk_tier) == 0 and eng.disk_tier.used_bytes == 0
+
+    def test_disk_eviction_restarts_from_prompt(self, tiny, tmp_path,
+                                                reference):
+        """The graceful end of the hierarchy: a snapshot the disk tier
+        capacity-evicted is *not* a failure — the engine replays that
+        request from its prompt and greedy decoding regenerates identical
+        tokens.  ``disk_capacity_bytes=1`` makes every spill evict its
+        predecessors, so a burst of three concurrent victims leaves the
+        first one with no tier holding its snapshot."""
+        fault = FaultInjector().preemption_storm(3, burst=3)
+        eng, prompts = self.three_tier(tiny, tmp_path, fault, max_slots=3,
+                                       disk_capacity_bytes=1)
+        reqs = [eng.submit(p, MAX_NEW) for p in prompts]
+        eng.run(jax.random.PRNGKey(7))
+        assert [r.status for r in reqs] == ["ok"] * 4
+        assert eng.host_tier.spills >= 2, "burst never spilled twice"
+        assert eng.disk_tier.evictions >= 1, "disk watermark never evicted"
+        assert sum(r.restarts for r in reqs) >= 1, \
+            "evicted snapshot should have forced a replay-from-prompt"
+        for r, ref in zip(reqs, reference):
+            assert list(r.tokens) == ref
+        check_drained(eng)
+        assert len(eng.disk_tier) == 0
+
+    def test_enospc_spill_fails_only_victim(self, tiny, tmp_path, reference):
+        """ENOSPC during a host→disk spill: the offload that needed the
+        spill fails *its* victim; the spilled-for snapshot stays host-
+        resident and every other request completes token-identical."""
+        fault = (FaultInjector().preemption_storm(2, burst=2)
+                 .fail_disk("put", count=10_000))
+        eng, prompts = self.three_tier(tiny, tmp_path, fault)
+        reqs = [eng.submit(p, MAX_NEW) for p in prompts]
+        eng.run(jax.random.PRNGKey(7))
+        failed = [r for r in reqs if r.status == "failed"]
+        assert len(failed) == 1 and "offload failed" in failed[0].reason
+        assert all(r.status == "ok" for r in reqs if r not in failed)
+        for r, ref in zip(reqs, reference):
+            if r.status == "ok":
+                assert list(r.tokens) == ref
+        assert any(e[0] == "disk_fail" for e in fault.events)
+        check_drained(eng)
+
+    @pytest.mark.parametrize("mode", ["torn", "bitrot", "io"])
+    def test_disk_readback_fault_fails_only_victim(self, tiny, tmp_path,
+                                                   reference, mode):
+        """A spilled record that comes back torn (truncated payload),
+        bit-flipped (plane CRC mismatch), or unreadable (EIO) fails the
+        swap-in of *that* request only."""
+        fault = FaultInjector().preemption_storm(2, burst=2)
+        if mode == "torn":
+            fault.truncate_disk(ANY)
+        elif mode == "bitrot":
+            fault.corrupt_disk(ANY)
+        else:
+            import errno
+            fault.fail_disk("load", count=10_000, err=errno.EIO)
+        eng, prompts = self.three_tier(tiny, tmp_path, fault)
+        reqs = [eng.submit(p, MAX_NEW) for p in prompts]
+        eng.run(jax.random.PRNGKey(7))
+        failed = [r for r in reqs if r.status == "failed"]
+        assert len(failed) == 1, \
+            f"disk {mode} fault must fail exactly the spilled request"
+        assert "swap-in failed" in failed[0].reason
+        for r, ref in zip(reqs, reference):
+            if r.status == "ok":
+                assert list(r.tokens) == ref
+        check_drained(eng)
+        assert len(eng.disk_tier) == 0
+
+    def test_checkpoint_persist_failure_degrades(self, tiny, tmp_path):
+        """ENOSPC while a checkpoint persists host snapshots to disk:
+        the skip is journaled, the engine keeps serving, and every request
+        still completes (at worst that one replays after a real crash)."""
+        fault = (FaultInjector().preemption_storm(2, burst=2)
+                 .fail_disk("put", count=10_000))
+        eng, prompts = setup(tiny, oversub=False, fault=fault,
+                             journal_dir=str(tmp_path / "j"),
+                             checkpoint_every=1, prefetch=False)
+        reqs = [eng.submit(p, MAX_NEW) for p in prompts]
+        eng.run(jax.random.PRNGKey(7))
+        assert [r.status for r in reqs] == ["ok"] * 4
+        assert eng.checkpoints >= 1
+        events, _ = J.read_events(str(tmp_path / "j"))
+        assert any(e["ev"] == "checkpoint_skip" for e in events), \
+            "failed persist was not journaled"
+        check_drained(eng)
+
+
 class TestHostTierUnit:
     def test_bit_exact_roundtrip(self):
         import jax.numpy as jnp
@@ -220,3 +355,19 @@ class TestHostTierUnit:
         with pytest.raises(SnapshotCorruptionError):
             tier.restore(3)
         assert 3 not in tier                # refused snapshots are dropped
+
+    def test_backoff_schedule_routes_through_harness(self, monkeypatch):
+        """Retry backoff sleeps go through ``fault.sleep``: the schedule
+        is asserted deterministically, with zero wall-clock spent."""
+        import repro.core.host_tier as HT
+        monkeypatch.setattr(
+            HT.time, "sleep",
+            lambda s: pytest.fail("backoff hit the real time.sleep"))
+        fault = FaultInjector().fail_transfers("offload", count=3)
+        tier = HostTier(fault=fault, max_retries=3, backoff_s=0.01)
+        tier.offload(1, [{"p": np.zeros(8, np.uint8)}], n_blocks=1,
+                     buf_len=0, pos=8, last_token=0)
+        # three transient failures → exponential schedule, then success
+        assert fault.sleeps == [0.01, 0.02, 0.04]
+        assert tier.retries == 3
+        assert 1 in tier                    # the offload still succeeded

@@ -13,9 +13,11 @@ The mesh classes need 8 forced host-platform devices:
 """
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from fault_injection import FaultInjector
 from repro.configs import get_config
 from repro.launch.mesh import make_host_mesh
 from repro.models.stack import StackModel
@@ -132,3 +134,112 @@ class TestHost8Mesh:
     @needs_mesh
     def test_token_identity_with_prefix_cache(self, tiny, reference, mesh):
         run_oversubscribed(tiny, reference, mesh=mesh, prefix_cache=True)
+
+
+# ---------------------------------------------------------------------------
+# preemption × prefix cache: copy-on-preempt must not disturb aliased blocks
+# ---------------------------------------------------------------------------
+
+def _toks(seed, n, vocab):
+    return np.asarray(jax.random.randint(
+        jax.random.PRNGKey(seed), (n,), 0, vocab), np.int32)
+
+
+def _plane_snapshot(engine, ids):
+    """Host copies of every quantized pool plane for ``ids``' rows."""
+    ids = jnp.asarray(ids, jnp.int32)
+    snap = []
+
+    def fn(mix, _stacked):
+        for f in ("k_upper", "k_lower", "k_scale", "k_zero",
+                  "v_upper", "v_lower", "v_scale", "v_zero"):
+            snap.append(np.asarray(jnp.take(getattr(mix.primary, f), ids,
+                                            axis=-4)))
+        return mix
+
+    ContinuousEngine._map_attn(engine.state, fn)
+    return snap
+
+
+class _AliasProbe(FaultInjector):
+    """Storm injector that records the aliased blocks' refcounts at each
+    sweep while the storm is pending — the capture at the firing sweep is
+    the at-preemption ground truth."""
+
+    def __init__(self, blocks):
+        super().__init__()
+        self.blocks = np.asarray(blocks)
+        self.seen = []
+
+    def tick(self, engine):
+        if self._storm > 0:
+            self.seen.append(
+                np.asarray(engine.table.refcount)[self.blocks].copy())
+        super().tick(engine)
+
+
+class TestPreemptPrefixAlias:
+    """Preempting a request whose page-table row aliases index-retained
+    blocks (refcount > 1): the byte-copy snapshot is alias-agnostic and
+    the refcount-aware release keeps the shared blocks in place, so the
+    indexed planes stay bit-identical, the resumed stream stays
+    token-identical, and the drain leaves exactly the index's blocks off
+    the free stack."""
+
+    def _run(self, tiny, mesh=None):
+        cfg, model, params = tiny
+        G = cfg.group_size
+        p1 = _toks(31, 3 * G + 8, cfg.vocab_size)               # producer
+        p2 = np.concatenate([p1, _toks(32, G, cfg.vocab_size)])  # aliases p1
+
+        def make(prefix, fault=None, with_mesh=False):
+            kw = {"mesh": mesh} if (with_mesh and mesh is not None) else {}
+            return ContinuousEngine(
+                model, params, gamma=2, greedy=True, max_slots=2,
+                max_seq=512, rounds_per_step=2, prefill_chunk=G,
+                prefix_cache=prefix, overflow="preempt",
+                preempt_patience=2, fault=fault, **kw)
+
+        cold = make(prefix=False)
+        ref1 = cold.generate([p1], MAX_NEW)[0].tokens[0]
+        ref2 = cold.generate([p2], MAX_NEW)[0].tokens[0]
+
+        warm = make(prefix=True, fault=FaultInjector(), with_mesh=True)
+        np.testing.assert_array_equal(
+            warm.generate([p1], MAX_NEW)[0].tokens[0], ref1)
+        shared = sorted(nd.block_id for nd in warm.prefix._iter_nodes())
+        # the ragged tail group stays private: 3G+8 tokens index 2 groups
+        assert len(shared) == 2
+        before = _plane_snapshot(warm, shared)
+
+        # re-arm with a probing storm: p2 admits through the cache, then
+        # gets preempted mid-decode while it aliases the indexed blocks
+        probe = _AliasProbe(shared).preemption_storm(1)
+        warm.fault = probe
+        req2 = warm.submit(p2, MAX_NEW)
+        warm.run(jax.random.PRNGKey(3))
+        assert req2.status == "ok" and req2.preemptions >= 1
+        assert warm.prefix.stats["hits"] >= 1, "p2 never aliased the index"
+        # only chain[:-1] is aliased into the slot row (the last matched
+        # group is re-packed privately as the COW tail), so exactly the
+        # shared interior carries refcount > 1 at preemption
+        assert probe.seen and (probe.seen[-1] >= 2).any(), \
+            "no aliased block was refcount>1 at preemption"
+        np.testing.assert_array_equal(req2.tokens, ref2)
+
+        after = _plane_snapshot(warm, shared)
+        for b, a in zip(before, after):
+            np.testing.assert_array_equal(b, a)
+        # drain: only the index's blocks stay off the free stack, each
+        # held by exactly its index reference
+        held = warm.prefix.blocks
+        assert int(warm.table.free_top) == warm.pool_blocks - held
+        assert (np.asarray(warm.table.refcount)[shared] == 1).all()
+        assert len(warm.host_tier) == 0
+
+    def test_single_device(self, tiny):
+        self._run(tiny)
+
+    @needs_mesh
+    def test_host8(self, tiny, mesh):
+        self._run(tiny, mesh=mesh)

@@ -1,0 +1,344 @@
+"""Crash-safe serving: write-ahead journal, checkpoints, and
+kill-and-recover.
+
+The journal/replay fold is unit-tested without JAX; the engine-level
+suite simulates a SIGKILL *in process* by raising a sentinel out of the
+fault injector's ``tick`` — the crashed engine object is abandoned with
+only ``journal_dir`` surviving, exactly the state a dead process leaves —
+and asserts that a fresh engine's ``recover()`` + ``run()`` produces
+token-identical greedy streams (bit-exact resume when a checkpoint
+persisted the preempted snapshot, replay-from-prompt otherwise).  A real
+``SIGKILL`` against a subprocess rides in the ``slow``-marked smoke test.
+"""
+
+from __future__ import annotations
+
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from fault_injection import FaultInjector
+from repro.configs import get_config
+from repro.models.stack import StackModel
+from repro.serving import journal as J
+from test_fault_injection import check_drained, make_prompts, setup
+
+MAX_NEW = 8
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("tiny-lm", smoke=True)
+    model = StackModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def reference(tiny):
+    eng, prompts = setup(tiny, oversub=False)
+    reqs = [eng.submit(p, MAX_NEW) for p in prompts]
+    eng.run(jax.random.PRNGKey(7))
+    assert all(r.status == "ok" for r in reqs)
+    return [list(r.tokens) for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+class TestJournalUnit:
+    def events(self, root):
+        return J.read_events(str(root))
+
+    def test_append_read_roundtrip(self, tmp_path):
+        with J.Journal(str(tmp_path)) as j:
+            assert j.append("submit", req=0, prompt=[1, 2], max_new=4) == 0
+            assert j.append("admit", req=0) == 1
+            assert j.append("tokens", req=0, toks=[7, 8]) == 2
+        events, truncated = self.events(tmp_path)
+        assert truncated == 0
+        assert [e["ev"] for e in events] == ["submit", "admit", "tokens"]
+        assert [e["seq"] for e in events] == [0, 1, 2]
+        assert events[0]["prompt"] == [1, 2]
+
+    def test_torn_tail_dropped(self, tmp_path):
+        with J.Journal(str(tmp_path)) as j:
+            for i in range(3):
+                j.append("tokens", req=0, toks=[i])
+        with open(os.path.join(str(tmp_path), "journal.jsonl"), "ab") as f:
+            f.write(b'00000000 {"seq": 3, "ev": "tokens"')   # torn mid-write
+        events, truncated = self.events(tmp_path)
+        assert len(events) == 3 and truncated == 1
+
+    def test_bad_line_truncates_everything_after(self, tmp_path):
+        """Replay stops at the first corrupt line even when later lines
+        verify — they may depend on the lost event."""
+        with J.Journal(str(tmp_path)) as j:
+            j.append("submit", req=0, prompt=[1])
+        path = os.path.join(str(tmp_path), "journal.jsonl")
+        with open(path, "ab") as f:
+            f.write(b"garbage line\n")
+            f.write(J._enc({"seq": 2, "ev": "admit", "req": 0}))
+        events, truncated = self.events(tmp_path)
+        assert len(events) == 1 and truncated == 2
+
+    def test_reopen_continues_seq_and_excises_torn_tail(self, tmp_path):
+        with J.Journal(str(tmp_path)) as j:
+            j.append("submit", req=0, prompt=[1])
+            j.append("admit", req=0)
+        path = os.path.join(str(tmp_path), "journal.jsonl")
+        with open(path, "ab") as f:
+            f.write(b'deadbeef {"torn":')
+        # reopening must (a) continue the sequence from the valid prefix
+        # and (b) excise the torn tail — otherwise every event appended
+        # below would sit behind a bad line and be invisible to replay
+        with J.Journal(str(tmp_path)) as j2:
+            assert j2.dropped_tail == 1
+            assert j2.seq == 2
+            j2.append("finish", req=0, status="ok")
+        events, truncated = self.events(tmp_path)
+        assert truncated == 0
+        assert [e["ev"] for e in events] == ["submit", "admit", "finish"]
+        assert events[-1]["seq"] == 2
+
+    def test_checkpoint_roundtrip(self, tmp_path):
+        with J.Journal(str(tmp_path)) as j:
+            j.append("submit", req=0, prompt=[1])
+            j.checkpoint({"persisted": [0]})
+        ck = J.read_checkpoint(str(tmp_path))
+        assert ck == {"persisted": [0], "seq": 1}
+        assert not [n for n in os.listdir(str(tmp_path))
+                    if n.endswith(".tmp")]
+
+    def test_read_checkpoint_tolerates_missing_or_corrupt(self, tmp_path):
+        assert J.read_checkpoint(str(tmp_path)) is None
+        (tmp_path / "checkpoint.json").write_text("{not json")
+        assert J.read_checkpoint(str(tmp_path)) is None
+
+    def test_replay_fold(self):
+        events = [
+            {"ev": "submit", "req": 0, "prompt": [1, 2], "max_new": 4},
+            {"ev": "submit", "req": 1, "prompt": [3], "max_new": 4},
+            {"ev": "submit", "req": 2, "prompt": [5], "max_new": 4},
+            {"ev": "admit", "req": 0},
+            {"ev": "tokens", "req": 0, "toks": [10]},
+            {"ev": "tokens", "req": 0, "toks": [11, 12]},
+            # preempt carries the authoritative stream (overwrites deltas)
+            {"ev": "preempt", "req": 0, "tokens": [10, 11, 12, 13]},
+            {"ev": "admit", "req": 1},
+            {"ev": "tokens", "req": 1, "toks": [20]},
+            {"ev": "finish", "req": 1, "status": "ok"},
+            {"ev": "admit", "req": 2},
+            {"ev": "tokens", "req": 2, "toks": [30]},
+            {"ev": "restart", "req": 2},      # snapshot lost → from prompt
+            {"ev": "tokens", "req": 9, "toks": [1]},   # torn submit: ignored
+        ]
+        recs = J.replay(events)
+        assert sorted(recs) == [0, 1, 2]
+        assert recs[0].tokens == [10, 11, 12, 13]
+        assert recs[0].swapped_out and not recs[0].done
+        assert recs[1].done and recs[1].tokens == [20]
+        assert recs[2].tokens == [] and not recs[2].swapped_out
+        # resume clears swapped_out; a replay-mode recover clears tokens
+        recs2 = J.replay(events + [{"ev": "resume", "req": 0},
+                                   {"ev": "recover", "req": 2,
+                                    "mode": "replay"}])
+        assert not recs2[0].swapped_out and recs2[0].tokens == recs[0].tokens
+        assert recs2[2].status == "queued"
+
+
+# ---------------------------------------------------------------------------
+class _Crash(RuntimeError):
+    """Sentinel standing in for SIGKILL in in-process crash tests."""
+
+
+class CrashInjector(FaultInjector):
+    """Abandon the engine mid-run: after ``after`` lifecycle sweeps,
+    optionally preempt one victim (and optionally checkpoint so its
+    snapshot reaches the disk tier), then raise :class:`_Crash` out of
+    ``run()``.  Only ``journal_dir`` survives — like a dead process."""
+
+    def __init__(self, *, after: int = 3, preempt: bool = False,
+                 checkpoint: bool = False):
+        super().__init__()
+        self._after = after
+        self._preempt = preempt
+        self._ckpt = checkpoint
+        self.fired = False
+
+    def tick(self, engine):
+        super().tick(engine)
+        if self.fired or self.ticks < self._after:
+            return
+        if self._preempt:
+            busy = engine._prefilling.slot if engine._prefilling else None
+            victim = engine.scheduler.preemption_victim(
+                exclude=() if busy is None else (busy,))
+            if victim is None:
+                return              # wait for an eligible victim
+            engine._do_preempt(victim)
+            if self._ckpt:
+                engine._checkpoint()
+        self.fired = True
+        raise _Crash("injected crash")
+
+
+class TestCrashRecovery:
+    def crash_then_recover(self, tiny, jdir, fault, **kw):
+        """Run to the injected crash, then recover on a fresh engine."""
+        eng, prompts = setup(tiny, fault=fault, journal_dir=jdir, **kw)
+        reqs = [eng.submit(p, MAX_NEW) for p in prompts]
+        with pytest.raises(_Crash):
+            eng.run(jax.random.PRNGKey(7))
+        del eng                     # the crashed process is gone
+        fresh, _ = setup(tiny, journal_dir=jdir, **kw)
+        recovered = fresh.recover()
+        return fresh, recovered, prompts
+
+    def finish_and_check(self, eng, recovered, reference, jdir):
+        eng.run(jax.random.PRNGKey(7))
+        assert all(r.status == "ok" for r in recovered), \
+            [(r.req_id, r.status, r.reason) for r in recovered]
+        events, _ = J.read_events(jdir)
+        recs = J.replay(events)
+        # journal ⊕ recovery covers every request: finished-before-crash
+        # streams come from the folded WAL, recovered ones from the run
+        assert sorted(recs) == [0, 1, 2, 3]
+        for rid, rec in recs.items():
+            assert rec.status == "ok"
+            assert rec.tokens == reference[rid], f"req {rid} diverged"
+        check_drained(eng)
+
+    def test_replay_recovery_token_identity(self, tiny, tmp_path, reference):
+        """Kill with no checkpointed snapshots: every in-flight request
+        replays from its prompt and regenerates identical greedy tokens."""
+        jdir = str(tmp_path / "j")
+        eng, recovered, _ = self.crash_then_recover(
+            tiny, jdir, CrashInjector(after=4))
+        assert recovered, "crash after 4 sweeps left nothing in flight"
+        assert all(not r.resume for r in recovered)
+        events, _ = J.read_events(jdir)
+        assert [e for e in events if e["ev"] == "recover"
+                and e["mode"] == "replay"]
+        self.finish_and_check(eng, recovered, reference, jdir)
+
+    def test_resume_from_checkpoint_bit_exact(self, tiny, tmp_path,
+                                              reference):
+        """A checkpoint persisted the preempted snapshot before the kill:
+        recovery swaps it back in bit-exact (mode ``resume``) instead of
+        recomputing, and the stream continues token-identical."""
+        jdir = str(tmp_path / "j")
+        eng, recovered, _ = self.crash_then_recover(
+            tiny, jdir, CrashInjector(after=2, preempt=True, checkpoint=True),
+            oversub=False, prefetch=False)
+        resumed = [r for r in recovered if r.resume]
+        assert len(resumed) == 1, "checkpointed victim must resume"
+        assert resumed[0].tokens, "resume carries the journaled stream"
+        events, _ = J.read_events(jdir)
+        assert [e for e in events if e["ev"] == "recover"
+                and e["mode"] == "resume"]
+        self.finish_and_check(eng, recovered, reference, jdir)
+        assert resumed[0].restarts == 0, "resume must not replay"
+
+    def test_kill_between_preempt_and_checkpoint_replays(self, tiny,
+                                                         tmp_path,
+                                                         reference):
+        """The WAL recorded the preemption but the snapshot never reached
+        disk (killed before the checkpoint): recovery degrades that
+        request to replay-from-prompt — correctness never depends on the
+        checkpoint having run."""
+        jdir = str(tmp_path / "j")
+        eng, recovered, _ = self.crash_then_recover(
+            tiny, jdir, CrashInjector(after=2, preempt=True,
+                                      checkpoint=False),
+            oversub=False)
+        assert recovered and all(not r.resume for r in recovered)
+        events, _ = J.read_events(jdir)
+        assert [e for e in events if e["ev"] == "preempt"]
+        assert [e for e in events if e["ev"] == "recover"
+                and e["mode"] == "replay"]
+        self.finish_and_check(eng, recovered, reference, jdir)
+
+
+# ---------------------------------------------------------------------------
+#: the subprocess workload (mirrors tests/test_fault_injection.setup with
+#: a longer stream so the SIGKILL lands mid-decode)
+CHILD_MAX_NEW = 64
+
+
+def child_engine(tiny, journal_dir):
+    eng, _ = setup(tiny, oversub=False, journal_dir=journal_dir,
+                   max_new=CHILD_MAX_NEW, checkpoint_every=2)
+    cfg = tiny[0]
+    G = cfg.group_size
+    return eng, make_prompts(cfg, [2 * G + 5, G + 3, 17, 9])
+
+
+def child_main(journal_dir: str) -> None:
+    """Entry point exec'd by the SIGKILL smoke test's subprocess."""
+    cfg = get_config("tiny-lm", smoke=True)
+    model = StackModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng, prompts = child_engine((cfg, model, params), journal_dir)
+    for p in prompts:
+        eng.submit(p, CHILD_MAX_NEW)
+    eng.run(jax.random.PRNGKey(7))
+
+
+@pytest.mark.slow
+class TestSigkillSmoke:
+    def test_sigkill_and_recover(self, tiny, tmp_path):
+        jdir = str(tmp_path / "j")
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.pathsep.join(
+            [os.path.abspath("src"), os.path.abspath("tests"),
+             env.get("PYTHONPATH", "")])
+        child = subprocess.Popen(
+            [sys.executable, "-c",
+             "import sys; from test_recovery import child_main; "
+             "child_main(sys.argv[1])", jdir],
+            env=env, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
+        try:
+            # wait for real decode progress, then pull the plug
+            deadline = time.time() + 300
+            while time.time() < deadline:
+                if child.poll() is not None:
+                    break
+                events, _ = J.read_events(jdir)
+                if sum(1 for e in events if e["ev"] == "tokens") >= 2:
+                    break
+                time.sleep(0.25)
+            alive = child.poll() is None
+            if alive:
+                os.kill(child.pid, signal.SIGKILL)
+            child.wait(timeout=60)
+        finally:
+            if child.poll() is None:
+                child.kill()
+        events, _ = J.read_events(jdir)
+        assert any(e["ev"] == "tokens" for e in events), \
+            "child made no journaled progress before the kill"
+
+        # reference streams, computed in-process with the same workload
+        ref_eng, prompts = child_engine(tiny, None)
+        refs = [ref_eng.submit(p, CHILD_MAX_NEW) for p in prompts]
+        ref_eng.run(jax.random.PRNGKey(7))
+        assert all(r.status == "ok" for r in refs)
+
+        eng, _ = child_engine(tiny, jdir)
+        recovered = eng.recover()
+        if alive:
+            assert recovered, "SIGKILL mid-decode must leave work to recover"
+        eng.run(jax.random.PRNGKey(7))
+        assert all(r.status == "ok" for r in recovered)
+        recs = J.replay(J.read_events(jdir)[0])
+        assert sorted(recs) == [0, 1, 2, 3]
+        for rid, rec in recs.items():
+            assert rec.status == "ok"
+            assert rec.tokens == list(refs[rid].tokens), \
+                f"req {rid} diverged after SIGKILL recovery"
+        check_drained(eng)

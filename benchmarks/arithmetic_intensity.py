@@ -9,8 +9,6 @@ quantization pays — the analysis that motivates QuantSpec §3.1.
 
 from __future__ import annotations
 
-import math
-
 from repro.configs import get_config
 from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
 

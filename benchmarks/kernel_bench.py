@@ -18,11 +18,9 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import hier_kv_cache as HC
 from repro.core import weight_quant as WQ
-from repro.kernels import ops as kops
 from repro.kernels import quant_matmul as QM
 from repro.launch.mesh import HBM_BW
 from repro.models import common as L

@@ -47,7 +47,6 @@ def roofline_terms(rec):
     terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
     dom = max(terms, key=terms.get)
 
-    n = rec["params_active"] if rec["shape"] == "train_4k" else rec["params"]
     tokens = TOKENS.get(rec["shape"], 1)
     factor = 6 if rec["shape"] == "train_4k" else 2
     model_flops_per_chip = factor * rec["params_active"] * tokens / chips

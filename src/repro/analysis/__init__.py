@@ -1,0 +1,16 @@
+"""repro-lint: AST-based static analysis of the hot-path invariants.
+
+Five rules, run via ``python -m repro.analysis [paths...]``:
+
+* ``host-sync``     — host blocking on device values in the serving steady state
+* ``donation``      — use-after-donate of ``donate_argnums`` buffers
+* ``sharding-spec`` — pytree containers without placement-spec coverage
+* ``pallas``        — grid divisibility, VMEM budgets, index_map hygiene
+* ``recompile``     — unstable static args, python branches on traced values
+
+Suppress a deliberate site with ``# lint: ok(<rule>, <reason>)`` on the
+line (or the line above). See ``docs/static_analysis.md``.
+"""
+
+from repro.analysis.common import Finding, Project  # noqa: F401
+from repro.analysis.runner import ALL_RULES, analyze_paths, main  # noqa: F401

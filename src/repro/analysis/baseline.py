@@ -1,0 +1,58 @@
+"""Committed-baseline support: known findings that don't fail the gate.
+
+The baseline is a JSON file mapping finding fingerprints (rule + path +
+line-text hash, line-number independent) to the rendered message at the
+time it was recorded. ``python -m repro.analysis --write-baseline``
+records the current findings; subsequent runs subtract them. The repo
+policy is an **empty baseline** — deliberate sites carry inline
+``# lint: ok(rule, reason)`` annotations instead — but the mechanism
+exists so a future PR can land a checker tightening without fixing the
+whole tree in the same change.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, Iterable, List, Tuple
+
+from repro.analysis.common import Finding, Project
+
+DEFAULT_BASELINE = ".repro-lint-baseline.json"
+
+
+def load(path: Path) -> Dict[str, str]:
+    if not path.exists():
+        return {}
+    data = json.loads(path.read_text(encoding="utf-8"))
+    if not isinstance(data, dict):
+        raise ValueError(f"baseline {path} must be a JSON object")
+    return {str(k): str(v) for k, v in data.items()}
+
+
+def save(path: Path, project: Project, findings: Iterable[Finding]) -> int:
+    entries = {}
+    for f in findings:
+        sf = project.by_path.get(f.path)
+        text = sf.line_text(f.line) if sf else ""
+        entries[f.fingerprint(text)] = f.render()
+    path.write_text(
+        json.dumps(entries, indent=2, sort_keys=True) + "\n", encoding="utf-8"
+    )
+    return len(entries)
+
+
+def subtract(
+    project: Project, findings: List[Finding], baseline: Dict[str, str]
+) -> Tuple[List[Finding], int]:
+    """Split findings into (new, n_baselined)."""
+    fresh: List[Finding] = []
+    matched = 0
+    for f in findings:
+        sf = project.by_path.get(f.path)
+        text = sf.line_text(f.line) if sf else ""
+        if f.fingerprint(text) in baseline:
+            matched += 1
+        else:
+            fresh.append(f)
+    return fresh, matched

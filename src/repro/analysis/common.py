@@ -1,0 +1,238 @@
+"""Shared infrastructure for the repro-lint static analysis suite.
+
+Everything here is pure-Python ``ast`` tooling: no jax import, so the
+analyzer runs in any environment (CI lint job, pre-commit, dev boxes
+without an accelerator runtime).
+
+Key pieces:
+
+* :class:`Finding` — one diagnostic, with a stable fingerprint used by
+  the committed baseline file.
+* :class:`SourceFile` — parsed module + per-line ``# lint: ok(rule,
+  reason)`` suppressions.
+* :class:`Project` — an index of every analyzed module: functions,
+  classes, methods, imports, plus a conservative call graph used by the
+  host-sync reachability pass.
+"""
+
+from __future__ import annotations
+
+import ast
+import hashlib
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+SUPPRESS_RE = re.compile(
+    r"#\s*lint:\s*ok\(\s*(?P<rule>[A-Za-z0-9_-]+)\s*,\s*(?P<reason>[^)]+)\)"
+)
+
+
+@dataclass(frozen=True)
+class Finding:
+    """A single diagnostic emitted by one rule."""
+
+    rule: str
+    path: str  # repo-relative posix path
+    line: int
+    col: int
+    message: str
+
+    def fingerprint(self, line_text: str = "") -> str:
+        """Stable id for baselining: rule + path + hash of the line text.
+
+        Deliberately excludes the line *number* so pure line moves do not
+        invalidate the baseline; the text hash keeps it anchored to the
+        offending statement.
+        """
+        digest = hashlib.sha1(line_text.strip().encode("utf-8")).hexdigest()[:12]
+        return f"{self.rule}:{self.path}:{digest}"
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule}: {self.message}"
+
+
+class SourceFile:
+    """A parsed python module plus its lint suppressions."""
+
+    def __init__(self, path: Path, root: Path):
+        self.path = path
+        self.rel = path.relative_to(root).as_posix() if root in path.parents or path == root else path.as_posix()
+        self.text = path.read_text(encoding="utf-8")
+        self.lines = self.text.splitlines()
+        self.tree = ast.parse(self.text, filename=str(path))
+        # line -> list of (rule, reason)
+        self.suppressions: Dict[int, List[Tuple[str, str]]] = {}
+        self._collect_suppressions()
+
+    def _collect_suppressions(self) -> None:
+        for i, line in enumerate(self.lines, start=1):
+            m = SUPPRESS_RE.search(line)
+            if not m:
+                continue
+            rule = m.group("rule")
+            reason = m.group("reason").strip()
+            entry = (rule, reason)
+            code = line.split("#", 1)[0]
+            if code.strip():
+                # trailing comment: applies to this line
+                self.suppressions.setdefault(i, []).append(entry)
+            else:
+                # comment-only line: applies to the next line
+                self.suppressions.setdefault(i + 1, []).append(entry)
+
+    def is_suppressed(self, rule: str, line: int) -> bool:
+        for sup_rule, _reason in self.suppressions.get(line, ()):
+            if sup_rule == rule or sup_rule == "all":
+                return True
+        return False
+
+    def line_text(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1]
+        return ""
+
+
+def iter_py_files(paths: Sequence[Path]) -> Iterable[Path]:
+    for p in paths:
+        if p.is_dir():
+            yield from sorted(p.rglob("*.py"))
+        elif p.suffix == ".py":
+            yield p
+
+
+def attr_chain(node: ast.AST) -> Optional[str]:
+    """Render ``a.b.c`` attribute chains as a dotted string, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(call: ast.Call) -> Optional[str]:
+    return attr_chain(call.func)
+
+
+def walk_calls(node: ast.AST) -> Iterable[ast.Call]:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            yield sub
+
+
+@dataclass
+class FuncInfo:
+    """One function or method definition."""
+
+    file: "SourceFile"
+    node: ast.FunctionDef
+    qualname: str  # "Class.method" or "func"
+    cls: Optional[str] = None
+
+    @property
+    def name(self) -> str:
+        return self.node.name
+
+
+@dataclass
+class Project:
+    """Index over every analyzed module."""
+
+    files: List[SourceFile] = field(default_factory=list)
+    # rel path -> SourceFile
+    by_path: Dict[str, SourceFile] = field(default_factory=dict)
+    # (rel path, qualname) -> FuncInfo
+    functions: Dict[Tuple[str, str], FuncInfo] = field(default_factory=dict)
+    # bare method/function name -> [FuncInfo]
+    by_name: Dict[str, List[FuncInfo]] = field(default_factory=dict)
+
+    @classmethod
+    def load(cls, paths: Sequence[Path], root: Path) -> "Project":
+        proj = cls()
+        for fp in iter_py_files(paths):
+            try:
+                sf = SourceFile(fp, root)
+            except (SyntaxError, UnicodeDecodeError):
+                continue
+            proj.files.append(sf)
+            proj.by_path[sf.rel] = sf
+            proj._index(sf)
+        return proj
+
+    def _index(self, sf: SourceFile) -> None:
+        for node in sf.tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._add_func(sf, node, node.name, None)
+            elif isinstance(node, ast.ClassDef):
+                for sub in node.body:
+                    if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                        self._add_func(sf, sub, f"{node.name}.{sub.name}", node.name)
+
+    def _add_func(self, sf: SourceFile, node, qualname: str, clsname: Optional[str]) -> None:
+        info = FuncInfo(file=sf, node=node, qualname=qualname, cls=clsname)
+        self.functions[(sf.rel, qualname)] = info
+        self.by_name.setdefault(node.name, []).append(info)
+
+    # -- conservative call graph -------------------------------------------
+
+    #: method names too generic to resolve by-name across the project
+    GENERIC_METHODS = frozenset(
+        {
+            "get", "put", "pop", "append", "extend", "items", "keys", "values",
+            "update", "join", "split", "add", "remove", "clear", "copy", "sort",
+            "read", "write", "close", "open", "index", "count", "insert",
+            "format", "strip", "startswith", "endswith", "encode", "decode",
+            "popleft", "appendleft", "result", "done", "submit", "replace",
+        }
+    )
+
+    def callees(self, info: FuncInfo) -> List[FuncInfo]:
+        """Heuristic out-edges of a function for reachability analysis."""
+        out: List[FuncInfo] = []
+        for call in walk_calls(info.node):
+            fn = call.func
+            if isinstance(fn, ast.Name):
+                # bare call: module-level function in the same file first
+                hit = self.functions.get((info.file.rel, fn.id))
+                if hit is not None:
+                    out.append(hit)
+                else:
+                    out.extend(f for f in self.by_name.get(fn.id, ()) if f.cls is None)
+            elif isinstance(fn, ast.Attribute):
+                meth = fn.attr
+                if isinstance(fn.value, ast.Name) and fn.value.id == "self" and info.cls:
+                    hit = self.functions.get((info.file.rel, f"{info.cls}.{meth}"))
+                    if hit is not None:
+                        out.append(hit)
+                        continue
+                if meth in self.GENERIC_METHODS:
+                    continue
+                # obj.m(...): link every project method with that name
+                out.extend(f for f in self.by_name.get(meth, ()) if f.cls is not None)
+        return out
+
+    def reachable(self, roots: Sequence[FuncInfo]) -> List[FuncInfo]:
+        seen: Dict[Tuple[str, str], FuncInfo] = {}
+        stack = list(roots)
+        while stack:
+            cur = stack.pop()
+            key = (cur.file.rel, cur.qualname)
+            if key in seen:
+                continue
+            seen[key] = cur
+            stack.extend(self.callees(cur))
+        return list(seen.values())
+
+
+def apply_suppressions(project: Project, findings: Iterable[Finding]) -> List[Finding]:
+    kept = []
+    for f in findings:
+        sf = project.by_path.get(f.path)
+        if sf is not None and sf.is_suppressed(f.rule, f.line):
+            continue
+        kept.append(f)
+    return kept

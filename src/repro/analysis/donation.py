@@ -1,0 +1,267 @@
+"""Rule ``donation``: use-after-donate of buffers passed to donated argnums.
+
+``jax.jit(..., donate_argnums=...)`` invalidates the caller's buffer the
+moment the call is dispatched; any later read of the same binding sees
+deleted memory and raises (or silently copies, defeating the donation).
+This rule finds, for every call through a jit binding constructed with
+``donate_argnums``:
+
+* reads of a donated binding after the call, before it is reassigned;
+* donated carries inside loops that are never refreshed before the next
+  iteration re-donates them.
+
+Bindings are matched textually (``state``, ``self.table``) within the
+calling function; aliases created from jitted attributes
+(``mega_fn = self._mega``) are resolved through the jit registry.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.common import Finding, FuncInfo, Project, attr_chain
+from repro.analysis.jit_registry import JitRegistry, JitSite
+
+RULE = "donation"
+
+
+@dataclass
+class _Linear:
+    """A function body flattened to source order, with loop extents."""
+
+    stmts: List[ast.stmt]
+    #: for each loop statement: (start index, end index) of its body in `stmts`
+    loop_spans: List[Tuple[ast.stmt, int, int]]
+
+
+def _linearize(body: Sequence[ast.stmt]) -> _Linear:
+    out = _Linear(stmts=[], loop_spans=[])
+
+    def visit(stmts: Sequence[ast.stmt]) -> None:
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+                continue
+            out.stmts.append(stmt)
+            if isinstance(stmt, (ast.For, ast.While)):
+                start = len(out.stmts)
+                visit(stmt.body)
+                out.loop_spans.append((stmt, start, len(out.stmts)))
+                visit(stmt.orelse)
+            elif isinstance(stmt, ast.If):
+                visit(stmt.body)
+                visit(stmt.orelse)
+            elif isinstance(stmt, ast.With):
+                visit(stmt.body)
+            elif isinstance(stmt, ast.Try):
+                visit(stmt.body)
+                for handler in stmt.handlers:
+                    visit(handler.body)
+                visit(stmt.orelse)
+                visit(stmt.finalbody)
+
+    visit(body)
+    return out
+
+
+def _expr_key(node: ast.expr) -> Optional[str]:
+    """Track donations of plain names and attribute chains only."""
+    if isinstance(node, (ast.Name, ast.Attribute)):
+        return attr_chain(node)
+    return None
+
+
+def _own_parts(stmt: ast.stmt) -> Tuple[List[ast.AST], List[ast.expr]]:
+    """(read roots, store targets) directly owned by a statement.
+
+    Compound statements contribute only their header expressions — their
+    bodies appear separately in the linearized list, so walking the whole
+    node would double-count nested statements.
+    """
+    if isinstance(stmt, ast.Assign):
+        return [stmt.value], list(stmt.targets)
+    if isinstance(stmt, ast.AugAssign):
+        return [stmt.value, stmt.target], [stmt.target]
+    if isinstance(stmt, ast.AnnAssign):
+        return ([stmt.value] if stmt.value else []), [stmt.target]
+    if isinstance(stmt, ast.For):
+        return [stmt.iter], [stmt.target]
+    if isinstance(stmt, (ast.While, ast.If)):
+        return [stmt.test], []
+    if isinstance(stmt, ast.With):
+        reads: List[ast.AST] = [i.context_expr for i in stmt.items]
+        stores = [i.optional_vars for i in stmt.items if i.optional_vars]
+        return reads, stores
+    if isinstance(stmt, ast.Try):
+        return [], []
+    if isinstance(stmt, ast.Delete):
+        return [], list(stmt.targets)
+    return [stmt], []
+
+
+def _stores(stmt: ast.stmt) -> Set[str]:
+    """Binding keys written by this statement (assignment targets, for targets)."""
+    written: Set[str] = set()
+
+    def add_target(t: Optional[ast.expr]) -> None:
+        if t is None:
+            return
+        if isinstance(t, (ast.Tuple, ast.List)):
+            for e in t.elts:
+                add_target(e)
+        elif isinstance(t, ast.Starred):
+            add_target(t.value)
+        else:
+            key = _expr_key(t)
+            if key:
+                written.add(key)
+
+    for t in _own_parts(stmt)[1]:
+        add_target(t)  # type: ignore[arg-type]
+    return written
+
+
+def _reads(stmt: ast.stmt, keys: Set[str]) -> List[Tuple[str, ast.expr]]:
+    """Occurrences of tracked keys read (Load context) within a statement.
+
+    Store targets are walked too: writing *into* a donated buffer
+    (``x[i] = v``) reads the deleted array and must flag.
+    """
+    reads, stores = _own_parts(stmt)
+    hits: List[Tuple[str, ast.expr]] = []
+    for root in list(reads) + list(stores):
+        for node in ast.walk(root):
+            if isinstance(node, (ast.Name, ast.Attribute)) and isinstance(
+                getattr(node, "ctx", None), ast.Load
+            ):
+                key = attr_chain(node)
+                if key in keys:
+                    hits.append((key, node))
+    # attribute loads nest: `self.state.foo` reports both; keep outermost only
+    seen: Set[int] = set()
+    uniq = []
+    for key, node in hits:
+        if id(node) in seen:
+            continue
+        for sub in ast.walk(node):
+            if sub is not node:
+                seen.add(id(sub))
+        uniq.append((key, node))
+    return uniq
+
+
+class _FunctionDonationCheck:
+    def __init__(self, project: Project, registry: JitRegistry, info: FuncInfo):
+        self.project = project
+        self.registry = registry
+        self.info = info
+        self.findings: List[Finding] = []
+
+    def run(self) -> List[Finding]:
+        linear = _linearize(self.info.node.body)
+        aliases = self._collect_aliases(linear)
+        for idx, stmt in enumerate(linear.stmts):
+            for root in _own_parts(stmt)[0]:
+                for call in ast.walk(root):
+                    if isinstance(call, ast.Call):
+                        site = self._donating_site(call, aliases)
+                        if site is not None:
+                            self._check_call(linear, idx, stmt, call, site)
+        return self.findings
+
+    def _collect_aliases(self, linear: _Linear) -> Dict[str, str]:
+        """Local names bound to jitted attributes: ``round_fn = self._round``."""
+        aliases: Dict[str, str] = {}
+        for stmt in linear.stmts:
+            if not isinstance(stmt, ast.Assign) or len(stmt.targets) != 1:
+                continue
+            tgt, val = stmt.targets[0], stmt.value
+            pairs: List[Tuple[ast.expr, ast.expr]] = []
+            if isinstance(tgt, ast.Tuple) and isinstance(val, ast.Tuple) and len(
+                tgt.elts
+            ) == len(val.elts):
+                pairs = list(zip(tgt.elts, val.elts))
+            else:
+                pairs = [(tgt, val)]
+            for t, v in pairs:
+                if isinstance(t, ast.Name):
+                    src = _expr_key(v)
+                    if src and self._lookup(src) is not None:
+                        aliases[t.id] = src
+                    elif t.id in aliases:
+                        del aliases[t.id]
+        return aliases
+
+    def _lookup(self, name: str) -> Optional[JitSite]:
+        return self.registry.lookup(self.info.file.rel, self.info.qualname, name)
+
+    def _donating_site(
+        self, call: ast.Call, aliases: Dict[str, str]
+    ) -> Optional[JitSite]:
+        name = attr_chain(call.func)
+        if not name:
+            return None
+        name = aliases.get(name, name)
+        site = self._lookup(name)
+        if site is not None and site.donate_argnums:
+            return site
+        return None
+
+    def _check_call(
+        self,
+        linear: _Linear,
+        idx: int,
+        stmt: ast.stmt,
+        call: ast.Call,
+        site: JitSite,
+    ) -> None:
+        donated: Dict[str, ast.expr] = {}
+        for argnum in site.donate_argnums:
+            if argnum < len(call.args):
+                key = _expr_key(call.args[argnum])
+                if key:
+                    donated[key] = call.args[argnum]
+        if not donated:
+            return
+        live = set(donated)
+        # the containing statement's own targets refresh bindings immediately
+        live -= _stores(stmt)
+
+        def scan(span: Sequence[ast.stmt], include_call_stmt_reads: bool = False):
+            nonlocal live
+            for s in span:
+                if not live:
+                    return
+                for key, node in _reads(s, live):
+                    if s is stmt and not include_call_stmt_reads:
+                        continue
+                    self.findings.append(
+                        Finding(
+                            RULE,
+                            self.info.file.rel,
+                            node.lineno,
+                            node.col_offset,
+                            f"`{key}` read after being donated to jitted call "
+                            f"at line {call.lineno} (donate_argnums="
+                            f"{site.donate_argnums} on {site.file_rel}:{site.lineno})",
+                        )
+                    )
+                    live.discard(key)
+                live -= _stores(s)
+
+        scan(linear.stmts[idx + 1 :])
+        # wrap-around: a donated carry must be refreshed before the loop repeats
+        for loop, start, end in linear.loop_spans:
+            if start <= idx < end and live:
+                scan(linear.stmts[start : idx + 1], include_call_stmt_reads=True)
+
+    # ------------------------------------------------------------------
+
+
+def check(project: Project, registry: JitRegistry) -> List[Finding]:
+    findings: List[Finding] = []
+    for info in project.functions.values():
+        findings.extend(_FunctionDonationCheck(project, registry, info).run())
+    findings.sort(key=lambda f: (f.path, f.line, f.col))
+    return findings

@@ -1,0 +1,422 @@
+"""Rule ``host-sync``: host synchronization inside the serving steady state.
+
+QuantSpec's decode loop is only bandwidth-bound while the host never
+blocks on device values mid-stream: the contract since the megastep PR
+is **at most one host sync per megastep** (the harvest ``device_get``).
+This rule finds every host-blocking materialization reachable from the
+engine drive loops:
+
+* ``jax.device_get(...)`` / ``jax.block_until_ready(...)`` — always flagged.
+* ``<x>.item()`` — always flagged.
+* ``int(x)`` / ``float(x)`` / ``np.asarray(x)`` / ``np.array(x)`` — flagged
+  only when ``x`` is (heuristically) a device value: results of jitted
+  calls or ``jnp`` ops, device-resident ``self`` attributes, and a small
+  list of conventional device parameter names. Values already pulled to
+  host via ``device_get`` are tracked and never re-flagged.
+
+Reachability starts from the engine entry points (``Engine.generate``,
+``ContinuousEngine.run/step``) and follows a conservative call graph,
+including through ``jax.jit`` bindings, so a ``device_get`` added deep in
+``core/spec_decode.py`` or ``core/host_tier.py`` still fires. Findings
+are only reported inside the steady-state scope files; annotate the
+deliberate boundary syncs with ``# lint: ok(host-sync, <reason>)``.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.common import Finding, FuncInfo, Project, attr_chain, call_name, walk_calls
+from repro.analysis.jit_registry import JitRegistry
+
+RULE = "host-sync"
+
+#: calls that block the host unconditionally
+SYNC_ALWAYS = {"jax.device_get", "jax.block_until_ready"}
+#: conversions that block only when fed a device value
+CONVERTERS = {"int", "float", "np.asarray", "np.array", "numpy.asarray", "numpy.array"}
+#: call prefixes whose results live on device
+DEVICE_CALL_PREFIXES = ("jnp.", "lax.", "jax.lax.", "jax.random.", "jax.numpy.")
+DEVICE_CALLS = {"jax.device_put"}
+#: conventional device-array parameter names in the engine/tier methods
+DEVICE_PARAM_NAMES = {
+    "state", "table", "last", "last_token", "planes", "logits", "packed",
+    "slots", "slots_dev", "stream_pos", "generated", "budget", "meta",
+    "k", "v", "key", "tokens_dev", "scratch",
+}
+
+
+@dataclass
+class HostSyncConfig:
+    #: (path suffix, qualname) pairs where steady-state execution starts
+    roots: Tuple[Tuple[str, str], ...] = (
+        ("serving/engine.py", "Engine.generate"),
+        ("serving/engine.py", "ContinuousEngine.run"),
+        ("serving/engine.py", "ContinuousEngine.step"),
+    )
+    #: only functions in these files produce findings
+    scope: Tuple[str, ...] = (
+        "serving/engine.py",
+        "core/host_tier.py",
+        "core/spec_decode.py",
+    )
+
+
+def _find_roots(project: Project, cfg: HostSyncConfig) -> List[FuncInfo]:
+    roots = []
+    for suffix, qual in cfg.roots:
+        for (rel, q), info in project.functions.items():
+            if rel.endswith(suffix) and q == qual:
+                roots.append(info)
+    return roots
+
+
+def _jit_callees(project: Project, registry: JitRegistry, info: FuncInfo) -> List[FuncInfo]:
+    """Edges through jit bindings: calls/refs to jitted callables reach their targets."""
+    out: List[FuncInfo] = []
+    rel, qual = info.file.rel, info.qualname
+    # jit sites constructed inside this very function (e.g. Engine._mesh_fns)
+    for site in registry.sites:
+        if site.file_rel == rel and site.scope == qual:
+            tgt = registry.resolve_target(site)
+            if tgt is not None:
+                out.append(tgt)
+    # references to jitted bindings (self._mega, module-level fns, local aliases)
+    for node in ast.walk(info.node):
+        name = None
+        if isinstance(node, ast.Attribute):
+            name = attr_chain(node)
+        elif isinstance(node, ast.Name):
+            name = node.id
+        if not name:
+            continue
+        site = registry.lookup(rel, qual, name)
+        if site is not None:
+            tgt = registry.resolve_target(site)
+            if tgt is not None:
+                out.append(tgt)
+    return out
+
+
+def _reachable(project: Project, registry: JitRegistry, roots: Sequence[FuncInfo]) -> List[FuncInfo]:
+    seen: Dict[Tuple[str, str], FuncInfo] = {}
+    stack = list(roots)
+    while stack:
+        cur = stack.pop()
+        key = (cur.file.rel, cur.qualname)
+        if key in seen:
+            continue
+        seen[key] = cur
+        stack.extend(project.callees(cur))
+        stack.extend(_jit_callees(project, registry, cur))
+    return list(seen.values())
+
+
+def _returns_device(info: FuncInfo) -> bool:
+    """One-level summary: does this function's return expression build device values?"""
+    for node in ast.walk(info.node):
+        if isinstance(node, ast.Return) and node.value is not None:
+            for call in walk_calls(node.value):
+                name = call_name(call) or ""
+                if name.startswith(DEVICE_CALL_PREFIXES) or name in DEVICE_CALLS:
+                    return True
+    return False
+
+
+def _class_device_attrs(project: Project, registry: JitRegistry) -> Dict[Tuple[str, str], Set[str]]:
+    """Fixpoint: which ``self.X`` attributes hold device values, per class."""
+    attrs: Dict[Tuple[str, str], Set[str]] = {}
+    summaries = {
+        (f.file.rel, f.qualname): _returns_device(f) for f in project.functions.values()
+    }
+    for _ in range(3):
+        changed = False
+        for info in project.functions.values():
+            if info.cls is None:
+                continue
+            key = (info.file.rel, info.cls)
+            current = attrs.setdefault(key, set())
+            analyzer = _FuncAnalyzer(
+                project, registry, info, attrs, summaries, collect=False
+            )
+            for name in analyzer.device_attr_assignments():
+                if name not in current:
+                    current.add(name)
+                    changed = True
+        if not changed:
+            break
+    return attrs
+
+
+class _FuncAnalyzer:
+    """Single forward pass over one function: track host/device bindings, flag syncs."""
+
+    def __init__(
+        self,
+        project: Project,
+        registry: JitRegistry,
+        info: FuncInfo,
+        class_attrs: Dict[Tuple[str, str], Set[str]],
+        summaries: Dict[Tuple[str, str], bool],
+        collect: bool = True,
+    ):
+        self.project = project
+        self.registry = registry
+        self.info = info
+        self.class_attrs = class_attrs
+        self.summaries = summaries
+        self.collect = collect
+        self.findings: List[Finding] = []
+        self.env: Dict[str, str] = {}  # name -> "device" | "host"
+        for arg in self._all_args(info.node):
+            if arg in DEVICE_PARAM_NAMES:
+                self.env[arg] = "device"
+        self._device_attr_writes: Set[str] = set()
+
+    @staticmethod
+    def _all_args(node: ast.FunctionDef) -> List[str]:
+        a = node.args
+        args = [x.arg for x in a.posonlyargs + a.args + a.kwonlyargs]
+        if a.vararg:
+            args.append(a.vararg.arg)
+        return args
+
+    # -- public entry points ----------------------------------------------
+
+    def run(self) -> List[Finding]:
+        self._visit_block(self.info.node.body)
+        return self.findings
+
+    def device_attr_assignments(self) -> Set[str]:
+        self.collect = False
+        self._visit_block(self.info.node.body)
+        return self._device_attr_writes
+
+    # -- statement walk ----------------------------------------------------
+
+    def _visit_block(self, body: Sequence[ast.stmt]) -> None:
+        for stmt in body:
+            self._visit_stmt(stmt)
+
+    def _visit_stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return  # nested defs analyzed via their own FuncInfo if reachable
+        if isinstance(stmt, ast.Assign):
+            dev = self._eval(stmt.value)
+            for tgt in stmt.targets:
+                self._bind(tgt, dev)
+        elif isinstance(stmt, ast.AugAssign):
+            self._eval(stmt.value)
+        elif isinstance(stmt, ast.AnnAssign):
+            if stmt.value is not None:
+                self._bind(stmt.target, self._eval(stmt.value))
+        elif isinstance(stmt, (ast.Expr, ast.Return)):
+            if getattr(stmt, "value", None) is not None:
+                self._eval(stmt.value)
+        elif isinstance(stmt, ast.For):
+            dev = self._eval(stmt.iter)
+            self._bind(stmt.target, dev)
+            self._visit_block(stmt.body)
+            self._visit_block(stmt.orelse)
+        elif isinstance(stmt, (ast.While, ast.If)):
+            self._eval(stmt.test)
+            self._visit_block(stmt.body)
+            self._visit_block(stmt.orelse)
+        elif isinstance(stmt, ast.With):
+            for item in stmt.items:
+                self._eval(item.context_expr)
+            self._visit_block(stmt.body)
+        elif isinstance(stmt, ast.Try):
+            self._visit_block(stmt.body)
+            for handler in stmt.handlers:
+                self._visit_block(handler.body)
+            self._visit_block(stmt.orelse)
+            self._visit_block(stmt.finalbody)
+        elif isinstance(stmt, (ast.Raise, ast.Assert)):
+            for sub in ast.iter_child_nodes(stmt):
+                if isinstance(sub, ast.expr):
+                    self._eval(sub)
+
+    def _bind(self, target: ast.expr, dev: Optional[bool]) -> None:
+        if isinstance(target, ast.Name):
+            if dev is True:
+                self.env[target.id] = "device"
+            elif dev is False:
+                self.env[target.id] = "host"
+            else:
+                self.env.pop(target.id, None)
+        elif isinstance(target, ast.Attribute):
+            chain = attr_chain(target)
+            if dev is True and chain and chain.startswith("self.") and "." not in chain[5:]:
+                self._device_attr_writes.add(chain[5:])
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._bind(elt, dev)
+        elif isinstance(target, ast.Starred):
+            self._bind(target.value, dev)
+
+    # -- expression evaluation --------------------------------------------
+
+    def _flag(self, node: ast.AST, message: str) -> None:
+        if not self.collect:
+            return
+        self.findings.append(
+            Finding(RULE, self.info.file.rel, node.lineno, node.col_offset, message)
+        )
+
+    def _eval(self, node: ast.expr) -> Optional[bool]:
+        """Returns True (device), False (host), or None (unknown)."""
+        if isinstance(node, ast.Call):
+            return self._eval_call(node)
+        if isinstance(node, ast.Name):
+            state = self.env.get(node.id)
+            return {"device": True, "host": False}.get(state)  # type: ignore[return-value]
+        if isinstance(node, ast.Attribute):
+            chain = attr_chain(node)
+            if chain and chain.startswith("self.") and self.info.cls:
+                attr = chain[5:].split(".")[0]
+                cls_attrs = self.class_attrs.get((self.info.file.rel, self.info.cls), set())
+                if attr in cls_attrs:
+                    return True
+            if node.attr in ("shape", "ndim", "dtype", "size"):
+                self._eval(node.value)
+                return False
+            return self._eval(node.value)
+        if isinstance(node, ast.Subscript):
+            self._eval(node.slice)
+            return self._eval(node.value)
+        if isinstance(node, (ast.BinOp,)):
+            left, right = self._eval(node.left), self._eval(node.right)
+            return True if (left or right) else (False if (left is False and right is False) else None)
+        if isinstance(node, ast.UnaryOp):
+            return self._eval(node.operand)
+        if isinstance(node, (ast.BoolOp,)):
+            vals = [self._eval(v) for v in node.values]
+            return True if any(v is True for v in vals) else None
+        if isinstance(node, ast.Compare):
+            vals = [self._eval(node.left)] + [self._eval(c) for c in node.comparators]
+            return True if any(v is True for v in vals) else None
+        if isinstance(node, ast.IfExp):
+            self._eval(node.test)
+            a, b = self._eval(node.body), self._eval(node.orelse)
+            return True if (a is True or b is True) else None
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            vals = [self._eval(e) for e in node.elts]
+            if any(v is True for v in vals):
+                return True
+            if vals and all(v is False for v in vals):
+                return False
+            return None
+        if isinstance(node, ast.Dict):
+            for k in node.keys:
+                if k is not None:
+                    self._eval(k)
+            for v in node.values:
+                self._eval(v)
+            return None
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp)):
+            return self._eval_comp(node.elt, node.generators)
+        if isinstance(node, ast.DictComp):
+            self._eval_comp(node.key, node.generators)
+            return self._eval_comp(node.value, node.generators)
+        if isinstance(node, ast.Starred):
+            return self._eval(node.value)
+        if isinstance(node, ast.Constant):
+            return False
+        if isinstance(node, ast.JoinedStr):
+            for v in node.values:
+                if isinstance(v, ast.FormattedValue):
+                    self._eval(v.value)
+            return False
+        if isinstance(node, ast.Lambda):
+            return None
+        return None
+
+    def _eval_comp(self, elt: ast.expr, generators) -> Optional[bool]:
+        saved = dict(self.env)
+        for gen in generators:
+            dev = self._eval(gen.iter)
+            self._bind(gen.target, dev)
+            for cond in gen.ifs:
+                self._eval(cond)
+        result = self._eval(elt)
+        self.env = saved
+        return result
+
+    def _eval_call(self, node: ast.Call) -> Optional[bool]:
+        name = call_name(node) or ""
+        arg_dev = [self._eval(a) for a in node.args]
+        for kw in node.keywords:
+            arg_dev.append(self._eval(kw.value))
+
+        if name in SYNC_ALWAYS:
+            self._flag(node, f"`{name}` blocks the host on device work")
+            # device_get materializes to host; block_until_ready returns device values
+            return name == "jax.block_until_ready"
+        if name.endswith(".item") and name not in CONVERTERS:
+            self._flag(node, "`.item()` forces a device-to-host transfer")
+            return False
+        if name in CONVERTERS:
+            if any(v is True for v in arg_dev):
+                self._flag(
+                    node,
+                    f"`{name}(...)` on a device value blocks until the result is ready",
+                )
+            return False
+        if name.startswith(DEVICE_CALL_PREFIXES) or name in DEVICE_CALLS:
+            return True
+        # calls through jitted bindings produce device values
+        site = self.registry.lookup(self.info.file.rel, self.info.qualname, name)
+        if site is not None:
+            return True
+        # one-level return summaries for project-local functions
+        target = self._resolve_local(name)
+        if target is not None and self.summaries.get((target.file.rel, target.qualname)):
+            return True
+        if name in ("len", "range", "enumerate", "zip", "min", "max", "sum", "time.time",
+                    "time.perf_counter", "sorted", "list", "tuple", "dict", "set", "str", "bool"):
+            return False
+        # unknown call: propagate deviceness from its arguments
+        return True if any(v is True for v in arg_dev) else None
+
+    def _resolve_local(self, name: str) -> Optional[FuncInfo]:
+        if not name:
+            return None
+        if name.startswith("self.") and self.info.cls:
+            return self.project.functions.get(
+                (self.info.file.rel, f"{self.info.cls}.{name[5:]}")
+            )
+        info = self.project.functions.get((self.info.file.rel, name))
+        if info is not None:
+            return info
+        cands = [f for f in self.project.by_name.get(name.split(".")[-1], ())]
+        if len(cands) == 1:
+            return cands[0]
+        return None
+
+
+def check(
+    project: Project,
+    registry: JitRegistry,
+    cfg: Optional[HostSyncConfig] = None,
+) -> List[Finding]:
+    cfg = cfg or HostSyncConfig()
+    roots = _find_roots(project, cfg)
+    if not roots:
+        return []
+    reachable = _reachable(project, registry, roots)
+    class_attrs = _class_device_attrs(project, registry)
+    summaries = {
+        (f.file.rel, f.qualname): _returns_device(f) for f in project.functions.values()
+    }
+    findings: List[Finding] = []
+    for info in reachable:
+        if not any(info.file.rel.endswith(sfx) for sfx in cfg.scope):
+            continue
+        findings.extend(
+            _FuncAnalyzer(project, registry, info, class_attrs, summaries).run()
+        )
+    findings.sort(key=lambda f: (f.path, f.line, f.col))
+    return findings

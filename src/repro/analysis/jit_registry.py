@@ -1,0 +1,194 @@
+"""Registry of ``jax.jit`` construction sites across the project.
+
+Shared by the donation-safety, recompile-hazard, and host-sync checkers.
+For every ``<binding> = jax.jit(target, donate_argnums=..., static_*=...)``
+assignment we record the binding name (``self._mega`` inside a class, or
+a plain local/module name), the resolved target function when it lives in
+the analyzed tree, and the static/donated argument positions.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.common import FuncInfo, Project, attr_chain
+
+JIT_NAMES = ("jax.jit", "jit", "api.jit")
+
+
+@dataclass
+class JitSite:
+    file_rel: str
+    lineno: int
+    #: "Class.method" / "func" scope the assignment appears in, "" at module level
+    scope: str
+    #: binding the jitted callable is stored under ("self._mega", "round_fn", ...)
+    binding: Optional[str]
+    #: dotted name of the traced target ("megastep", "self._chunk_step", ...)
+    target: Optional[str]
+    donate_argnums: Tuple[int, ...] = ()
+    static_argnums: Tuple[int, ...] = ()
+    static_argnames: Tuple[str, ...] = ()
+    #: positional args bound via functools.partial before jit sees the fn
+    partial_bound: int = 0
+    partial_kwargs: Tuple[str, ...] = ()
+    #: ast node of the jit(...) call itself
+    call: ast.Call = None  # type: ignore[assignment]
+
+
+def _literal_int_tuple(node: ast.AST) -> Tuple[int, ...]:
+    try:
+        val = ast.literal_eval(node)
+    except (ValueError, SyntaxError):
+        return ()
+    if isinstance(val, int):
+        return (val,)
+    if isinstance(val, (tuple, list)) and all(isinstance(v, int) for v in val):
+        return tuple(val)
+    return ()
+
+
+def _literal_str_tuple(node: ast.AST) -> Tuple[str, ...]:
+    try:
+        val = ast.literal_eval(node)
+    except (ValueError, SyntaxError):
+        return ()
+    if isinstance(val, str):
+        return (val,)
+    if isinstance(val, (tuple, list)) and all(isinstance(v, str) for v in val):
+        return tuple(val)
+    return ()
+
+
+def _unwrap_partial(node: ast.AST) -> Tuple[Optional[str], int, Tuple[str, ...]]:
+    """Resolve the traced target through ``functools.partial`` wrappers."""
+    if isinstance(node, ast.Call):
+        name = attr_chain(node.func)
+        if name in ("partial", "functools.partial") and node.args:
+            inner, bound, kw = _unwrap_partial(node.args[0])
+            return inner, bound + len(node.args) - 1, kw + tuple(
+                k.arg for k in node.keywords if k.arg
+            )
+        return name, 0, ()
+    return attr_chain(node), 0, ()
+
+
+class JitRegistry:
+    """All jit sites in a project, queryable by binding name."""
+
+    def __init__(self, project: Project):
+        self.project = project
+        self.sites: List[JitSite] = []
+        # (file_rel, scope, binding) -> JitSite
+        self.by_binding: Dict[Tuple[str, str, str], JitSite] = {}
+        self._scan()
+
+    def _scan(self) -> None:
+        for sf in self.project.files:
+            self._visit_body(sf, sf.tree.body, "")
+
+    def _visit_body(self, sf, body: Sequence[ast.stmt], scope: str) -> None:
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+                sub = f"{scope}.{stmt.name}" if scope else stmt.name
+                self._visit_body(sf, stmt.body, sub)
+            elif isinstance(stmt, (ast.If, ast.For, ast.While, ast.With, ast.Try)):
+                for attr in ("body", "orelse", "finalbody"):
+                    self._visit_body(sf, getattr(stmt, attr, None) or [], scope)
+                for handler in getattr(stmt, "handlers", None) or []:
+                    self._visit_body(sf, handler.body, scope)
+            else:
+                self._scan_stmt(sf.rel, scope, stmt)
+
+    def _scan_stmt(self, rel: str, scope: str, stmt: ast.stmt) -> None:
+        for node in ast.walk(stmt):
+            if not isinstance(node, ast.Call):
+                continue
+            if attr_chain(node.func) not in JIT_NAMES:
+                continue
+            site = self._site_from_call(rel, scope, node)
+            # binding: the assignment target if the jit call is the RHS
+            if (
+                isinstance(stmt, ast.Assign)
+                and stmt.value is node
+                and len(stmt.targets) == 1
+            ):
+                site.binding = attr_chain(stmt.targets[0])
+            self.sites.append(site)
+            if site.binding:
+                self.by_binding[(rel, scope, site.binding)] = site
+
+    def _site_from_call(self, rel: str, scope: str, call: ast.Call) -> JitSite:
+        target, bound, pkw = (None, 0, ())
+        if call.args:
+            target, bound, pkw = _unwrap_partial(call.args[0])
+        donate: Tuple[int, ...] = ()
+        static_nums: Tuple[int, ...] = ()
+        static_names: Tuple[str, ...] = ()
+        for kw in call.keywords:
+            if kw.arg == "donate_argnums":
+                donate = _literal_int_tuple(kw.value)
+            elif kw.arg == "static_argnums":
+                static_nums = _literal_int_tuple(kw.value)
+            elif kw.arg == "static_argnames":
+                static_names = _literal_str_tuple(kw.value)
+        return JitSite(
+            file_rel=rel,
+            lineno=call.lineno,
+            scope=scope,
+            binding=None,
+            target=target,
+            donate_argnums=donate,
+            static_argnums=static_nums,
+            static_argnames=static_names,
+            partial_bound=bound,
+            partial_kwargs=pkw,
+            call=call,
+        )
+
+    # -- queries -----------------------------------------------------------
+
+    def lookup(self, rel: str, scope: str, binding: str) -> Optional[JitSite]:
+        """Find the jit site a binding refers to, searching enclosing scopes.
+
+        A method referring to ``self._mega`` matches an assignment made in
+        any method of the same class (``__init__`` typically).
+        """
+        site = self.by_binding.get((rel, scope, binding))
+        if site is not None:
+            return site
+        if binding.startswith("self."):
+            cls = scope.split(".", 1)[0] if scope else ""
+            for (f, sc, b), s in self.by_binding.items():
+                if f == rel and b == binding and sc.split(".", 1)[0] == cls:
+                    return s
+        # module-level binding
+        return self.by_binding.get((rel, "", binding))
+
+    def jitted_bindings(self, rel: str) -> List[str]:
+        return [b for (f, _sc, b), _s in self.by_binding.items() if f == rel]
+
+    def resolve_target(self, site: JitSite) -> Optional[FuncInfo]:
+        """Map a jit site's traced target back to a FuncInfo when local."""
+        target = site.target
+        if target is None:
+            return None
+        if target.startswith("self."):
+            cls = site.scope.split(".", 1)[0] if site.scope else ""
+            return self.project.functions.get(
+                (site.file_rel, f"{cls}.{target[len('self.'):]}")
+            )
+        info = self.project.functions.get((site.file_rel, target))
+        if info is not None:
+            return info
+        # fall back to a unique by-name match anywhere in the project
+        cands = [
+            f
+            for f in self.project.by_name.get(target.split(".")[-1], ())
+            if f.cls is None
+        ]
+        if len(cands) == 1:
+            return cands[0]
+        return None

@@ -1,0 +1,565 @@
+"""Rule ``pallas``: static sanity checks for every ``pl.pallas_call``.
+
+Three families of checks, all driven from the wrapper function that
+builds the call (shapes there are plain Python ints at trace time, so a
+small symbolic evaluator over the wrapper's locals goes a long way):
+
+* **grid divisibility** — a grid dimension computed with ``//`` must
+  carry evidence that the division is exact (a ``%`` guard in the
+  wrapper, a guarded divisor like ``KB = kb if NB % kb == 0 else 1``, a
+  ``_block_size``-style helper, or an explicit ceil-div ``-(-a // b)`` /
+  ``pl.cdiv`` whose remainder the kernel masks);
+* **VMEM footprint** — Σ(BlockSpec block bytes × usage multiplicity) ×
+  pipeline factor + scratch bytes against a per-kernel budget, with
+  unresolved dimension names bounded by :data:`DIM_BOUNDS`;
+* **index_map hygiene** — index maps must be trace-time functions of the
+  grid indices and scalar-prefetch refs only: closing over a traced
+  array value (an unannotated array parameter, a ``jnp`` intermediate)
+  forces a recompile per value or a trace error.
+
+The VMEM table is also exported via :func:`vmem_report` for the CI
+artifact and ``docs/static_analysis.md``.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.common import Finding, FuncInfo, Project, attr_chain, call_name, walk_calls
+
+RULE = "pallas"
+
+#: upper bounds for dimension names that cannot be resolved statically.
+#: These mirror the serving configs: D ≤ 256 head dim, G ≤ 128 rows per
+#: quant block, gT ≤ 512 (GQA replicas × spec window), M ≤ 1024 fused
+#: rows (MAX_FUSED_ROWS), TN ≤ 512 matmul tile.
+DIM_BOUNDS: Dict[str, int] = {
+    "D": 256, "Dp": 128, "G": 128, "gT": 512, "T": 64, "g": 8,
+    "M": 1024, "TN": 512, "N": 512, "K": 8192, "KB": 8,
+    "BQ": 512, "BK": 512, "bq": 512, "bk": 512, "H": 64, "nh": 64,
+}
+DEFAULT_DIM_BOUND = 256
+
+#: default per-kernel VMEM budget (bytes). TPU cores have ~16 MiB of
+#: VMEM; we keep kernels under 12 MiB to leave headroom for the compiler.
+DEFAULT_BUDGET = 12 * 2**20
+KERNEL_BUDGETS: Dict[str, int] = {}
+
+#: blocks are double-buffered by the pipeline
+PIPELINE_FACTOR = 2
+
+#: itemsize hints by spec/operand name fragment (packed INT4 planes
+#: travel as uint8); anything else is costed at 4 bytes (f32 worst case)
+ITEMSIZE_HINTS = {"pspec": 1, "packed": 1, "upper": 1, "lower": 1}
+
+_DTYPE_SIZES = {
+    "float32": 4, "int32": 4, "uint32": 4, "float16": 2, "bfloat16": 2,
+    "int16": 2, "int8": 1, "uint8": 1, "bool_": 1, "float64": 8,
+}
+
+
+# ---------------------------------------------------------------------------
+# symbolic int evaluation over a wrapper function's locals
+# ---------------------------------------------------------------------------
+
+
+class _IntEnv:
+    def __init__(self, info: FuncInfo, bounds: Dict[str, int]):
+        self.info = info
+        self.bounds = bounds
+        self.assigns: Dict[str, ast.expr] = {}
+        self.param_defaults: Dict[str, int] = {}
+        self.exact = True  # cleared whenever a bound is substituted
+        self._collect()
+
+    def _collect(self) -> None:
+        node = self.info.node
+        args = node.args
+        pos = args.posonlyargs + args.args
+        for a, d in zip(pos[len(pos) - len(args.defaults):], args.defaults):
+            if isinstance(d, ast.Constant) and isinstance(d.value, int):
+                self.param_defaults[a.arg] = d.value
+        for a, d in zip(args.kwonlyargs, args.kw_defaults):
+            if isinstance(d, ast.Constant) and isinstance(d.value, int):
+                self.param_defaults[a.arg] = d.value
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Assign) and len(sub.targets) == 1:
+                tgt = sub.targets[0]
+                if isinstance(tgt, ast.Name):
+                    self.assigns[tgt.id] = sub.value
+                elif isinstance(tgt, ast.Tuple) and all(
+                    isinstance(e, ast.Name) for e in tgt.elts
+                ):
+                    # `BH, gT, D = q.shape`: bind each name to its bound
+                    for e in tgt.elts:
+                        self.assigns.setdefault(e.id, None)  # type: ignore[arg-type]
+
+    def eval(self, node: Optional[ast.expr], depth: int = 0) -> Optional[int]:
+        if node is None or depth > 12:
+            return None
+        if isinstance(node, ast.Constant):
+            return node.value if isinstance(node.value, int) and not isinstance(node.value, bool) else None
+        if isinstance(node, ast.Name):
+            return self._eval_name(node.id, depth)
+        if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+            v = self.eval(node.operand, depth + 1)
+            return -v if v is not None else None
+        if isinstance(node, ast.BinOp):
+            left = self.eval(node.left, depth + 1)
+            right = self.eval(node.right, depth + 1)
+            if left is None or right is None:
+                return None
+            try:
+                if isinstance(node.op, ast.Add):
+                    return left + right
+                if isinstance(node.op, ast.Sub):
+                    return left - right
+                if isinstance(node.op, ast.Mult):
+                    return left * right
+                if isinstance(node.op, ast.FloorDiv):
+                    return left // right
+                if isinstance(node.op, ast.Mod):
+                    return left % right
+                if isinstance(node.op, ast.Pow):
+                    return left**right
+            except (ZeroDivisionError, ValueError):
+                return None
+            return None
+        if isinstance(node, ast.IfExp):
+            a = self.eval(node.body, depth + 1)
+            b = self.eval(node.orelse, depth + 1)
+            if a is None or b is None:
+                return a if b is None else b
+            self.exact = False
+            return max(a, b)
+        if isinstance(node, ast.Call):
+            name = call_name(node) or ""
+            vals = [self.eval(a, depth + 1) for a in node.args]
+            if name in ("max", "min") and vals and all(v is not None for v in vals):
+                return (max if name == "max" else min)(vals)  # type: ignore[arg-type]
+            if name in ("pl.cdiv", "cdiv") and len(vals) == 2 and None not in vals:
+                return -(-vals[0] // vals[1])  # type: ignore[operator]
+            return None
+        return None
+
+    def _eval_name(self, name: str, depth: int) -> Optional[int]:
+        expr = self.assigns.get(name)
+        if expr is not None:
+            v = self.eval(expr, depth + 1)
+            if v is not None:
+                return v
+        for source in (self.param_defaults, self.bounds, DIM_BOUNDS):
+            if name in source:
+                if source is not self.param_defaults:
+                    self.exact = False
+                return source[name]
+        self.exact = False
+        return DEFAULT_DIM_BOUND
+
+
+# ---------------------------------------------------------------------------
+# pallas_call site model
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class KernelReport:
+    qualname: str
+    path: str
+    line: int
+    est_bytes: Optional[int]
+    budget: int
+    exact: bool
+    detail: List[str] = field(default_factory=list)
+
+    @property
+    def over_budget(self) -> bool:
+        return self.est_bytes is not None and self.est_bytes > self.budget
+
+
+def _kwarg(call: ast.Call, name: str) -> Optional[ast.expr]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _grid_spec_parts(call: ast.Call) -> Dict[str, Optional[ast.expr]]:
+    """Extract grid/in_specs/out_specs/scratch/num_scalar_prefetch from a
+    pallas_call, looking through ``grid_spec=PrefetchScalarGridSpec(...)``."""
+    parts: Dict[str, Optional[ast.expr]] = {
+        "grid": _kwarg(call, "grid"),
+        "in_specs": _kwarg(call, "in_specs"),
+        "out_specs": _kwarg(call, "out_specs"),
+        "scratch_shapes": _kwarg(call, "scratch_shapes"),
+        "num_scalar_prefetch": None,
+    }
+    gs = _kwarg(call, "grid_spec")
+    if isinstance(gs, ast.Call):
+        for key in parts:
+            val = _kwarg(gs, key)
+            if val is not None:
+                parts[key] = val
+    return parts
+
+
+def _block_spec_calls(info: FuncInfo) -> Dict[str, ast.Call]:
+    """Named BlockSpec assignments within the wrapper (incl. loop bodies)."""
+    out: Dict[str, ast.Call] = {}
+    for sub in ast.walk(info.node):
+        if (
+            isinstance(sub, ast.Assign)
+            and len(sub.targets) == 1
+            and isinstance(sub.targets[0], ast.Name)
+            and isinstance(sub.value, ast.Call)
+            and (call_name(sub.value) or "").endswith("BlockSpec")
+        ):
+            out[sub.targets[0].id] = sub.value
+    return out
+
+
+def _loop_multiplier(info: FuncInfo, name: str, env: _IntEnv) -> int:
+    """If `name` is assigned inside `for _ in range(K)`, usage repeats K times."""
+    for sub in ast.walk(info.node):
+        if not isinstance(sub, ast.For):
+            continue
+        assigned_here = any(
+            isinstance(s, ast.Assign)
+            and any(
+                isinstance(t, ast.Name) and t.id == name for t in s.targets
+            )
+            for s in ast.walk(sub)  # type: ignore[arg-type]
+            if isinstance(s, ast.Assign)
+        )
+        if not assigned_here:
+            continue
+        it = sub.iter
+        if isinstance(it, ast.Call) and (call_name(it) or "") == "range" and it.args:
+            k = env.eval(it.args[-1 if len(it.args) == 1 else 1])
+            if k is not None and k > 1:
+                return k
+    return 1
+
+
+def _itemsize_for(name: str) -> int:
+    lowered = name.lower()
+    for frag, size in ITEMSIZE_HINTS.items():
+        if frag in lowered:
+            return size
+    return 4
+
+
+def _dtype_size(node: Optional[ast.expr]) -> int:
+    name = (attr_chain(node) or "") if node is not None else ""
+    return _DTYPE_SIZES.get(name.split(".")[-1], 4)
+
+
+def _block_bytes(spec_call: ast.Call, env: _IntEnv, itemsize: int) -> Optional[int]:
+    shape = spec_call.args[0] if spec_call.args else _kwarg(spec_call, "block_shape")
+    if not isinstance(shape, (ast.Tuple, ast.List)):
+        return None
+    total = itemsize
+    for dim in shape.elts:
+        v = env.eval(dim)
+        if v is None:
+            return None
+        total *= max(v, 1)
+    return total
+
+
+def _index_map_of(spec_call: ast.Call) -> Optional[ast.expr]:
+    if len(spec_call.args) >= 2:
+        return spec_call.args[1]
+    return _kwarg(spec_call, "index_map")
+
+
+# ---------------------------------------------------------------------------
+# the three check families
+# ---------------------------------------------------------------------------
+
+
+class _PallasSite:
+    def __init__(self, project: Project, info: FuncInfo, call: ast.Call):
+        self.project = project
+        self.info = info
+        self.call = call
+        self.env = _IntEnv(info, {})
+        self.parts = _grid_spec_parts(call)
+        self.findings: List[Finding] = []
+
+    def _flag(self, node: ast.AST, msg: str) -> None:
+        self.findings.append(
+            Finding(RULE, self.info.file.rel, node.lineno, node.col_offset, msg)
+        )
+
+    # -- divisibility ------------------------------------------------------
+
+    def _guarded_names(self) -> Set[str]:
+        """Names whose defining expression proves divisibility handling."""
+        guarded: Set[str] = set()
+        for name, expr in self.env.assigns.items():
+            if expr is None:
+                continue
+            has_mod = any(
+                isinstance(n, ast.BinOp) and isinstance(n.op, ast.Mod)
+                for n in ast.walk(expr)
+            )
+            calls_helper = any(
+                self._helper_has_mod(call_name(c) or "") for c in walk_calls(expr)
+            )
+            if has_mod or calls_helper:
+                guarded.add(name)
+        return guarded
+
+    def _helper_has_mod(self, name: str) -> bool:
+        target = self.project.functions.get((self.info.file.rel, name))
+        if target is None:
+            return False
+        return any(
+            isinstance(n, ast.BinOp) and isinstance(n.op, ast.Mod)
+            for n in ast.walk(target.node)
+        )
+
+    def _is_ceil_div(self, node: ast.BinOp) -> bool:
+        # -(-a // b) written as UnaryOp(USub, BinOp(UnaryOp(USub, a) // b))
+        return isinstance(node.left, ast.UnaryOp) and isinstance(
+            node.left.op, ast.USub
+        )
+
+    def check_divisibility(self) -> None:
+        grid = self.parts["grid"]
+        if grid is None:
+            return
+        func_has_mod_on = {
+            ast.unparse(n.right)
+            for n in ast.walk(self.info.node)
+            if isinstance(n, ast.BinOp) and isinstance(n.op, ast.Mod)
+        }
+        asserts_text = " ".join(
+            ast.unparse(s) for s in ast.walk(self.info.node) if isinstance(s, ast.Assert)
+        )
+        guarded = self._guarded_names()
+
+        def expand(node: ast.expr, depth: int = 0):
+            if depth > 6:
+                return
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Name) and sub.id in self.env.assigns:
+                    expr = self.env.assigns[sub.id]
+                    if expr is not None and sub.id not in guarded:
+                        yield from expand(expr, depth + 1)
+                elif isinstance(sub, ast.BinOp) and isinstance(sub.op, ast.FloorDiv):
+                    yield sub
+
+        for div in expand(grid):
+            if self._is_ceil_div(div):
+                continue
+            a_txt, b_txt = ast.unparse(div.left), ast.unparse(div.right)
+            if b_txt in func_has_mod_on or b_txt in guarded:
+                continue
+            if isinstance(div.right, ast.Name) and div.right.id in guarded:
+                continue
+            if b_txt in asserts_text or f"% {b_txt}" in asserts_text:
+                continue
+            # exact value known and divides cleanly
+            a_val, b_val = self.env.eval(div.left), self.env.eval(div.right)
+            if (
+                a_val is not None
+                and b_val not in (None, 0)
+                and self.env.exact
+                and a_val % b_val == 0  # type: ignore[operator]
+            ):
+                continue
+            self._flag(
+                div,
+                f"grid dimension `{a_txt} // {b_txt}` has no divisibility "
+                "guard — add a `%` check, use a guarded block size, or "
+                "ceil-divide and mask the remainder in the kernel",
+            )
+
+    # -- index_map hygiene -------------------------------------------------
+
+    _STATIC_GLOBALS = {
+        "jnp", "jax", "np", "pl", "pltpu", "lax", "math", "functools", "partial",
+    }
+
+    def _static_local(self, name: str) -> bool:
+        """Is a wrapper-local name a trace-time Python value (int-ish)?"""
+        expr = self.env.assigns.get(name)
+        if expr is None:
+            # shape-unpack target or unknown: shape dims are static ints
+            return name in self.env.assigns or name in DIM_BOUNDS
+        for sub in ast.walk(expr):
+            if isinstance(sub, ast.Call):
+                cname = call_name(sub) or ""
+                if cname.startswith(("jnp.", "jax.", "lax.")) and not cname.endswith(
+                    ".shape"
+                ):
+                    return False
+        return True
+
+    def _func_params(self) -> Dict[str, Optional[str]]:
+        params: Dict[str, Optional[str]] = {}
+        a = self.info.node.args
+        for arg in a.posonlyargs + a.args + a.kwonlyargs:
+            params[arg.arg] = ast.unparse(arg.annotation) if arg.annotation else None
+        return params
+
+    def check_index_maps(self, spec_names: Dict[str, ast.Call]) -> None:
+        params = self._func_params()
+        seen: Set[int] = set()
+        for spec_call in list(spec_names.values()) + self._inline_specs():
+            if id(spec_call) in seen:
+                continue
+            seen.add(id(spec_call))
+            imap = _index_map_of(spec_call)
+            if not isinstance(imap, ast.Lambda):
+                continue
+            bound = {x.arg for x in imap.args.args + imap.args.posonlyargs}
+            for node in ast.walk(imap.body):
+                if not isinstance(node, ast.Name) or not isinstance(node.ctx, ast.Load):
+                    continue
+                name = node.id
+                if name in bound or name in self._STATIC_GLOBALS:
+                    continue
+                if name in params:
+                    ann = params[name] or ""
+                    if any(t in ann for t in ("int", "bool", "str", "float")):
+                        continue
+                    self._flag(
+                        node,
+                        f"index_map closes over parameter `{name}` with no "
+                        "static annotation — traced values in index maps "
+                        "break pipelining; pass scalars via scalar prefetch",
+                    )
+                elif name in self.env.assigns and not self._static_local(name):
+                    self._flag(
+                        node,
+                        f"index_map closes over `{name}`, which is computed "
+                        "from traced values — use scalar prefetch instead",
+                    )
+
+    def _inline_specs(self) -> List[ast.Call]:
+        out = []
+        for key in ("in_specs", "out_specs"):
+            expr = self.parts[key]
+            if expr is None:
+                continue
+            for sub in walk_calls(expr):
+                if (call_name(sub) or "").endswith("BlockSpec"):
+                    out.append(sub)
+        return out
+
+    # -- VMEM footprint ----------------------------------------------------
+
+    def estimate_vmem(self, spec_names: Dict[str, ast.Call]) -> KernelReport:
+        budget = KERNEL_BUDGETS.get(self.info.qualname, DEFAULT_BUDGET)
+        report = KernelReport(
+            qualname=self.info.qualname,
+            path=self.info.file.rel,
+            line=self.call.lineno,
+            est_bytes=None,
+            budget=budget,
+            exact=True,
+        )
+        total = 0
+        resolved_any = False
+
+        # usage multiplicity: Load occurrences of each named spec anywhere in
+        # the wrapper (covers helper-call args and list concatenation), times
+        # a range(K) multiplier when the spec is rebuilt per lane in a loop.
+        for name, spec_call in spec_names.items():
+            uses = sum(
+                1
+                for n in ast.walk(self.info.node)
+                if isinstance(n, ast.Name)
+                and n.id == name
+                and isinstance(n.ctx, ast.Load)
+            )
+            if uses == 0:
+                continue
+            mult = _loop_multiplier(self.info, name, self.env)
+            nbytes = _block_bytes(spec_call, self.env, _itemsize_for(name))
+            if nbytes is None:
+                report.detail.append(f"{name}: unresolved block shape")
+                report.exact = False
+                continue
+            resolved_any = True
+            total += nbytes * uses * mult
+            report.detail.append(
+                f"{name}: {nbytes} B × {uses} use(s)"
+                + (f" × {mult} lanes" if mult > 1 else "")
+            )
+
+        for spec_call in self._inline_specs():
+            if any(spec_call is c for c in spec_names.values()):
+                continue
+            nbytes = _block_bytes(spec_call, self.env, 4)
+            if nbytes is not None:
+                resolved_any = True
+                total += nbytes
+                report.detail.append(f"inline BlockSpec: {nbytes} B")
+
+        total *= PIPELINE_FACTOR
+
+        scratch = self.parts["scratch_shapes"]
+        if isinstance(scratch, (ast.List, ast.Tuple)):
+            for item in scratch.elts:
+                if isinstance(item, ast.Call):
+                    shape = item.args[0] if item.args else None
+                    size = _dtype_size(item.args[1] if len(item.args) > 1 else None)
+                    if isinstance(shape, (ast.Tuple, ast.List)):
+                        dims = [self.env.eval(d) for d in shape.elts]
+                        if None not in dims:
+                            n = size
+                            for d in dims:
+                                n *= max(d, 1)  # type: ignore[arg-type]
+                            total += n
+                            resolved_any = True
+                            report.detail.append(f"scratch: {n} B")
+
+        if resolved_any:
+            report.est_bytes = total
+            report.exact = report.exact and self.env.exact
+        return report
+
+
+def collect_sites(project: Project, kernel_dirs: Tuple[str, ...] = ("kernels/",)) -> List[Tuple[FuncInfo, ast.Call]]:
+    sites = []
+    for (rel, _qual), info in sorted(project.functions.items()):
+        if not any(frag in rel for frag in kernel_dirs):
+            continue
+        for call in walk_calls(info.node):
+            if (call_name(call) or "").endswith("pallas_call"):
+                sites.append((info, call))
+    return sites
+
+
+def vmem_report(project: Project) -> List[KernelReport]:
+    reports = []
+    for info, call in collect_sites(project):
+        site = _PallasSite(project, info, call)
+        reports.append(site.estimate_vmem(_block_spec_calls(info)))
+    return reports
+
+
+def check(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    for info, call in collect_sites(project):
+        site = _PallasSite(project, info, call)
+        spec_names = _block_spec_calls(info)
+        site.check_divisibility()
+        site.check_index_maps(spec_names)
+        report = site.estimate_vmem(spec_names)
+        if report.over_budget:
+            site._flag(
+                call,
+                f"estimated VMEM footprint {report.est_bytes} B exceeds the "
+                f"{report.budget} B budget for `{info.qualname}` "
+                f"({'; '.join(report.detail)})",
+            )
+        findings.extend(site.findings)
+    findings.sort(key=lambda f: (f.path, f.line, f.col))
+    return findings

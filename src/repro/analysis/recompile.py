@@ -1,0 +1,293 @@
+"""Rule ``recompile``: silent recompilation and trace-error hazards.
+
+Two families:
+
+* **unstable static args** — call sites of jitted bindings that pass an
+  unhashable value (list/dict/set/array literal or constructor) or a
+  call-to-call-unstable value (``time.*``, ``random.*``, ``id()``) in a
+  ``static_argnums``/``static_argnames`` position. Unhashables raise at
+  call time; unstable hashables compile a fresh executable per call.
+* **python branches on traced values** — ``if``/``while``/``range``
+  driven by a traced argument (or a value derived from one) inside a
+  function that is a ``jax.jit`` target. These either fail at trace time
+  or, worse, bake one branch into the compiled program. Branches on
+  static configuration (``self``/``model``/``cfg``/annotated int/str
+  params, ``.shape``, ``is None`` checks) are fine and ignored.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set, Tuple
+
+from repro.analysis.common import Finding, FuncInfo, Project, attr_chain, call_name
+from repro.analysis.jit_registry import JitRegistry, JitSite
+
+RULE = "recompile"
+
+#: parameter names conventionally carrying static python objects
+STATIC_PARAM_NAMES = {"self", "cls", "model", "cfg", "config", "mesh", "policy", "tier"}
+#: annotation fragments that mark a parameter static-safe to branch on
+STATIC_ANN_FRAGMENTS = (
+    "int", "str", "bool", "float", "Mesh", "Config", "Model", "Callable",
+    "Tuple", "tuple", "Sequence", "List", "Dict", "Optional",
+)
+
+UNSTABLE_CALL_PREFIXES = ("time.", "random.", "np.random.", "uuid.", "id")
+UNHASHABLE_CTORS = {"list", "dict", "set", "bytearray"}
+ARRAYISH_PREFIXES = ("np.", "jnp.", "numpy.", "jax.")
+
+
+def _is_unhashable_expr(node: ast.expr) -> Optional[str]:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.SetComp,
+                         ast.DictComp, ast.GeneratorExp)):
+        return "unhashable literal"
+    if isinstance(node, ast.Call):
+        name = call_name(node) or ""
+        if name in UNHASHABLE_CTORS:
+            return f"unhashable `{name}(...)`"
+        if name.startswith(ARRAYISH_PREFIXES):
+            return f"array-valued `{name}(...)` (unhashable)"
+        if name == "id" or name.startswith(tuple(p for p in UNSTABLE_CALL_PREFIXES if p != "id")):
+            return f"call-to-call-unstable `{name}(...)`"
+    return None
+
+
+def _static_positions(site: JitSite, call: ast.Call) -> List[Tuple[ast.expr, str]]:
+    """(expr, why-static) pairs for the static args at a call site."""
+    out: List[Tuple[ast.expr, str]] = []
+    for num in site.static_argnums:
+        if num < len(call.args):
+            out.append((call.args[num], f"static_argnums={site.static_argnums}"))
+    for kw in call.keywords:
+        if kw.arg in site.static_argnames:
+            out.append((kw.value, f"static_argnames={site.static_argnames}"))
+    return out
+
+
+def _check_call_sites(project: Project, registry: JitRegistry) -> List[Finding]:
+    findings: List[Finding] = []
+    static_sites = [s for s in registry.sites if s.static_argnums or s.static_argnames]
+    if not static_sites:
+        return findings
+    for info in project.functions.values():
+        for node in ast.walk(info.node):
+            if not isinstance(node, ast.Call):
+                continue
+            name = attr_chain(node.func)
+            if not name:
+                continue
+            site = registry.lookup(info.file.rel, info.qualname, name)
+            if site is None or not (site.static_argnums or site.static_argnames):
+                continue
+            for expr, why in _static_positions(site, node):
+                problem = _is_unhashable_expr(expr)
+                if problem:
+                    findings.append(
+                        Finding(
+                            RULE,
+                            info.file.rel,
+                            expr.lineno,
+                            expr.col_offset,
+                            f"{problem} passed in a static position ({why}) "
+                            f"of jitted `{name}` — unhashables raise, fresh "
+                            "objects recompile every call",
+                        )
+                    )
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# traced-branch analysis inside jit targets
+# ---------------------------------------------------------------------------
+
+
+class _TracedBranchCheck:
+    def __init__(self, info: FuncInfo, site: JitSite):
+        self.info = info
+        self.site = site
+        self.findings: List[Finding] = []
+        self.traced: Set[str] = set()
+        self.static: Set[str] = set()
+        self._classify_params()
+
+    def _classify_params(self) -> None:
+        a = self.info.node.args
+        static_idx = set(self.site.static_argnums)
+        for i, arg in enumerate(a.posonlyargs + a.args):
+            name = arg.arg
+            ann = ast.unparse(arg.annotation) if arg.annotation else ""
+            if (
+                i < self.site.partial_bound
+                or i in static_idx
+                or name in self.site.static_argnames
+                or name in self.site.partial_kwargs
+                or name in STATIC_PARAM_NAMES
+                or any(frag in ann for frag in STATIC_ANN_FRAGMENTS)
+            ):
+                self.static.add(name)
+            else:
+                self.traced.add(name)
+        for arg in a.kwonlyargs:
+            name = arg.arg
+            ann = ast.unparse(arg.annotation) if arg.annotation else ""
+            if (
+                name in self.site.static_argnames
+                or name in self.site.partial_kwargs
+                or name in STATIC_PARAM_NAMES
+                or any(frag in ann for frag in STATIC_ANN_FRAGMENTS)
+                or arg.annotation is None  # kw-only w/o annotation: config knob
+            ):
+                self.static.add(name)
+            else:
+                self.traced.add(name)
+
+    # -- tracking ----------------------------------------------------------
+
+    def _involves_traced(self, node: ast.expr) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.traced
+        if isinstance(node, ast.Attribute):
+            if node.attr in ("shape", "ndim", "dtype", "size"):
+                return False
+            return self._involves_traced(node.value)
+        if isinstance(node, ast.Subscript):
+            return self._involves_traced(node.value) or self._involves_traced(node.slice)
+        if isinstance(node, ast.Call):
+            name = call_name(node) or ""
+            if name in ("len", "isinstance", "getattr", "hasattr", "type", "range"):
+                return False
+            if name.startswith(("jnp.", "lax.", "jax.lax.", "jax.numpy.")):
+                return True
+            return any(self._involves_traced(a) for a in node.args) or any(
+                self._involves_traced(k.value) for k in node.keywords
+            )
+        if isinstance(node, ast.Compare):
+            ops_are_identity = all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops)
+            if ops_are_identity:
+                return False
+            return self._involves_traced(node.left) or any(
+                self._involves_traced(c) for c in node.comparators
+            )
+        if isinstance(node, ast.BoolOp):
+            return any(self._involves_traced(v) for v in node.values)
+        if isinstance(node, ast.UnaryOp):
+            return self._involves_traced(node.operand)
+        if isinstance(node, ast.BinOp):
+            return self._involves_traced(node.left) or self._involves_traced(node.right)
+        if isinstance(node, ast.IfExp):
+            return (
+                self._involves_traced(node.test)
+                or self._involves_traced(node.body)
+                or self._involves_traced(node.orelse)
+            )
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self._involves_traced(e) for e in node.elts)
+        return False
+
+    def _flag(self, node: ast.AST, kind: str, text: str) -> None:
+        self.findings.append(
+            Finding(
+                RULE,
+                self.info.file.rel,
+                node.lineno,
+                node.col_offset,
+                f"python {kind} on traced value `{text}` inside jitted "
+                f"`{self.info.qualname}` (jit at {self.site.file_rel}:"
+                f"{self.site.lineno}) — use lax.cond/select or mark the "
+                "argument static",
+            )
+        )
+
+    def run(self) -> List[Finding]:
+        self._walk(self.info.node.body)
+        return self.findings
+
+    def _walk(self, body) -> None:
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # nested defs (scan bodies, pl.when branches, local helpers):
+                # closure captures keep their outer tracedness; the nested
+                # def's own params are *unknown* (scan carries are traced but
+                # helper closures routinely take static bools), so branches on
+                # them are not flagged — precision over recall here.
+                inner = _TracedBranchCheck(self.info, self.site)
+                params = {
+                    a.arg
+                    for a in stmt.args.posonlyargs + stmt.args.args + stmt.args.kwonlyargs
+                }
+                inner.traced = self.traced - params
+                inner.static = self.static | params
+                inner._walk(stmt.body)
+                self.findings.extend(inner.findings)
+                continue
+            if isinstance(stmt, ast.Assign):
+                traced = self._involves_traced(stmt.value)
+                for tgt in stmt.targets:
+                    self._bind(tgt, traced)
+            elif isinstance(stmt, ast.AugAssign):
+                if self._involves_traced(stmt.value):
+                    key = attr_chain(stmt.target)
+                    if key:
+                        self.traced.add(key)
+            elif isinstance(stmt, (ast.If, ast.While)):
+                if self._involves_traced(stmt.test):
+                    kind = "branch" if isinstance(stmt, ast.If) else "loop condition"
+                    self._flag(stmt, kind, ast.unparse(stmt.test))
+                self._walk(stmt.body)
+                self._walk(stmt.orelse)
+                continue
+            elif isinstance(stmt, ast.For):
+                it = stmt.iter
+                if (
+                    isinstance(it, ast.Call)
+                    and (call_name(it) or "") == "range"
+                    and any(self._involves_traced(a) for a in it.args)
+                ):
+                    self._flag(stmt, "loop bound", ast.unparse(it))
+                self._bind(stmt.target, False)
+                self._walk(stmt.body)
+                self._walk(stmt.orelse)
+                continue
+            elif isinstance(stmt, (ast.With,)):
+                self._walk(stmt.body)
+                continue
+            elif isinstance(stmt, ast.Try):
+                self._walk(stmt.body)
+                for h in stmt.handlers:
+                    self._walk(h.body)
+                self._walk(stmt.orelse)
+                self._walk(stmt.finalbody)
+                continue
+            # assert on traced values inside jit is also a trace error
+            if isinstance(stmt, ast.Assert) and self._involves_traced(stmt.test):
+                self._flag(stmt, "assert", ast.unparse(stmt.test))
+
+    def _bind(self, target: ast.expr, traced: bool) -> None:
+        if isinstance(target, ast.Name):
+            if traced:
+                self.traced.add(target.id)
+            else:
+                self.traced.discard(target.id)
+                self.static.add(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._bind(e, traced)
+        elif isinstance(target, ast.Starred):
+            self._bind(target.value, traced)
+
+
+def check(project: Project, registry: JitRegistry) -> List[Finding]:
+    findings = _check_call_sites(project, registry)
+    seen_targets: Set[Tuple[str, str]] = set()
+    for site in registry.sites:
+        target = registry.resolve_target(site)
+        if target is None:
+            continue
+        key = (target.file.rel, target.qualname)
+        if key in seen_targets:
+            continue
+        seen_targets.add(key)
+        findings.extend(_TracedBranchCheck(target, site).run())
+    findings.sort(key=lambda f: (f.path, f.line, f.col))
+    return findings

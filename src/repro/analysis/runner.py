@@ -1,0 +1,143 @@
+"""Orchestration for ``python -m repro.analysis``."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+from repro.analysis import donation, host_sync, pallas_checks, recompile, sharding_specs
+from repro.analysis import baseline as baseline_mod
+from repro.analysis.common import Finding, Project, apply_suppressions
+from repro.analysis.jit_registry import JitRegistry
+
+ALL_RULES = ("host-sync", "donation", "sharding-spec", "pallas", "recompile")
+
+
+def run_checks(project: Project, rules: Sequence[str]) -> List[Finding]:
+    registry = JitRegistry(project)
+    findings: List[Finding] = []
+    if "host-sync" in rules:
+        findings.extend(host_sync.check(project, registry))
+    if "donation" in rules:
+        findings.extend(donation.check(project, registry))
+    if "sharding-spec" in rules:
+        findings.extend(sharding_specs.check(project))
+    if "pallas" in rules:
+        findings.extend(pallas_checks.check(project))
+    if "recompile" in rules:
+        findings.extend(recompile.check(project, registry))
+    return apply_suppressions(project, findings)
+
+
+def analyze_paths(
+    paths: Sequence[Path],
+    root: Optional[Path] = None,
+    rules: Sequence[str] = ALL_RULES,
+) -> List[Finding]:
+    root = root or Path.cwd()
+    project = Project.load(paths, root)
+    return run_checks(project, rules)
+
+
+def format_vmem_report(project: Project) -> str:
+    lines = [
+        f"{'kernel':<38} {'file:line':<42} {'est VMEM':>12} {'budget':>10}  status",
+        "-" * 110,
+    ]
+    for rep in pallas_checks.vmem_report(project):
+        est = "unresolved" if rep.est_bytes is None else f"{rep.est_bytes / 2**20:.2f} MiB"
+        approx = "" if rep.exact else "~"
+        status = "OVER" if rep.over_budget else "ok"
+        lines.append(
+            f"{rep.qualname:<38} {rep.path + ':' + str(rep.line):<42} "
+            f"{approx + est:>12} {rep.budget / 2**20:>8.1f} MiB  {status}"
+        )
+        for det in rep.detail:
+            lines.append(f"    {det}")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repro-lint: static hot-path invariant checks "
+        "(host-sync, donation, sharding-spec, pallas, recompile).",
+    )
+    parser.add_argument("paths", nargs="*", default=["src"], help="files or directories")
+    parser.add_argument("--json", action="store_true", help="machine-readable output")
+    parser.add_argument(
+        "--rules",
+        default=",".join(ALL_RULES),
+        help=f"comma-separated subset of: {', '.join(ALL_RULES)}",
+    )
+    parser.add_argument(
+        "--baseline",
+        default=baseline_mod.DEFAULT_BASELINE,
+        help="baseline file of accepted findings (default: %(default)s)",
+    )
+    parser.add_argument(
+        "--write-baseline",
+        action="store_true",
+        help="record current findings into the baseline and exit 0",
+    )
+    parser.add_argument(
+        "--vmem-report",
+        action="store_true",
+        help="print the per-kernel Pallas VMEM budget table",
+    )
+    args = parser.parse_args(argv)
+
+    rules = [r.strip() for r in args.rules.split(",") if r.strip()]
+    unknown = [r for r in rules if r not in ALL_RULES]
+    if unknown:
+        parser.error(f"unknown rule(s): {', '.join(unknown)}")
+
+    root = Path.cwd()
+    paths = [Path(p) for p in args.paths]
+    project = Project.load(paths, root)
+    findings = run_checks(project, rules)
+
+    if args.vmem_report:
+        print(format_vmem_report(project))
+        if not args.json:
+            print()
+
+    baseline_path = Path(args.baseline)
+    if args.write_baseline:
+        n = baseline_mod.save(baseline_path, project, findings)
+        print(f"repro-lint: wrote {n} finding(s) to {baseline_path}")
+        return 0
+
+    known = baseline_mod.load(baseline_path)
+    fresh, matched = baseline_mod.subtract(project, findings, known)
+
+    if args.json:
+        payload: Dict[str, object] = {
+            "findings": [
+                {
+                    "rule": f.rule,
+                    "path": f.path,
+                    "line": f.line,
+                    "col": f.col,
+                    "message": f.message,
+                }
+                for f in fresh
+            ],
+            "baselined": matched,
+            "checked_files": len(project.files),
+        }
+        print(json.dumps(payload, indent=2))
+    else:
+        for f in fresh:
+            print(f.render())
+        summary = (
+            f"repro-lint: {len(fresh)} finding(s) in {len(project.files)} file(s)"
+        )
+        if matched:
+            summary += f" ({matched} baselined)"
+        print(summary, file=sys.stderr)
+
+    return 1 if fresh else 0

@@ -1,0 +1,140 @@
+"""Rule ``sharding-spec``: pytree containers vs the placement spec walkers.
+
+The mesh path places every long-lived pytree via the walkers in
+``distributed/specs.py`` (and the ``out_shardings`` constructions in
+``serving/engine.py``). Those walkers rebuild containers **field by
+field** — so adding a field to, say, ``PagedKVPool`` without updating
+``_cache_spec`` is a guaranteed runtime crash the first time a mesh run
+exercises it. This rule makes that a lint error instead:
+
+* every ``NamedTuple`` container defined under ``core/``, ``serving/``
+  or ``models/`` must be *mentioned* in a spec module (constructed
+  field-wise, isinstance-dispatched, or handled by a blanket
+  ``jax.tree.map`` walker) — transient jit-internal plan values are
+  annotated ``# lint: ok(sharding-spec, ...)`` on their class line;
+* every field-wise construction of a known container inside a spec
+  module must pass **exactly** the container's fields: a missing field
+  or an unknown/stale kwarg is an error at the construction site.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+from typing import List, Optional, Set, Tuple
+
+from repro.analysis.common import Finding, Project, SourceFile, attr_chain
+
+RULE = "sharding-spec"
+
+
+@dataclass
+class ShardingSpecConfig:
+    #: containers defined under these path fragments need spec coverage
+    container_dirs: Tuple[str, ...] = ("core/", "serving/", "models/")
+    #: modules whose constructions/mentions count as spec coverage
+    spec_files: Tuple[str, ...] = ("distributed/specs.py", "serving/engine.py")
+
+
+@dataclass
+class Container:
+    file: SourceFile
+    node: ast.ClassDef
+    name: str
+    fields: List[str] = field(default_factory=list)
+
+
+def _is_namedtuple(node: ast.ClassDef) -> bool:
+    for base in node.bases:
+        name = attr_chain(base) or ""
+        if name.split(".")[-1] == "NamedTuple":
+            return True
+    return False
+
+
+def _collect_containers(project: Project, cfg: ShardingSpecConfig) -> List[Container]:
+    out: List[Container] = []
+    for sf in project.files:
+        if not any(frag in sf.rel for frag in cfg.container_dirs):
+            continue
+        for node in sf.tree.body:
+            if not (isinstance(node, ast.ClassDef) and _is_namedtuple(node)):
+                continue
+            c = Container(file=sf, node=node, name=node.name)
+            for stmt in node.body:
+                if isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target, ast.Name):
+                    c.fields.append(stmt.target.id)
+            out.append(c)
+    return out
+
+
+def check(project: Project, cfg: Optional[ShardingSpecConfig] = None) -> List[Finding]:
+    cfg = cfg or ShardingSpecConfig()
+    containers = _collect_containers(project, cfg)
+    by_name = {c.name: c for c in containers}
+
+    spec_files = [
+        sf for sf in project.files if any(sf.rel.endswith(sfx) for sfx in cfg.spec_files)
+    ]
+    findings: List[Finding] = []
+    mentioned: Set[str] = set()
+
+    for sf in spec_files:
+        for name, c in by_name.items():
+            if re.search(rf"\b{re.escape(name)}\b", sf.text):
+                mentioned.add(name)
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            cname = (attr_chain(node.func) or "").split(".")[-1]
+            c = by_name.get(cname)
+            if c is None:
+                continue
+            kwargs = {kw.arg for kw in node.keywords if kw.arg is not None}
+            has_star = any(kw.arg is None for kw in node.keywords)
+            npos = len(node.args)
+            if has_star and not kwargs and npos == 0:
+                continue  # Container(**spec_dict): opaque, skip field check
+            covered = set(c.fields[:npos]) | kwargs
+            for missing in [f for f in c.fields if f not in covered]:
+                if has_star:
+                    continue
+                findings.append(
+                    Finding(
+                        RULE,
+                        sf.rel,
+                        node.lineno,
+                        node.col_offset,
+                        f"spec construction of `{cname}` is missing field "
+                        f"`{missing}` (defined at {c.file.rel}:{c.node.lineno})",
+                    )
+                )
+            for unknown in sorted(kwargs - set(c.fields)):
+                findings.append(
+                    Finding(
+                        RULE,
+                        sf.rel,
+                        node.lineno,
+                        node.col_offset,
+                        f"spec construction of `{cname}` passes unknown field "
+                        f"`{unknown}` — stale after a container refactor?",
+                    )
+                )
+
+    for c in containers:
+        if c.name not in mentioned:
+            findings.append(
+                Finding(
+                    RULE,
+                    c.file.rel,
+                    c.node.lineno,
+                    c.node.col_offset,
+                    f"pytree container `{c.name}` has no placement rule in "
+                    f"{'/'.join(cfg.spec_files)} — add a spec walker or annotate "
+                    "the class as a transient value",
+                )
+            )
+
+    findings.sort(key=lambda f: (f.path, f.line, f.col))
+    return findings

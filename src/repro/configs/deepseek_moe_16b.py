@@ -1,8 +1,7 @@
 """deepseek-moe-16b — fine-grained MoE: 2 shared + 64 routed experts top-6,
 first layer dense. [arXiv:2401.06066]"""
 
-from repro.models.config import (ATTN_FULL, MLP_DENSE, MLP_MOE, LayerSpec,
-                                 ModelConfig)
+from repro.models.config import ATTN_FULL, MLP_DENSE, MLP_MOE, LayerSpec, ModelConfig
 
 _DENSE = LayerSpec(mixer=ATTN_FULL, mlp=MLP_DENSE)
 _MOE = LayerSpec(mixer=ATTN_FULL, mlp=MLP_MOE)

@@ -1,8 +1,7 @@
 """gemma3-27b — dense, 5:1 local(sliding-window):global attention, 128k ctx.
 [hf:google/gemma-3-1b-pt family card, scaled to 27B]"""
 
-from repro.models.config import (ATTN_FULL, ATTN_WINDOW, MLP_DENSE,
-                                 LayerSpec, ModelConfig)
+from repro.models.config import ATTN_FULL, ATTN_WINDOW, MLP_DENSE, LayerSpec, ModelConfig
 
 _W = LayerSpec(mixer=ATTN_WINDOW, mlp=MLP_DENSE)
 _G = LayerSpec(mixer=ATTN_FULL, mlp=MLP_DENSE)

@@ -2,8 +2,7 @@
 (16 experts, top-2). Jamba block = 8 layers, attention at index 4, MoE on
 odd indices. [arXiv:2403.19887]"""
 
-from repro.models.config import (ATTN_FULL, MIX_MAMBA, MLP_DENSE, MLP_MOE,
-                                 LayerSpec, ModelConfig)
+from repro.models.config import ATTN_FULL, MIX_MAMBA, MLP_DENSE, MLP_MOE, LayerSpec, ModelConfig
 
 _M_D = LayerSpec(mixer=MIX_MAMBA, mlp=MLP_DENSE)
 _M_E = LayerSpec(mixer=MIX_MAMBA, mlp=MLP_MOE)

@@ -3,8 +3,7 @@ cross-attention (image) layer every 5th. The vision encoder + projector are
 stubbed; `input_specs` provides precomputed patch embeddings.
 [hf:meta-llama/Llama-3.2-11B-Vision, scaled to 90B]"""
 
-from repro.models.config import (ATTN_CROSS, ATTN_FULL, MLP_DENSE,
-                                 LayerSpec, ModelConfig)
+from repro.models.config import ATTN_CROSS, ATTN_FULL, MLP_DENSE, LayerSpec, ModelConfig
 
 _S = LayerSpec(mixer=ATTN_FULL, mlp=MLP_DENSE)
 _X = LayerSpec(mixer=ATTN_CROSS, mlp=MLP_DENSE)

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 
+# lint: ok(sharding-spec, jit-internal verification result consumed inside the round; never crosses a placement boundary)
 class VerifyResult(NamedTuple):
     tokens: jnp.ndarray       # [B, gamma+1] — accepted + correction/bonus,
                               # positions >= n_new are padding

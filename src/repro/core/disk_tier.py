@@ -51,8 +51,7 @@ from typing import Any, Dict, List, Optional
 
 import numpy as np
 
-from repro.core.host_tier import (HostTierError, SlotSnapshot,
-                                  SnapshotCorruptionError, _crc)
+from repro.core.host_tier import HostTierError, SlotSnapshot, SnapshotCorruptionError, _crc
 
 _MAGIC = b"KVS1"
 

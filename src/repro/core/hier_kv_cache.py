@@ -32,12 +32,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.quantization import (
-    HierQuant,
-    dequant_full,
-    dequant_upper,
-    quantize_kv_block_pair,
-)
+from repro.core.quantization import HierQuant, dequant_full, dequant_upper, quantize_kv_block_pair
 
 
 class HierKVCache(NamedTuple):

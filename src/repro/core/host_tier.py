@@ -311,6 +311,7 @@ class HostTier:
         delay = self.backoff_s
         for attempt in range(self.max_retries + 1):
             try:
+                # lint: ok(host-sync, offload materialization is the host tier's job: planes must land in host RAM; runs on preemption only)
                 return jax.device_get(planes)
             except Exception as e:         # pragma: no cover - runtime path
                 if attempt == self.max_retries:

@@ -60,12 +60,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.hier_kv_cache import HierKVCache
-from repro.core.quantization import (
-    HierQuant,
-    dequant_full,
-    dequant_upper,
-    quantize_kv_block_pair,
-)
+from repro.core.quantization import HierQuant, dequant_full, dequant_upper, quantize_kv_block_pair
 
 
 class PageTable(NamedTuple):
@@ -135,6 +130,7 @@ class PagedKVPool(NamedTuple):
         return self.buf_k.shape[2]
 
 
+# lint: ok(sharding-spec, transient per-step paging plan computed and consumed inside one jitted step)
 class PageStep(NamedTuple):
     """One decode step's paging plan, shared by every layer."""
 
@@ -144,6 +140,7 @@ class PageStep(NamedTuple):
     active: jnp.ndarray     # bool [R]
 
 
+# lint: ok(sharding-spec, transient jit-internal plan value; never placed on a mesh)
 class PagedPlan(NamedTuple):
     """What attention layers need for one paged decode step: the executed
     bookkeeping (``step``) and the post-step table to mask against."""
@@ -312,6 +309,7 @@ class PrefillScratch(NamedTuple):
     v: jnp.ndarray
 
 
+# lint: ok(sharding-spec, transient per-chunk admission plan consumed inside one jitted prefill step)
 class PrefillChunkStep(NamedTuple):
     """One prompt chunk's admission plan, shared by every layer."""
 

@@ -35,6 +35,7 @@ _EPS = 1e-8
 _QMAX4 = 15  # unsigned 4-bit max
 
 
+# lint: ok(sharding-spec, intermediate quantization pair; unpacked into cache planes before any placement)
 class HierQuant(NamedTuple):
     """A hierarchically quantized tensor (both planes nibble-packed)."""
 

@@ -37,7 +37,6 @@ reads back with a **single** transfer per megastep.
 
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple, Optional
 
 import jax

@@ -15,7 +15,7 @@ into fixed [B, S] batches with next-token labels implied.
 
 from __future__ import annotations
 
-from typing import Iterator, Optional
+from typing import Iterator
 
 import jax
 import jax.numpy as jnp

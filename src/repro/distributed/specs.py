@@ -34,11 +34,10 @@ post-projection all-reduce is the only collective, exactly as in fp.
 
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.core import hier_kv_cache as HC
 from repro.core import paged_kv_cache as PC

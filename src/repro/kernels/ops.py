@@ -24,13 +24,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.hier_kv_cache import HierKVCache
 from repro.core.paged_kv_cache import PagedKVPool, PageTable
-from repro.distributed.sharding import (current_mesh, data_parallel_size,
-                                        model_parallel_size)
+from repro.distributed.sharding import current_mesh, data_parallel_size, model_parallel_size
 from repro.kernels.prefill_attention import flash_prefill_attention
-from repro.kernels.quant_attention import (
-    hier_flash_attention,
-    paged_hier_flash_attention,
-)
+from repro.kernels.quant_attention import hier_flash_attention, paged_hier_flash_attention
 
 
 # ---------------------------------------------------------------------------

@@ -8,13 +8,11 @@ head_dim), emitting both nibble-packed INT4 planes plus fp32 scale/zero.
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import interpret_default
 

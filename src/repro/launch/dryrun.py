@@ -84,7 +84,6 @@ def collective_bytes(hlo_text: str) -> dict:
         for c in _COLLECTIVES:
             token = f" {c}("
             if token in line or f" {c}-start(" in line:
-                lhs = line.split("=")[0] if "=" in line else ""
                 rhs_head = line.split(token)[0] if token in line \
                     else line.split(f" {c}-start(")[0]
                 # result shape(s) appear between '=' and the op name

@@ -17,7 +17,6 @@ from __future__ import annotations
 
 import os
 import re
-from typing import Optional
 
 import jax
 import numpy as np

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 from repro.core import hier_kv_cache as HC
 from repro.core import paged_kv_cache as PC
-from repro.core.weight_quant import matmul as quant_matmul, resolve
+from repro.core.weight_quant import matmul as quant_matmul
 from repro.distributed.sharding import constrain
 from repro.models.config import ModelConfig
 

@@ -11,7 +11,7 @@ time stays O(pattern), not O(depth).
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 # sequence-mixer kinds

@@ -13,7 +13,7 @@ the acceptance point (SSM analogue of KV-cache rollback; see DESIGN.md §6).
 from __future__ import annotations
 
 import math
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -99,7 +99,6 @@ def apply_mamba(p: dict, cfg: ModelConfig, x: jnp.ndarray,
     collect=True → also return per-token MambaCache snapshots (decode).
     """
     B, T, d = x.shape
-    din = cfg.ssm_expand * d
     dt_rank = max(1, math.ceil(d / 16))
     if cache is None:
         cache = init_mamba_cache(cfg, B, x.dtype)

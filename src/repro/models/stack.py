@@ -26,7 +26,6 @@ target cache).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
@@ -38,9 +37,19 @@ from repro.distributed.sharding import constrain
 from repro.models import common as L
 from repro.models import mamba as M
 from repro.models import rwkv6 as R
-from repro.models.config import (ATTN_CROSS, ATTN_FULL, ATTN_WINDOW,
-                                 MIX_MAMBA, MIX_RWKV, MLP_DENSE, MLP_MOE,
-                                 MLP_NONE, MLP_RWKV, LayerSpec, ModelConfig)
+from repro.models.config import (
+    ATTN_CROSS,
+    ATTN_FULL,
+    ATTN_WINDOW,
+    MIX_MAMBA,
+    MIX_RWKV,
+    MLP_DENSE,
+    MLP_MOE,
+    MLP_NONE,
+    MLP_RWKV,
+    LayerSpec,
+    ModelConfig,
+)
 from repro.models.moe import apply_moe, init_moe_params
 
 

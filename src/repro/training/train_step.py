@@ -2,13 +2,9 @@
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
-from repro.distributed.sharding import constrain
 from repro.models.stack import StackModel
 from repro.training.optimizer import AdamW
 

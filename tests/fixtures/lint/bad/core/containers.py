@@ -1,0 +1,11 @@
+"""Bad fixture containers: FooState is under-covered, BarState unmentioned."""
+from typing import NamedTuple
+
+
+class FooState(NamedTuple):
+    table: int
+    scale: int
+
+
+class BarState(NamedTuple):
+    packed: int

@@ -1,0 +1,5 @@
+"""Bad fixture spec walker: constructs FooState without its `scale` field."""
+
+
+def foo_spec(t):
+    return FooState(table=t)  # noqa: F821

@@ -1,0 +1,17 @@
+"""Bad fixture: all three pallas sub-checks should fire on this kernel."""
+from jax.experimental import pallas as pl
+
+
+def kern(r, o):
+    o[...] = r[...]
+
+
+def bad_kernel_wrapper(x):
+    S, D = x.shape
+    bq = 33
+    grid = (S // bq,)  # divisibility: no guard that bq divides S
+    big = pl.BlockSpec((4096, 4096), lambda i: (i, 0))  # VMEM: blows the budget
+    spec = pl.BlockSpec((1, D), lambda i: (i, x))  # index_map closes over traced `x`
+    return pl.pallas_call(
+        kern, grid=grid, in_specs=[big, spec], out_specs=spec, out_shape=None
+    )(x)

@@ -1,0 +1,29 @@
+"""Bad fixture: every engine-side rule should fire on this file."""
+import jax
+import numpy as np
+
+
+def step(state, x):
+    return state + x, x
+
+
+def run_traced(x, *, cfgs):
+    if x > 0:  # recompile: python branch on a traced value
+        return x
+    return -x
+
+
+class Engine:
+    def __init__(self):
+        self._step = jax.jit(step, donate_argnums=(0,))
+        self._jf = jax.jit(run_traced, static_argnames=("cfgs",))
+
+    def generate(self, state):
+        for _ in range(4):
+            new_state, y = self._step(state, 1)
+            mid = jax.device_get(state)  # host-sync: readback inside the decode loop
+            total = state.sum()  # donation: `state` read after being donated
+            state = new_state
+        host = np.asarray(state)  # host-sync: converter on a device value
+        bad = self._jf(state, cfgs=[1, 2, 3])  # recompile: unhashable static arg
+        return host, mid, total, bad

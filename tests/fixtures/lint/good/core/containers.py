@@ -1,0 +1,11 @@
+"""Good fixture containers: both covered by the spec walker."""
+from typing import NamedTuple
+
+
+class FooState(NamedTuple):
+    table: int
+    scale: int
+
+
+class BarState(NamedTuple):
+    packed: int

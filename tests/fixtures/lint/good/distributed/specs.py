@@ -1,0 +1,9 @@
+"""Good fixture spec walker: every container constructed with every field."""
+
+
+def foo_spec(t):
+    return FooState(table=t, scale=t)  # noqa: F821
+
+
+def bar_spec(t):
+    return BarState(packed=t)  # noqa: F821

@@ -1,0 +1,25 @@
+"""Good fixture: the same shapes done right — every rule must stay silent."""
+import jax
+import jax.numpy as jnp
+
+
+def step(state, x):
+    return state + x, x
+
+
+def run_traced(x, *, cfgs):
+    return jnp.where(x > 0, x, -x)
+
+
+class Engine:
+    def __init__(self, cfg=None):
+        self.cfg = cfg
+        self._step = jax.jit(step, donate_argnums=(0,))
+        self._jf = jax.jit(run_traced, static_argnames=("cfgs",))
+
+    def generate(self, state):
+        for _ in range(4):
+            state, y = self._step(state, 1)
+        if self.cfg is not None:
+            state = self._jf(state, cfgs=(1, 2, 3))
+        return state

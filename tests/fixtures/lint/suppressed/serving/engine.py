@@ -1,0 +1,11 @@
+"""Suppression fixture: the same bad sites as `bad/`, annotated away."""
+import jax
+import numpy as np
+
+
+class Engine:
+    def generate(self, state):
+        # lint: ok(host-sync, fixture exercising the comment-above form)
+        mid = jax.device_get(state)
+        host = np.asarray(state)  # lint: ok(host-sync, fixture exercising the trailing form)
+        return host, mid

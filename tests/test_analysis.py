@@ -1,0 +1,225 @@
+"""Tests for the repro-lint static analysis suite (`python -m repro.analysis`).
+
+Each rule gets a fixture pair under tests/fixtures/lint/: the rule must
+fire on the `bad/` tree and stay silent on the `good/` one. The suite
+also covers the suppression comment syntax, baseline mechanics (including
+line-number independence of fingerprints), the CLI exit-code contract,
+and a self-check that the real `src/` tree is clean.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import ALL_RULES, analyze_paths
+from repro.analysis import baseline as baseline_mod
+from repro.analysis.common import Project
+from repro.analysis.runner import format_vmem_report, run_checks
+
+ROOT = Path(__file__).resolve().parents[1]
+FIXTURES = ROOT / "tests" / "fixtures" / "lint"
+BAD = FIXTURES / "bad"
+GOOD = FIXTURES / "good"
+SUPPRESSED = FIXTURES / "suppressed"
+
+
+def rules_of(findings):
+    return {f.rule for f in findings}
+
+
+def run_cli(args, cwd):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        cwd=cwd, env=env, capture_output=True, text=True,
+    )
+
+
+# ---------------------------------------------------------------------------
+# fixture pairs: every rule fires on bad/, none fire on good/
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rule,needle", [
+    ("host-sync", "jax.device_get"),
+    ("donation", "read after being donated"),
+    ("sharding-spec", "missing field"),
+    ("pallas", "divisibility"),
+    ("recompile", "branch on traced value"),
+])
+def test_rule_fires_on_bad_fixture(rule, needle):
+    findings = analyze_paths([BAD], root=BAD, rules=[rule])
+    assert findings, f"rule {rule} found nothing in the bad fixture"
+    assert all(f.rule == rule for f in findings)
+    assert any(needle in f.message for f in findings), (
+        f"no {rule} finding mentions {needle!r}: "
+        + "; ".join(f.message for f in findings)
+    )
+
+
+@pytest.mark.parametrize("rule", ALL_RULES)
+def test_rule_silent_on_good_fixture(rule):
+    findings = analyze_paths([GOOD], root=GOOD, rules=[rule])
+    assert findings == [], [f.render() for f in findings]
+
+
+def test_bad_fixture_covers_every_subcheck():
+    messages = [f.message for f in analyze_paths([BAD], root=BAD)]
+    for needle in (
+        "jax.device_get",                 # host-sync: always-sync call
+        "np.asarray",                     # host-sync: converter on device value
+        "read after being donated",       # donation
+        "has no placement rule",          # sharding-spec: uncovered container
+        "missing field",                  # sharding-spec: stale constructor
+        "divisibility guard",             # pallas: grid divisibility
+        "index_map closes over",          # pallas: traced index_map capture
+        "VMEM footprint",                 # pallas: budget overflow
+        "branch on traced value",         # recompile: python branch in jit
+        "unhashable literal",             # recompile: unstable static arg
+    ):
+        assert any(needle in m for m in messages), f"missing sub-check: {needle!r}"
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+
+def test_suppression_comment_forms():
+    # the suppressed tree repeats bad host-sync sites with both the
+    # trailing and the comment-above `# lint: ok(rule, reason)` forms
+    findings = analyze_paths([SUPPRESSED], root=SUPPRESSED, rules=["host-sync"])
+    assert findings == [], [f.render() for f in findings]
+
+
+def test_suppression_is_rule_specific(tmp_path):
+    tree = tmp_path / "serving"
+    tree.mkdir(parents=True)
+    src = (SUPPRESSED / "serving" / "engine.py").read_text()
+    # annotate for the wrong rule: findings must survive
+    tree.joinpath("engine.py").write_text(src.replace("host-sync", "donation"))
+    findings = analyze_paths([tmp_path], root=tmp_path, rules=["host-sync"])
+    assert len(findings) == 2
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+
+
+def test_baseline_roundtrip(tmp_path):
+    project = Project.load([BAD], BAD)
+    findings = run_checks(project, ALL_RULES)
+    assert findings
+    path = tmp_path / "baseline.json"
+    n = baseline_mod.save(path, project, findings)
+    assert n == len(findings)
+    fresh, matched = baseline_mod.subtract(project, findings, baseline_mod.load(path))
+    assert fresh == [] and matched == len(findings)
+
+
+def test_baseline_fingerprints_survive_line_shifts(tmp_path):
+    project = Project.load([BAD], BAD)
+    baseline_path = tmp_path / "baseline.json"
+    baseline_mod.save(baseline_path, project, run_checks(project, ALL_RULES))
+
+    shifted = tmp_path / "shifted"
+    shutil.copytree(BAD, shifted)
+    eng = shifted / "serving" / "engine.py"
+    eng.write_text("# pushed down\n# by two comment lines\n" + eng.read_text())
+
+    project2 = Project.load([shifted], shifted)
+    findings2 = run_checks(project2, ALL_RULES)
+    fresh, matched = baseline_mod.subtract(
+        project2, findings2, baseline_mod.load(baseline_path)
+    )
+    assert fresh == [], [f.render() for f in fresh]
+    assert matched == len(findings2)
+
+
+def test_missing_baseline_is_empty(tmp_path):
+    assert baseline_mod.load(tmp_path / "nope.json") == {}
+
+
+# ---------------------------------------------------------------------------
+# CLI contract
+# ---------------------------------------------------------------------------
+
+
+def test_cli_exit_one_on_findings():
+    res = run_cli(["."], cwd=BAD)
+    assert res.returncode == 1
+    assert "host-sync" in res.stdout and "pallas" in res.stdout
+
+
+def test_cli_exit_zero_on_clean_tree():
+    res = run_cli(["."], cwd=GOOD)
+    assert res.returncode == 0
+    assert "0 finding(s)" in res.stderr
+
+
+def test_cli_json_output():
+    res = run_cli([".", "--json"], cwd=BAD)
+    payload = json.loads(res.stdout)
+    assert payload["checked_files"] == 4
+    assert {f["rule"] for f in payload["findings"]} == set(ALL_RULES)
+    for f in payload["findings"]:
+        assert set(f) == {"rule", "path", "line", "col", "message"}
+
+
+def test_cli_write_baseline_then_clean(tmp_path):
+    bl = tmp_path / "bl.json"
+    res = run_cli([".", "--baseline", str(bl), "--write-baseline"], cwd=BAD)
+    assert res.returncode == 0, res.stderr
+    res = run_cli([".", "--baseline", str(bl)], cwd=BAD)
+    assert res.returncode == 0, res.stdout
+    assert "baselined" in res.stderr
+
+
+def test_cli_rules_subset_and_unknown_rule():
+    res = run_cli([".", "--rules", "donation"], cwd=BAD)
+    assert res.returncode == 1
+    assert "host-sync" not in res.stdout
+    res = run_cli([".", "--rules", "no-such-rule"], cwd=BAD)
+    assert res.returncode == 2
+
+
+def test_cli_vmem_report():
+    res = run_cli([".", "--vmem-report"], cwd=BAD)
+    assert "bad_kernel_wrapper" in res.stdout
+    assert "OVER" in res.stdout
+    res = run_cli([".", "--vmem-report"], cwd=GOOD)
+    assert "good_kernel_wrapper" in res.stdout
+    assert "OVER" not in res.stdout
+
+
+def test_vmem_report_resolves_real_kernels():
+    project = Project.load([ROOT / "src"], ROOT)
+    table = format_vmem_report(project)
+    assert "unresolved" not in table
+    assert "OVER" not in table
+
+
+# ---------------------------------------------------------------------------
+# self-check: the shipped tree is clean
+# ---------------------------------------------------------------------------
+
+
+def test_src_tree_is_clean():
+    res = run_cli(["src"], cwd=ROOT)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "0 finding(s)" in res.stderr
+
+
+def test_committed_baseline_is_empty():
+    # repo policy: fresh sites get an inline `# lint: ok(...)` with a
+    # reason, not a baseline entry; the committed baseline stays empty
+    assert json.loads((ROOT / ".repro-lint-baseline.json").read_text()) == {}

@@ -3,9 +3,16 @@
 
 import pytest
 
-from repro.configs import ARCHS, get_config
-from repro.models.config import (ATTN_CROSS, ATTN_FULL, ATTN_WINDOW,
-                                 MIX_MAMBA, MIX_RWKV, MLP_DENSE, MLP_MOE)
+from repro.configs import get_config
+from repro.models.config import (
+    ATTN_CROSS,
+    ATTN_FULL,
+    ATTN_WINDOW,
+    MIX_MAMBA,
+    MIX_RWKV,
+    MLP_DENSE,
+    MLP_MOE,
+)
 
 # (layers, d_model, heads, kv_heads, d_ff, vocab)
 SPECS = {

@@ -16,9 +16,14 @@ import pytest
 
 from fault_injection import ANY, FaultInjector
 from repro.core.disk_tier import DiskTier, DiskTierError
-from repro.core.host_tier import (HostTier, HostTierError, SlotSnapshot,
-                                  SnapshotCorruptionError, SnapshotMissError,
-                                  _crc)
+from repro.core.host_tier import (
+    HostTier,
+    HostTierError,
+    SlotSnapshot,
+    SnapshotCorruptionError,
+    SnapshotMissError,
+    _crc,
+)
 
 
 def make_snap(req_id: int, *, scale: int = 4, seed: int | None = None,

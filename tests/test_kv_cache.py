@@ -1,9 +1,7 @@
 """Tests for the hierarchical KV cache + double FP buffer lifecycle."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import hier_kv_cache as C
 

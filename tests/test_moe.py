@@ -9,8 +9,7 @@ import pytest
 from repro.configs import get_config
 from repro.distributed.sharding import axis_rules
 from repro.launch.mesh import make_local_mesh
-from repro.models.moe import (_apply_moe_scatter, apply_moe, init_moe_params,
-                              moe_capacity)
+from repro.models.moe import _apply_moe_scatter, apply_moe, init_moe_params, moe_capacity
 
 
 @pytest.fixture(scope="module")

@@ -20,7 +20,6 @@ import sys
 import time
 
 import jax
-import numpy as np
 import pytest
 
 from fault_injection import FaultInjector
@@ -191,7 +190,8 @@ class TestCrashRecovery:
     def crash_then_recover(self, tiny, jdir, fault, **kw):
         """Run to the injected crash, then recover on a fresh engine."""
         eng, prompts = setup(tiny, fault=fault, journal_dir=jdir, **kw)
-        reqs = [eng.submit(p, MAX_NEW) for p in prompts]
+        for p in prompts:
+            eng.submit(p, MAX_NEW)
         with pytest.raises(_Crash):
             eng.run(jax.random.PRNGKey(7))
         del eng                     # the crashed process is gone

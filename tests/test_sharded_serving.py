@@ -22,8 +22,7 @@ from repro.core.weight_quant import Int4Weight, quantize_tree
 from repro.distributed import specs as SP
 from repro.distributed.sharding import axis_rules
 from repro.kernels import ops as kops
-from repro.launch.mesh import (make_host_mesh, make_production_mesh,
-                               resolve_mesh)
+from repro.launch.mesh import make_host_mesh, make_production_mesh, resolve_mesh
 from repro.models.stack import StackModel
 from repro.serving.engine import ContinuousEngine, Engine
 from repro.serving.sampling import sample_token, top_p_filter

@@ -3,7 +3,6 @@
 finiteness. The FULL configs are only exercised via the dry-run."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

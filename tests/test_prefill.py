@@ -17,7 +17,6 @@ import pytest
 
 import repro.serving.engine as engine_mod
 from repro.configs import get_config
-from repro.core import hier_kv_cache as HC
 from repro.core import paged_kv_cache as PC
 from repro.core.quantization import quantize_kv_block_pair
 from repro.kernels import interpret_default
@@ -155,6 +154,72 @@ class TestDispatchHelpers:
 # bucket-padded one-shot prefill (static engine)
 # ---------------------------------------------------------------------------
 
+def assert_cache_leaves_close(got, want, atol=2e-4, rtol=2e-4,
+                              code_frac=0.01):
+    """Leaf-wise cache comparison that is exact where exactness is defined.
+
+    Float leaves (fp buffers, scales, zeros) compare with ``allclose``.
+    uint8 leaves are packed INT4 code planes: the fp inputs feeding the
+    quantizer are only reproducible up to reassociation (different prefill
+    shapes tile the projection matmuls differently), so a value sitting on
+    a rounding threshold may legitimately land one code apart. Codes must
+    agree to ±1 nibble at a small fraction of positions; anything larger
+    (or widespread) is real corruption and still fails.
+    """
+    flat_got = jax.tree_util.tree_flatten_with_path(got)[0]
+    flat_want = jax.tree_util.tree_flatten_with_path(want)[0]
+    assert len(flat_got) == len(flat_want)
+    for (path, a), (_, b) in zip(flat_got, flat_want):
+        a, b = np.asarray(a), np.asarray(b)
+        where = jax.tree_util.keystr(path)
+        assert a.shape == b.shape, where
+        if a.dtype == np.uint8:
+            for plane_a, plane_b in ((a & 15, b & 15), (a >> 4, b >> 4)):
+                diff = np.abs(plane_a.astype(np.int16) - plane_b.astype(np.int16))
+                np.testing.assert_array_less(
+                    diff.max(initial=0), 2,
+                    err_msg=f"{where}: codes differ by more than one "
+                            "quantization step")
+                frac = float((diff > 0).mean())
+                assert frac <= code_frac, (
+                    f"{where}: {frac:.2%} of codes differ (threshold "
+                    f"flips should be rare, got > {code_frac:.0%})")
+        else:
+            np.testing.assert_allclose(a.astype(np.float32),
+                                       b.astype(np.float32),
+                                       atol=atol, rtol=rtol, err_msg=where)
+
+
+class TestCacheComparison:
+    """The ±1-code comparison still catches real cache corruption."""
+
+    def test_rejects_multi_step_corruption(self):
+        base = np.arange(64, dtype=np.uint8).reshape(8, 8)
+        bad = base.copy()
+        bad[3, 3] += 2          # two quantization steps in the low nibble
+        with pytest.raises(AssertionError):
+            assert_cache_leaves_close([bad], [base])
+
+    def test_rejects_widespread_flips(self):
+        base = np.zeros((8, 8), dtype=np.uint8)
+        bad = base + 1          # every low nibble off by one code
+        with pytest.raises(AssertionError):
+            assert_cache_leaves_close([bad], [base])
+
+    def test_accepts_rare_threshold_flip(self):
+        base = np.arange(1024, dtype=np.uint8).reshape(32, 32) & 0x77
+        ok = base.copy()
+        ok[3, 3] += 1           # one rounding-threshold flip
+        assert_cache_leaves_close([ok], [base])
+
+    def test_float_leaves_stay_strict(self):
+        base = np.ones((4, 4), dtype=np.float32)
+        bad = base.copy()
+        bad[0, 0] += 1e-2
+        with pytest.raises(AssertionError):
+            assert_cache_leaves_close([bad], [base])
+
+
 class TestPaddedStaticPrefill:
     @pytest.mark.parametrize("policy", ["quantspec", "fp"])
     @pytest.mark.parametrize("L", [7, 37, 97])
@@ -170,11 +235,11 @@ class TestPaddedStaticPrefill:
                                    ctx_kw={"prefill_len": jnp.asarray(L)})
         np.testing.assert_allclose(np.asarray(lo_p), np.asarray(lo_u),
                                    atol=2e-5, rtol=2e-5)
-        # caches agree everywhere they are defined (valid prefix masks)
-        for a, b in zip(jax.tree.leaves(st_u), jax.tree.leaves(st_p)):
-            np.testing.assert_allclose(np.asarray(a, np.float32),
-                                       np.asarray(b, np.float32),
-                                       atol=2e-4, rtol=2e-4)
+        # caches agree everywhere they are defined (valid prefix masks);
+        # packed INT4 planes compare code-wise: the padded prefill tiles
+        # its matmuls differently, so threshold values may round one code
+        # apart even though both inputs are correct
+        assert_cache_leaves_close(st_p, st_u)
 
     def test_engine_tokens_identical_to_legacy(self, tiny):
         cfg, model, params = tiny

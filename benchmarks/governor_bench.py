@@ -1,0 +1,397 @@
+"""Precision-governor benchmark: the guaranteed AR floor under acceptance
+collapse.
+
+    PYTHONPATH=src python benchmarks/governor_bench.py [--smoke]
+        [--json BENCH_governor.json]
+
+Four waves over identical prompts (greedy, so outputs are token-identical
+everywhere — speculative decoding is exact and the ladder trades
+throughput, never content).  Requests == slots and stall preemption is
+disabled, so the waves measure decode, not scheduler churn:
+
+* **ar_baseline** — ``gamma=0``: the pure autoregressive engine (the
+  paper's non-speculative serving baseline, one dispatch + readback per
+  token).  Its per-request decode rate is the floor the governor must
+  guarantee.
+* **no_governor** — ``gamma`` speculation with slot 0's drafts
+  deterministically corrupted (`FaultInjector.mangle_draft`, acceptance
+  ~0) and no governor: the collapsed slot burns a full-γ draft+verify
+  round (~3-4x an AR step) per ~1 token, forever.
+* **no_governor_collapse** — both slots' drafts corrupted, no governor:
+  the whole batch pays full-γ rounds for ~1 token each.  The ungoverned
+  worst case the ladder exists to escape.
+* **governor_mixed** — the mixed wave with the acceptance-aware
+  governor: the collapsed slot walks the INT4→INT8→AR ladder down to
+  verify-only decode while the co-batched healthy slot keeps INT4
+  speculation.
+* **governor_collapse** — both slots corrupted, governor on: the whole
+  batch walks to the AR floor, so the megastep's fused AR path (a
+  verify-only 1-token target step per round, no draft work) actually
+  engages.
+
+On top of the waves, a **steady-state floor microbenchmark** isolates
+the AR-floor guarantee from the one-time ladder-walk transient: a fully
+collapsed governor engine is driven to the floor, then timed *step-by-
+step interleaved* with an identically driven ``gamma=0`` engine, so
+machine-load drift hits both engines alike.  The floor's per-round work
+is the
+same compiled ``paged_ar_step`` the AR engine runs — the waves assert
+token identity — plus the megastep's branch plumbing (`lax.cond` over
+the carried decode state) and a full-γ probe round every
+``probe_every + 1`` rounds, which together cost ~13% of a round on the
+XLA CPU backend (they amortize into memory-bound attention on real
+accelerators).  The interleaved ratio measures a stable ~0.87 on CPU
+and is gated at ≥0.8 as a regression bound — against the 2.5-4x
+collapse the ladder escapes, the floor is parity within backend
+overhead, never a cliff.
+
+Every ladder transition is masking inside the one compiled megastep —
+both governor waves assert exactly one compile.
+
+``--smoke`` (CI) asserts on the written ``BENCH_governor.json``:
+
+* steady-state floor ≥ 0.8x the AR baseline measured the same way (the
+  AR-floor guarantee, net of branch-plumbing overhead and timing
+  jitter);
+* under total collapse the governed wave beats the ungoverned one by
+  ≥1.7x end-to-end *including* its ladder walk, and the governed mixed
+  wave's collapsed slot beats its ungoverned twin by ≥1.2x (the
+  robustness win — smaller in the mixed wave because a co-batched
+  healthy slot keeps every round on the spec cadence until it finishes);
+* the co-batched healthy slot retains ≥80% of its no-governor
+  throughput, measured steady-state in the same interleaved style
+  (~0.86 typical: the governor's per-round machinery — `lax.cond`
+  branch plumbing on the XLA CPU backend — costs ~13% of a spec round;
+  it amortizes into memory-bound attention on real accelerators);
+* every collapsed request walked the full ladder, zero recompiles, and
+  all waves are token-identical to the AR baseline.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import numpy as np
+
+sys.path.insert(0, ".")   # repo root (benchmarks.common) when run as a script
+sys.path.insert(0, "src")
+sys.path.insert(0, "tests")   # the deterministic fault harness lives here
+
+from benchmarks.common import bench_config, corpus  # noqa: E402
+from fault_injection import FaultInjector  # noqa: E402
+from repro.core.spec_decode import RUNG_AR  # noqa: E402
+from repro.models.stack import StackModel  # noqa: E402
+from repro.serving.engine import ContinuousEngine  # noqa: E402
+
+#: governor thresholds tuned around the untrained tiny model's natural
+#: acceptance (~0.3): corrupted drafts (~0.0) fall through the floor
+#: every window, while a healthy slot's windowed acceptance — a binomial
+#: with p~0.3 over 16 proposals — dips below the 0.1 floor only ~3% of
+#: evaluations, so spurious demotion churn is rare.  (A tighter window=8
+#: with floor=0.15 demoted healthy slots every ~15 rounds and randomly
+#: walked them all the way onto the AR floor.)
+GOV_KW = dict(governor=True, accept_window=16, accept_floor=0.1,
+              accept_ceiling=0.2, probe_every=32, gamma_lo=2)
+
+SLOTS = 2
+
+
+def _rate(req):
+    """Decode tok/s for one finished request (prefill excluded)."""
+    return len(req.tokens) / max(req.finish_t - req.admit_t - req.prefill_s,
+                                 1e-9)
+
+
+def _engine(model, params, max_seq, *, gamma, fault=None, **kw):
+    """One benchmark engine: slots == wave size and stall preemption off,
+    so nothing is queued, preempted, or resumed mid-wave."""
+    return ContinuousEngine(model, params, gamma=gamma, greedy=True,
+                            max_slots=SLOTS, max_seq=max_seq,
+                            rounds_per_step=4 if gamma > 0 else 0,
+                            preempt_patience=10**9, fault=fault, **kw)
+
+
+def _warm(eng, prompts):
+    """Warm the compile caches (prefill buckets + megastep / AR step) on a
+    throwaway wave so timed runs measure decode, not XLA."""
+    for p in prompts:
+        eng.submit(p, 8)
+    eng.run(jax.random.PRNGKey(11))
+
+
+def _run(model, params, prompts, max_new, max_seq, *, gamma, collapsed,
+         **kw):
+    fault = FaultInjector() if gamma > 0 and collapsed else None
+    eng = _engine(model, params, max_seq, gamma=gamma, fault=fault, **kw)
+    _warm(eng, prompts)
+    reqs = [eng.submit(p, max_new) for p in prompts]
+    if fault is not None:
+        for i, r in enumerate(reqs):
+            if i in collapsed:
+                fault.mangle_draft(req_id=r.req_id, mode=1)
+    t0 = time.perf_counter()
+    eng.run(jax.random.PRNGKey(7))
+    wall = time.perf_counter() - t0
+    assert all(r.status == "ok" for r in reqs), \
+        [(r.req_id, r.status, r.reason) for r in reqs]
+    assert int(eng.table.free_top) == eng.pool_blocks, "leaked pool blocks"
+    groups = {"collapsed": [r for i, r in enumerate(reqs) if i in collapsed],
+              "healthy": [r for i, r in enumerate(reqs)
+                          if i not in collapsed]}
+    row = {
+        "wall_s": round(wall, 4),
+        "tok_s": round(sum(len(r.tokens) for r in reqs) / max(wall, 1e-9),
+                       2),
+        "req_tok_s": round(float(np.mean([_rate(r) for r in reqs])), 2),
+    }
+    for name, rs in groups.items():
+        if not rs:
+            continue
+        row[f"{name}_tok_s"] = round(
+            float(np.mean([_rate(r) for r in rs])), 2)
+        row[f"{name}_acceptance"] = round(
+            float(np.mean([r.accepted / max(r.proposed, 1) for r in rs])), 3)
+    if kw.get("governor"):
+        row["ladder"] = {
+            str(i): {"demotions": r.demotions,
+                     "promotions": r.promotions,
+                     "ar_rounds": r.ar_rounds,
+                     "int8_rounds": r.int8_rounds,
+                     "final_rung": r.rung}
+            for i, r in enumerate(reqs)}
+        row["megastep_compiles"] = eng._mega._cache_size()
+    return row, {r.req_id: list(r.tokens) for r in reqs}
+
+
+def _floor_microbench(model, params, prompts, max_seq, gamma, *,
+                      segments=4, gov_steps=8):
+    """Steady-state AR-floor throughput vs the dedicated AR engine.
+
+    Both engines decode the same prompts; the governor engine (every
+    draft corrupted) is first driven onto the AR floor, then the two are
+    timed interleaved — one governor megastep (``rps`` fused rounds)
+    followed by ``rps`` AR steps, repeatedly — accumulating each
+    engine's own wall time, so machine-load drift hits both engines
+    alike.  Finishes both engines and asserts their outputs are
+    token-identical.
+    """
+    rps = 4
+    # enough budget for the ladder walk + every timed segment
+    max_new = 32 + segments * gov_steps * rps + 32
+    fault = FaultInjector()
+    gov = _engine(model, params, max_seq, gamma=gamma, fault=fault,
+                  **GOV_KW)
+    ar = _engine(model, params, max_seq, gamma=0)
+    _warm(gov, prompts)
+    _warm(ar, prompts)
+    greqs = [gov.submit(p, max_new) for p in prompts]
+    areqs = [ar.submit(p, max_new) for p in prompts]
+    fault.mangle_draft(mode=1)
+    kg = jax.random.PRNGKey(7)
+    ka = jax.random.PRNGKey(7)
+    toks = lambda reqs: sum(len(r.tokens) for r in reqs)
+    walk = 0
+    while not all(r.rung == RUNG_AR for r in greqs) and walk < 40:
+        kg = gov.step(kg)
+        walk += 1
+    assert all(r.rung == RUNG_AR for r in greqs), \
+        "collapsed slots never reached the AR floor"
+    for _ in range(4):   # settle the AR engine past admission
+        ka = ar.step(ka)
+    tg = ta = 0.0
+    g0, a0 = toks(greqs), toks(areqs)
+    for _ in range(segments * gov_steps):
+        t0 = time.perf_counter()
+        kg = gov.step(kg)
+        tg += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for _ in range(rps):   # match tokens: rps AR steps per megastep
+            ka = ar.step(ka)
+        ta += time.perf_counter() - t0
+    floor_rate = (toks(greqs) - g0) / SLOTS / tg
+    ar_rate = (toks(areqs) - a0) / SLOTS / ta
+    gov.run(kg)
+    ar.run(ka)
+    assert [list(r.tokens) for r in greqs] == \
+        [list(r.tokens) for r in areqs], \
+        "floor microbench outputs diverged from the AR engine"
+    return {
+        "floor_tok_s": round(float(floor_rate), 2),
+        "ar_tok_s": round(float(ar_rate), 2),
+        "ratio": round(float(floor_rate / ar_rate), 3),
+        "walk_steps": walk,
+    }
+
+
+def _retention_microbench(model, params, prompts, max_seq, gamma, *,
+                          segments=4, steps=5):
+    """Steady-state healthy-slot retention: a mixed batch (slot 0
+    collapsed, slot 1 healthy) under the governor vs the same batch
+    ungoverned, timed step-by-step interleaved once the governed slot
+    sits on the AR floor, accumulating each engine's own wall time —
+    the interleaving cancels the machine-load drift that whole-wave
+    comparisons minutes apart pick up.  Ratio of the healthy slot's
+    decode rates.  Finishes both engines and asserts token identity."""
+    max_new = 320   # the healthy slot consumes ~2 tokens per round
+    f_gov = FaultInjector()
+    f_ref = FaultInjector()
+    gov = _engine(model, params, max_seq, gamma=gamma, fault=f_gov,
+                  **GOV_KW)
+    ref = _engine(model, params, max_seq, gamma=gamma, fault=f_ref)
+    _warm(gov, prompts)
+    _warm(ref, prompts)
+    greqs = [gov.submit(p, max_new) for p in prompts]
+    rreqs = [ref.submit(p, max_new) for p in prompts]
+    f_gov.mangle_draft(req_id=greqs[0].req_id, mode=1)
+    f_ref.mangle_draft(req_id=rreqs[0].req_id, mode=1)
+    kg = jax.random.PRNGKey(7)
+    kr = jax.random.PRNGKey(7)
+    walk = 0
+    while greqs[0].rung != RUNG_AR and walk < 40:
+        kg = gov.step(kg)
+        walk += 1
+    assert greqs[0].rung == RUNG_AR, \
+        "collapsed slot never reached the AR floor"
+    for _ in range(4):   # settle the reference engine past admission
+        kr = ref.step(kr)
+    tg = tr = 0.0
+    g0, r0 = len(greqs[1].tokens), len(rreqs[1].tokens)
+    for _ in range(segments * steps):
+        t0 = time.perf_counter()
+        kg = gov.step(kg)
+        tg += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        kr = ref.step(kr)
+        tr += time.perf_counter() - t0
+    gov_rate = (len(greqs[1].tokens) - g0) / tg
+    ref_rate = (len(rreqs[1].tokens) - r0) / tr
+    gov.run(kg)
+    ref.run(kr)
+    assert [list(r.tokens) for r in greqs] == \
+        [list(r.tokens) for r in rreqs], \
+        "retention microbench outputs diverged between engines"
+    return {
+        "governed_tok_s": round(float(gov_rate), 2),
+        "ungoverned_tok_s": round(float(ref_rate), 2),
+        "ratio": round(float(gov_rate / ref_rate), 3),
+        "walk_steps": walk,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload for CI; asserts the AR floor and "
+                         "healthy-slot throughput retention")
+    ap.add_argument("--json", default="BENCH_governor.json")
+    ap.add_argument("--max-new", type=int, default=None)
+    ap.add_argument("--gamma", type=int, default=3)
+    args = ap.parse_args()
+
+    cfg = bench_config()
+    model = StackModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))  # scheduling cost, not quality
+    G = cfg.group_size
+    data = corpus()
+    key = jax.random.PRNGKey(5)
+    max_new = args.max_new or (192 if args.smoke else 256)
+    lens = [G + 5 + 3 * i for i in range(SLOTS)]
+    prompts = [np.asarray(data.sample(jax.random.fold_in(key, i), 1, s)[0])
+               for i, s in enumerate(lens)]
+    max_seq = max(lens) + max(max_new, 320) + 2 * G + 8
+    mixed = frozenset({0})                      # slot 0: mangled drafts
+    everyone = frozenset(range(SLOTS))
+
+    print(f"{SLOTS} requests (slot 0 draft-collapsed in the mixed waves), "
+          f"{max_new} new tokens each, gamma={args.gamma}")
+    rows = {}
+    toks = {}
+    specs = {
+        "ar_baseline": dict(gamma=0, collapsed=mixed),
+        "no_governor": dict(gamma=args.gamma, collapsed=mixed),
+        "no_governor_collapse": dict(gamma=args.gamma, collapsed=everyone),
+        "governor_mixed": dict(gamma=args.gamma, collapsed=mixed, **GOV_KW),
+        "governor_collapse": dict(gamma=args.gamma, collapsed=everyone,
+                                  **GOV_KW),
+    }
+    for name, kw in specs.items():
+        rows[name], toks[name] = _run(model, params, prompts, max_new,
+                                      max_seq, **kw)
+        parts = "".join(
+            f"  {g} {rows[name][f'{g}_tok_s']:>7.2f} tok/s"
+            for g in ("collapsed", "healthy")
+            if f"{g}_tok_s" in rows[name])
+        print(f"  {name:<18} {rows[name]['wall_s']:>7.2f}s{parts}")
+
+    for name in specs:
+        assert toks[name] == toks["ar_baseline"], \
+            f"{name} wave changed greedy outputs"
+
+    floor = _floor_microbench(model, params, prompts, max_seq, args.gamma)
+    print(f"  steady-state floor {floor['floor_tok_s']:.2f} tok/s vs "
+          f"AR {floor['ar_tok_s']:.2f} tok/s "
+          f"(ratio {floor['ratio']:.3f}, walk {floor['walk_steps']} steps)")
+    retention = _retention_microbench(model, params, prompts, max_seq,
+                                      args.gamma)
+    print(f"  steady-state healthy retention "
+          f"{retention['governed_tok_s']:.2f} vs "
+          f"{retention['ungoverned_tok_s']:.2f} tok/s "
+          f"(ratio {retention['ratio']:.3f})")
+
+    out = {
+        "config": {"requests": SLOTS, "mixed_collapsed": sorted(mixed),
+                   "max_new": max_new, "gamma": args.gamma,
+                   "group": G, "governor": GOV_KW,
+                   "smoke": bool(args.smoke),
+                   "backend": jax.default_backend()},
+        "token_identical": True,
+        "floor_steady_state": floor,
+        "healthy_retention": retention,
+        **rows,
+    }
+    with open(args.json, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.json}")
+
+    for name, ids in (("governor_mixed", mixed),
+                      ("governor_collapse", everyone)):
+        gov = rows[name]
+        walked = [v for k, v in gov["ladder"].items() if int(k) in ids]
+        assert all(w["ar_rounds"] > 0 and w["demotions"] >= 3
+                   for w in walked), \
+            f"a collapsed request never reached the AR floor in {name}"
+        assert gov["megastep_compiles"] == 1, \
+            f"ladder transitions recompiled the megastep in {name}"
+    if args.smoke:
+        assert floor["ratio"] >= 0.8, (
+            "AR floor violated: steady-state floor decode "
+            f"({floor['floor_tok_s']} tok/s per slot) fell below 0.8x the "
+            f"AR baseline ({floor['ar_tok_s']} tok/s) measured in "
+            "paired alternating segments")
+        won = rows["governor_collapse"]["collapsed_tok_s"]
+        lost = rows["no_governor_collapse"]["collapsed_tok_s"]
+        assert won >= 1.7 * lost, (
+            "governor did not rescue the collapsed wave: "
+            f"{won} vs {lost} tok/s ungoverned")
+        won_m = rows["governor_mixed"]["collapsed_tok_s"]
+        lost_m = rows["no_governor"]["collapsed_tok_s"]
+        assert won_m >= 1.2 * lost_m, (
+            "governor did not rescue the co-batched collapsed slot: "
+            f"{won_m} vs {lost_m} tok/s ungoverned")
+        assert retention["ratio"] >= 0.8, (
+            "healthy slot lost speculation throughput under the governor: "
+            f"steady-state retention {retention['ratio']} < 0.8 "
+            f"({retention['governed_tok_s']} vs "
+            f"{retention['ungoverned_tok_s']} tok/s)")
+        print("smoke assertions passed: steady-state floor ratio "
+              f"{floor['ratio']} >= 0.8; collapsed wave {won} tok/s >= "
+              f"1.7x ungoverned {lost}; healthy retention "
+              f"{retention['ratio']} >= 0.8")
+
+
+if __name__ == "__main__":
+    main()

@@ -41,8 +41,15 @@ def verify(draft_tokens: jnp.ndarray,
            draft_probs: jnp.ndarray,
            target_probs: jnp.ndarray,
            key: jax.Array,
-           greedy: bool = False) -> VerifyResult:
-    """draft_tokens [B, γ]; draft_probs [B, γ, V]; target_probs [B, γ+1, V]."""
+           greedy: bool = False,
+           gamma_eff=None) -> VerifyResult:
+    """draft_tokens [B, γ]; draft_probs [B, γ, V]; target_probs [B, γ+1, V].
+
+    ``gamma_eff`` (static int, ≤ γ) force-rejects draft positions past it —
+    the precision governor's masked-γ rung.  A forced rejection samples its
+    correction from the *target* distribution (the draft proposed nothing
+    there, so q ≡ 0 and the residual is p itself), keeping the scheme exact
+    in both greedy and sampled modes."""
     B, gamma = draft_tokens.shape
     key_u, key_res, key_bonus = jax.random.split(key, 3)
 
@@ -54,6 +61,8 @@ def verify(draft_tokens: jnp.ndarray,
     else:
         u = jax.random.uniform(key_u, (B, gamma))
         accept = u * q_draft_tok <= p_draft_tok
+    if gamma_eff is not None and gamma_eff < gamma:
+        accept = accept & (jnp.arange(gamma)[None, :] < gamma_eff)
 
     # prefix-accepted length per sequence, then lockstep min
     prefix = jnp.cumprod(accept.astype(jnp.int32), axis=-1)
@@ -69,6 +78,10 @@ def verify(draft_tokens: jnp.ndarray,
         q_at_n = jnp.take_along_axis(
             jnp.pad(draft_probs, ((0, 0), (0, 1), (0, 0))),
             jnp.full((B, 1, 1), 0, jnp.int32) + n, axis=1)[:, 0]
+        if gamma_eff is not None and gamma_eff < gamma:
+            # forced rejection: the draft never proposed position n, so the
+            # correction must come from p directly, not the residual
+            q_at_n = jnp.where(n >= gamma_eff, 0.0, q_at_n)
         residual = jnp.maximum(p_next - q_at_n, 0.0)
         is_bonus = (n == gamma)
         dist = jnp.where(is_bonus, p_next, residual)
@@ -87,7 +100,8 @@ def verify_per_seq(draft_tokens: jnp.ndarray,
                    draft_probs: jnp.ndarray,
                    target_probs: jnp.ndarray,
                    key: jax.Array,
-                   greedy: bool = False) -> VerifyResult:
+                   greedy: bool = False,
+                   gamma_eff=None) -> VerifyResult:
     """Per-sequence verification — no lockstep minimum.
 
     Same accept/reject math as :func:`verify`, but each sequence keeps its
@@ -95,7 +109,13 @@ def verify_per_seq(draft_tokens: jnp.ndarray,
     Used by the continuous-batching engine, where requests progress
     raggedly; for any single sequence the result is identical to a
     batch-1 :func:`verify`.
-    """
+
+    ``gamma_eff`` (i32 ``[B]``, values in [0, γ]) is the precision
+    governor's per-slot effective γ: draft positions ≥ ``gamma_eff[b]``
+    are force-rejected (their cache writes roll back as if the target had
+    disagreed), and the forced correction samples from the target
+    distribution itself — with ``gamma_eff[b] = 0`` the slot degenerates
+    to exact verify-only AR decoding of one token per round."""
     B, gamma = draft_tokens.shape
     key_u, key_res = jax.random.split(key)
 
@@ -107,6 +127,9 @@ def verify_per_seq(draft_tokens: jnp.ndarray,
     else:
         u = jax.random.uniform(key_u, (B, gamma))
         accept = u * q_draft_tok <= p_draft_tok
+    if gamma_eff is not None:
+        accept = accept & (jnp.arange(gamma)[None, :]
+                           < jnp.asarray(gamma_eff, jnp.int32)[:, None])
 
     prefix = jnp.cumprod(accept.astype(jnp.int32), axis=-1)
     n_b = jnp.sum(prefix, axis=-1).astype(jnp.int32)          # [B]
@@ -121,6 +144,11 @@ def verify_per_seq(draft_tokens: jnp.ndarray,
         q_at_n = jnp.take_along_axis(
             jnp.pad(draft_probs, ((0, 0), (0, 1), (0, 0))),
             n_b[:, None, None], axis=1)[:, 0]
+        if gamma_eff is not None:
+            # forced rejections sample the correction from p, not the
+            # residual — the draft proposed nothing at a masked position
+            forced = n_b >= jnp.asarray(gamma_eff, jnp.int32)
+            q_at_n = jnp.where(forced[:, None], 0.0, q_at_n)
         residual = jnp.maximum(p_next - q_at_n, 0.0)
         is_bonus = (n_b == gamma)[:, None]
         dist = jnp.where(is_bonus, p_next, residual)

@@ -60,7 +60,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.hier_kv_cache import HierKVCache
-from repro.core.quantization import HierQuant, dequant_full, dequant_upper, quantize_kv_block_pair
+from repro.core.quantization import (HierQuant, dequant_full, dequant_slots,
+                                     dequant_upper, quantize_kv_block_pair)
 
 
 class PageTable(NamedTuple):
@@ -682,14 +683,38 @@ def gather_quant(pool: PagedKVPool, table: PageTable) -> Tuple[HierQuant,
 
 
 def materialize_slots(pool: PagedKVPool, table: PageTable, mode: str,
-                      dtype=jnp.float32):
+                      dtype=jnp.float32, draft_bits=None):
     """Full logical K/V ``[R, NBmax*G + 2G, H, D]`` + validity mask — the
-    oracle used by tests and the flat jnp attention path."""
+    oracle used by tests and the flat jnp attention path.
+
+    ``draft_bits`` (bool ``[R]``, draft mode only) per-slot escalates the
+    dequantization to the INT8 both-plane reconstruction — the flat-path
+    mirror of the Pallas kernel's governor lane flag."""
     G = pool.group
-    kq, vq = gather_quant(pool, table)
-    deq = dequant_upper if mode == "draft" else dequant_full
-    k = deq(kq, dtype)
-    v = deq(vq, dtype)
+    if mode == "draft" and draft_bits is not None:
+        bits = jnp.asarray(draft_bits, bool)
+
+        # Escalation is the exception: while every slot is healthy the
+        # governor's bits are all-zero, and dequant_slots with bits off is
+        # bit-identical to dequant_upper — so branch at runtime and let the
+        # common case skip the lower-plane gather + unpack entirely.  The
+        # gathers live inside the branches so XLA can dead-code the lower
+        # plane out of the cheap one.
+        def _esc(_):
+            kq, vq = gather_quant(pool, table)
+            return (dequant_slots(kq, bits, dtype),
+                    dequant_slots(vq, bits, dtype))
+
+        def _flat(_):
+            kq, vq = gather_quant(pool, table)
+            return dequant_upper(kq, dtype), dequant_upper(vq, dtype)
+
+        k, v = jax.lax.cond(jnp.any(bits), _esc, _flat, None)
+    else:
+        kq, vq = gather_quant(pool, table)
+        deq = dequant_upper if mode == "draft" else dequant_full
+        k = deq(kq, dtype)
+        v = deq(vq, dtype)
     R, NB, G_, H, D = k.shape
     k = k.reshape(R, NB * G_, H, D)
     v = v.reshape(R, NB * G_, H, D)

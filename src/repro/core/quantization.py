@@ -120,6 +120,27 @@ def dequant_full(q: HierQuant, dtype=jnp.float32) -> jnp.ndarray:
     return (q8 * (q.scale / 16.0) + q.zero).astype(dtype)
 
 
+def dequant_slots(q: HierQuant, bits: jnp.ndarray,
+                  dtype=jnp.float32) -> jnp.ndarray:
+    """Per-slot hierarchical dequantization (leading axis = slot): rows
+    with ``bits`` set reconstruct INT8 from both planes, the rest read
+    the 4-bit plane only — the precision governor's per-slot draft-KV
+    escalation on the flat/XLA path.
+
+    One shared reconstruction with the lower *residual* zeroed for the
+    off rows, not two dequant passes selected after the fact:
+    ``(16·q_u)·(s/16) + z`` is bit-identical in fp32 to ``q_u·s + z``
+    (``s/16`` is an exact power-of-two rescale and the product rounds
+    once either way), so the off rows match :func:`dequant_upper`
+    exactly and escalation costs a select on int planes, not a second
+    dequant."""
+    q_u = unpack_nibbles(q.upper).astype(jnp.float32)
+    q_l = unpack_nibbles(q.lower).astype(jnp.float32) - 8.0
+    sel = jnp.asarray(bits, bool).reshape((-1,) + (1,) * (q_u.ndim - 1))
+    q8 = 16.0 * q_u + jnp.where(sel, q_l, 0.0)
+    return (q8 * (q.scale / 16.0) + q.zero).astype(dtype)
+
+
 # ---------------------------------------------------------------------------
 # KV-block quantizers (the shapes the cache uses)
 # ---------------------------------------------------------------------------

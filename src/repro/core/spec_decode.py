@@ -46,6 +46,87 @@ from repro.core import acceptance
 from repro.serving.sampling import maybe_top_p, sample_token
 from repro.serving.scheduler import SlotState
 
+#: degradation-ladder rungs walked by the precision governor
+RUNG_INT4 = 0        # full-γ speculation, INT4 (upper-nibble) draft KV
+RUNG_INT4_LOW = 1    # reduced-γ speculation, INT4 draft KV
+RUNG_INT8 = 2        # full-γ speculation, INT8 (both-plane) draft KV
+RUNG_AR = 3          # verify-only AR floor (γ_eff = 0 except probe rounds)
+NUM_RUNGS = 4
+
+
+class GovernorConfig(NamedTuple):
+    """Static thresholds for the per-slot acceptance-aware precision
+    governor (ISSUE 10).  All fields are Python scalars baked into the
+    megastep's jit hash — ladder transitions themselves are pure masking
+    on device, so no threshold change or rung walk ever recompiles.
+
+    A slot demotes one rung when its rolling-window acceptance rate drops
+    below ``floor`` and promotes one rung when it recovers past
+    ``ceiling`` (``floor < ceiling`` gives the hysteresis band).  The
+    window evaluates once ``window`` tokens have been proposed; on a
+    transition it resets, otherwise it halves (old evidence decays).  On
+    the AR floor, every ``probe_every`` rounds the slot runs one full-γ
+    INT8 probe round; strong acceptance in the probe re-escalates to
+    :data:`RUNG_INT8`, anything else stays on the floor."""
+
+    window: int = 32       # proposed tokens per window evaluation
+    floor: float = 0.5     # demote below this windowed acceptance rate
+    ceiling: float = 0.8   # promote at/above this rate (hysteresis band)
+    probe_every: int = 8   # AR-floor probe cadence, in megastep rounds
+    gamma_lo: int = 0      # rung-1 effective γ; 0 → max(1, γ // 2)
+
+
+def governor_plan(gov: GovernorConfig, gamma: int, slots: SlotState):
+    """Per-round ladder decode: ``(gamma_eff [R], draft_bits [R], probing
+    [R])`` from the carried slot state.  ``gamma_eff`` is each slot's
+    effective speculation depth this round (0 on the AR floor), and
+    ``draft_bits`` flags slots whose draft KV read escalates to INT8
+    (rung 2, and probe rounds — a probe should test the *best* draft the
+    ladder can offer before concluding acceptance recovered)."""
+    probing = (slots.rung == RUNG_AR) & (slots.probe <= 0)
+    g_lo = gov.gamma_lo if gov.gamma_lo > 0 else max(1, gamma // 2)
+    gamma_eff = jnp.select(
+        [slots.rung == RUNG_INT4_LOW, slots.rung == RUNG_AR],
+        [jnp.full_like(slots.rung, min(g_lo, gamma)),
+         jnp.where(probing, gamma, 0)],
+        gamma).astype(jnp.int32)
+    draft_bits = (slots.rung == RUNG_INT8) | probing
+    return gamma_eff, draft_bits, probing
+
+
+def governor_update(gov: GovernorConfig, slots: SlotState, live, prop, acc,
+                    probing) -> SlotState:
+    """Fold one round's per-slot (proposed, accepted) into the rolling
+    window and walk the ladder.  Pure element-wise masking — safe inside
+    the megastep scan body on any rung mix."""
+    rung, wp, wa = slots.rung, slots.win_prop, slots.win_acc
+    upd = live & ~probing & (prop > 0)
+    wp = jnp.where(upd, wp + prop, wp)
+    wa = jnp.where(upd, wa + acc, wa)
+    evaluate = upd & (wp >= gov.window)
+    fwp = wp.astype(jnp.float32)
+    fwa = wa.astype(jnp.float32)
+    demote = evaluate & (fwa < gov.floor * fwp) & (rung < RUNG_AR)
+    promote = evaluate & (fwa >= gov.ceiling * fwp) & (rung > RUNG_INT4)
+    new_rung = rung + demote.astype(jnp.int32) - promote.astype(jnp.int32)
+    # probe outcome: a floor slot that just ran its full-γ probe round
+    # re-escalates to INT8 on strong single-round acceptance, else stays
+    probed = probing & live
+    probe_ok = probed & (acc.astype(jnp.float32) >= gov.ceiling
+                         * jnp.maximum(prop, 1).astype(jnp.float32))
+    new_rung = jnp.where(probed,
+                         jnp.where(probe_ok, RUNG_INT8, RUNG_AR), new_rung)
+    moved = (new_rung != rung) | probed
+    wp = jnp.where(moved, 0, jnp.where(evaluate, wp // 2, wp))
+    wa = jnp.where(moved, 0, jnp.where(evaluate, wa // 2, wa))
+    at_floor = new_rung == RUNG_AR
+    probe = jnp.where(at_floor,
+                      jnp.where((rung != RUNG_AR) | probed,
+                                gov.probe_every, slots.probe - 1),
+                      slots.probe)
+    return slots._replace(rung=new_rung, win_prop=wp, win_acc=wa,
+                          probe=probe)
+
 
 def _nonfinite_rows(logits: jnp.ndarray) -> jnp.ndarray:
     """Per-sequence count of verify positions whose logit rows carry any
@@ -68,14 +149,22 @@ class RoundResult(NamedTuple):
 def spec_round(model, target_params, draft_params, state, last_token,
                stream_pos, key, *, gamma: int, policy: str = "quantspec",
                greedy: bool = False, temperature: float = 1.0,
-               top_p=None, ctx_kw=None) -> RoundResult:
+               top_p=None, ctx_kw=None, gamma_eff: Optional[int] = None,
+               draft_int8: bool = False) -> RoundResult:
     """last_token [B, 1] (or [B, 1, K] for codebooks). stream_pos = number
     of tokens already processed by the target (cache length).
 
     ``top_p`` filters BOTH the draft proposal q and the target p, so
-    speculative sampling stays exact w.r.t. the filtered target."""
+    speculative sampling stays exact w.r.t. the filtered target.
+
+    ``gamma_eff``/``draft_int8`` are the static engine's forced governor
+    rung (batch-wide, static): draft positions ≥ ``gamma_eff`` are
+    force-rejected in verification, and ``draft_int8`` escalates the
+    draft's KV read to the INT8 both-plane view (the draft still runs
+    INT4 *weights* — only the cache read widens)."""
     multi = model.cfg.num_codebooks > 0
     keys = jax.random.split(key, gamma + 2)
+    draft_kv = "target" if draft_int8 else "draft"
 
     # ---- 1. draft γ tokens -------------------------------------------------
     # One traced step + lax.scan over γ: trace/compile time is constant in
@@ -86,7 +175,7 @@ def spec_round(model, target_params, draft_params, state, last_token,
         i, k_i = inp
         dl, d_state, _ = model.decode(
             draft_params, cur, d_state, stream_pos + i,
-            kv_mode="draft", policy=policy, ctx_kw=ctx_kw)
+            kv_mode=draft_kv, policy=policy, ctx_kw=ctx_kw)
         logits = maybe_top_p(dl[:, -1] / temperature, top_p)
         nxt = sample_token(logits, k_i, greedy)           # [B] or [B, K]
         q = jax.nn.softmax(logits, axis=-1)
@@ -108,10 +197,12 @@ def spec_round(model, target_params, draft_params, state, last_token,
 
     # ---- 3. verify + commit -------------------------------------------------
     if multi:
+        assert gamma_eff is None, "governor rungs are single-codebook"
         res = acceptance.verify_greedy_multi(draft_tokens, target_probs)
     else:
         res = acceptance.verify(draft_tokens, draft_probs, target_probs,
-                                keys[gamma], greedy=greedy)
+                                keys[gamma], greedy=greedy,
+                                gamma_eff=gamma_eff)
     new_state = model.commit(t_state, snaps, res.n_accepted, gamma + 1)
 
     last = jax.lax.dynamic_slice_in_dim(res.tokens, res.n_accepted, 1, axis=1)
@@ -132,7 +223,8 @@ class PagedRoundResult(NamedTuple):
 
 def paged_spec_round(model, target_params, draft_params, state, table,
                      last_token, key, *, gamma: int, greedy: bool = False,
-                     temperature: float = 1.0, top_p=None, ctx_kw=None
+                     temperature: float = 1.0, top_p=None, ctx_kw=None,
+                     gamma_eff=None, draft_bits=None, mangle=None
                      ) -> PagedRoundResult:
     """One continuous-batching QuantSpec round over the paged cache.
 
@@ -141,6 +233,20 @@ def paged_spec_round(model, target_params, draft_params, state, table,
     rollbacks are per-sequence, so requests of different lengths progress
     raggedly in one jitted program. Inactive slots compute garbage that is
     masked out of the table update and ignored by the engine.
+
+    Governor hooks (all optional, all per-slot ``[R]`` arrays):
+
+    ``gamma_eff``  i32 — effective speculation depth; draft positions ≥ it
+                   are force-rejected in verification (0 = verify-only AR).
+    ``draft_bits`` bool — escalate the slot's *draft* KV read from INT4 to
+                   INT8 (both nibble planes); the target read is always
+                   INT8, so only the draft call carries the flag.
+    ``mangle``     i32 fault-injection switch (tests/fault_injection.py):
+                   1 corrupts the slot's draft logits unconditionally, 2
+                   only while the slot drafts from the INT4 view — a
+                   deterministic acceptance collapse that INT8 escalation
+                   measurably repairs. Verification is untouched, so
+                   greedy outputs stay token-identical to AR decode.
     """
     from repro.core import paged_kv_cache as PC
 
@@ -148,10 +254,12 @@ def paged_spec_round(model, target_params, draft_params, state, table,
     G = model.cfg.group_size
     keys = jax.random.split(key, gamma + 2)
 
-    def run(params, tokens, st, tbl, pos, kv_mode, T):
+    def run(params, tokens, st, tbl, pos, kv_mode, T, bits=None):
         tbl2, step = PC.plan_step(tbl, T, G)
         kw = dict(ctx_kw or {})
         kw["plan"] = PC.PagedPlan(step, tbl2)
+        if bits is not None:
+            kw["draft_bits"] = bits
         logits, new_st, _ = model.decode(params, tokens, st, pos,
                                          kv_mode=kv_mode, policy="paged",
                                          ctx_kw=kw)
@@ -164,8 +272,15 @@ def paged_spec_round(model, target_params, draft_params, state, table,
         d_state, d_table, cur = carry
         i, k_i = inp
         dl, d_state, d_table = run(draft_params, cur, d_state, d_table,
-                                   table.pos + i, "draft", 1)
-        logits = maybe_top_p(dl[:, -1] / temperature, top_p)
+                                   table.pos + i, "draft", 1,
+                                   bits=draft_bits)
+        raw = dl[:, -1]
+        if mangle is not None:
+            bits = draft_bits if draft_bits is not None \
+                else jnp.zeros((raw.shape[0],), bool)
+            hit = (mangle == 1) | ((mangle == 2) & ~bits)
+            raw = jnp.where(hit[:, None], jnp.roll(raw, 1, axis=-1), raw)
+        logits = maybe_top_p(raw / temperature, top_p)
         nxt = sample_token(logits, k_i, greedy)                # [R]
         q = jax.nn.softmax(logits, axis=-1)
         return (d_state, d_table, nxt[:, None].astype(cur.dtype)), (nxt, q)
@@ -185,7 +300,8 @@ def paged_spec_round(model, target_params, draft_params, state, table,
 
     # ---- 3. per-sequence verify + commit -----------------------------------
     res = acceptance.verify_per_seq(draft_tokens, draft_probs, target_probs,
-                                    keys[gamma], greedy=greedy)
+                                    keys[gamma], greedy=greedy,
+                                    gamma_eff=gamma_eff)
     rb = (gamma + 1) - res.n_new                               # [R]
     new_table = PC.commit(PC.rollback(v_table, rb), res.n_new)
     last = jnp.take_along_axis(res.tokens, res.n_accepted[:, None], axis=1)
@@ -210,7 +326,8 @@ def paged_ar_step(model, params, state, table, last_token, key, *,
                                     ctx_kw=kw)
     nxt = sample_token(tl[:, -1] / temperature, key, greedy, top_p=top_p)
     n_new = jnp.ones((table.pos.shape[0],), jnp.int32)
-    return new_state, PC.commit(tbl2, n_new), nxt[:, None]
+    return new_state, PC.commit(tbl2, n_new), nxt[:, None], \
+        _nonfinite_rows(tl)
 
 
 def ar_step(model, params, state, last_token, stream_pos, key, *,
@@ -228,18 +345,22 @@ def ar_step(model, params, state, last_token, stream_pos, key, *,
 # megasteps: `rounds` fused spec rounds in one jitted program
 # ---------------------------------------------------------------------------
 
-def round_stats_dev(gamma: int, n_new, budget, tokens=None,
+def round_stats_dev(gamma, n_new, budget, tokens=None,
                     eos_id: Optional[int] = None):
     """Device-side :func:`repro.serving.engine.round_stats` — identical
     arithmetic, vectorized over slots, plus optional EOS truncation.
 
-    ``n_new``/``budget`` are i32 ``[R]`` (or scalars). Returns
-    ``(take, proposed_inc, accepted_inc, eos_hit)``: ``take = min(n_new,
-    budget)`` tokens kept, further cut to end at the first EOS among them
-    (inclusive) when ``eos_id`` is set; ``proposed`` clamps γ by the
-    *pre-round* budget only; ``accepted = max(min(take, n_new - 1), 0)``
-    — exactly the host helper's accounting, so per-request acceptance
-    stats match the per-round loop bit for bit."""
+    ``n_new``/``budget`` are i32 ``[R]`` (or scalars); ``gamma`` may be a
+    static int or the governor's per-slot ``gamma_eff [R]`` (0 for
+    γ-masked / AR-floor rounds — such rounds report ``proposed = 0`` and
+    ``accepted = 0``, and every rate consumer divides by
+    ``max(proposed, 1)``, so zero-proposed rounds can never emit
+    NaN). Returns ``(take, proposed_inc, accepted_inc, eos_hit)``:
+    ``take = min(n_new, budget)`` tokens kept, further cut to end at the
+    first EOS among them (inclusive) when ``eos_id`` is set; ``proposed``
+    clamps γ by the *pre-round* budget only; ``accepted = max(min(take,
+    n_new - 1), 0)`` — exactly the host helper's accounting, so
+    per-request acceptance stats match the per-round loop bit for bit."""
     n_new = jnp.asarray(n_new, jnp.int32)
     budget = jnp.maximum(jnp.asarray(budget, jnp.int32), 0)
     take = jnp.minimum(n_new, budget)
@@ -274,7 +395,9 @@ class MegaResult(NamedTuple):
 def megastep(model, target_params, draft_params, state, last_token,
              stream_pos, generated, budget, key, *, rounds: int, gamma: int,
              policy: str = "quantspec", greedy: bool = False,
-             temperature: float = 1.0, top_p=None, ctx_kw=None) -> MegaResult:
+             temperature: float = 1.0, top_p=None, ctx_kw=None,
+             gamma_eff: Optional[int] = None,
+             draft_int8: bool = False) -> MegaResult:
     """``rounds`` consecutive :func:`spec_round`\\ s under one jit.
 
     ``generated``/``budget`` are traced i32 scalars (tokens produced so
@@ -299,8 +422,11 @@ def megastep(model, target_params, draft_params, state, last_token,
             res = spec_round(model, target_params, draft_params, state,
                              last, pos, kr, gamma=gamma, policy=policy,
                              greedy=greedy, temperature=temperature,
-                             top_p=top_p, ctx_kw=ctx_kw)
-            _, prop, acc, _ = round_stats_dev(gamma, res.n_new, budget - gen)
+                             top_p=top_p, ctx_kw=ctx_kw,
+                             gamma_eff=gamma_eff, draft_int8=draft_int8)
+            g_stat = gamma if gamma_eff is None else gamma_eff
+            _, prop, acc, _ = round_stats_dev(g_stat, res.n_new,
+                                              budget - gen)
             return ((res.state, res.last_token, pos + res.n_new,
                      gen + res.n_new),
                     (res.tokens.astype(jnp.int32), res.n_new, prop, acc,
@@ -339,6 +465,8 @@ class PagedMegaResult(NamedTuple):
     proposed: jnp.ndarray     # i32 [rounds, R]
     accepted: jnp.ndarray     # i32 [rounds, R]
     nonfinite: jnp.ndarray    # i32 [rounds, R] — live-masked numerics flags
+    rung: jnp.ndarray         # i32 [rounds, R] — governor ladder rung after
+                              # each round (carried value on skipped rounds)
     first: jnp.ndarray        # i32 [R] — carried-in last token (the
                               # prefill-sampled first token of slots whose
                               # admission finalized since the last readback)
@@ -346,10 +474,12 @@ class PagedMegaResult(NamedTuple):
 
 
 def paged_megastep(model, target_params, draft_params, state, table,
-                   last_token, slots: SlotState, key, *, rounds: int,
-                   gamma: int, greedy: bool = False, temperature: float = 1.0,
-                   top_p=None, eos_id: Optional[int] = None,
-                   ctx_kw=None) -> PagedMegaResult:
+                   last_token, slots: SlotState, key, mangle=None, *,
+                   rounds: int, gamma: int, greedy: bool = False,
+                   temperature: float = 1.0, top_p=None,
+                   eos_id: Optional[int] = None, ctx_kw=None,
+                   governor: Optional[GovernorConfig] = None
+                   ) -> PagedMegaResult:
     """``rounds`` consecutive :func:`paged_spec_round`\\ s under one jit,
     with per-slot accept/rollback, budget clamping, EOS detection, and
     termination masking all device-resident.
@@ -362,7 +492,19 @@ def paged_megastep(model, target_params, draft_params, state, table,
     its buffer writes land past ``buf_len`` where attention masks them
     out. Its pool blocks are returned to the free stack by the engine at
     the next harvest (`release_slot`), off the hot path. Rounds where no
-    slot is live short-circuit via `lax.cond` (zeroed packed rows)."""
+    slot is live short-circuit via `lax.cond` (zeroed packed rows).
+
+    With a :class:`GovernorConfig`, every round first decodes the carried
+    per-slot ladder state into ``(gamma_eff, draft_bits)`` masks
+    (:func:`governor_plan`), runs the round under them, and folds the
+    observed acceptance back (:func:`governor_update`) — all transitions
+    are masking inside this one compiled program.  When no live slot
+    speculates (every survivor is on the AR floor, none probing), a
+    nested `lax.cond` swaps the whole spec round for a single fused
+    1-token target step, so a fully-collapsed batch decodes at plain-AR
+    cost instead of paying γ wasted drafts per token.  ``mangle``
+    (i32 ``[R]``) is the fault-injection switch forwarded to
+    :func:`paged_spec_round`."""
     assert gamma > 0, "paged_megastep fuses spec rounds; use the AR loop " \
                       "for gamma=0"
     R = last_token.shape[0]
@@ -374,41 +516,86 @@ def paged_megastep(model, target_params, draft_params, state, table,
 
         def run(ops):
             state, table, last, slots = ops
-            res = paged_spec_round(model, target_params, draft_params,
-                                   state, table, last, kr, gamma=gamma,
-                                   greedy=greedy, temperature=temperature,
-                                   top_p=top_p, ctx_kw=ctx_kw)
-            take, prop, acc, eos_hit = round_stats_dev(
-                gamma, res.n_new, slots.budget - slots.generated,
-                res.tokens, eos_id)
+            if governor is not None:
+                gamma_eff, draft_bits, probing = governor_plan(
+                    governor, gamma, slots)
+            else:
+                gamma_eff = draft_bits = None
+                probing = jnp.zeros((R,), bool)
+
+            def spec_path(ops):
+                state, table, last, slots = ops
+                res = paged_spec_round(
+                    model, target_params, draft_params, state, table, last,
+                    kr, gamma=gamma, greedy=greedy, temperature=temperature,
+                    top_p=top_p, ctx_kw=ctx_kw, gamma_eff=gamma_eff,
+                    draft_bits=draft_bits, mangle=mangle)
+                g_eff = gamma if gamma_eff is None else gamma_eff
+                take, prop, acc, eos_hit = round_stats_dev(
+                    g_eff, res.n_new, slots.budget - slots.generated,
+                    res.tokens, eos_id)
+                return (res.state, res.table, res.last_token,
+                        res.tokens.astype(jnp.int32), take, prop, acc,
+                        res.nonfinite, eos_hit)
+
+            def ar_path(ops):
+                state, table, last, slots = ops
+                new_state, new_table, nxt, nf = paged_ar_step(
+                    model, target_params, state, table, last, kr,
+                    greedy=greedy, temperature=temperature, top_p=top_p,
+                    ctx_kw=ctx_kw)
+                tokens = jnp.pad(nxt.astype(jnp.int32),
+                                 ((0, 0), (0, gamma)))
+                take, prop, acc, eos_hit = round_stats_dev(
+                    0, jnp.ones((R,), jnp.int32),
+                    slots.budget - slots.generated, tokens, eos_id)
+                return (new_state, new_table, nxt, tokens, take, prop, acc,
+                        nf, eos_hit)
+
+            if governor is None:
+                (new_state, new_table, new_last, tokens, take, prop, acc,
+                 nf, eos_hit) = spec_path(ops)
+            else:
+                # AR-floor fast path: both branches compile into this one
+                # megastep program, so walking on/off the floor never
+                # recompiles — it just flips which branch executes.
+                (new_state, new_table, new_last, tokens, take, prop, acc,
+                 nf, eos_hit) = jax.lax.cond(
+                     jnp.any(live & (gamma_eff > 0)), spec_path, ar_path,
+                     ops)
+
             take = jnp.where(live, take, 0)
             prop = jnp.where(live, prop, 0)
             acc = jnp.where(live, acc, 0)
-            nf = jnp.where(live, res.nonfinite, 0)
+            nf = jnp.where(live, nf, 0)
             gen = slots.generated + take
             done = slots.done | (live & ((gen >= slots.budget) | eos_hit))
-            new_slots = SlotState(generated=gen, budget=slots.budget,
-                                  done=done)
+            new_slots = slots._replace(generated=gen, done=done)
+            if governor is not None:
+                new_slots = governor_update(governor, new_slots, live,
+                                            prop, acc, probing)
             # freeze finished slots: inactive rows are ignored by
             # plan/commit/rollback, so the remaining rounds leave them be
-            new_table = res.table._replace(active=res.table.active & ~done)
-            return ((res.state, new_table, res.last_token, new_slots),
-                    (res.tokens.astype(jnp.int32), take, prop, acc, nf))
+            new_table = new_table._replace(active=new_table.active & ~done)
+            return ((new_state, new_table, new_last, new_slots),
+                    (tokens, take, prop, acc, nf, new_slots.rung))
 
         def skip(ops):
             zeros = jnp.zeros((R,), jnp.int32)
+            # rung passes through (zeros would read back as a spurious
+            # transition to rung 0 at harvest)
             return ops, (jnp.zeros((R, gamma + 1), jnp.int32),
-                         zeros, zeros, zeros, zeros)
+                         zeros, zeros, zeros, zeros, ops[3].rung)
 
         new_carry, ys = jax.lax.cond(jnp.any(live), run, skip,
                                      (state, table, last, slots))
         return (*new_carry, key), ys
 
     first = jnp.asarray(last_token[:, 0], jnp.int32)
-    (state, table, last, slots, _), (toks, take, prop, acc, nf) = \
+    (state, table, last, slots, _), (toks, take, prop, acc, nf, rung) = \
         jax.lax.scan(body, (state, table, last_token, slots, key),
                      length=rounds)
     return PagedMegaResult(state=state, table=table, last_token=last,
                            slots=slots, tokens=toks, take=take,
                            proposed=prop, accepted=acc, nonfinite=nf,
-                           first=first, done=slots.done)
+                           rung=rung, first=first, done=slots.done)

@@ -125,20 +125,24 @@ def _pool_bh(x):
 
 def paged_hier_attention(q, pool: PagedKVPool, table: PageTable, stream_pos,
                          mode: str, softcap: float = 0.0,
-                         interpret: Optional[bool] = None):
+                         interpret: Optional[bool] = None, draft_bits=None):
     """q [R, T, Hq, D] over a paged hierarchical cache (post-`apply_step`).
 
     `stream_pos` is per-slot [R] — the stream position of each slot's first
     query token (requests progress raggedly under continuous batching).
     Quantized pool blocks and each slot's FP buffer stream through one
-    single-pass block-table kernel."""
+    single-pass block-table kernel.  ``draft_bits`` (bool [R], draft mode)
+    is the precision governor's per-slot INT8-escalation flag, forwarded
+    to the kernel's ``"slot"`` variant."""
     if softcap != 0.0:
         raise NotImplementedError("softcap not fused in the Pallas kernel")
     R, T, Hq, D = q.shape
     H = pool.kv_heads
     G = pool.group
+    if mode != "draft":
+        draft_bits = None
 
-    def run(q, pool, block_table, blocks, buf_len, stream_pos):
+    def run(q, pool, block_table, blocks, buf_len, stream_pos, bits):
         Rl = q.shape[0]                    # slots local to this shard
         Hl = pool.buf_k.shape[2]           # heads local to this shard
         gl = q.shape[2] // Hl
@@ -154,12 +158,15 @@ def paged_hier_attention(q, pool: PagedKVPool, table: PageTable, stream_pos,
             _pool_bh(pool.v_scale), _pool_bh(pool.v_zero),
             buf_k, buf_v,
             block_table, blocks, buf_len, stream_pos, Hl, T, mode,
+            draft_bits=None if draft_bits is None else bits,
             interpret=interpret)                              # [RHl, gT, D]
         out = out.reshape(Rl, Hl, gl, T, D).transpose(0, 3, 1, 2, 4)
         return out.reshape(Rl, T, Hl * gl, D)
 
+    bits = jnp.zeros((R,), jnp.int32) if draft_bits is None \
+        else jnp.asarray(draft_bits, jnp.int32)
     args = (q, pool, table.block_table, table.blocks, table.buf_len,
-            jnp.asarray(stream_pos, jnp.int32))
+            jnp.asarray(stream_pos, jnp.int32), bits)
     mesh, d = _head_shard_ctx(H, Hq, R)
     if mesh is None:
         return run(*args)
@@ -169,7 +176,7 @@ def paged_hier_attention(q, pool: PagedKVPool, table: PageTable, stream_pos,
         v_upper=plane, v_lower=plane, v_scale=plane, v_zero=plane,
         buf_k=P(d, None, "model", None), buf_v=P(d, None, "model", None))
     qspec = P(d, None, "model", None)
-    in_specs = (qspec, pool_specs, P(d, None), P(d), P(d), P(d))
+    in_specs = (qspec, pool_specs, P(d, None), P(d), P(d), P(d), P(d))
     return _shard_map(run, mesh, in_specs, qspec)(*args)
 
 

@@ -64,11 +64,17 @@ def _flash_init(m_scr, l_scr, acc_scr):
     acc_scr[...] = jnp.zeros_like(acc_scr)
 
 
-def _dequant(u, low, s, z, mode: str):
+def _dequant(u, low, s, z, mode: str, bits=None):
     """Dequantize packed planes ``[..., G, D//2]`` → fp32 ``[..., G, D]``.
 
     Halves nibble layout (element j in the hi nibble of column j, element
-    D/2+j in the lo nibble); ``low`` is None in draft mode."""
+    D/2+j in the lo nibble); ``low`` is None in draft mode.  Mode
+    ``"slot"`` is the precision governor's per-slot variant: ``bits`` is
+    this grid row's escalation scalar — 1 reconstructs INT8 like target
+    mode, 0 zeroes the lower-plane term, which collapses *exactly* to the
+    draft reconstruction (``16·q_u·(s/16) ≡ q_u·s`` in fp32; ``s/16`` is
+    an exact power-of-two scale).  Non-escalated rows DMA the scratch
+    block's lower plane, so whatever bytes arrive are masked here."""
     hi = (u >> 4).astype(jnp.float32)
     lo = (u & 0xF).astype(jnp.float32)
     quf = jnp.concatenate([hi, lo], axis=-1)
@@ -79,6 +85,8 @@ def _dequant(u, low, s, z, mode: str):
     lhi = (low >> 4).astype(jnp.float32)
     llo = (low & 0xF).astype(jnp.float32)
     qlf = jnp.concatenate([lhi, llo], axis=-1) - 8.0
+    if mode == "slot":
+        qlf = jnp.where(bits > 0, qlf, 0.0)
     return (16.0 * quf + qlf) * (s / 16.0) + z
 
 
@@ -262,7 +270,15 @@ def _paged_hier_kernel(meta_ref, bt_ref, q_ref, *rest, mode: str, T: int,
     ``bt_ref`` is consumed by the index maps only.  KB quant groups arrive
     per step as KB lane-shifted copies of the pool planes; each lane folds
     one group when its group index is in range (exact per-lane guard, so no
-    column mask is needed for the quantized region)."""
+    column mask is needed for the quantized region).
+
+    Mode ``"slot"`` (the precision governor's escalated-draft variant)
+    carries the 8-operand plane set of target mode but selects per grid
+    row: ``meta[r, 3]`` gates the lower-plane term inside `_dequant`, and
+    the lower-plane index maps routed non-escalated rows' DMA to the pool
+    scratch block — those rows stream 4 bits/element plus one reused
+    scratch tile, so the draft-mode bandwidth win survives a mixed
+    batch."""
     del bt_ref
     n_planes = 6 if mode == "draft" else 8
     lanes = [rest[l * n_planes:(l + 1) * n_planes] for l in range(KB)]
@@ -274,6 +290,7 @@ def _paged_hier_kernel(meta_ref, bt_ref, q_ref, *rest, mode: str, T: int,
     blocks = meta_ref[r, 0]
     buf_len = meta_ref[r, 1]
     spos = meta_ref[r, 2]
+    bits = meta_ref[r, 3] if mode == "slot" else None
 
     @pl.when(j == 0)
     def _init():
@@ -289,9 +306,9 @@ def _paged_hier_kernel(meta_ref, bt_ref, q_ref, *rest, mode: str, T: int,
         def _lane_step(ku=ku, kl=kl, ks=ks, kz=kz,
                        vu=vu, vl=vl, vs=vs, vz=vz):
             k = _dequant(ku[0], None if kl is None else kl[0],
-                         ks[0], kz[0], mode)           # [G, D]
+                         ks[0], kz[0], mode, bits)     # [G, D]
             v = _dequant(vu[0], None if vl is None else vl[0],
-                         vs[0], vz[0], mode)
+                         vs[0], vz[0], mode, bits)
             s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                     preferred_element_type=jnp.float32)
             _fold(s * inv_sqrt_d, v, None, m_scr, l_scr, acc_scr)
@@ -321,7 +338,8 @@ def paged_hier_flash_attention(q, k_upper, k_lower, k_scale, k_zero,
                                v_upper, v_lower, v_scale, v_zero,
                                buf_k, buf_v, block_table, blocks, buf_len,
                                stream_pos, nh: int, T: int, mode: str, *,
-                               kb: int = 2, interpret: Optional[bool] = None):
+                               kb: int = 2, draft_bits=None,
+                               interpret: Optional[bool] = None):
     """Single-pass hierarchical attention over a **paged** pool.
 
     q ``[R*H, gT, D]``; pool planes flattened per (block, head):
@@ -332,6 +350,14 @@ def paged_hier_flash_attention(q, k_upper, k_lower, k_scale, k_zero,
     scalar-prefetched; the BlockSpec index maps dereference the table so
     each lane DMAs exactly the pool block the sequence owns — the gather
     never materializes.  Returns out ``[R*H, gT, D]``.
+
+    ``draft_bits`` (i32/bool ``[R]``, draft mode only) switches the call
+    into the governor's ``"slot"`` variant: escalated slots read both
+    nibble planes (INT8), while non-escalated slots' lower-plane index
+    maps resolve to the pool's write-scratch block ``P`` — a single
+    always-resident tile instead of per-block lower-plane traffic — and
+    the garbage is zero-masked in-kernel, reproducing the draft
+    reconstruction bit for bit.
     """
     if interpret is None:
         interpret = interpret_default()
@@ -343,15 +369,21 @@ def paged_hier_flash_attention(q, k_upper, k_lower, k_scale, k_zero,
     KB = max(1, min(kb, NBmax))
     NBQ = -(-NBmax // KB)                              # ceil
     nsteps = NBQ + 2
+    if mode == "draft" and draft_bits is not None:
+        mode = "slot"
+    scratch_blk = k_upper.shape[0] // nh - 1           # pool block P
 
     ks = jnp.broadcast_to(k_scale, (k_upper.shape[0], 1, D))
     kz = jnp.broadcast_to(k_zero, (k_upper.shape[0], 1, D))
     vs = jnp.broadcast_to(v_scale, (k_upper.shape[0], G, 1))
     vz = jnp.broadcast_to(v_zero, (k_upper.shape[0], G, 1))
 
+    bits = jnp.zeros((R,), jnp.int32) if draft_bits is None \
+        else jnp.asarray(draft_bits, jnp.int32)
     meta = jnp.stack([jnp.asarray(blocks, jnp.int32),
                       jnp.asarray(buf_len, jnp.int32),
-                      jnp.asarray(stream_pos, jnp.int32)], axis=1)  # [R, 3]
+                      jnp.asarray(stream_pos, jnp.int32),
+                      bits], axis=1)                   # [R, 4]
 
     qspec = pl.BlockSpec((1, gT, D), lambda i, j, m, bt: (i, 0, 0))
 
@@ -361,14 +393,27 @@ def paged_hier_flash_attention(q, k_upper, k_lower, k_scale, k_zero,
             return (bt[i // nh, col] * nh + i % nh, 0, 0)
         return f
 
+    def lane_map_lower(l):
+        # slot mode: non-escalated rows DMA the scratch block's lower
+        # plane (always resident, masked in-kernel) instead of the real
+        # one — their lower-plane bytes never cross HBM per block
+        def f(i, j, m, bt):
+            r = i // nh
+            col = jnp.minimum(j * KB + l, NBmax - 1)
+            blk = jnp.where(m[r, 3] > 0, bt[r, col], scratch_blk)
+            return (blk * nh + i % nh, 0, 0)
+        return f
+
     lane_specs = []
     lane_args = []
     for l in range(KB):
         pspec = pl.BlockSpec((1, G, Dp), lane_map(l))
+        lspec = pl.BlockSpec((1, G, Dp), lane_map_lower(l)) \
+            if mode == "slot" else pspec
         ksspec = pl.BlockSpec((1, 1, D), lane_map(l))
         vsspec = pl.BlockSpec((1, G, 1), lane_map(l))
-        lane_specs += _plane_args(mode, pspec, pspec, ksspec, ksspec,
-                                  pspec, pspec, vsspec, vsspec)
+        lane_specs += _plane_args(mode, pspec, lspec, ksspec, ksspec,
+                                  pspec, lspec, vsspec, vsspec)
         lane_args += _plane_args(mode, k_upper, k_lower, ks, kz,
                                  v_upper, v_lower, vs, vz)
 

@@ -117,9 +117,40 @@ def main():
                     help="megastep harvests between engine checkpoints "
                          "(journaled runs: host-tier snapshots persist to "
                          "the disk tier at each checkpoint)")
+    ap.add_argument("--governor", action="store_true",
+                    help="acceptance-aware precision governor: each slot "
+                         "watches a rolling acceptance window and walks a "
+                         "degradation ladder — shrink gamma, escalate the "
+                         "draft KV read INT4->INT8, fall back to plain AR "
+                         "target decode — with hysteresis and probe rounds "
+                         "that re-escalate on recovery (continuous engine "
+                         "megasteps only; greedy outputs are unchanged)")
+    ap.add_argument("--accept-window", type=int, default=32,
+                    help="proposed tokens per governor window: the ladder "
+                         "is only evaluated once a slot has this much "
+                         "evidence (larger = fewer spurious demotions "
+                         "under binomial acceptance noise)")
+    ap.add_argument("--accept-floor", type=float, default=0.5,
+                    help="windowed acceptance below this demotes the slot "
+                         "one rung")
+    ap.add_argument("--accept-ceiling", type=float, default=0.8,
+                    help="windowed acceptance above this promotes the slot "
+                         "one rung (must exceed --accept-floor: the gap is "
+                         "the ladder's hysteresis band)")
+    ap.add_argument("--probe-every", type=int, default=8,
+                    help="AR-floor rounds between speculative probe rounds "
+                         "(a probe re-escalates the slot if its acceptance "
+                         "has recovered past the ceiling)")
+    ap.add_argument("--gamma-lo", type=int, default=0,
+                    help="reduced draft length for the shrunk-gamma rung; "
+                         "0 = max(1, gamma // 2)")
     args = ap.parse_args()
     if args.recover and not args.journal:
         raise SystemExit("--recover requires --journal DIR")
+    if args.governor and args.engine != "continuous":
+        raise SystemExit("--governor needs --engine continuous (the ladder "
+                         "state lives in the paged megastep's per-slot "
+                         "SlotState)")
 
     # resolve the mesh FIRST: host<N> meshes must append the forced-device
     # XLA flag before anything initializes the jax backends
@@ -187,6 +218,12 @@ def main():
                                    disk_capacity_bytes=args.disk_capacity_bytes,
                                    prefetch=not args.no_prefetch,
                                    checkpoint_every=args.checkpoint_every,
+                                   governor=args.governor,
+                                   accept_window=args.accept_window,
+                                   accept_floor=args.accept_floor,
+                                   accept_ceiling=args.accept_ceiling,
+                                   probe_every=args.probe_every,
+                                   gamma_lo=args.gamma_lo,
                                    **chunk_kw)
             if args.recover:
                 reqs = eng.recover()
@@ -242,7 +279,12 @@ def main():
                                prefetch_hits=r.prefetch_hits,
                                prefetch_misses=r.prefetch_misses,
                                resume_block_s=r.resume_block_s,
-                               restarts=r.restarts))
+                               restarts=r.restarts,
+                               demotions=r.demotions,
+                               promotions=r.promotions,
+                               int8_rounds=r.int8_rounds,
+                               ar_rounds=r.ar_rounds,
+                               final_rung=r.rung))
                 for r in reqs if r.status == "ok"]
             if args.prefix_cache:
                 # second wave of identical prompts: admissions now come out
@@ -257,10 +299,15 @@ def main():
                             f"({s.swap_bytes}B, {s.prefetch_hits} "
                             f"prefetched, {s.resume_block_s * 1e3:.1f}ms "
                             f"blocked)")
+                gov = ""
+                if args.governor and (s.demotions or s.promotions):
+                    gov = (f", ladder {s.demotions}v/{s.promotions}^ "
+                           f"({s.int8_rounds} int8 + {s.ar_rounds} ar "
+                           f"rounds, final rung {s.final_rung})")
                 print(f"req {i}: {s.generated} tokens in {s.rounds} rounds, "
                       f"acceptance {s.acceptance_rate:.1%}, "
                       f"prefill {s.prefill_s:.2f}s decode "
-                      f"{s.decode_s:.2f}s{swap}")
+                      f"{s.decode_s:.2f}s{swap}{gov}")
             if args.prefix_cache:
                 print("prefix cache:", eng.prefix.stats,
                       f"harvest syncs {eng.cache_syncs}")

@@ -362,17 +362,23 @@ def _attend_hier_blocked(q, cache: HC.HierKVCache, stream_pos, mode: str,
 
 def attend_hier_paged(q, pool: PC.PagedKVPool, table: PC.PageTable,
                       stream_pos, mode: str, softcap=0.0, impl: str = "flat",
-                      deq_dtype=jnp.float32):
+                      deq_dtype=jnp.float32, draft_bits=None):
     """Attend q ``[R, T, Hq, hd]`` over a paged hierarchical cache (new
     tokens already applied via ``apply_step``). ``stream_pos`` is per-slot
     ``[R]`` — under continuous batching every request is at its own
-    position. mode: 'draft' (upper-4) | 'target' (INT8 recon)."""
+    position. mode: 'draft' (upper-4) | 'target' (INT8 recon).
+
+    ``draft_bits`` (bool ``[R]``, draft mode only) is the precision
+    governor's per-slot escalation flag: flagged slots read the INT8
+    both-plane reconstruction while the rest of the batch stays on the
+    upper-nibble draft view — one program, per-slot lane selection."""
     if impl == "pallas":
         from repro.kernels import ops as kops
         return kops.paged_hier_attention(q, pool, table, stream_pos, mode,
-                                         softcap)
+                                         softcap, draft_bits=draft_bits)
     k, v, valid, quant_len = PC.materialize_slots(pool, table, mode,
-                                                  deq_dtype)
+                                                  deq_dtype,
+                                                  draft_bits=draft_bits)
     Sq = k.shape[1] - pool.buf_k.shape[1]
     s = jnp.arange(k.shape[1])
     # stream position of key s: block region is absolute; buffer keys start

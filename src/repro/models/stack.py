@@ -92,6 +92,10 @@ class RunCtx:
     # table) computed once by the engine and applied by every layer
     pool_blocks: int = 0
     plan: Optional[PC.PagedPlan] = None
+    # precision governor (core/spec_decode.py): per-slot [R] bool lane flag
+    # escalating a draft decode's KV read from INT4 (upper nibble) to INT8
+    # (both planes); only meaningful when kv_mode == 'draft'
+    draft_bits: Optional[jnp.ndarray] = None
     # serve-time prefill:
     #  prefill_len   — valid prompt length of a bucket-padded one-shot
     #                  prefill (quantspec/fp policies); padding past it is
@@ -405,7 +409,9 @@ def apply_mixer(spec: LayerSpec, p: dict, cfg: ModelConfig, h: jnp.ndarray,
             att = L.attend_hier_paged(
                 q, pool, plan.table, stream_pos, ctx.kv_mode, sc,
                 impl=cfg.hier_attn_impl,
-                deq_dtype=jnp.dtype(cfg.hier_deq_dtype))
+                deq_dtype=jnp.dtype(cfg.hier_deq_dtype),
+                draft_bits=ctx.draft_bits if ctx.kv_mode == "draft"
+                else None)
             return L.attn_out(p["attn"], att), AttnState(pool, None), None
 
         if ctx.policy == "streaming_only":

@@ -70,6 +70,10 @@ from repro.core.disk_tier import DiskTier
 from repro.core.host_tier import HostTier, HostTierError, SnapshotMissError
 from repro.core.prefix_index import PrefixIndex
 from repro.core.spec_decode import (
+    RUNG_AR,
+    RUNG_INT4,
+    RUNG_INT8,
+    GovernorConfig,
     MegaResult,
     PagedMegaResult,
     PagedRoundResult,
@@ -112,9 +116,18 @@ class GenStats:
     prefetch_misses: int = 0
     resume_block_s: float = 0.0
     restarts: int = 0
+    # precision-governor telemetry (continuous engine, --governor): ladder
+    # walks this request took, rounds spent on the degraded rungs, and the
+    # rung it finished on (0 = full-γ INT4 speculation … 3 = AR floor)
+    demotions: int = 0
+    promotions: int = 0
+    int8_rounds: int = 0
+    ar_rounds: int = 0
+    final_rung: int = 0
 
     @property
     def acceptance_rate(self) -> float:
+        """Safe under zero proposals (an AR-floor round proposes nothing)."""
         return self.accepted / max(self.proposed, 1)
 
     @property
@@ -220,6 +233,7 @@ class Engine:
                  max_seq: int = 4096, prefill_chunk: int = 512,
                  rounds_per_step: int = 1, mesh: Optional[Mesh] = None,
                  prefix_cache: bool = False,
+                 force_rung: Optional[int] = None,
                  ctx_kw: Optional[dict] = None):
         self.model = model
         self.cfg = model.cfg
@@ -261,8 +275,31 @@ class Engine:
         G = self.cfg.group_size
         self._prefill_cap = _round_up(max_seq, G) + 2 * G
 
+        # pin the whole batch to one precision-ladder rung (the static
+        # engine has no per-slot governor; this is the rung-identity oracle
+        # tests/test_governor.py compares the continuous governor against):
+        # 1 halves the effective γ, 2 reads the draft's KV at INT8 (both
+        # nibble planes), 3 masks every draft (verify-only AR decode)
+        if force_rung not in (None, RUNG_INT4, 1, RUNG_INT8, RUNG_AR):
+            raise ValueError(f"force_rung must be None or 0..3, "
+                             f"got {force_rung!r}")
+        self.force_rung = force_rung
+        gamma_eff = None
+        draft_int8 = False
+        if force_rung == 1:
+            gamma_eff = max(1, gamma // 2)
+        elif force_rung == RUNG_INT8:
+            draft_int8 = True
+        elif force_rung == RUNG_AR:
+            gamma_eff = 0
+
+        # proposals per round for stats: the masked rounds only ever use
+        # gamma_eff drafts, so acceptance rates stay meaningful under a
+        # forced rung (and an AR-forced run reports rate 0/0 -> 1-safe)
+        self._gamma_stat = gamma if gamma_eff is None else gamma_eff
         self._round_kw = dict(gamma=gamma, policy=policy, greedy=greedy,
                               temperature=temperature, top_p=top_p,
+                              gamma_eff=gamma_eff, draft_int8=draft_int8,
                               ctx_kw=self.ctx_kw)
         self._ar_kw = dict(policy=policy, greedy=greedy,
                            temperature=temperature, top_p=top_p,
@@ -509,7 +546,7 @@ class Engine:
                 # lockstep-committed drafts, clamped by the remaining
                 # budget so a final round's trimmed tail isn't counted
                 _, proposed, accepted = round_stats(
-                    self.gamma, n_new, max_new_tokens - generated)
+                    self._gamma_stat, n_new, max_new_tokens - generated)
                 stats.proposed += proposed
                 stats.accepted += accepted
                 # lint: ok(host-sync, numerics flags ride the same legacy-loop readback; already counted)
@@ -603,7 +640,8 @@ class _InflightMega:
     launched)."""
 
     packed: tuple                # (tokens, take, proposed, accepted,
-                                 #  first, done) device arrays
+                                 #  nonfinite, rung, first, done) device
+                                 #  arrays
     reqs: dict                   # slot -> Request decoding at dispatch
     emit_first: list             # slots whose pending_first this harvests
 
@@ -650,6 +688,9 @@ class ContinuousEngine:
                  eos_id: Optional[int] = None, mesh: Optional[Mesh] = None,
                  prefix_cache: bool = False,
                  overflow: str = "preempt", preempt_patience: int = 16,
+                 governor: bool = False, accept_window: int = 32,
+                 accept_floor: float = 0.5, accept_ceiling: float = 0.8,
+                 probe_every: int = 8, gamma_lo: int = 0,
                  max_pending: Optional[int] = None, strict: bool = False,
                  host_tier: Optional[HostTier] = None, fault=None,
                  host_capacity_bytes: Optional[int] = None,
@@ -725,6 +766,20 @@ class ContinuousEngine:
         # the megastep driver needs device-side termination (gamma>0 spec
         # rounds); gamma=0 serves AR baselines on the legacy loop
         self._use_megastep = rounds_per_step >= 1 and gamma > 0
+        # acceptance-aware precision governor: per-slot ladder walks run
+        # entirely inside the megastep (masking within the one compiled
+        # program); gamma=0 engines already *are* the AR floor
+        self.governor_cfg: Optional[GovernorConfig] = None
+        if governor:
+            if not self._use_megastep:
+                raise ValueError("governor requires the megastep driver "
+                                 "(rounds_per_step >= 1 and gamma > 0); a "
+                                 "gamma=0 engine is already pure AR decode")
+            self.governor_cfg = GovernorConfig(
+                window=max(int(accept_window), 1),
+                floor=float(accept_floor), ceiling=float(accept_ceiling),
+                probe_every=max(int(probe_every), 1),
+                gamma_lo=int(gamma_lo))
         if eos_id is not None and not self._use_megastep:
             raise ValueError("eos_id requires the megastep driver "
                              "(rounds_per_step >= 1 and gamma > 0): EOS "
@@ -787,7 +842,13 @@ class ContinuousEngine:
         mega_p = partial(paged_megastep, model, rounds=max(rounds_per_step, 1),
                          gamma=max(gamma, 1), greedy=greedy,
                          temperature=temperature, top_p=top_p, eos_id=eos_id,
-                         ctx_kw=self.ctx_kw or None)
+                         ctx_kw=self.ctx_kw or None,
+                         governor=self.governor_cfg)
+        # per-slot draft-corruption switches (tests/fault_injection.py
+        # draft_mangle): always passed as a traced i32 [slots] vector so
+        # toggling a slot never changes the jit cache key — zero recompiles
+        self._mangle_host = np.zeros((max_slots,), np.int32)
+        self._mangle_dev = jnp.asarray(self._mangle_host)
         self._release = jax.jit(PC.release_slot)
         if mesh is None:
             self._state_sh = self._table_sh = None
@@ -822,7 +883,7 @@ class ContinuousEngine:
                 ar_p,
                 in_shardings=(self._param_sh, self._state_sh, self._table_sh,
                               repl, repl),
-                out_shardings=(self._state_sh, self._table_sh, repl),
+                out_shardings=(self._state_sh, self._table_sh, repl, repl),
                 donate_argnums=(1, 2))
             self._mega = None
             if self._use_megastep:
@@ -834,12 +895,12 @@ class ContinuousEngine:
                     mega_p,
                     in_shardings=(self._param_sh, self._draft_sh,
                                   self._state_sh, self._table_sh, repl,
-                                  slots_sh, repl),
+                                  slots_sh, repl, repl),
                     out_shardings=PagedMegaResult(
                         state=self._state_sh, table=self._table_sh,
                         last_token=repl, slots=slots_sh, tokens=repl,
                         take=repl, proposed=repl, accepted=repl,
-                        nonfinite=repl, first=repl, done=repl),
+                        nonfinite=repl, rung=repl, first=repl, done=repl),
                     donate_argnums=(2, 3, 4, 5))
         self._chunk_jit = jax.jit(self._chunk_step)
         self._finalize_jit = jax.jit(self._finalize_step)
@@ -891,10 +952,17 @@ class ContinuousEngine:
         done = budget <= 1
         if self.eos_id is not None:
             done = done | (first == self.eos_id)
-        new_slots = SlotState(
+        zero = jnp.asarray(0, jnp.int32)
+        new_slots = slots._replace(
             generated=slots.generated.at[slot].set(jnp.minimum(budget, 1)),
             budget=slots.budget.at[slot].set(budget),
-            done=slots.done.at[slot].set(done))
+            done=slots.done.at[slot].set(done),
+            # fresh admissions start at the top of the precision ladder with
+            # an empty acceptance window and no probe countdown
+            rung=slots.rung.at[slot].set(zero),
+            win_prop=slots.win_prop.at[slot].set(zero),
+            win_acc=slots.win_acc.at[slot].set(zero),
+            probe=slots.probe.at[slot].set(zero))
         return (self._map_attn(state, fin), PC.activate_slot(table, slot),
                 last.at[slot, 0].set(first), new_slots)
 
@@ -973,11 +1041,19 @@ class ContinuousEngine:
 
         state = self._map_attn(state, fn)
         last = last.at[slot, 0].set(jnp.asarray(last_tok, jnp.int32))
-        slots = SlotState(
+        zero = jnp.asarray(0, jnp.int32)
+        slots = slots._replace(
             generated=slots.generated.at[slot].set(
                 jnp.asarray(gen, jnp.int32)),
             budget=slots.budget.at[slot].set(jnp.asarray(budget, jnp.int32)),
-            done=slots.done.at[slot].set(False))
+            done=slots.done.at[slot].set(False),
+            # a resumed request re-enters at the top rung with a fresh
+            # window; the governor re-demotes quickly if acceptance is
+            # still collapsed (its host-side window survives in Request)
+            rung=slots.rung.at[slot].set(zero),
+            win_prop=slots.win_prop.at[slot].set(zero),
+            win_acc=slots.win_acc.at[slot].set(zero),
+            probe=slots.probe.at[slot].set(zero))
         return state, table, last, slots
 
     def _do_preempt(self, slot: int) -> bool:
@@ -1011,6 +1087,7 @@ class ContinuousEngine:
         req.swap_bytes += snap.nbytes
         self.table = self._release(self.table, jnp.asarray(slot, jnp.int32))
         self._slot_shared.pop(slot, None)
+        self.set_mangle(slot, 0)
         self.scheduler.preempt(slot)
         self.preempts += 1
         self._log("preempt", req=req.req_id,
@@ -1161,6 +1238,16 @@ class ContinuousEngine:
                     self._log("checkpoint_skip", req=rid, reason=str(e))
         self.journal.checkpoint({"persisted": persisted})
         self.checkpoints += 1
+
+    def set_mangle(self, slot: int, mode: int) -> None:
+        """Arm (or disarm) deterministic draft corruption for one slot:
+        0 = off, 1 = mangle every draft sample, 2 = mangle only INT4-rung
+        draft samples (the corruption "heals" once the governor escalates
+        the slot's draft KV read to INT8).  The switch is a traced vector,
+        so toggling it never recompiles the megastep."""
+        if self._mangle_host[slot] != mode:
+            self._mangle_host[slot] = mode
+            self._mangle_dev = jnp.asarray(self._mangle_host)
 
     def cancel(self, req: Request) -> None:
         """Request cancellation; honored at the next megastep harvest
@@ -1413,7 +1500,8 @@ class ContinuousEngine:
         # prefix index still references keep refcount >= 1 and stay put
         self.table = self._release(self.table, jnp.asarray(slot, jnp.int32))
         self._slot_shared.pop(slot, None)
-        req = self.scheduler.retire(slot, status, reason)
+        self.set_mangle(slot, 0)    # never leak corruption to the next
+        req = self.scheduler.retire(slot, status, reason)  # slot occupant
         self._log("finish", req=req.req_id, status=status, reason=reason)
         self._retired.append(req)
 
@@ -1433,7 +1521,8 @@ class ContinuousEngine:
         pipeline for a lifecycle sweep this iteration — draining costs the
         readback overlap, so the steady state (no faults, no cancels, head
         admissible or merely waiting) never pays it."""
-        if self.fault is not None:
+        if self.fault is not None \
+                and getattr(self.fault, "needs_drain", True):
             return True
         now = time.perf_counter()
         if any(r.cancel_requested or r.deadline_exceeded(now)
@@ -1535,12 +1624,17 @@ class ContinuousEngine:
             if not self._use_megastep:
                 if self._needs_lifecycle(self._tick_stall()):
                     self._lifecycle()
+                elif self.fault is not None \
+                        and hasattr(self.fault, "tick"):
+                    self.fault.tick(self)
                 return self._step_legacy(key)
             if self._inflight is not None:
                 self._harvest(self._inflight)
                 self._inflight = None
             if self._needs_lifecycle(self._tick_stall()):
                 self._lifecycle()
+            elif self.fault is not None and hasattr(self.fault, "tick"):
+                self.fault.tick(self)
             key = self._dispatch(key)
             if self._inflight is not None:
                 self._harvest(self._inflight)
@@ -1571,7 +1665,7 @@ class ContinuousEngine:
             nonfinite = np.asarray(res.nonfinite)
             self.host_syncs += 2
         else:
-            self.state, self.table, self.last = self._ar(
+            self.state, self.table, self.last, _ar_nf = self._ar(
                 self.params, self.state, self.table, self.last, kr)
             n_new = np.ones((self.max_slots,), np.int64)
             # lint: ok(host-sync, AR continuous path reads one token per step back; counted in host_syncs)
@@ -1623,13 +1717,14 @@ class ContinuousEngine:
             return key
         key, kmega = jax.random.split(key)
         res = self._mega(self.params, self.draft_params, self.state,
-                         self.table, self.last, self.slots_dev, kmega)
+                         self.table, self.last, self.slots_dev, kmega,
+                         self._mangle_dev)
         self.state, self.table = res.state, res.table
         self.last, self.slots_dev = res.last_token, res.slots
         self.decode_steps += 1
         self._inflight = _InflightMega(
             packed=(res.tokens, res.take, res.proposed, res.accepted,
-                    res.nonfinite, res.first, res.done),
+                    res.nonfinite, res.rung, res.first, res.done),
             reqs=decoding,
             emit_first=[s for s, r in decoding.items() if r.pending_first])
         # with the megastep enqueued, the device is busy for a while —
@@ -1644,7 +1739,7 @@ class ContinuousEngine:
         Requests that went terminal between dispatch and harvest
         (cancelled, timed out, preempted away) are guarded by ``req.done``
         / a stale slot mapping — their speculative tokens are discarded."""
-        toks, take, proposed, accepted, nonfinite, first, done = \
+        toks, take, proposed, accepted, nonfinite, rung, first, done = \
             jax.device_get(flight.packed)  # lint: ok(host-sync, the one budgeted readback per continuous megastep; overlapped with the in-flight dispatch by the double-buffered driver)
         self.host_syncs += 1
         pre = ({r.req_id: len(r.tokens) for r in flight.reqs.values()}
@@ -1661,9 +1756,24 @@ class ContinuousEngine:
                     continue
                 req.tokens.extend(int(x) for x in toks[k, slot, :t])
                 req.rounds += 1
-                req.proposed += int(proposed[k, slot])
+                prop = int(proposed[k, slot])
+                req.proposed += prop
                 req.accepted += int(accepted[k, slot])
                 req.numerics_flags += int(nonfinite[k, slot])
+                # host mirror of the device acceptance window + ladder
+                # bookkeeping (preemption victim ranking and telemetry);
+                # AR-floor rounds propose nothing and leave the window be
+                req.observe_acceptance(prop, int(accepted[k, slot]))
+                r = int(rung[k, slot])
+                if r > req.rung:
+                    req.demotions += 1
+                elif r < req.rung:
+                    req.promotions += 1
+                req.rung = r
+                if r == RUNG_AR:
+                    req.ar_rounds += 1
+                elif r == RUNG_INT8:
+                    req.int8_rounds += 1
         if pre is not None:
             # WAL the harvested token deltas *before* any retire below
             # writes its finish record — replay folds them in order
@@ -1709,6 +1819,13 @@ class ContinuousEngine:
                             self._harvest(prev)
                             prev = None
                         self._lifecycle()
+                    elif self.fault is not None \
+                            and hasattr(self.fault, "tick"):
+                        # drain-free fault schedules (draft mangling only)
+                        # still tick every iteration — arming a slot's
+                        # corruption switch touches nothing the in-flight
+                        # megastep reads, so the overlap survives
+                        self.fault.tick(self)
                     key = self._dispatch(key)
                     if prev is not None:
                         self._harvest(prev)
@@ -1800,7 +1917,10 @@ class ContinuousEngine:
                              prefetch_hits=r.prefetch_hits,
                              prefetch_misses=r.prefetch_misses,
                              resume_block_s=r.resume_block_s,
-                             restarts=r.restarts)
+                             restarts=r.restarts,
+                             demotions=r.demotions, promotions=r.promotions,
+                             int8_rounds=r.int8_rounds,
+                             ar_rounds=r.ar_rounds, final_rung=r.rung)
             out.append(GenerationResult(
                 tokens=np.asarray(r.tokens, np.int64)[None, :], stats=stats))
         return out

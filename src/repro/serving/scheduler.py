@@ -30,9 +30,11 @@ with ``status="rejected"`` and a reason; the legacy raise survives behind
 slot back to the queue *front* as a resumable request (its KV snapshot
 lives in the host tier — core/host_tier.py) and
 :meth:`preemption_victim` picks who goes: lowest priority first, then the
-youngest admission, never a slot that hasn't decoded a megastep since it
-was (re)admitted — that guarantee is what bounds preemption ping-pong to
-round-robin time-slicing with forward progress.
+lowest rolling acceptance (a collapsed speculator yields the least
+throughput per block held), then the youngest admission — never a slot
+that hasn't decoded a megastep since it was (re)admitted; that guarantee
+is what bounds preemption ping-pong to round-robin time-slicing with
+forward progress.
 """
 
 from __future__ import annotations
@@ -56,11 +58,23 @@ class SlotState(NamedTuple):
     have seen yet — see ``Request.pending_first``); ``budget`` is the
     request's ``max_new_tokens``; ``done`` marks slots whose budget is
     exhausted or that sampled EOS — the megastep freezes them (page-table
-    deactivation, zeroed takes) instead of syncing to the host."""
+    deactivation, zeroed takes) instead of syncing to the host.
+
+    The trailing four fields are the precision governor's per-slot state
+    (core/spec_decode.py `GovernorConfig`): the degradation-ladder rung
+    (0 = INT4 full γ, 1 = INT4 reduced γ, 2 = INT8 draft read, 3 = AR
+    floor), the rolling acceptance window (proposed/accepted counters),
+    and the probe-round countdown for rung-3 re-escalation. They ride the
+    megastep carry so ladder transitions are pure on-device masking —
+    never a recompile, never a host sync."""
 
     generated: "np.ndarray"   # i32 [R]
     budget: "np.ndarray"      # i32 [R]
     done: "np.ndarray"        # bool [R]
+    rung: "np.ndarray"        # i32 [R] — degradation-ladder position
+    win_prop: "np.ndarray"    # i32 [R] — rolling window: tokens proposed
+    win_acc: "np.ndarray"     # i32 [R] — rolling window: tokens accepted
+    probe: "np.ndarray"       # i32 [R] — rounds until next AR-floor probe
 
 
 def init_slot_state(num_slots: int):
@@ -68,9 +82,12 @@ def init_slot_state(num_slots: int):
     scheduler module itself stays importable without jax)."""
     import jax.numpy as jnp
 
-    return SlotState(generated=jnp.zeros((num_slots,), jnp.int32),
-                     budget=jnp.zeros((num_slots,), jnp.int32),
-                     done=jnp.zeros((num_slots,), bool))
+    def z():
+        return jnp.zeros((num_slots,), jnp.int32)
+
+    return SlotState(generated=z(), budget=z(),
+                     done=jnp.zeros((num_slots,), bool),
+                     rung=z(), win_prop=z(), win_acc=z(), probe=z())
 
 
 @dataclasses.dataclass
@@ -110,6 +127,17 @@ class Request:
     restarts: int = 0
     numerics_flags: int = 0             # non-finite logit rows (sampling
                                         # fell back to greedy-over-finite)
+    # host mirror of the device rolling acceptance window (updated at each
+    # harvest, decayed past `win_limit`): feeds acceptance-informed
+    # preemption victim selection and the governor telemetry in GenStats
+    win_prop: int = 0
+    win_acc: int = 0
+    win_limit: int = 64
+    rung: int = 0                       # last harvested governor rung
+    demotions: int = 0                  # ladder transitions seen so far
+    promotions: int = 0
+    ar_rounds: int = 0                  # rounds spent on the AR floor
+    int8_rounds: int = 0                # rounds spent at the INT8 rung
     # -- runtime ------------------------------------------------------------
     slot: Optional[int] = None
     tokens: List[int] = dataclasses.field(default_factory=list)
@@ -141,6 +169,24 @@ class Request:
     @property
     def prompt_len(self) -> int:
         return int(self.prompt.shape[0])
+
+    @property
+    def rolling_acceptance(self) -> float:
+        """Windowed acceptance rate; optimistic 1.0 before any proposals
+        (a fresh request must not look like a collapse victim)."""
+        if self.win_prop <= 0:
+            return 1.0
+        return self.win_acc / self.win_prop
+
+    def observe_acceptance(self, proposed: int, accepted: int) -> None:
+        """Fold one harvested round into the host window mirror; once the
+        window exceeds ``win_limit`` both counters halve, so old evidence
+        decays instead of pinning the rate forever."""
+        self.win_prop += int(proposed)
+        self.win_acc += int(accepted)
+        if self.win_prop > self.win_limit:
+            self.win_prop //= 2
+            self.win_acc //= 2
 
     @property
     def generated(self) -> int:
@@ -287,14 +333,18 @@ class Scheduler:
     def preemption_victim(self, exclude=()) -> Optional[int]:
         """Slot to preempt for the blocked queue head, or None.
 
-        Lowest priority first, youngest admission among ties — and only
-        slots that have decoded at least one megastep since (re)admission,
-        so every preemption cycle nets forward progress (bounded
-        round-robin time-slicing instead of livelock)."""
-        cands = [(req.priority, -req.admit_seq, slot)
+        Lowest priority first; among equal priorities the slot with the
+        lowest rolling acceptance goes first (a collapsed speculator is
+        producing the fewest tokens per unit of pool held, so evicting it
+        costs the least throughput — the ROADMAP's acceptance-informed
+        victim selection), with the youngest admission breaking remaining
+        ties. Only slots that have decoded at least one megastep since
+        (re)admission are eligible, so every preemption cycle nets forward
+        progress (bounded round-robin time-slicing instead of livelock)."""
+        cands = [(req.priority, req.rolling_acceptance, -req.admit_seq, slot)
                  for slot, req in self.active.items()
                  if slot not in exclude and req.megasteps >= 1]
-        return min(cands)[2] if cands else None
+        return min(cands)[3] if cands else None
 
     def preempt(self, slot: int) -> Request:
         """Evict a running slot back to the queue *front* as resumable:

@@ -18,6 +18,14 @@ The engine exposes three hook points, all driven by a single
   snapshot *after* its checksum is recorded; corrupting bytes here
   simulates bitrot between offload and restore and must be caught by the
   restore-time checksum verification.
+* ``mangle_draft(...)`` (schedule builder) — arms the engine's per-slot
+  draft-corruption switches (``ContinuousEngine.set_mangle``) from the
+  tick hook: the megastep then deterministically corrupts the armed
+  slots' draft token stream *before* verification, collapsing their
+  acceptance rate to ~0 without ever touching the target model — the
+  stimulus for the precision governor's degradation ladder.  Mode 2
+  corrupts only INT4-rung draft samples, so a slot "heals" the moment
+  the governor escalates its draft KV read to INT8.
 * ``sleep(seconds)`` — replaces the host tier's real backoff sleep:
   retry-storm tests assert the exponential schedule from ``.sleeps``
   instead of paying wall-clock time.
@@ -66,6 +74,9 @@ class FaultInjector:
                                   Tuple[int, int]] = {}
         self._truncate: set = set()         # req ids (or ANY): torn writes
         self._disk_corrupt: set = set()     # req ids (or ANY): bitrot
+        # req_id|ANY -> (mode, first tick, stop tick|None): draft mangling
+        self._draft_mangle: Dict[Optional[int],
+                                 Tuple[int, int, Optional[int]]] = {}
 
     # ---- schedule builders (chainable) --------------------------------
     def fail_transfers(self, op: str = "offload", req_id: Optional[int] = ANY,
@@ -126,9 +137,61 @@ class FaultInjector:
         self._disk_corrupt.add(req_id)
         return self
 
+    def mangle_draft(self, req_id: Optional[int] = ANY, mode: int = 1,
+                     after: int = 0,
+                     until: Optional[int] = None) -> "FaultInjector":
+        """Corrupt ``req_id``'s (or every request's) draft samples from
+        ``after`` ticks from now until ``until`` ticks from now (forever
+        when None).  ``mode`` 1 corrupts every draft sample; mode 2 only
+        INT4-rung samples (healed by the governor's INT8 escalation).
+        Greedy outputs are unaffected — rejected drafts are corrected by
+        the verify pass — only acceptance collapses, deterministically."""
+        self._draft_mangle[req_id] = (
+            mode, self.ticks + after,
+            None if until is None else self.ticks + until)
+        return self
+
+    @property
+    def needs_drain(self) -> bool:
+        """True when the armed schedules require the engine to drain the
+        megastep pipeline every iteration (cancellations and preemption
+        storms mutate carried device state at the tick boundary, and the
+        transfer/disk/snapshot schedules are asserted against drained
+        event orderings).  A draft-mangle-only schedule returns False:
+        arming a slot's corruption switch only touches the host-side
+        mangle vector read at the *next* dispatch, so the engine keeps
+        its dispatch/readback overlap — the governor's collapse stimulus
+        doesn't artificially slow the very path it is measuring.
+
+        Subclasses always drain: an overridden ``tick`` can mutate engine
+        state (crash injectors preempt and kill mid-run) in ways this
+        base-class schedule inspection cannot see, and an undrained
+        preemption snapshots in-flight unharvested rounds — the journal's
+        stream-position invariant then (correctly) refuses the resume."""
+        if type(self) is not FaultInjector:
+            return True
+        return bool(self._cancel_at or self._storm
+                    or self._transfer_failures or self._corrupt
+                    or self._disk_failures or self._truncate
+                    or self._disk_corrupt)
+
     # ---- engine hooks --------------------------------------------------
     def tick(self, engine) -> None:
         self.ticks += 1
+        if self._draft_mangle:
+            for slot, req in engine.scheduler.active.items():
+                ent = self._draft_mangle.get(
+                    req.req_id, self._draft_mangle.get(ANY))
+                mode = 0
+                if ent is not None:
+                    m, start, stop = ent
+                    if self.ticks >= start and (stop is None
+                                                or self.ticks < stop):
+                        mode = m
+                if engine._mangle_host[slot] != mode:
+                    engine.set_mangle(slot, mode)
+                    self.events.append(
+                        ("draft_mangle", req.req_id, slot, mode))
         due = [(t, r) for t, r in self._cancel_at if self.ticks >= t]
         for item in due:
             self._cancel_at.remove(item)

@@ -1,0 +1,386 @@
+"""Acceptance-aware precision governor (ISSUE 10): per-slot γ adaptation
+and the INT4 → INT8 → AR degradation ladder with a guaranteed
+autoregressive floor.
+
+The invariants under test:
+
+* **Token identity.** Greedy speculative decoding is exact, so NO ladder
+  state — forced rungs, governor-driven walks, even deterministically
+  corrupted drafts — may change a single output token relative to plain
+  target-only AR decode.  The ladder trades *throughput*, never content.
+* **Zero recompiles.** Every transition is masking inside the one
+  compiled megastep program: the jit cache must hold exactly one entry
+  after a full INT4→INT8→AR→probe→recover walk.
+* **The walk itself.** Under injected draft corruption
+  (`FaultInjector.mangle_draft`) a slot demotes rung by rung to the AR
+  floor, probes on schedule, and re-escalates when the corruption lifts
+  — while a healthy co-batched slot never leaves the speculative rungs.
+* **Acceptance-informed preemption.** Among eligible victims the slot
+  with the lowest rolling acceptance goes first, and only slots that
+  made forward progress since (re)admission are eligible.
+
+The mesh class needs 8 forced host-platform devices:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m pytest tests/test_governor.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from fault_injection import FaultInjector
+from repro.configs import get_config
+from repro.core.spec_decode import (
+    RUNG_AR,
+    RUNG_INT4,
+    RUNG_INT4_LOW,
+    RUNG_INT8,
+    GovernorConfig,
+    governor_plan,
+    governor_update,
+    round_stats_dev,
+)
+from repro.launch.mesh import make_host_mesh
+from repro.models.stack import StackModel
+from repro.serving.engine import ContinuousEngine, Engine, GenStats
+from repro.serving.scheduler import Scheduler, init_slot_state
+
+NDEV = jax.device_count()
+needs_mesh = pytest.mark.skipif(
+    NDEV < 8, reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+GOV_KW = dict(governor=True, accept_window=8, accept_floor=0.15,
+              accept_ceiling=0.25, probe_every=2)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("tiny-lm", smoke=True)
+    model = StackModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    if NDEV < 8:
+        pytest.skip("needs 8 host devices")
+    return make_host_mesh(4, 2)
+
+
+def make_prompts(cfg, lens):
+    return [np.asarray(jax.random.randint(
+        jax.random.fold_in(jax.random.PRNGKey(1), i), (s,), 0,
+        cfg.vocab_size)) for i, s in enumerate(lens)]
+
+
+def run_continuous(model, params, prompts, max_new, max_seq, mangle=None,
+                   **kw):
+    fault = None
+    if mangle is not None:
+        fault = FaultInjector().mangle_draft(**mangle)
+    eng = ContinuousEngine(model, params, gamma=3, greedy=True, max_slots=2,
+                           max_seq=max_seq, rounds_per_step=2, fault=fault,
+                           **kw)
+    reqs = [eng.submit(p, n) for p, n in zip(prompts, max_new)]
+    eng.run(jax.random.PRNGKey(7))
+    return reqs, eng
+
+
+@pytest.fixture(scope="module")
+def traffic(tiny):
+    """Shared no-governor baseline: (prompts, max_new, max_seq, requests)."""
+    cfg, model, params = tiny
+    G = cfg.group_size
+    lens = [2 * G + 5, G + 3]
+    prompts = make_prompts(cfg, lens)
+    max_new = [48, 48]
+    max_seq = max(lens) + max(max_new) + 2 * G + 8
+    base, _ = run_continuous(model, params, prompts, max_new, max_seq)
+    return prompts, max_new, max_seq, base
+
+
+class TestGovernorCore:
+    """Pure-function ladder mechanics on synthetic acceptance streams."""
+
+    GOV = GovernorConfig(window=4, floor=0.5, ceiling=0.75, probe_every=3,
+                         gamma_lo=0)
+    GAMMA = 4
+
+    def _step(self, slots, prop, acc, live=True):
+        gamma_eff, draft_bits, probing = governor_plan(
+            self.GOV, self.GAMMA, slots)
+        slots = governor_update(
+            self.GOV, slots, jnp.asarray([live]),
+            jnp.asarray([prop], jnp.int32), jnp.asarray([acc], jnp.int32),
+            probing)
+        return slots, (int(gamma_eff[0]), bool(draft_bits[0]),
+                       bool(probing[0]))
+
+    def test_plan_decodes_each_rung(self):
+        slots = init_slot_state(4)._replace(
+            rung=jnp.asarray([RUNG_INT4, RUNG_INT4_LOW, RUNG_INT8, RUNG_AR]),
+            probe=jnp.asarray([0, 0, 0, 2]))
+        gamma_eff, draft_bits, probing = governor_plan(
+            self.GOV, self.GAMMA, slots)
+        assert gamma_eff.tolist() == [4, 2, 4, 0]   # gamma_lo=0 → γ//2
+        assert draft_bits.tolist() == [False, False, True, False]
+        assert probing.tolist() == [False, False, False, False]
+
+    def test_probe_round_runs_full_gamma_int8(self):
+        slots = init_slot_state(1)._replace(
+            rung=jnp.asarray([RUNG_AR]), probe=jnp.asarray([0]))
+        gamma_eff, draft_bits, probing = governor_plan(
+            self.GOV, self.GAMMA, slots)
+        assert (int(gamma_eff[0]), bool(draft_bits[0]),
+                bool(probing[0])) == (4, True, True)
+
+    def test_full_walk_collapse_probe_recover(self):
+        """Collapsed acceptance walks 0→1→2→3; the floor probes on its
+        cadence; a clean probe re-escalates to INT8; sustained recovery
+        promotes back to INT4 — all in one carried SlotState."""
+        slots = init_slot_state(1)
+        walk = []
+        for _ in range(3):                     # three collapsed windows
+            slots, (ge, _b, pr) = self._step(slots, 4, 0)
+            assert not pr
+            walk.append(int(slots.rung[0]))
+        assert walk == [RUNG_INT4_LOW, RUNG_INT8, RUNG_AR]
+        assert int(slots.probe[0]) == self.GOV.probe_every
+        # AR rounds: no proposals, probe counts down
+        for want in (2, 1, 0):
+            slots, (ge, _b, pr) = self._step(slots, 0, 0)
+            assert (ge, pr) == (0, False)
+            assert int(slots.rung[0]) == RUNG_AR
+            assert int(slots.probe[0]) == want
+        # countdown expired → the next round is a full-γ INT8 probe
+        slots2, (ge, bits, pr) = self._step(slots, 4, 4)   # probe accepts
+        assert (ge, bits, pr) == (4, True, True)
+        assert int(slots2.rung[0]) == RUNG_INT8
+        assert int(slots2.win_prop[0]) == 0    # fresh window on the rung
+        # a failed probe stays on the floor and re-arms the countdown
+        slots3, _ = self._step(slots, 4, 1)
+        assert int(slots3.rung[0]) == RUNG_AR
+        assert int(slots3.probe[0]) == self.GOV.probe_every
+        # sustained recovery climbs the rest of the ladder
+        for want in (RUNG_INT4_LOW, RUNG_INT4):
+            slots2, _ = self._step(slots2, 4, 4)
+            assert int(slots2.rung[0]) == want
+        # and a healthy top rung holds steady
+        slots2, _ = self._step(slots2, 4, 4)
+        assert int(slots2.rung[0]) == RUNG_INT4
+
+    def test_hysteresis_band_holds_rung(self):
+        """Rates inside (floor, ceiling) neither demote nor promote, and
+        an un-moved evaluated window halves instead of resetting."""
+        slots = init_slot_state(1)._replace(rung=jnp.asarray([RUNG_INT8]))
+        slots, _ = self._step(slots, 4, 3)     # 0.75 > floor, == ceiling…
+        slots = slots._replace(rung=jnp.asarray([RUNG_INT8]))  # (promoted)
+        slots, _ = self._step(slots, 4, 2)     # 0.5..0.75 band: hold
+        assert int(slots.rung[0]) == RUNG_INT8
+        assert int(slots.win_prop[0]) == 2     # 4 // 2: decayed, not reset
+        assert int(slots.win_acc[0]) == 1
+
+    def test_dead_slot_frozen(self):
+        slots = init_slot_state(1)._replace(rung=jnp.asarray([RUNG_INT8]))
+        out, _ = self._step(slots, 4, 0, live=False)
+        assert jax.tree.all(jax.tree.map(
+            lambda a, b: bool(jnp.all(a == b)), out, slots))
+
+
+class TestZeroProposedStats:
+    """Satellite: AR-floor rounds propose nothing; every acceptance-rate
+    reduction must survive proposed == 0 without NaN or div-by-zero."""
+
+    def test_round_stats_dev_zero_gamma(self):
+        take, prop, acc, eos = round_stats_dev(
+            jnp.asarray([0, 3]), jnp.asarray([1, 4]), jnp.asarray([5, 5]))
+        assert prop.tolist() == [0, 3]
+        assert take.tolist() == [1, 4]
+        assert acc.tolist() == [0, 3]
+        assert not any(eos.tolist())
+
+    def test_genstats_rate_zero_proposed(self):
+        s = GenStats(proposed=0, accepted=0, rounds=3, generated=3)
+        assert s.acceptance_rate == 0.0
+        assert np.isfinite(s.acceptance_rate)
+        assert s.tokens_per_round == 1.0
+
+    def test_request_rolling_acceptance_fresh(self):
+        sched = Scheduler(2, 16, 8)
+        req = sched.submit(np.zeros(4, np.int32), 4)
+        assert req.rolling_acceptance == 1.0   # optimistic, not NaN
+        req.observe_acceptance(0, 0)
+        assert req.rolling_acceptance == 1.0
+
+
+class TestForcedRungStatic:
+    """The static engine pins the whole batch to one rung — the identity
+    oracle: every rung's greedy output equals target-only AR decode."""
+
+    def test_each_rung_token_identical_to_ar(self, tiny):
+        cfg, model, params = tiny
+        G = cfg.group_size
+        prompt = jnp.stack([jnp.asarray(p) for p in
+                            make_prompts(cfg, [G + 5, G + 5])])
+        max_seq = prompt.shape[1] + 12 + 2 * G + 8
+        kw = dict(policy="quantspec", gamma=3, greedy=True, max_seq=max_seq,
+                  rounds_per_step=2)
+        ref = Engine(model, params, **kw)
+        want = ref.generate(prompt, 12, key=jax.random.PRNGKey(7),
+                            speculative=False)
+        for rung in (RUNG_INT4_LOW, RUNG_INT8, RUNG_AR):
+            eng = Engine(model, params, force_rung=rung, **kw)
+            got = eng.generate(prompt, 12, key=jax.random.PRNGKey(7))
+            np.testing.assert_array_equal(got.tokens, want.tokens,
+                                          err_msg=f"rung {rung}")
+            assert eng._mega._cache_size() == 1, f"rung {rung}"
+            if rung == RUNG_AR:
+                # the floor proposes no drafts at all — and its rate
+                # reduction must stay finite
+                assert got.stats.proposed == 0
+                assert got.stats.acceptance_rate == 0.0
+            assert got.stats.generated == 12
+
+    def test_bad_rung_rejected(self, tiny):
+        cfg, model, params = tiny
+        with pytest.raises(ValueError):
+            Engine(model, params, policy="quantspec", force_rung=7,
+                   max_seq=2 * cfg.group_size)
+
+
+class TestGovernorContinuous:
+    def test_requires_megastep(self, tiny):
+        cfg, model, params = tiny
+        for kw in (dict(gamma=0), dict(rounds_per_step=0)):
+            with pytest.raises(ValueError):
+                ContinuousEngine(model, params, greedy=True, max_slots=1,
+                                 max_seq=2 * cfg.group_size, governor=True,
+                                 **{**dict(gamma=3, rounds_per_step=2),
+                                    **kw})
+
+    def test_clean_traffic_token_identity(self, tiny, traffic):
+        """Governor on, no faults: whatever rungs it picks, tokens match
+        the no-governor run and the program compiles exactly once."""
+        cfg, model, params = tiny
+        prompts, max_new, max_seq, base = traffic
+        reqs, eng = run_continuous(model, params, prompts, max_new, max_seq,
+                                   **GOV_KW)
+        for a, b in zip(base, reqs):
+            assert b.tokens == a.tokens, f"request {a.req_id}"
+        assert eng._mega._cache_size() == 1
+
+    def test_collapse_walks_ladder_and_recovers(self, tiny, traffic):
+        """The ISSUE acceptance test: inject total draft corruption into
+        one slot for a fixed span.  Its governor must demote it rung by
+        rung to the AR floor, keep decoding there (forward progress),
+        probe, and re-escalate once the corruption lifts — with zero
+        recompiles after warmup and greedy tokens identical to the
+        uninterrupted run.  The healthy co-batched slot never visits the
+        floor."""
+        cfg, model, params = tiny
+        prompts, max_new, max_seq, base = traffic
+        reqs, eng = run_continuous(
+            model, params, prompts, max_new, max_seq,
+            mangle=dict(req_id=0, mode=1, after=1, until=11), **GOV_KW)
+        for a, b in zip(base, reqs):
+            assert b.tokens == a.tokens, f"request {a.req_id}"
+        victim, healthy = reqs
+        assert victim.demotions >= 3          # walked 0→1→2→3
+        assert victim.ar_rounds > 0           # decoded on the floor
+        assert victim.int8_rounds > 0         # escalated draft KV reads
+        assert victim.promotions >= 1         # probe re-escalated
+        assert victim.rung < RUNG_AR          # …and ended off the floor
+        assert victim.generated == max_new[0]  # the floor still finishes
+        assert healthy.ar_rounds == 0
+        # every transition was masking inside the one compiled megastep
+        assert eng._mega._cache_size() == 1
+
+    def test_int4_only_corruption_heals_at_int8(self, tiny, traffic):
+        """mode=2 corrupts only INT4-rung draft samples: the slot must
+        spend recovery time at the INT8 rung (where its drafts are clean
+        again) instead of pinning to the AR floor."""
+        cfg, model, params = tiny
+        prompts, max_new, max_seq, base = traffic
+        reqs, _ = run_continuous(
+            model, params, prompts, max_new, max_seq,
+            mangle=dict(req_id=0, mode=2, after=1), **GOV_KW)
+        for a, b in zip(base, reqs):
+            assert b.tokens == a.tokens, f"request {a.req_id}"
+        victim = reqs[0]
+        assert victim.demotions >= 2
+        assert victim.int8_rounds > 0
+
+
+class TestVictimSelection:
+    """Satellite: acceptance-informed preemption victim selection."""
+
+    def _sched(self, n=3):
+        sched = Scheduler(n, 64, 8)
+        reqs = []
+        for _ in range(n):
+            sched.submit(np.zeros(8, np.int32), 4)
+            req = sched.next_admission()
+            req.megasteps = 1
+            reqs.append(req)
+        return sched, reqs
+
+    def test_lowest_rolling_acceptance_goes_first(self):
+        sched, (r0, r1, r2) = self._sched()
+        r0.win_prop, r0.win_acc = 10, 9
+        r1.win_prop, r1.win_acc = 10, 2        # collapsed speculator
+        r2.win_prop, r2.win_acc = 10, 5
+        assert sched.preemption_victim() == r1.slot
+        assert sched.preemption_victim(exclude=(r1.slot,)) == r2.slot
+
+    def test_priority_dominates_acceptance(self):
+        sched, (r0, r1, r2) = self._sched()
+        r0.win_prop, r0.win_acc = 10, 9
+        r1.win_prop, r1.win_acc = 10, 0
+        r2.win_prop, r2.win_acc = 10, 5
+        r1.priority = 1                        # protected despite collapse
+        assert sched.preemption_victim() == r2.slot
+
+    def test_fresh_window_is_optimistic(self):
+        """A request with no proposals yet reads 1.0 — it must not be
+        mistaken for a collapse victim over a measured-but-mediocre one."""
+        sched, (r0, r1, r2) = self._sched()
+        r1.win_prop, r1.win_acc = 10, 6        # 0.6 measured
+        assert r0.rolling_acceptance == 1.0
+        assert sched.preemption_victim() == r1.slot
+
+    def test_forward_progress_eligibility(self):
+        """A just-(re)admitted slot (no megastep since) is ineligible, so
+        preempt→resume cycles always net progress (no livelock)."""
+        sched, (r0, r1, r2) = self._sched()
+        r1.win_prop, r1.win_acc = 10, 0
+        victim = sched.preemption_victim()
+        assert victim == r1.slot
+        sched.preempt(victim)
+        sched.next_admission()                 # r1 back in, megasteps=0
+        assert r1.megasteps == 0
+        assert sched.preemption_victim() in (r0.slot, r2.slot)
+        r0.megasteps = r2.megasteps = 0
+        assert sched.preemption_victim() is None
+
+
+@needs_mesh
+class TestGovernorMesh:
+    def test_collapse_token_identical_on_host8(self, tiny, traffic, mesh):
+        """The full ladder walk under a 4×2 host mesh: per-slot rung lanes
+        shard with the megastep (mangle + rung buffers replicated) and
+        greedy tokens still match the single-device no-governor run."""
+        cfg, model, params = tiny
+        prompts, max_new, max_seq, base = traffic
+        reqs, eng = run_continuous(
+            model, params, prompts, max_new, max_seq,
+            mangle=dict(req_id=0, mode=1, after=1, until=11),
+            mesh=mesh, **GOV_KW)
+        for a, b in zip(base, reqs):
+            assert b.tokens == a.tokens, f"request {a.req_id}"
+        assert reqs[0].demotions >= 3 and reqs[0].ar_rounds > 0
+        assert eng._mega._cache_size() == 1
+        for leaf in jax.tree.leaves(eng.slots_dev):
+            assert leaf.sharding.is_fully_replicated
